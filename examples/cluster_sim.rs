@@ -1,0 +1,65 @@
+//! Cluster-simulator walkthrough: step-time breakdowns for the paper's
+//! Table-1 models under every parallel mode, plus the baseline
+//! comparisons — the interactive companion to the Fig 7-10 benches.
+//!
+//!     cargo run --release --example cluster_sim
+
+use jigsaw::baselines::{fsdp_step, megatron_step};
+use jigsaw::config::zoo::TABLE1;
+use jigsaw::perfmodel::{simulate_step, ClusterSpec, Precision, Workload};
+use jigsaw::util::table::{fmt, Table};
+
+fn main() -> anyhow::Result<()> {
+    let cluster = ClusterSpec::horeka();
+    println!("simulated testbed: 4x A100-40GB / node, NVLink + IB HDR, {} GB/s node storage\n",
+        cluster.storage_bw_node / 1e9);
+
+    let m = TABLE1[6]; // the 1.4B / 16 TFLOP model
+    println!(
+        "model 7: {} TFLOPs/fwd, {} M params — per-step breakdown (TF32, full loop):",
+        m.tflops_fwd, m.params_mil
+    );
+    let mut t = Table::new(&["scheme", "io (s)", "compute (s)", "mp exposed (s)", "step (s)"]);
+    for (name, way) in [("1-way", 1usize), ("jigsaw 2-way", 2), ("jigsaw 4-way", 4)] {
+        let st = simulate_step(
+            &cluster,
+            &Workload { model: m, way, dp: 1, precision: Precision::Tf32, dataload: true },
+        );
+        t.row(&[
+            name.to_string(),
+            fmt(st.io),
+            fmt(st.compute),
+            fmt(st.mp_comm_exposed),
+            fmt(st.total),
+        ]);
+    }
+    for (name, st) in [
+        ("megatron 4-way", megatron_step(&cluster, m, 4, Precision::Tf32, true)),
+        ("fsdp 4-way", fsdp_step(&cluster, m, 4, Precision::Tf32, true)),
+    ] {
+        t.row(&[
+            name.to_string(),
+            fmt(st.io),
+            fmt(st.compute),
+            fmt(st.mp_comm_exposed),
+            fmt(st.total),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("I/O-bound regime (model 1, 0.25 TFLOPs): domain parallelism divides the read volume:");
+    let small = TABLE1[0];
+    let mut t2 = Table::new(&["scheme", "io (s)", "step (s)"]);
+    for (name, way) in [("1-way", 1usize), ("jigsaw 4-way", 4)] {
+        let st = simulate_step(
+            &cluster,
+            &Workload { model: small, way, dp: 1, precision: Precision::Tf32, dataload: true },
+        );
+        t2.row(&[name.to_string(), fmt(st.io), fmt(st.total)]);
+    }
+    let meg = megatron_step(&cluster, small, 4, Precision::Tf32, true);
+    t2.row(&["megatron 4-way".into(), fmt(meg.io), fmt(meg.total)]);
+    println!("{}", t2.render());
+    println!("cluster_sim OK");
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Neural-scaling-law demonstration (paper Fig. 3 analogue): train three
+//! increasingly large WeatherMixers on the same synthetic dataset and
+//! show that validation loss falls with model capacity.
+//!
+//!     cargo run --release --example scaling_law
+
+use std::sync::Arc;
+
+use jigsaw::benchkit::synth_config;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::trainer::{train, TrainSpec};
+use jigsaw::util::table::{fmt, Table};
+
+fn main() -> anyhow::Result<()> {
+    let sizes = [
+        ("wm-s", 32usize, 32usize, 2usize),
+        ("wm-m", 96, 64, 2),
+        ("wm-l", 192, 96, 3),
+    ];
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mut table = Table::new(&["model", "params (M)", "final train loss", "val loss"]);
+    let mut prev_val = f32::INFINITY;
+    let mut ordered = true;
+    for (name, d_emb, d_tok, blocks) in sizes {
+        let cfg = synth_config(name, d_emb, d_tok, blocks);
+        let mut spec = TrainSpec::quick(1, 1, 150);
+        spec.lr = 2e-3;
+        spec.n_times = 48;
+        spec.n_modes = 14;
+        spec.val_every = 150;
+        spec.seed = 1;
+        let r = train(&cfg, &spec, backend.clone())?;
+        let train_loss = r.steps.last().unwrap().loss;
+        let val = r.val_loss.last().map(|(_, v)| *v).unwrap_or(f32::NAN);
+        println!(
+            "{name}: {:.2}M params, train {:.4}, val {:.4}",
+            cfg.param_count as f64 / 1e6,
+            train_loss,
+            val
+        );
+        if val >= prev_val {
+            ordered = false;
+        }
+        prev_val = val;
+        table.row(&[
+            name.to_string(),
+            fmt(cfg.param_count as f64 / 1e6),
+            fmt(train_loss as f64),
+            fmt(val as f64),
+        ]);
+    }
+    println!("\n{}", table.render());
+    table.write_csv("bench_results/scaling_law.csv")?;
+    println!(
+        "scaling law {}",
+        if ordered {
+            "holds: larger models reach lower validation loss"
+        } else {
+            "NOT strictly ordered on this short run (see fig3 bench for the longer sweep)"
+        }
+    );
+    Ok(())
+}

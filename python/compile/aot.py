@@ -1,0 +1,253 @@
+"""AOT export: lower the L2/L1 programs to HLO text for the rust runtime.
+
+Runs once at build time (`make artifacts`); python never executes on the
+training path. Per preset this writes
+
+    artifacts/<preset>/
+      config.json            model config + channel weights (rust contract)
+      manifest.json          program & primitive index + parameter ABI
+      forward.hlo.txt        monolithic forward (Pallas kernels in the HLO)
+      forward_r{2,4}.hlo.txt rollout variants (processor repeated)
+      loss_and_grad.hlo.txt  oracle for the rust jigsaw engine   (jnp mode*)
+      loss_and_grad_g{2,4}.hlo.txt   ln_groups variants: bit-exact oracles
+                                     for 2-/4-way jigsaw layer norms
+      train_step.hlo.txt     fused loss+grad+Adam program
+      primitives/<key>.hlo.txt       Pallas matmul primitives at every
+                                     shard shape the jigsaw plans can need
+
+*grad programs lower the pure-jnp path: pallas interpret-mode kernels have
+no autodiff rule. The kernels and the jnp reference are proven equal by
+python/tests, so the oracle numerics are the kernel numerics.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Dict, Iterable, List, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import model
+from .configs import ALL_PRESETS, ORACLE_PRESETS, ModelConfig, preset
+from .hlo import to_hlo_text
+from .kernels import matmul as k_mm
+
+
+# ---------------------------------------------------------------------------
+# Primitive shape enumeration
+# ---------------------------------------------------------------------------
+# Every jigsaw-distributed linear layer reduces to block-local matmuls of
+# one of three forms (op, x_shape, w_shape):
+#   fwd      nt(x[M,K],  w[N,K])   or  nn(w[H,T], x[T,D])  (transposed MLP)
+#   bwd dX   nn / tn variants
+#   bwd dW   nt / tn variants
+# Under n-way jigsaw each dimension is either full or halved (2-way halves
+# channel-like dims; 4-way additionally halves the token dim). We
+# over-approximate by emitting every independent halving combination; the
+# rust runtime looks primitives up by exact key and the plan-coverage test
+# (rust/tests/) asserts nothing is missing.
+
+MMKey = Tuple[str, int, int, int, int]  # (op, xr, xc, wr, wc)
+
+
+def _halvings(dim: int, can_halve: bool) -> List[int]:
+    out = [dim]
+    if can_halve and dim % 2 == 0:
+        out.append(dim // 2)
+    return out
+
+
+def _layer_triples(cfg: ModelConfig) -> List[Tuple[str, str, str, str]]:
+    """Symbolic (op, xr, xc, wr, wc) per matmul; symbols resolved below."""
+    return [
+        # encoder: z = nt(patches[T,PD], enc_w[D,PD])
+        ("nt", "T", "PD", "D", "PD"),
+        ("nn", "T", "D", "D", "PD"),      # d_patches = nn(dz, enc_w)
+        ("tn", "T", "D", "T", "PD"),      # d_enc_w = tn(dz, patches)
+        # token mix 1: h = nn(w1[DT,T], u[T,D])
+        ("nn", "DT", "T", "T", "D"),
+        ("nt", "DT", "D", "T", "D"),      # d_w1 = nt(dh, u)
+        ("tn", "DT", "T", "DT", "D"),     # du  = tn(w1, dh)
+        # token mix 2: out = nn(w2[T,DT], h[DT,D])
+        ("nn", "T", "DT", "DT", "D"),
+        ("nt", "T", "D", "DT", "D"),      # d_w2 = nt(dout, h)
+        ("tn", "T", "DT", "T", "D"),      # dh  = tn(w2, dout)
+        # channel mix 1: h = nt(v[T,D], w1[DC,D])
+        ("nt", "T", "D", "DC", "D"),
+        ("nn", "T", "DC", "DC", "D"),     # dv  = nn(dh, w1)
+        ("tn", "T", "DC", "T", "D"),      # d_w1 = tn(dh, v)
+        # channel mix 2: out = nt(h[T,DC], w2[D,DC])
+        ("nt", "T", "DC", "D", "DC"),
+        ("nn", "T", "D", "D", "DC"),      # dh  = nn(dout, w2)
+        ("tn", "T", "D", "T", "DC"),      # d_w2 = tn(dout, h)
+        # decoder: y = nt(z[T,D], dec_w[PD,D])
+        ("nt", "T", "D", "PD", "D"),
+        ("nn", "T", "PD", "PD", "D"),     # dz = nn(dy, dec_w)
+        ("tn", "T", "PD", "T", "D"),      # d_dec_w = tn(dy, z)
+    ]
+
+
+def primitive_keys(cfg: ModelConfig, ways: Iterable[int] = (1, 2, 4)) -> Set[MMKey]:
+    dims = {
+        "T": cfg.tokens, "D": cfg.d_emb, "DT": cfg.d_tok,
+        "DC": cfg.d_ch, "PD": cfg.patch_dim,
+    }
+    keys: Set[MMKey] = set()
+    for way in ways:
+        halve_ch = way >= 2          # channel-like dims shard at 2- and 4-way
+        halve_tok = way >= 4         # token dim shards only at 4-way
+        for op, a, b, c, d in _layer_triples(cfg):
+            def opts(sym: str) -> List[int]:
+                can = halve_tok if sym == "T" else halve_ch
+                return _halvings(dims[sym], can)
+
+            for xr in opts(a):
+                for xc in opts(b):
+                    for wr in opts(c):
+                        for wc in opts(d):
+                            # contraction dims must agree for an executable
+                            # matmul: nt contracts xc/wc, nn xc/wr, tn xr/wr.
+                            if op == "nt" and xc != wc:
+                                continue
+                            if op == "nn" and xc != wr:
+                                continue
+                            if op == "tn" and xr != wr:
+                                continue
+                            keys.add((op, xr, xc, wr, wc))
+    return keys
+
+
+def mm_key_str(op: str, xr: int, xc: int, wr: int, wc: int) -> str:
+    return f"{op}_{xr}x{xc}_{wr}x{wc}"
+
+
+def _lower_primitive(op: str, xr: int, xc: int, wr: int, wc: int) -> str:
+    """Lower one Pallas matmul primitive at exact shapes.
+
+    Block = full operand (grid of 1): on the CPU PJRT backend one fused dot
+    is the fast path; the *tiled* schedule is exercised by the kernel tests
+    and is the TPU deployment story (DESIGN.md §Perf).
+    """
+    fn = {"nt": k_mm.matmul_nt, "nn": k_mm.matmul_nn, "tn": k_mm.matmul_tn}[op]
+    if op == "nt":
+        m, k, n = xr, xc, wr
+    elif op == "nn":
+        m, k, n = xr, xc, wc
+    else:  # tn: x[K,M], w[K,N] -> [M,N]
+        m, k, n = xc, xr, wc
+    x = jax.ShapeDtypeStruct((xr, xc), jnp.float32)
+    w = jax.ShapeDtypeStruct((wr, wc), jnp.float32)
+
+    def f(xv, wv):
+        return fn(xv, wv, bm=m, bn=n, bk=k)
+
+    return to_hlo_text(jax.jit(f).lower(x, w))
+
+
+# ---------------------------------------------------------------------------
+# Export driver
+# ---------------------------------------------------------------------------
+
+def _write(path: str, text: str) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def _flat_param_specs(cfg: ModelConfig) -> List[jax.ShapeDtypeStruct]:
+    shapes = model.param_shapes(cfg)
+    return [
+        jax.ShapeDtypeStruct(shapes[n], jnp.float32)
+        for n in model.param_order(cfg)
+    ]
+
+
+def export_preset(name: str, out_root: str, *, with_primitives: bool = True,
+                  ways: Iterable[int] = (1, 2, 4)) -> None:
+    cfg = preset(name)
+    cfg_jnp = dataclasses.replace(cfg, use_pallas=False)
+    pdir = os.path.join(out_root, name)
+    os.makedirs(pdir, exist_ok=True)
+
+    sample = jax.ShapeDtypeStruct(
+        (cfg.lat, cfg.lon, cfg.channels_padded), jnp.float32
+    )
+    pspecs = _flat_param_specs(cfg)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    programs: Dict[str, str] = {}
+
+    def lower(tag: str, fn, *specs):
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        fname = f"{tag}.hlo.txt"
+        _write(os.path.join(pdir, fname), text)
+        programs[tag] = fname
+        print(f"  {name}/{fname}  ({len(text) / 1024:.0f} KiB)")
+
+    # forward programs carry the Pallas kernels in their HLO.
+    lower("forward", model.make_forward_fn(cfg), *pspecs, sample)
+    for r in (2, 4):
+        lower(f"forward_r{r}", model.make_forward_fn(cfg, rollout=r),
+              *pspecs, sample)
+
+    # oracle + train-step programs (jnp mode: pallas has no autodiff rule).
+    lower("loss_and_grad", model.make_loss_and_grad_fn(cfg_jnp),
+          *pspecs, sample, sample)
+    if name in ORACLE_PRESETS:
+        for g in (2, 4):
+            cfg_g = dataclasses.replace(cfg_jnp, ln_groups=g)
+            lower(f"loss_and_grad_g{g}", model.make_loss_and_grad_fn(cfg_g),
+                  *pspecs, sample, sample)
+            lower(f"forward_g{g}", model.make_forward_fn(cfg_g), *pspecs, sample)
+    lower("train_step", model.make_train_step_fn(cfg_jnp),
+          *pspecs, *pspecs, *pspecs, scalar, scalar, sample, sample)
+
+    primitives: Dict[str, str] = {}
+    if with_primitives:
+        keys = sorted(primitive_keys(cfg, ways))
+        for op, xr, xc, wr, wc in keys:
+            key = mm_key_str(op, xr, xc, wr, wc)
+            text = _lower_primitive(op, xr, xc, wr, wc)
+            rel = os.path.join("primitives", f"{key}.hlo.txt")
+            _write(os.path.join(pdir, rel), text)
+            primitives[key] = rel
+        print(f"  {name}: {len(primitives)} matmul primitives")
+
+    _write(os.path.join(pdir, "config.json"), cfg.to_json())
+    shapes = model.param_shapes(cfg)
+    manifest = {
+        "preset": name,
+        "param_order": model.param_order(cfg),
+        "param_shapes": {k: list(v) for k, v in shapes.items()},
+        "programs": programs,
+        "primitives": primitives,
+        "adam": {
+            "b1": model.ADAM_B1, "b2": model.ADAM_B2,
+            "eps": model.ADAM_EPS, "grad_clip": model.GRAD_CLIP,
+        },
+    }
+    _write(os.path.join(pdir, "manifest.json"), json.dumps(manifest, indent=2))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--presets", default=",".join(ALL_PRESETS))
+    args = ap.parse_args()
+    for name in args.presets.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"exporting preset '{name}'")
+        # the ~100M e2e preset skips the 4-way primitive sweep: at that
+        # size this substrate only runs 1-/2-way (DESIGN.md §3).
+        ways = (1, 2) if name == "e2e100m" else (1, 2, 4)
+        export_preset(name, args.out, ways=ways)
+
+
+if __name__ == "__main__":
+    main()

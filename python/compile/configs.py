@@ -1,0 +1,170 @@
+"""WeatherMixer model configurations shared between the python compile path
+and the rust coordinator.
+
+The rust side never imports python; agreement is reached through
+``artifacts/<preset>/config.json``, written by ``aot.py`` and read by the
+rust runtime at startup. The preset *names* are the contract.
+
+Dimensions follow the paper (Section 6.2.1 and Table 1), scaled down so the
+full pipeline runs on the CPU PJRT backend: the paper's 0.25-degree global
+grid (721 x 1440 x 69 channels) is replaced by a synthetic spectral
+atmosphere on a small lat/lon grid with the same channel structure.
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, asdict, field
+
+# ---------------------------------------------------------------------------
+# ERA5-like channel table (paper Section 6): 4 surface variables +
+# 5 pressure-level variables x 13 levels = 69 channels, plus 3 constant
+# fields (soil type, topography, land mask) appended as extra input-only
+# channels when `constants` is set.
+# ---------------------------------------------------------------------------
+
+SURFACE_VARS = ["u10", "v10", "t2m", "msl"]
+PLEV_VARS = ["z", "q", "t", "u", "v"]
+PRESSURE_LEVELS = [1000, 925, 850, 700, 600, 500, 400, 300, 250, 200, 150, 100, 50]
+
+#: Per-variable weights adapted from Pangu-Weather (Bi et al. 2023), as used
+#: by the paper for the latitude-weighted training loss.
+SURFACE_WEIGHTS = {"u10": 0.77, "v10": 0.66, "t2m": 3.0, "msl": 1.5}
+PLEV_WEIGHTS = {"z": 3.0, "q": 0.6, "t": 1.7, "u": 0.87, "v": 0.6}
+
+#: Paper Section 6: additional pressure-level weighting from high (1000 hPa)
+#: to low (50 hPa) pressure.
+PLEV_LEVEL_WEIGHTS = [1, 1, 1, 1, 1, 1, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3]
+
+
+def channel_names() -> list[str]:
+    names = list(SURFACE_VARS)
+    for v in PLEV_VARS:
+        for p in PRESSURE_LEVELS:
+            names.append(f"{v}{p}")
+    return names
+
+
+def channel_weights() -> list[float]:
+    ws = [SURFACE_WEIGHTS[v] for v in SURFACE_VARS]
+    for v in PLEV_VARS:
+        for i, _p in enumerate(PRESSURE_LEVELS):
+            ws.append(PLEV_WEIGHTS[v] * PLEV_LEVEL_WEIGHTS[i])
+    return ws
+
+
+@dataclass
+class ModelConfig:
+    """WeatherMixer architecture configuration.
+
+    Input samples are [lat, lon, channels]; the encoder patches the spatial
+    dims with non-overlapping ``patch x patch`` windows into
+    T = (lat/patch) * (lon/patch) tokens embedded in ``d_emb`` channels.
+    """
+
+    name: str
+    lat: int
+    lon: int
+    channels: int  # physical channels (padded to `channels_padded` for sharding)
+    patch: int
+    d_emb: int
+    d_tok: int  # hidden dim of the token-mixing MLP
+    d_ch: int  # hidden dim of the channel-mixing MLP
+    blocks: int
+    # number of channel groups the layer norm statistics are computed over;
+    # ln_groups = n makes the single-rank model bit-match an n-way jigsaw
+    # run (which computes LN stats over its local channel shard).
+    ln_groups: int = 1
+    use_pallas: bool = True  # route mixer MLPs through the Pallas kernels
+
+    @property
+    def channels_padded(self) -> int:
+        """Channels zero-padded so 2- and 4-way sharding divide evenly."""
+        c = self.channels
+        return c + (-c) % 4
+
+    @property
+    def tokens(self) -> int:
+        assert self.lat % self.patch == 0 and self.lon % self.patch == 0
+        return (self.lat // self.patch) * (self.lon // self.patch)
+
+    @property
+    def patch_dim(self) -> int:
+        return self.channels_padded * self.patch * self.patch
+
+    def param_count(self) -> int:
+        """Total trainable parameters (weights + biases + LN affine + blend)."""
+        t, d = self.tokens, self.d_emb
+        n = 0
+        n += self.patch_dim * d + d  # encoder
+        for _ in range(self.blocks):
+            n += 2 * d  # LN1 affine
+            n += t * self.d_tok + self.d_tok  # token W1 (maps T -> d_tok)
+            n += self.d_tok * t + t  # token W2
+            n += 2 * d  # LN2 affine
+            n += d * self.d_ch + self.d_ch  # channel W1
+            n += self.d_ch * d + d  # channel W2
+        n += d * self.patch_dim + self.patch_dim  # decoder
+        n += self.channels_padded  # blend gate
+        return n
+
+    def flops_forward(self, batch: int = 1) -> int:
+        """Matmul FLOPs of one forward pass (paper's accounting: layer
+        norms / pointwise / dropout are negligible)."""
+        t, d = self.tokens, self.d_emb
+        f = 2 * t * self.patch_dim * d  # encoder
+        for _ in range(self.blocks):
+            f += 2 * d * t * self.d_tok * 2  # token mixing (two matmuls)
+            f += 2 * t * d * self.d_ch * 2  # channel mixing
+        f += 2 * t * d * self.patch_dim  # decoder
+        return f * batch
+
+    def to_json(self) -> str:
+        d = asdict(self)
+        d["channels_padded"] = self.channels_padded
+        d["tokens"] = self.tokens
+        d["patch_dim"] = self.patch_dim
+        d["param_count"] = self.param_count()
+        d["flops_forward"] = self.flops_forward()
+        d["channel_weights"] = channel_weights()
+        return json.dumps(d, indent=2)
+
+
+# ---------------------------------------------------------------------------
+# Presets. Names are the python<->rust contract.
+# ---------------------------------------------------------------------------
+
+def preset(name: str) -> ModelConfig:
+    presets = {
+        # smallest config: used by unit/integration tests and quickstart.
+        "tiny": ModelConfig(
+            name="tiny", lat=8, lon=16, channels=6, patch=2,
+            d_emb=32, d_tok=48, d_ch=32, blocks=2,
+        ),
+        # mid config: used by the model-skill benches (Figs 3-6 analogues).
+        "small": ModelConfig(
+            name="small", lat=16, lon=32, channels=20, patch=4,
+            d_emb=128, d_tok=96, d_ch=128, blocks=3,
+        ),
+        # the full 69-channel ERA5-like channel structure at reduced grid;
+        # ~2M params, used by forecast examples.
+        "wm2m": ModelConfig(
+            name="wm2m", lat=32, lon=64, channels=69, patch=8,
+            d_emb=384, d_tok=128, d_ch=384, blocks=3,
+        ),
+        # ~103M parameters: the end-to-end training example (train_e2e).
+        # Mixer MLPs use plain jnp here: pallas interpret-mode matmuls at
+        # these shapes are a correctness vehicle, not a CPU fast path.
+        "e2e100m": ModelConfig(
+            name="e2e100m", lat=32, lon=64, channels=69, patch=8,
+            d_emb=4096, d_tok=64, d_ch=4096, blocks=2, use_pallas=False,
+        ),
+    }
+    return presets[name]
+
+
+ALL_PRESETS = ["tiny", "small", "wm2m", "e2e100m"]
+
+#: presets whose monolithic programs are exported for every ln_groups in
+#: {1, 2, 4} so the rust jigsaw engine has an exact oracle per way.
+ORACLE_PRESETS = ["tiny", "small"]

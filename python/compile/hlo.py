@@ -1,0 +1,38 @@
+"""HLO-text lowering helper.
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's bundled
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`). The text parser
+reassigns ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax.jit(...).lower(...) result to XLA HLO text.
+
+    Lowers via stablehlo and converts with ``return_tuple=True`` so the rust
+    side can uniformly unwrap tuple outputs (``to_tuple``/``to_tuple1``).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default printer elides literals above
+    # ~10 elements as `constant({...})`, which the xla_extension 0.5.1 text
+    # parser silently reads back as ZEROS (e.g. the channel-weight vector),
+    # corrupting the program. Full literals round-trip correctly.
+    return comp.as_hlo_text(True)
+
+
+def lower_to_text(fn, *example_args) -> str:
+    """jit-lower ``fn`` at the abstract shapes of ``example_args``."""
+    specs = [
+        jax.ShapeDtypeStruct(a.shape, a.dtype) if hasattr(a, "shape") else a
+        for a in example_args
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*specs))

@@ -1,0 +1,8 @@
+"""L1 - Pallas kernels for the paper's compute hot-spots.
+
+`ref` holds the pure-jnp oracles; the sibling modules hold the Pallas
+implementations (always `interpret=True`: CPU PJRT cannot execute Mosaic
+custom-calls - see DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import layernorm, matmul, mlp, pointwise, ref  # noqa: F401

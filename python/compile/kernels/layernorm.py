@@ -1,0 +1,125 @@
+"""Pallas LayerNorm kernels (forward with saved stats + backward).
+
+WeatherMixer applies layer norm across the channel axis with a per-channel
+affine (paper Section 5). Under jigsaw the channel axis may be sharded, in
+which case each rank norms its local shard (the paper's local-stats
+approximation) — the kernel itself is always a dense last-axis norm over a
+2-D [R, C] tile; sharding is the rust coordinator's business.
+
+Two-pass row-tiled schedule: stats then normalize, both inside one kernel
+invocation per row block (rows are independent, so the row tile is the
+natural TPU layout: C stays contiguous in VMEM lanes).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 128
+
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, y_ref, mean_ref, rstd_ref, *, eps):
+    x = x_ref[...]
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mean) * rstd
+    y_ref[...] = xhat * g_ref[...] + b_ref[...]
+    mean_ref[...] = mean[:, 0]
+    rstd_ref[...] = rstd[:, 0]
+
+
+def _ln_bwd_kernel(x_ref, g_ref, mean_ref, rstd_ref, dy_ref,
+                   dx_ref, dg_ref, db_ref):
+    x = x_ref[...]
+    dy = dy_ref[...]
+    mean = mean_ref[...][:, None]
+    rstd = rstd_ref[...][:, None]
+    xhat = (x - mean) * rstd
+    # per-row-block partial parameter grads; summed across blocks by index
+    # map revisiting + accumulation.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        dg_ref[...] = jnp.zeros_like(dg_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    dg_ref[...] += jnp.sum(dy * xhat, axis=0)
+    db_ref[...] += jnp.sum(dy, axis=0)
+    dxhat = dy * g_ref[...]
+    dx_ref[...] = rstd * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """Forward LN over the last axis of [R, C]; returns (y, mean, rstd)."""
+    r, c = x.shape
+    br = min(r, ROW_BLOCK)
+    rp = ((r + br - 1) // br) * br
+    xp = jnp.pad(x, ((0, rp - r), (0, 0)))
+    y, mean, rstd = pl.pallas_call(
+        functools.partial(_ln_fwd_kernel, eps=eps),
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, c), jnp.float32),
+            jax.ShapeDtypeStruct((rp,), jnp.float32),
+            jax.ShapeDtypeStruct((rp,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, gamma, beta)
+    return y[:r], mean[:r], rstd[:r]
+
+
+def layernorm_bwd(x, gamma, mean, rstd, dy):
+    """Backward LN; returns (dx, dgamma, dbeta).
+
+    Padded rows contribute zero to dgamma/dbeta because dy is zero-padded.
+    """
+    r, c = x.shape
+    br = min(r, ROW_BLOCK)
+    rp = ((r + br - 1) // br) * br
+    pad = ((0, rp - r), (0, 0))
+    xp = jnp.pad(x, pad)
+    dyp = jnp.pad(dy, pad)
+    meanp = jnp.pad(mean, (0, rp - r))
+    # rstd=1 on padded rows avoids 0*inf; dy=0 keeps their grads zero.
+    rstdp = jnp.pad(rstd, (0, rp - r), constant_values=1.0)
+    dx, dg, db = pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br,), lambda i: (i,)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rp, c), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+            jax.ShapeDtypeStruct((c,), jnp.float32),
+        ],
+        interpret=True,
+    )(xp, gamma, meanp, rstdp, dyp)
+    return dx[:r], dg, db

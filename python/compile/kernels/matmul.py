@@ -1,0 +1,172 @@
+"""Pallas tiled matmul kernels — the jigsaw local partial products.
+
+The paper's compute hot-spot is the dense matmul of the mixer MLPs (every
+jigsaw rank computes block-local partial products X_r W_{r,j}^T and
+exchanges partial sums). On the A100 the authors lean on cuBLAS; here the
+kernels are rethought for TPU per the hardware-adaptation contract:
+
+  * BlockSpec tiles sized for the 128x128 MXU systolic array, with the K
+    reduction streamed through VMEM (grid axis 2) and accumulated in the
+    revisited output block — the HBM<->VMEM schedule that the GPU code
+    expresses with threadblock smem staging.
+  * Three transposition variants (NT / NN / TN) so the model never
+    materializes a transpose (paper Section 5, 'transposed MLP').
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness (and AOT) path;
+real-TPU performance is estimated from the BlockSpec footprint in
+DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: MXU-friendly default tile sizes (used when shapes are large enough).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+#: Below this many f32 multiply-adds the wrapper collapses to a single-block
+#: grid: interpret-mode pallas pays a python-level cost per grid step, so
+#: small operands should lower to one fused dot.
+SINGLE_BLOCK_LIMIT = 1 << 22
+
+
+def _pick_block(dim: int, pref: int) -> int:
+    """Largest tile <= pref that keeps the padded dim a multiple of it."""
+    if dim <= pref:
+        return dim
+    # prefer the MXU tile; padding (below) handles the remainder.
+    return pref
+
+
+def _pad_to(x, rows: int, cols: int):
+    r, c = x.shape
+    if r == rows and c == cols:
+        return x
+    return jnp.pad(x, ((0, rows - r), (0, cols - c)))
+
+
+def _ceil_mul(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _mm_kernel_nt(x_ref, w_ref, o_ref, *, nk: int):
+    """o[i,j] += x[i,k] @ w[j,k].T, accumulated over the k grid axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _mm_kernel_nn(x_ref, w_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _mm_kernel_tn(x_ref, w_ref, o_ref, *, nk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].T, w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _tiled_call(kernel, x, w, m, n, k, x_spec, w_spec, bm, bn, bk):
+    nm, nn_, nk = m // bm, n // bn, k // bk
+    return pl.pallas_call(
+        functools.partial(kernel, nk=nk),
+        grid=(nm, nn_, nk),
+        in_specs=[x_spec, w_spec],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def matmul_nt(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y = x @ w.T via a tiled Pallas kernel.  x:[M,K], w:[N,K] -> [M,N]."""
+    m, k = x.shape
+    n, k2 = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if m * n * k <= SINGLE_BLOCK_LIMIT:
+        bm, bn, bk = m, n, k
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    mp, np_, kp = _ceil_mul(m, bm), _ceil_mul(n, bn), _ceil_mul(k, bk)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, np_, kp)
+    out = _tiled_call(
+        _mm_kernel_nt, xp, wp, mp, np_, kp,
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        bm, bn, bk,
+    )
+    return out[:m, :n]
+
+
+def matmul_nn(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y = x @ w via a tiled Pallas kernel.  x:[M,K], w:[K,N] -> [M,N]."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if m * n * k <= SINGLE_BLOCK_LIMIT:
+        bm, bn, bk = m, n, k
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    mp, np_, kp = _ceil_mul(m, bm), _ceil_mul(n, bn), _ceil_mul(k, bk)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    out = _tiled_call(
+        _mm_kernel_nn, xp, wp, mp, np_, kp,
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        bm, bn, bk,
+    )
+    return out[:m, :n]
+
+
+def matmul_tn(x, w, *, bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK):
+    """y = x.T @ w via a tiled Pallas kernel.  x:[K,M], w:[K,N] -> [M,N].
+
+    This is the paper's transposed-MLP form: the transpose happens inside
+    the MXU tile, never in HBM.
+    """
+    k, m = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    if m * n * k <= SINGLE_BLOCK_LIMIT:
+        bm, bn, bk = m, n, k
+    bm, bn, bk = _pick_block(m, bm), _pick_block(n, bn), _pick_block(k, bk)
+    mp, np_, kp = _ceil_mul(m, bm), _ceil_mul(n, bn), _ceil_mul(k, bk)
+    xp = _pad_to(x, kp, mp)
+    wp = _pad_to(w, kp, np_)
+    out = _tiled_call(
+        _mm_kernel_tn, xp, wp, mp, np_, kp,
+        pl.BlockSpec((bk, bm), lambda i, j, kk: (kk, i)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        bm, bn, bk,
+    )
+    return out[:m, :n]
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM working set of one grid step (x tile + w tile + o tile).
+
+    Used by DESIGN.md §Perf to check the schedule fits the ~16 MiB/core VMEM
+    budget of a TPUv4-class part and to estimate MXU utilization.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,67 @@
+"""Fused mixer-MLP Pallas kernel: linear -> GELU -> linear in one pass.
+
+This is the single-rank fast path for one mixing MLP. Fusing the GELU
+epilogue into the first matmul's output tile avoids the HBM round-trip the
+paper's GPU implementation pays between the two cuBLAS calls — the
+TPU-minded restructuring called for by the hardware-adaptation contract
+(the hidden activation h lives only in VMEM).
+
+Grid is over row blocks of x; both weight matrices are streamed whole into
+VMEM per step, which holds for mixer-scale hidden dims (see
+`vmem_footprint_bytes`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROW_BLOCK = 128
+
+
+def _mlp_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref):
+    x = x_ref[...]
+    h = jnp.dot(x, w1_ref[...].T, preferred_element_type=jnp.float32)
+    h = h + b1_ref[...]
+    x3 = h * h * h
+    h = 0.5 * h * (1.0 + jnp.tanh(ref.SQRT_2_OVER_PI * (h + ref.GELU_C * x3)))
+    y = jnp.dot(h, w2_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = y + b2_ref[...]
+
+
+def mlp(x, w1, b1, w2, b2):
+    """y = gelu(x @ w1.T + b1) @ w2.T + b2.
+
+    x:[M,K], w1:[H,K], b1:[H], w2:[N,H], b2:[N] -> [M,N]
+    """
+    m, k = x.shape
+    h, k2 = w1.shape
+    n, h2 = w2.shape
+    assert k == k2 and h == h2, (x.shape, w1.shape, w2.shape)
+    br = min(m, ROW_BLOCK)
+    mp = ((m + br - 1) // br) * br
+    xp = jnp.pad(x, ((0, mp - m), (0, 0)))
+    out = pl.pallas_call(
+        _mlp_kernel,
+        grid=(mp // br,),
+        in_specs=[
+            pl.BlockSpec((br, k), lambda i: (i, 0)),
+            pl.BlockSpec((h, k), lambda i: (0, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+            pl.BlockSpec((n, h), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, n), jnp.float32),
+        interpret=True,
+    )(xp, w1, b1, w2, b2)
+    return out[:m]
+
+
+def vmem_footprint_bytes(br: int, k: int, h: int, n: int,
+                         dtype_bytes: int = 4) -> int:
+    """VMEM working set of one grid step: x tile, both weights, h, y tiles."""
+    return dtype_bytes * (br * k + h * k + h + n * h + n + br * h + br * n)

@@ -1,0 +1,76 @@
+"""Pallas pointwise kernels: GELU forward/backward.
+
+The GELU is embarrassingly parallel (paper Section 5: no synchronization
+needed under jigsaw), so the kernel is a straightforward row-tiled map.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+ROW_BLOCK = 256
+
+
+def _gelu_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    x3 = x * x * x
+    o_ref[...] = 0.5 * x * (
+        1.0 + jnp.tanh(ref.SQRT_2_OVER_PI * (x + ref.GELU_C * x3))
+    )
+
+
+def _gelu_bwd_kernel(x_ref, dy_ref, o_ref):
+    x = x_ref[...]
+    x2 = x * x
+    inner = ref.SQRT_2_OVER_PI * (x + ref.GELU_C * x * x2)
+    t = jnp.tanh(inner)
+    sech2 = 1.0 - t * t
+    dinner = ref.SQRT_2_OVER_PI * (1.0 + 3.0 * ref.GELU_C * x2)
+    o_ref[...] = dy_ref[...] * (0.5 * (1.0 + t) + 0.5 * x * sech2 * dinner)
+
+
+def _rows_blocks(r: int):
+    br = min(r, ROW_BLOCK)
+    rp = ((r + br - 1) // br) * br
+    return br, rp
+
+
+def gelu(x):
+    """Tanh-approximated GELU on a 2-D [R, C] tensor (row-tiled)."""
+    r, c = x.shape
+    br, rp = _rows_blocks(r)
+    xp = jnp.pad(x, ((0, rp - r), (0, 0)))
+    out = pl.pallas_call(
+        _gelu_kernel,
+        grid=(rp // br,),
+        in_specs=[pl.BlockSpec((br, c), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(xp)
+    return out[:r]
+
+
+def gelu_bwd(x, dy):
+    """dx = dy * gelu'(x) on 2-D [R, C] tensors."""
+    assert x.shape == dy.shape
+    r, c = x.shape
+    br, rp = _rows_blocks(r)
+    xp = jnp.pad(x, ((0, rp - r), (0, 0)))
+    dyp = jnp.pad(dy, ((0, rp - r), (0, 0)))
+    out = pl.pallas_call(
+        _gelu_bwd_kernel,
+        grid=(rp // br,),
+        in_specs=[
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+            pl.BlockSpec((br, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rp, c), jnp.float32),
+        interpret=True,
+    )(xp, dyp)
+    return out[:r]

@@ -1,0 +1,86 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+These are the ground truth the L1 kernels are tested against (pytest +
+hypothesis sweeps in python/tests/), and the building blocks of the
+monolithic oracle programs the rust jigsaw engine is validated against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+SQRT_2_OVER_PI = 0.7978845608028654
+GELU_C = 0.044715
+
+
+def matmul_nt(x, w):
+    """y = x @ w.T         x:[M,K], w:[N,K] -> [M,N]"""
+    return jnp.dot(x, w.T, preferred_element_type=jnp.float32)
+
+
+def matmul_nn(x, w):
+    """y = x @ w           x:[M,K], w:[K,N] -> [M,N]"""
+    return jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def matmul_tn(x, w):
+    """y = x.T @ w         x:[K,M], w:[K,N] -> [M,N]
+
+    The paper's 'transposed MLP' trick (Section 5): computing X^T W directly
+    eliminates a materialized transpose in each mixing block.
+    """
+    return jnp.dot(x.T, w, preferred_element_type=jnp.float32)
+
+
+def gelu(x):
+    """tanh-approximated GELU (matches jax.nn.gelu(approximate=True))."""
+    x3 = x * x * x
+    return 0.5 * x * (1.0 + jnp.tanh(SQRT_2_OVER_PI * (x + GELU_C * x3)))
+
+
+def gelu_grad(x):
+    """dGELU/dx for the tanh approximation."""
+    x2 = x * x
+    inner = SQRT_2_OVER_PI * (x + GELU_C * x * x2)
+    t = jnp.tanh(inner)
+    sech2 = 1.0 - t * t
+    dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x2)
+    return 0.5 * (1.0 + t) + 0.5 * x * sech2 * dinner
+
+
+def gelu_bwd(x, dy):
+    return dy * gelu_grad(x)
+
+
+def layernorm(x, gamma, beta, eps: float = 1e-5):
+    """LayerNorm over the last axis of a 2-D [R, C] input, per-column affine.
+
+    Returns (y, mean, rstd); mean/rstd are saved for the backward pass.
+    """
+    mean = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mean) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mean) * rstd
+    return xhat * gamma + beta, mean[:, 0], rstd[:, 0]
+
+
+def layernorm_bwd(x, gamma, mean, rstd, dy):
+    """Backward of `layernorm`. Returns (dx, dgamma, dbeta)."""
+    mean = mean[:, None]
+    rstd = rstd[:, None]
+    xhat = (x - mean) * rstd
+    dgamma = jnp.sum(dy * xhat, axis=0)
+    dbeta = jnp.sum(dy, axis=0)
+    dxhat = dy * gamma
+    dx = rstd * (
+        dxhat
+        - jnp.mean(dxhat, axis=-1, keepdims=True)
+        - xhat * jnp.mean(dxhat * xhat, axis=-1, keepdims=True)
+    )
+    return dx, dgamma, dbeta
+
+
+def mlp(x, w1, b1, w2, b2):
+    """Mixer MLP: gelu(x @ w1.T + b1) @ w2.T + b2  (x:[M,K], w1:[H,K], w2:[N,H])."""
+    h = gelu(matmul_nt(x, w1) + b1)
+    return matmul_nt(h, w2) + b2

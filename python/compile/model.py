@@ -1,0 +1,331 @@
+"""L2 — WeatherMixer forward/backward in JAX, calling the L1 Pallas kernels.
+
+The model follows paper Section 3:
+
+    encoder (non-overlapping patch conv, implemented as reshape + linear)
+      -> N mixing blocks:
+           token mixing   (LN -> MLP over the token axis, transposed form)
+           channel mixing (LN -> MLP over the channel axis)
+         with residual connections around each MLP
+      -> decoder (linear + un-patch)
+      -> learned per-channel blend between the input and the model output.
+
+Monolithic programs lowered from here (forward / loss_and_grad / train_step)
+are the *oracles* the rust jigsaw engine is validated against. `ln_groups=n`
+computes layer-norm statistics over n channel groups, exactly reproducing an
+n-way jigsaw run's local-stats layer norm (paper Section 5), so the oracle
+bit-matches each parallel mode.
+
+Parameters are an ordered list of (name, array); the order is the
+python<->rust ABI, recorded in the artifact manifest.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig, channel_weights
+from .kernels import layernorm as k_ln
+from .kernels import matmul as k_mm
+from .kernels import pointwise as k_pw
+from .kernels import ref as k_ref
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# Parameter construction
+# ---------------------------------------------------------------------------
+
+def param_order(cfg: ModelConfig) -> List[str]:
+    """The canonical parameter ordering (the rust ABI)."""
+    names = ["enc_w", "enc_b"]
+    for i in range(cfg.blocks):
+        names += [
+            f"blk{i}_ln1_g", f"blk{i}_ln1_b",
+            f"blk{i}_tok_w1", f"blk{i}_tok_b1",
+            f"blk{i}_tok_w2", f"blk{i}_tok_b2",
+            f"blk{i}_ln2_g", f"blk{i}_ln2_b",
+            f"blk{i}_ch_w1", f"blk{i}_ch_b1",
+            f"blk{i}_ch_w2", f"blk{i}_ch_b2",
+        ]
+    names += ["dec_w", "dec_b", "blend_g"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> Dict[str, Tuple[int, ...]]:
+    t, d, pd = cfg.tokens, cfg.d_emb, cfg.patch_dim
+    shapes: Dict[str, Tuple[int, ...]] = {
+        "enc_w": (d, pd), "enc_b": (d,),
+        "dec_w": (pd, d), "dec_b": (pd,),
+        "blend_g": (cfg.channels_padded,),
+    }
+    for i in range(cfg.blocks):
+        shapes[f"blk{i}_ln1_g"] = (d,)
+        shapes[f"blk{i}_ln1_b"] = (d,)
+        shapes[f"blk{i}_tok_w1"] = (cfg.d_tok, t)
+        shapes[f"blk{i}_tok_b1"] = (cfg.d_tok,)
+        shapes[f"blk{i}_tok_w2"] = (t, cfg.d_tok)
+        shapes[f"blk{i}_tok_b2"] = (t,)
+        shapes[f"blk{i}_ln2_g"] = (d,)
+        shapes[f"blk{i}_ln2_b"] = (d,)
+        shapes[f"blk{i}_ch_w1"] = (cfg.d_ch, d)
+        shapes[f"blk{i}_ch_b1"] = (cfg.d_ch,)
+        shapes[f"blk{i}_ch_w2"] = (d, cfg.d_ch)
+        shapes[f"blk{i}_ch_b2"] = (d,)
+    return shapes
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Params:
+    """LeCun-style init; biases zero; LN affine (1, 0); blend gate 0
+    (sigmoid(0) = 0.5: start halfway between persistence and the network)."""
+    shapes = param_shapes(cfg)
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name in param_order(cfg):
+        shp = shapes[name]
+        if name.endswith("_g") and "ln" in name:
+            params[name] = jnp.ones(shp, jnp.float32)
+        elif name.endswith(("_b", "_g")) and len(shp) == 1:
+            params[name] = jnp.zeros(shp, jnp.float32)
+        else:
+            key, sub = jax.random.split(key)
+            fan_in = shp[-1]
+            params[name] = (
+                jax.random.normal(sub, shp, jnp.float32) / math.sqrt(fan_in)
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _ops(cfg: ModelConfig):
+    """Kernel namespace: pallas kernels or the pure-jnp reference."""
+    if cfg.use_pallas:
+        return k_mm.matmul_nt, k_mm.matmul_nn, k_pw.gelu, k_ln.layernorm
+    return k_ref.matmul_nt, k_ref.matmul_nn, k_ref.gelu, (
+        lambda x, g, b: k_ref.layernorm(x, g, b)
+    )
+
+
+def patchify(cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """[lat, lon, C] -> [T, patch_dim] with patch_dim ordered (c, pi, pj).
+
+    Channel-major ordering keeps a channel shard of the input a *contiguous*
+    row-range of the encoder weight — the jigsaw 2-way input split.
+    """
+    p = cfg.patch
+    lp, lo = cfg.lat // p, cfg.lon // p
+    c = cfg.channels_padded
+    x = x.reshape(lp, p, lo, p, c)
+    # -> [lp, lo, c, p, p] so flat feature index is c*p*p + pi*p + pj
+    x = x.transpose(0, 2, 4, 1, 3)
+    return x.reshape(lp * lo, c * p * p)
+
+
+def unpatchify(cfg: ModelConfig, y: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of `patchify`: [T, patch_dim] -> [lat, lon, C]."""
+    p = cfg.patch
+    lp, lo = cfg.lat // p, cfg.lon // p
+    c = cfg.channels_padded
+    y = y.reshape(lp, lo, c, p, p)
+    y = y.transpose(0, 3, 1, 4, 2)
+    return y.reshape(cfg.lat, cfg.lon, c)
+
+
+def _grouped_ln(cfg: ModelConfig, ln, x, g, b):
+    """LN over the channel axis in `ln_groups` contiguous groups.
+
+    With ln_groups = n this reproduces an n-way jigsaw rank computing LN
+    statistics over its local channel shard (paper Section 5).
+    """
+    groups = cfg.ln_groups
+    d = x.shape[-1]
+    if groups == 1:
+        y, _, _ = ln(x, g, b)
+        return y
+    dg = d // groups
+    outs = []
+    for gi in range(groups):
+        sl = slice(gi * dg, (gi + 1) * dg)
+        y, _, _ = ln(x[:, sl], g[sl], b[sl])
+        outs.append(y)
+    return jnp.concatenate(outs, axis=-1)
+
+
+def mixer_block(cfg: ModelConfig, params: Params, i: int, z: jnp.ndarray):
+    """One mixing block on [T, d_emb] (paper Figure 2)."""
+    mm_nt, mm_nn, gelu, ln = _ops(cfg)
+    # token mixing (transposed MLP form: no materialized transpose of z)
+    u = _grouped_ln(cfg, ln, z, params[f"blk{i}_ln1_g"], params[f"blk{i}_ln1_b"])
+    h = gelu(mm_nn(params[f"blk{i}_tok_w1"], u) + params[f"blk{i}_tok_b1"][:, None])
+    tok = mm_nn(params[f"blk{i}_tok_w2"], h) + params[f"blk{i}_tok_b2"][:, None]
+    z = z + tok
+    # channel mixing
+    v = _grouped_ln(cfg, ln, z, params[f"blk{i}_ln2_g"], params[f"blk{i}_ln2_b"])
+    h = gelu(mm_nt(v, params[f"blk{i}_ch_w1"]) + params[f"blk{i}_ch_b1"])
+    ch = mm_nt(h, params[f"blk{i}_ch_w2"]) + params[f"blk{i}_ch_b2"]
+    return z + ch
+
+
+def processor(cfg: ModelConfig, params: Params, z: jnp.ndarray) -> jnp.ndarray:
+    for i in range(cfg.blocks):
+        z = mixer_block(cfg, params, i, z)
+    return z
+
+
+def forward(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+            rollout: int = 1) -> jnp.ndarray:
+    """Forecast from one sample [lat, lon, C_pad].
+
+    ``rollout`` repeats the processor r times with a single encode/decode —
+    the paper's randomized-rollout fine-tuning scheme (Section 6), which
+    differs from classic auto-regressive rollout by keeping the
+    encoder/decoder out of the loop.
+    """
+    mm_nt, _, _, _ = _ops(cfg)
+    patches = patchify(cfg, x)
+    z = mm_nt(patches, params["enc_w"]) + params["enc_b"]
+    for _ in range(rollout):
+        z = processor(cfg, params, z)
+    y = mm_nt(z, params["dec_w"]) + params["dec_b"]
+    delta = unpatchify(cfg, y)
+    gate = jax.nn.sigmoid(params["blend_g"])
+    return gate * x + (1.0 - gate) * delta
+
+
+# ---------------------------------------------------------------------------
+# Loss / metrics
+# ---------------------------------------------------------------------------
+
+def latitude_weights(lat: int) -> jnp.ndarray:
+    """cos(phi) cell-center weights, normalized to mean 1 (WeatherBench2)."""
+    phi = (-90.0 + (jnp.arange(lat) + 0.5) * 180.0 / lat) * math.pi / 180.0
+    w = jnp.cos(phi)
+    return w / jnp.mean(w)
+
+
+def loss_channel_weights(cfg: ModelConfig) -> jnp.ndarray:
+    """Pangu variable weights x pressure-level weights; padded channels 0."""
+    ws = channel_weights()[: cfg.channels]
+    ws = ws + [0.0] * (cfg.channels_padded - cfg.channels)
+    return jnp.asarray(ws, jnp.float32)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+            y: jnp.ndarray, rollout: int = 1) -> jnp.ndarray:
+    """Latitude- and variable-weighted MSE (paper Section 6)."""
+    pred = forward(cfg, params, x, rollout=rollout)
+    wlat = latitude_weights(cfg.lat)[:, None, None]
+    wch = loss_channel_weights(cfg)[None, None, :]
+    se = wlat * wch * (pred - y) ** 2
+    return jnp.sum(se) / (cfg.lat * cfg.lon * cfg.channels_padded)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer (Adam) — must match rust/src/optim/adam.rs exactly.
+# ---------------------------------------------------------------------------
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+
+
+def adam_step(params, grads, m, v, step, lr):
+    """Adam with global-norm gradient clipping (clip = 1.0).
+
+    step is the *new* (1-based) step index used for bias correction.
+    """
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(g.astype(jnp.float32) ** 2) for g in grads.values())
+    )
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    b1t = 1.0 - ADAM_B1 ** step
+    b2t = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k] * scale
+        new_m[k] = ADAM_B1 * m[k] + (1.0 - ADAM_B1) * g
+        new_v[k] = ADAM_B2 * v[k] + (1.0 - ADAM_B2) * g * g
+        mhat = new_m[k] / b1t
+        vhat = new_v[k] / b2t
+        new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Flat-ABI wrappers for AOT export (list-of-arrays <-> named pytrees)
+# ---------------------------------------------------------------------------
+
+def _pack(cfg: ModelConfig, flat: List[jnp.ndarray]) -> Params:
+    return dict(zip(param_order(cfg), flat))
+
+
+def make_forward_fn(cfg: ModelConfig, rollout: int = 1):
+    n = len(param_order(cfg))
+
+    def f(*args):
+        params = _pack(cfg, list(args[:n]))
+        x = args[n]
+        return forward(cfg, params, x, rollout=rollout)
+
+    return f
+
+
+def make_loss_and_grad_fn(cfg: ModelConfig, rollout: int = 1):
+    n = len(param_order(cfg))
+    order = param_order(cfg)
+
+    def f(*args):
+        params = _pack(cfg, list(args[:n]))
+        x, y = args[n], args[n + 1]
+
+        def lf(p):
+            return loss_fn(cfg, p, x, y, rollout=rollout)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        return (loss, *[grads[k] for k in order])
+
+    return f
+
+
+def make_train_step_fn(cfg: ModelConfig):
+    """(params*, m*, v*, step, lr, x, y) -> (loss, new_params*, new_m*, new_v*)."""
+    n = len(param_order(cfg))
+    order = param_order(cfg)
+
+    def f(*args):
+        params = _pack(cfg, list(args[:n]))
+        m = dict(zip(order, args[n:2 * n]))
+        v = dict(zip(order, args[2 * n:3 * n]))
+        step, lr, x, y = args[3 * n], args[3 * n + 1], args[3 * n + 2], args[3 * n + 3]
+
+        def lf(p):
+            return loss_fn(cfg, p, x, y)
+
+        loss, grads = jax.value_and_grad(lf)(params)
+        new_p, new_m, new_v = adam_step(params, grads, m, v, step, lr)
+        return (
+            loss,
+            *[new_p[k] for k in order],
+            *[new_m[k] for k in order],
+            *[new_v[k] for k in order],
+        )
+
+    return f
+
+
+def example_inputs(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed + 1000)
+    kx, ky = jax.random.split(key)
+    shape = (cfg.lat, cfg.lon, cfg.channels_padded)
+    x = jax.random.normal(kx, shape, jnp.float32)
+    y = jax.random.normal(ky, shape, jnp.float32)
+    return x, y

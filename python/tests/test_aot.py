@@ -1,0 +1,85 @@
+"""AOT export: manifest completeness and HLO-text sanity.
+
+Uses a temp dir for a fast preset so the test is hermetic (does not depend
+on `make artifacts` having run).
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.configs import ALL_PRESETS, preset
+
+
+def test_primitive_keys_contraction_consistent():
+    cfg = preset("tiny")
+    for op, xr, xc, wr, wc in aot.primitive_keys(cfg):
+        if op == "nt":
+            assert xc == wc
+        elif op == "nn":
+            assert xc == wr
+        else:
+            assert xr == wr
+
+
+def test_primitive_keys_cover_all_ways():
+    cfg = preset("tiny")
+    k1 = aot.primitive_keys(cfg, (1,))
+    k2 = aot.primitive_keys(cfg, (1, 2))
+    k4 = aot.primitive_keys(cfg, (1, 2, 4))
+    assert k1 < k2 < k4
+    # the unsharded fwd encoder matmul is always present
+    assert ("nt", cfg.tokens, cfg.patch_dim, cfg.d_emb, cfg.patch_dim) in k1
+
+
+def test_presets_well_formed():
+    for name in ALL_PRESETS:
+        cfg = preset(name)
+        assert cfg.lat % cfg.patch == 0 and cfg.lon % cfg.patch == 0
+        assert cfg.channels_padded % 4 == 0
+        assert cfg.d_emb % 4 == 0 and cfg.d_tok % 4 == 0 and cfg.d_ch % 4 == 0
+        assert cfg.tokens % 2 == 0  # 4-way shards the token dim
+        assert cfg.param_count() > 0 and cfg.flops_forward() > 0
+
+
+def test_e2e_preset_is_about_100m_params():
+    cfg = preset("e2e100m")
+    assert 80e6 < cfg.param_count() < 130e6
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    aot.export_preset("tiny", out, ways=(1, 2))
+    return out
+
+
+def test_manifest_lists_every_file(exported):
+    pdir = os.path.join(exported, "tiny")
+    manifest = json.load(open(os.path.join(pdir, "manifest.json")))
+    for rel in manifest["programs"].values():
+        assert os.path.exists(os.path.join(pdir, rel)), rel
+    for rel in manifest["primitives"].values():
+        assert os.path.exists(os.path.join(pdir, rel)), rel
+    assert manifest["param_order"][0] == "enc_w"
+    assert manifest["adam"]["grad_clip"] == 1.0
+
+
+def test_hlo_text_parses_as_hlo_module(exported):
+    pdir = os.path.join(exported, "tiny")
+    text = open(os.path.join(pdir, "forward.hlo.txt")).read()
+    assert text.startswith("HloModule")
+    assert "ROOT" in text
+
+
+def test_config_json_has_rust_contract_fields(exported):
+    cfg = json.load(open(os.path.join(exported, "tiny", "config.json")))
+    for field in [
+        "lat", "lon", "channels", "channels_padded", "patch", "d_emb",
+        "d_tok", "d_ch", "blocks", "tokens", "patch_dim", "param_count",
+        "flops_forward", "channel_weights",
+    ]:
+        assert field in cfg, field
+    assert len(cfg["channel_weights"]) == 69

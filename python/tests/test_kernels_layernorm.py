@@ -1,0 +1,80 @@
+"""LayerNorm kernels vs oracle and vs jax autodiff."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layernorm as k
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(min_value=1, max_value=300),
+    c=st.integers(min_value=2, max_value=96),
+)
+def test_layernorm_fwd_matches_ref(r, c):
+    rng = np.random.default_rng(r * 31 + c)
+    x, g, b = _rand(rng, r, c), _rand(rng, c), _rand(rng, c)
+    y1, m1, s1 = k.layernorm(x, g, b)
+    y2, m2, s2 = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(m1, m2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    r=st.integers(min_value=1, max_value=300),
+    c=st.integers(min_value=2, max_value=96),
+)
+def test_layernorm_bwd_matches_ref(r, c):
+    rng = np.random.default_rng(r * 37 + c)
+    x, g, b = _rand(rng, r, c), _rand(rng, c), _rand(rng, c)
+    dy = _rand(rng, r, c)
+    _, mean, rstd = ref.layernorm(x, g, b)
+    got = k.layernorm_bwd(x, g, mean, rstd, dy)
+    want = ref.layernorm_bwd(x, g, mean, rstd, dy)
+    for a, bb in zip(got, want):
+        np.testing.assert_allclose(a, bb, rtol=1e-3, atol=1e-4)
+
+
+def test_layernorm_bwd_matches_autodiff():
+    """The hand-derived backward equals jax.vjp of the forward."""
+    rng = np.random.default_rng(7)
+    x, g, b = _rand(rng, 40, 24), _rand(rng, 24), _rand(rng, 24)
+    dy = _rand(rng, 40, 24)
+
+    def f(x, g, b):
+        return ref.layernorm(x, g, b)[0]
+
+    _, vjp = jax.vjp(f, x, g, b)
+    dx_a, dg_a, db_a = vjp(dy)
+    _, mean, rstd = ref.layernorm(x, g, b)
+    dx, dg, db = ref.layernorm_bwd(x, g, mean, rstd, dy)
+    np.testing.assert_allclose(dx, dx_a, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(dg, dg_a, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(db, db_a, rtol=1e-4, atol=1e-5)
+
+
+def test_layernorm_output_is_normalized():
+    rng = np.random.default_rng(8)
+    x = _rand(rng, 10, 64) * 5 + 3
+    y, _, _ = k.layernorm(x, jnp.ones(64), jnp.zeros(64))
+    np.testing.assert_allclose(np.asarray(y).mean(axis=1), 0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(y).std(axis=1), 1, atol=1e-3)
+
+
+def test_layernorm_multiblock_rows():
+    """Row counts beyond ROW_BLOCK take the multi-block grid path."""
+    rng = np.random.default_rng(9)
+    r = k.ROW_BLOCK * 2 + 17
+    x, g, b = _rand(rng, r, 16), _rand(rng, 16), _rand(rng, 16)
+    y1, _, _ = k.layernorm(x, g, b)
+    y2, _, _ = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,58 @@
+"""GELU forward/backward kernels vs oracle + analytic properties."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pointwise as k
+from compile.kernels import ref
+
+DIM = st.integers(min_value=1, max_value=300)
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIM, c=st.integers(min_value=1, max_value=64))
+def test_gelu_matches_ref(r, c):
+    rng = np.random.default_rng(r * 1009 + c)
+    x = _rand(rng, r, c) * 3.0
+    np.testing.assert_allclose(k.gelu(x), ref.gelu(x), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(r=DIM, c=st.integers(min_value=1, max_value=64))
+def test_gelu_bwd_matches_ref(r, c):
+    rng = np.random.default_rng(r * 1013 + c)
+    x, dy = _rand(rng, r, c) * 3.0, _rand(rng, r, c)
+    # atol 5e-5: in the saturated tanh tail sech^2 underflows to ULP noise
+    # and |dgelu| ~ 1e-5 values differ between the pallas and jnp lowering
+    # of the same formula; real formula bugs produce O(1) deviations.
+    np.testing.assert_allclose(
+        k.gelu_bwd(x, dy), ref.gelu_bwd(x, dy), rtol=1e-3, atol=5e-5
+    )
+
+
+def test_gelu_matches_jax_nn():
+    """Our tanh approximation is jax.nn.gelu(approximate=True)."""
+    x = jnp.linspace(-6, 6, 101, dtype=jnp.float32)[:, None]
+    np.testing.assert_allclose(
+        ref.gelu(x), jax.nn.gelu(x, approximate=True), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_gelu_grad_matches_autodiff():
+    x = jnp.linspace(-4, 4, 41, dtype=jnp.float32)
+    auto = jax.vmap(jax.grad(lambda v: jax.nn.gelu(v, approximate=True)))(x)
+    np.testing.assert_allclose(ref.gelu_grad(x), auto, rtol=1e-4, atol=1e-5)
+
+
+def test_gelu_limits():
+    x = jnp.asarray([[-30.0, 0.0, 30.0]], jnp.float32)
+    y = np.asarray(k.gelu(x))[0]
+    assert abs(y[0]) < 1e-6          # gelu(-inf) -> 0
+    assert y[1] == 0.0               # gelu(0) = 0
+    assert abs(y[2] - 30.0) < 1e-4   # gelu(+inf) -> x

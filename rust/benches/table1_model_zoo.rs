@@ -1,0 +1,36 @@
+//! Paper Table 1: the nine scaling-experiment architectures. Regenerates
+//! the table from the config zoo and checks the workload-doubling rule.
+
+use jigsaw::benchkit::{banner, csv_path};
+use jigsaw::config::zoo::TABLE1;
+use jigsaw::util::table::{fmt, Table};
+
+fn main() {
+    banner("Table 1", "model architectures in scaling experiments");
+    let mut t = Table::new(&[
+        "Model #", "TFLOPs", "Params (mil)", "d_emb", "d_tok", "d_ch",
+        "step FLOPs (T)", "weights (GB)",
+    ]);
+    for m in TABLE1 {
+        t.row(&[
+            m.id.to_string(),
+            fmt(m.tflops_fwd),
+            fmt(m.params_mil),
+            m.d_emb.to_string(),
+            m.d_tok.to_string(),
+            m.d_ch.to_string(),
+            fmt(m.flops_step() / 1e12),
+            fmt(m.param_bytes() / 1e9),
+        ]);
+    }
+    println!("{}", t.render());
+    t.write_csv(&csv_path("table1_model_zoo")).unwrap();
+
+    // the paper's construction rules
+    for w in TABLE1.windows(2) {
+        assert!((w[1].tflops_fwd / w[0].tflops_fwd - 2.0).abs() < 1e-9);
+    }
+    // 40 GB A100 bound: the largest single-GPU model is #7 (~1.4B)
+    assert!(TABLE1[6].param_bytes() < 6e9);
+    println!("workload doubles per row; model 7 is the largest single-GPU fit — OK");
+}

@@ -1,0 +1,37 @@
+//! Paper Table 2: number of data-parallel model instances per jigsaw way
+//! when scaling the system-wide experiment from 1 to 256 GPUs.
+
+use jigsaw::benchkit::{banner, csv_path};
+use jigsaw::config::zoo::TABLE2;
+use jigsaw::util::table::Table;
+
+fn main() {
+    banner("Table 2", "data-parallel model instances");
+    let gpus = [1usize, 2, 4, 8, 16, 32, 64, 128, 256];
+    let mut header: Vec<String> = vec!["way".into(), "TFLOPs".into(), "Params (mil)".into()];
+    header.extend(gpus.iter().map(|g| g.to_string()));
+    let hdr_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&hdr_refs);
+    for plan in TABLE2 {
+        let mut row = vec![
+            format!("{}-way", plan.way),
+            format!("{}", plan.tflops_fwd),
+            format!("{}", plan.params_mil),
+        ];
+        for g in gpus {
+            row.push(
+                plan.dp_instances(g)
+                    .map(|n| n.to_string())
+                    .unwrap_or_else(|| "-".into()),
+            );
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    t.write_csv(&csv_path("table2_dp_instances")).unwrap();
+
+    assert_eq!(TABLE2[0].dp_instances(256), Some(256));
+    assert_eq!(TABLE2[1].dp_instances(256), Some(128));
+    assert_eq!(TABLE2[2].dp_instances(256), Some(64));
+    println!("matches paper Table 2 at 256 GPUs — OK");
+}

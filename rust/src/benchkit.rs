@@ -1,0 +1,94 @@
+//! Bench harness support: wall-clock timing, result persistence, and the
+//! shared synthetic-training runs used by the paper-figure benches
+//! (criterion is unavailable offline; benches are `harness = false`
+//! binaries built on this module).
+
+use std::time::Instant;
+
+use crate::config::ModelConfig;
+
+/// Where bench CSVs land.
+pub const RESULTS_DIR: &str = "bench_results";
+
+pub fn csv_path(name: &str) -> String {
+    format!("{RESULTS_DIR}/{name}.csv")
+}
+
+/// Print a bench banner.
+pub fn banner(id: &str, what: &str) {
+    println!("\n=== {id}: {what} ===");
+}
+
+/// Time a closure (seconds), best of `reps`.
+pub fn time_best<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Synthetic ModelConfig used by benches that don't need artifacts (the
+/// native-backend training benches: Figs 3-6 analogues).
+pub fn synth_config(name: &str, d_emb: usize, d_tok: usize, blocks: usize) -> ModelConfig {
+    let (lat, lon, channels, patch) = (16usize, 32usize, 20usize, 4usize);
+    let channels_padded = channels + (channels.wrapping_neg() & 3);
+    let tokens = (lat / patch) * (lon / patch);
+    let patch_dim = channels_padded * patch * patch;
+    let weights = crate::config::zoo_channel_weights(channels);
+    let mut cfg = ModelConfig {
+        name: name.to_string(),
+        lat,
+        lon,
+        channels,
+        channels_padded,
+        patch,
+        d_emb,
+        d_tok,
+        d_ch: d_emb,
+        blocks,
+        tokens,
+        patch_dim,
+        param_count: 0,
+        flops_forward: 0,
+        channel_weights: weights,
+    };
+    // param count: mirrors configs.ModelConfig.param_count
+    let (t, d) = (cfg.tokens, cfg.d_emb);
+    let mut n = cfg.patch_dim * d + d;
+    for _ in 0..cfg.blocks {
+        n += 2 * d;
+        n += t * cfg.d_tok + cfg.d_tok;
+        n += cfg.d_tok * t + t;
+        n += 2 * d;
+        n += d * cfg.d_ch + cfg.d_ch;
+        n += cfg.d_ch * d + d;
+    }
+    n += d * cfg.patch_dim + cfg.patch_dim;
+    n += cfg.channels_padded;
+    cfg.param_count = n;
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn synth_config_consistent() {
+        let c = synth_config("x", 64, 48, 2);
+        assert_eq!(c.channels_padded % 4, 0);
+        assert!(c.param_count > 0);
+        assert_eq!(c.tokens, 32);
+    }
+
+    #[test]
+    fn time_best_positive() {
+        let t = time_best(2, || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(t >= 0.0);
+    }
+}

@@ -1,0 +1,252 @@
+//! Simulated NCCL/MPI: tagged point-to-point message passing between rank
+//! threads plus the collectives jigsaw needs (allreduce, pairwise grad
+//! reduce, barrier), with per-link byte accounting.
+//!
+//! The paper implements communication with MPI non-blocking point-to-point
+//! operations (Section 5); here `send` is non-blocking (enqueue) and
+//! `recv` blocks, which preserves the overlap structure: a rank posts its
+//! outgoing partial sums, computes its local terms, then blocks on the
+//! partner's message — the same isend/compute/wait pattern.
+//!
+//! Byte counters feed the perf model validation and the comm-volume
+//! benches; timing at paper scale comes from `perfmodel`, not wallclock.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+
+use crate::tensor::Tensor;
+
+type Key = (usize, usize, u64); // (src, dst, tag)
+
+struct Shared {
+    queues: Mutex<HashMap<Key, Vec<Tensor>>>,
+    cv: Condvar,
+    /// bytes sent per (src, dst) link
+    bytes: Mutex<Vec<u64>>,
+    n: usize,
+}
+
+/// The in-process "fabric" connecting `n` ranks.
+#[derive(Clone)]
+pub struct Network {
+    inner: Arc<Shared>,
+}
+
+impl Network {
+    pub fn new(n: usize) -> Self {
+        Network {
+            inner: Arc::new(Shared {
+                queues: Mutex::new(HashMap::new()),
+                cv: Condvar::new(),
+                bytes: Mutex::new(vec![0; n * n]),
+                n,
+            }),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.inner.n
+    }
+
+    /// Endpoint for one rank (hand one to each rank thread).
+    pub fn endpoint(&self, rank: usize) -> Comm {
+        assert!(rank < self.inner.n);
+        Comm { rank, net: self.inner.clone(), coll_seq: 0 }
+    }
+
+    /// Total bytes sent over every link.
+    pub fn total_bytes(&self) -> u64 {
+        self.inner.bytes.lock().unwrap().iter().sum()
+    }
+
+    /// Bytes sent src -> dst.
+    pub fn link_bytes(&self, src: usize, dst: usize) -> u64 {
+        self.inner.bytes.lock().unwrap()[src * self.inner.n + dst]
+    }
+
+    pub fn reset_bytes(&self) {
+        for b in self.inner.bytes.lock().unwrap().iter_mut() {
+            *b = 0;
+        }
+    }
+}
+
+/// Per-rank communicator.
+pub struct Comm {
+    pub rank: usize,
+    net: Arc<Shared>,
+    /// local collective sequence number; all ranks must issue collectives
+    /// in the same order (MPI semantics).
+    coll_seq: u64,
+}
+
+/// Tag namespaces so user tags, collectives, and engine-internal messages
+/// never collide.
+const COLLECTIVE_BIT: u64 = 1 << 63;
+
+impl Comm {
+    pub fn n_ranks(&self) -> usize {
+        self.net.n
+    }
+
+    /// Non-blocking send (isend): enqueues and returns.
+    pub fn send(&self, dst: usize, tag: u64, t: Tensor) {
+        assert!(dst < self.net.n, "bad dst {dst}");
+        assert!(dst != self.rank, "self-send rank {dst}");
+        {
+            let mut bytes = self.net.bytes.lock().unwrap();
+            bytes[self.rank * self.net.n + dst] += (t.numel() * 4) as u64;
+        }
+        let mut q = self.net.queues.lock().unwrap();
+        q.entry((self.rank, dst, tag)).or_default().push(t);
+        self.net.cv.notify_all();
+    }
+
+    /// Blocking receive of a specific (src, tag) message.
+    pub fn recv(&self, src: usize, tag: u64) -> Tensor {
+        let key = (src, self.rank, tag);
+        let mut q = self.net.queues.lock().unwrap();
+        loop {
+            if let Some(list) = q.get_mut(&key) {
+                if !list.is_empty() {
+                    let t = list.remove(0);
+                    if list.is_empty() {
+                        q.remove(&key);
+                    }
+                    return t;
+                }
+            }
+            q = self.net.cv.wait(q).unwrap();
+        }
+    }
+
+    fn next_coll_tag(&mut self, group: &[usize]) -> u64 {
+        // group identity folded into the tag so disjoint groups (e.g. the
+        // paper's r%n DP groups) never cross-talk.
+        let mut gh: u64 = 0xcbf29ce484222325;
+        for &r in group {
+            gh = (gh ^ r as u64).wrapping_mul(0x100000001b3);
+        }
+        // layout: [63]=collective  [62]=reply  [61:32]=group hash  [31:0]=seq
+        let tag = COLLECTIVE_BIT
+            | ((gh & 0x3FFF_FFFF) << 32)
+            | (self.coll_seq & 0xFFFF_FFFF);
+        self.coll_seq += 1;
+        tag
+    }
+
+    /// Sum-allreduce across `group` (must contain self; all members call).
+    ///
+    /// Gather-to-root + broadcast: root = lowest rank in the group. The
+    /// simulated fabric has no topology, so ring vs tree only matters to
+    /// the perf model (which models a ring, Section `perfmodel`).
+    pub fn allreduce_sum(&mut self, group: &[usize], t: &Tensor) -> Tensor {
+        assert!(group.contains(&self.rank));
+        if group.len() == 1 {
+            return t.clone();
+        }
+        let tag = self.next_coll_tag(group);
+        let root = *group.iter().min().unwrap();
+        if self.rank == root {
+            let mut acc = t.clone();
+            for &r in group.iter().filter(|&&r| r != root) {
+                let part = self.recv(r, tag);
+                crate::tensor::ops::add_assign(&mut acc, &part);
+            }
+            for &r in group.iter().filter(|&&r| r != root) {
+                self.send(r, tag | 1 << 62, acc.clone());
+            }
+            acc
+        } else {
+            self.send(root, tag, t.clone());
+            self.recv(root, tag | 1 << 62)
+        }
+    }
+
+    /// Scalar allreduce convenience (loss, grad-norm).
+    pub fn allreduce_scalar(&mut self, group: &[usize], v: f32) -> f32 {
+        self.allreduce_sum(group, &Tensor::scalar(v)).data[0]
+    }
+
+    /// Barrier across a group.
+    pub fn barrier(&mut self, group: &[usize]) {
+        let _ = self.allreduce_scalar(group, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn point_to_point_delivers_in_order() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let h = thread::spawn(move || {
+            a.send(1, 7, Tensor::scalar(1.0));
+            a.send(1, 7, Tensor::scalar(2.0));
+        });
+        assert_eq!(b.recv(0, 7).data, vec![1.0]);
+        assert_eq!(b.recv(0, 7).data, vec![2.0]);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn tags_do_not_cross() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, 1, Tensor::scalar(10.0));
+        a.send(1, 2, Tensor::scalar(20.0));
+        assert_eq!(b.recv(0, 2).data, vec![20.0]);
+        assert_eq!(b.recv(0, 1).data, vec![10.0]);
+    }
+
+    #[test]
+    fn allreduce_sums_over_group() {
+        let net = Network::new(4);
+        let group = vec![0, 1, 2, 3];
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let mut c = net.endpoint(r);
+            let g = group.clone();
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![2], vec![r as f32, 1.0]);
+                c.allreduce_sum(&g, &t).data
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![6.0, 4.0]);
+        }
+    }
+
+    #[test]
+    fn disjoint_groups_do_not_interfere() {
+        // the paper's DP groups: ranks with equal r % n share parameters
+        let net = Network::new(4);
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let mut c = net.endpoint(r);
+            let g = if r % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            handles.push(thread::spawn(move || {
+                c.allreduce_scalar(&g, (r + 1) as f32)
+            }));
+        }
+        let sums: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(sums, vec![4.0, 6.0, 4.0, 6.0]); // {1+3}, {2+4}
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        a.send(1, 0, Tensor::zeros(&[10, 10]));
+        assert_eq!(net.link_bytes(0, 1), 400);
+        assert_eq!(net.link_bytes(1, 0), 0);
+        assert_eq!(net.total_bytes(), 400);
+        net.reset_bytes();
+        assert_eq!(net.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,250 @@
+//! Configuration: the model config contract with the python compile path
+//! (`artifacts/<preset>/config.json`), the Table-1 scaling-model zoo, and
+//! the Table-2 parallel plan.
+
+pub mod zoo;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// WeatherMixer architecture config — mirror of python configs.ModelConfig.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub name: String,
+    pub lat: usize,
+    pub lon: usize,
+    pub channels: usize,
+    pub channels_padded: usize,
+    pub patch: usize,
+    pub d_emb: usize,
+    pub d_tok: usize,
+    pub d_ch: usize,
+    pub blocks: usize,
+    pub tokens: usize,
+    pub patch_dim: usize,
+    pub param_count: usize,
+    pub flops_forward: u64,
+    pub channel_weights: Vec<f32>,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let get = |k: &str| -> Result<&Json> {
+            j.get(k).ok_or_else(|| anyhow!("config.json missing key '{k}'"))
+        };
+        let us = |k: &str| -> Result<usize> {
+            get(k)?.as_usize().ok_or_else(|| anyhow!("'{k}' not a number"))
+        };
+        let weights = get("channel_weights")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("channel_weights not an array"))?
+            .iter()
+            .map(|v| v.as_f64().unwrap_or(0.0) as f32)
+            .collect();
+        Ok(ModelConfig {
+            name: get("name")?.as_str().unwrap_or("?").to_string(),
+            lat: us("lat")?,
+            lon: us("lon")?,
+            channels: us("channels")?,
+            channels_padded: us("channels_padded")?,
+            patch: us("patch")?,
+            d_emb: us("d_emb")?,
+            d_tok: us("d_tok")?,
+            d_ch: us("d_ch")?,
+            blocks: us("blocks")?,
+            tokens: us("tokens")?,
+            patch_dim: us("patch_dim")?,
+            param_count: us("param_count")?,
+            flops_forward: us("flops_forward")? as u64,
+            channel_weights: weights,
+        })
+    }
+
+    pub fn load(artifacts: &Path, preset: &str) -> Result<Self> {
+        let path = artifacts.join(preset).join("config.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+        Self::from_json(&j)
+    }
+
+    /// Per-channel loss weights padded with zeros to channels_padded.
+    pub fn padded_channel_weights(&self) -> Vec<f32> {
+        let mut w = self.channel_weights.clone();
+        w.truncate(self.channels);
+        w.resize(self.channels_padded, 0.0);
+        w
+    }
+
+    /// sample size in bytes (f32) — the domain-parallel I/O unit.
+    pub fn sample_bytes(&self) -> u64 {
+        (self.lat * self.lon * self.channels_padded * 4) as u64
+    }
+}
+
+/// Artifact manifest (program + primitive index, parameter ABI).
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub preset: String,
+    pub dir: PathBuf,
+    pub param_order: Vec<String>,
+    pub param_shapes: Vec<(String, Vec<usize>)>,
+    pub programs: Vec<(String, String)>,
+    pub primitives: Vec<(String, String)>,
+    pub adam_b1: f32,
+    pub adam_b2: f32,
+    pub adam_eps: f32,
+    pub grad_clip: f32,
+}
+
+impl Manifest {
+    pub fn load(artifacts: &Path, preset: &str) -> Result<Self> {
+        let dir = artifacts.join(preset);
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+        let order: Vec<String> = j
+            .get("param_order")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing param_order"))?
+            .iter()
+            .filter_map(|v| v.as_str().map(|s| s.to_string()))
+            .collect();
+        let shapes_obj = j
+            .get("param_shapes")
+            .and_then(|v| v.as_obj())
+            .ok_or_else(|| anyhow!("manifest missing param_shapes"))?;
+        let mut param_shapes = Vec::new();
+        for name in &order {
+            let shp = shapes_obj
+                .get(name)
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing shape for {name}"))?
+                .iter()
+                .filter_map(|v| v.as_usize())
+                .collect();
+            param_shapes.push((name.clone(), shp));
+        }
+        let to_pairs = |key: &str| -> Vec<(String, String)> {
+            j.get(key)
+                .and_then(|v| v.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let adam = j.get("adam");
+        let af = |k: &str, dflt: f32| -> f32 {
+            adam.and_then(|a| a.get(k))
+                .and_then(|v| v.as_f64())
+                .map(|v| v as f32)
+                .unwrap_or(dflt)
+        };
+        Ok(Manifest {
+            preset: preset.to_string(),
+            dir,
+            param_order: order,
+            param_shapes,
+            programs: to_pairs("programs"),
+            primitives: to_pairs("primitives"),
+            adam_b1: af("b1", 0.9),
+            adam_b2: af("b2", 0.999),
+            adam_eps: af("eps", 1e-8),
+            grad_clip: af("grad_clip", 1.0),
+        })
+    }
+
+    pub fn program_path(&self, tag: &str) -> Option<PathBuf> {
+        self.programs
+            .iter()
+            .find(|(k, _)| k == tag)
+            .map(|(_, rel)| self.dir.join(rel))
+    }
+
+    pub fn primitive_path(&self, key: &str) -> Option<PathBuf> {
+        self.primitives
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, rel)| self.dir.join(rel))
+    }
+
+    pub fn shape_of(&self, name: &str) -> Option<&[usize]> {
+        self.param_shapes
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, s)| s.as_slice())
+    }
+}
+
+/// First `n` entries of the paper's channel-weight table (Pangu surface/
+/// pressure-level weights x the paper's level weighting) — the rust twin
+/// of python `configs.channel_weights()` for artifact-free configs.
+pub fn zoo_channel_weights(n: usize) -> Vec<f32> {
+    let surface = [0.77f32, 0.66, 3.0, 1.5];
+    let plev = [("z", 3.0f32), ("q", 0.6), ("t", 1.7), ("u", 0.87), ("v", 0.6)];
+    let level_w = [1.0f32, 1.0, 1.0, 1.0, 1.0, 1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3];
+    let mut ws: Vec<f32> = surface.to_vec();
+    for (_, w) in plev {
+        for lw in level_w {
+            ws.push(w * lw);
+        }
+    }
+    ws.truncate(n.min(ws.len()));
+    while ws.len() < n {
+        ws.push(1.0);
+    }
+    ws
+}
+
+/// Locate the artifacts directory: $JIGSAW_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("JIGSAW_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_config_json() -> Json {
+        Json::parse(
+            r#"{
+              "name": "t", "lat": 8, "lon": 16, "channels": 6,
+              "channels_padded": 8, "patch": 2, "d_emb": 32, "d_tok": 48,
+              "d_ch": 32, "blocks": 2, "tokens": 32, "patch_dim": 32,
+              "param_count": 12904, "flops_forward": 1000000,
+              "channel_weights": [1.0, 2.0]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_config() {
+        let c = ModelConfig::from_json(&sample_config_json()).unwrap();
+        assert_eq!(c.d_emb, 32);
+        assert_eq!(c.tokens, 32);
+        assert_eq!(c.sample_bytes(), 8 * 16 * 8 * 4);
+    }
+
+    #[test]
+    fn padded_weights_zero_fill() {
+        let mut c = ModelConfig::from_json(&sample_config_json()).unwrap();
+        c.channels = 2;
+        c.channels_padded = 4;
+        assert_eq!(c.padded_channel_weights(), vec![1.0, 2.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let j = Json::parse(r#"{"name": "x"}"#).unwrap();
+        assert!(ModelConfig::from_json(&j).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! The paper's Table-1 model zoo and Table-2 parallel plan.
+//!
+//! These drive the performance-model benches (Figs 7-10) at the paper's
+//! scale — the architectures are the *paper's* (0.25-degree ERA5 grid,
+//! d_emb up to 10 352), evaluated analytically; the runnable presets in
+//! `artifacts/` are their scaled-down counterparts.
+
+/// One row of paper Table 1.
+#[derive(Clone, Copy, Debug)]
+pub struct ZooModel {
+    pub id: usize,
+    /// TFLOPs per forward pass (the paper's workload unit).
+    pub tflops_fwd: f64,
+    /// Total parameters, millions (paper's reported column).
+    pub params_mil: f64,
+    pub d_emb: usize,
+    pub d_tok: usize,
+    pub d_ch: usize,
+}
+
+/// Paper Table 1, verbatim.
+pub const TABLE1: [ZooModel; 9] = [
+    ZooModel { id: 1, tflops_fwd: 0.25, params_mil: 60.0, d_emb: 240, d_tok: 540, d_ch: 240 },
+    ZooModel { id: 2, tflops_fwd: 0.5, params_mil: 230.0, d_emb: 512, d_tok: 2160, d_ch: 512 },
+    ZooModel { id: 3, tflops_fwd: 1.0, params_mil: 240.0, d_emb: 896, d_tok: 2160, d_ch: 896 },
+    ZooModel { id: 4, tflops_fwd: 2.0, params_mil: 260.0, d_emb: 1600, d_tok: 2160, d_ch: 1600 },
+    ZooModel { id: 5, tflops_fwd: 4.0, params_mil: 500.0, d_emb: 2192, d_tok: 4320, d_ch: 2192 },
+    ZooModel { id: 6, tflops_fwd: 8.0, params_mil: 980.0, d_emb: 2832, d_tok: 8640, d_ch: 2832 },
+    ZooModel { id: 7, tflops_fwd: 16.0, params_mil: 1400.0, d_emb: 4896, d_tok: 8640, d_ch: 4896 },
+    ZooModel { id: 8, tflops_fwd: 32.0, params_mil: 2000.0, d_emb: 6064, d_tok: 17280, d_ch: 6064 },
+    ZooModel { id: 9, tflops_fwd: 64.0, params_mil: 2600.0, d_emb: 10352, d_tok: 17280, d_ch: 10352 },
+];
+
+impl ZooModel {
+    pub fn by_id(id: usize) -> ZooModel {
+        TABLE1[id - 1]
+    }
+
+    /// FLOPs for one forward pass (absolute).
+    pub fn flops_fwd(&self) -> f64 {
+        self.tflops_fwd * 1e12
+    }
+
+    /// Paper Section 6.3: "the backward pass was considered to have two
+    /// times the number of FLOPs as the forward pass".
+    pub fn flops_step(&self) -> f64 {
+        3.0 * self.flops_fwd()
+    }
+
+    pub fn param_bytes(&self) -> f64 {
+        self.params_mil * 1e6 * 4.0
+    }
+}
+
+/// Paper Section 6: ERA5 0.25-degree sample = 721 x 1440 x 69 channels f32.
+pub const PAPER_SAMPLE_BYTES: f64 = 721.0 * 1440.0 * 69.0 * 4.0;
+
+/// Table 2: the DP-instance layout for the system-scale weak scaling runs.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelPlan {
+    pub way: usize,
+    pub tflops_fwd: f64,
+    pub params_mil: f64,
+}
+
+pub const TABLE2: [ParallelPlan; 3] = [
+    ParallelPlan { way: 1, tflops_fwd: 16.0, params_mil: 1000.0 },
+    ParallelPlan { way: 2, tflops_fwd: 32.0, params_mil: 1400.0 },
+    ParallelPlan { way: 4, tflops_fwd: 64.0, params_mil: 2400.0 },
+];
+
+impl ParallelPlan {
+    /// Number of data-parallel model instances on `gpus` GPUs (Table 2).
+    /// None when the model does not fit (fewer GPUs than the MP way).
+    pub fn dp_instances(&self, gpus: usize) -> Option<usize> {
+        if gpus < self.way {
+            None
+        } else {
+            Some(gpus / self.way)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_workload_doubles() {
+        for w in TABLE1.windows(2) {
+            assert!((w[1].tflops_fwd / w[0].tflops_fwd - 2.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn table1_largest_single_gpu_model() {
+        // paper: ~1.4B params is the largest fitting a 40 GB A100
+        assert!((ZooModel::by_id(7).params_mil - 1400.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table2_matches_paper() {
+        // paper Table 2 at 256 GPUs: 256 / 128 / 64 instances
+        assert_eq!(TABLE2[0].dp_instances(256), Some(256));
+        assert_eq!(TABLE2[1].dp_instances(256), Some(128));
+        assert_eq!(TABLE2[2].dp_instances(256), Some(64));
+        // 4-way does not fit on fewer than 4 GPUs
+        assert_eq!(TABLE2[2].dp_instances(2), None);
+    }
+
+    #[test]
+    fn backward_is_twice_forward() {
+        let m = ZooModel::by_id(3);
+        assert!((m.flops_step() / m.flops_fwd() - 3.0).abs() < 1e-12);
+    }
+}

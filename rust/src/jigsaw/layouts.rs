@@ -1,0 +1,264 @@
+//! The WeatherMixer sharding plan: which rank grid each activation and
+//! weight matrix lives on, for 1-, 2-, and 4-way jigsaw.
+//!
+//! Paper Section 4:
+//!   * 2-way  — data & parameters split along the final (channel-like)
+//!     dimension; weights additionally split along the second-to-last dim
+//!     so the output keeps the input's partitioning (Eq. 1).
+//!   * 4-way  — data split along the last two dims (spatial x channel);
+//!     weights in a 2x2 grid (Eq. 3). Rank = 2*spatial_half + channel_half.
+//!
+//! Domain note: the paper splits the spatial dim along longitude; our
+//! patchify orders tokens latitude-major, so the contiguous token split is
+//! along *latitude*. The scheme is symmetric in which spatial axis is
+//! halved; DESIGN.md §Hardware-Adaptation records the swap.
+
+use super::BlockGrid;
+
+/// A jigsaw group's parallel degree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Way {
+    One,
+    Two,
+    Four,
+}
+
+impl Way {
+    pub fn n(&self) -> usize {
+        match self {
+            Way::One => 1,
+            Way::Two => 2,
+            Way::Four => 4,
+        }
+    }
+
+    pub fn from_n(n: usize) -> Way {
+        match n {
+            1 => Way::One,
+            2 => Way::Two,
+            4 => Way::Four,
+            _ => panic!("jigsaw supports 1/2/4-way (paper); got {n}"),
+        }
+    }
+
+    /// How many shards the channel-like dims split into.
+    pub fn ch_split(&self) -> usize {
+        match self {
+            Way::One => 1,
+            Way::Two | Way::Four => 2,
+        }
+    }
+
+    /// How many shards the token (spatial) dim splits into.
+    pub fn tok_split(&self) -> usize {
+        match self {
+            Way::One | Way::Two => 1,
+            Way::Four => 2,
+        }
+    }
+}
+
+/// Layout set for one jigsaw way. All grids name global ranks 0..way-1.
+pub struct Layouts {
+    pub way: Way,
+}
+
+impl Layouts {
+    pub fn new(way: Way) -> Self {
+        Layouts { way }
+    }
+
+    /// Activations [T, d]-shaped (z, u, v, mlp hidden h_ch, patches, y):
+    /// token rows split tok_split-ways, channel cols ch_split-ways;
+    /// owner(i, j) = tok_split_index * ch_split + channel_index.
+    pub fn act(&self) -> BlockGrid {
+        let (ts, cs) = (self.way.tok_split(), self.way.ch_split());
+        BlockGrid::new(
+            (0..ts)
+                .map(|i| (0..cs).map(|j| i * cs + j).collect())
+                .collect(),
+        )
+    }
+
+    /// NT-form weights W[N, K] (encoder, channel MLPs, decoder): out-block
+    /// rows j, in-block cols k; owner = j * ch_split_k... For 2-way the
+    /// paper puts W[:, k] on rank k (all out-blocks); for 4-way W is the
+    /// same 2x2 grid as the data (Eq. 3).
+    pub fn weight_nt(&self) -> BlockGrid {
+        match self.way {
+            Way::One => BlockGrid::single(),
+            // owner[j][k] = k : rank k holds W[:, in-block k]
+            Way::Two => BlockGrid::new(vec![vec![0, 1], vec![0, 1]]),
+            // owner[j][k] = 2j + k (paper's W grid)
+            Way::Four => BlockGrid::new(vec![vec![0, 1], vec![2, 3]]),
+        }
+    }
+
+    /// Token-mix W1 [d_tok, T]: out-block rows i (d_tok), in-block cols k
+    /// (tokens). 2-way: rank i holds row-block i (tokens unsplit). 4-way:
+    /// owner[i][k] = 2i + k.
+    pub fn weight_tok1(&self) -> BlockGrid {
+        match self.way {
+            Way::One => BlockGrid::single(),
+            Way::Two => BlockGrid::new(vec![vec![0], vec![1]]),
+            Way::Four => BlockGrid::new(vec![vec![0, 1], vec![2, 3]]),
+        }
+    }
+
+    /// Token-mix hidden h [d_tok, d]: d_tok rows split 2-ways from W1,
+    /// channel cols follow the activation channel split. 2-way: rank i
+    /// owns row-block i entirely (both channel blocks). 4-way: owner
+    /// (i, j) = 2i + j.
+    pub fn tok_hidden(&self) -> BlockGrid {
+        match self.way {
+            Way::One => BlockGrid::single(),
+            Way::Two => BlockGrid::new(vec![vec![0, 0], vec![1, 1]]),
+            Way::Four => BlockGrid::new(vec![vec![0, 1], vec![2, 3]]),
+        }
+    }
+
+    /// Token-mix W2 [T, d_tok]: token rows i, d_tok cols k. 2-way: rank k
+    /// holds col-block k. 4-way: owner[i][k] = 2i + k.
+    pub fn weight_tok2(&self) -> BlockGrid {
+        match self.way {
+            Way::One => BlockGrid::single(),
+            Way::Two => BlockGrid::new(vec![vec![0, 1]]),
+            Way::Four => BlockGrid::new(vec![vec![0, 1], vec![2, 3]]),
+        }
+    }
+
+    /// Grad sync groups for a parameter vector sharded along the
+    /// activation *channel* axis (LN affine, channel-MLP biases, blend):
+    /// in 4-way, ranks j and 2+j hold the same channel shard and must
+    /// pairwise-reduce its gradient (paper Section 5, layer norms).
+    /// Returns, per owning rank, the group it reduces with.
+    pub fn ch_vec_sync_group(&self, rank: usize) -> Vec<usize> {
+        match self.way {
+            Way::One | Way::Two => vec![rank],
+            Way::Four => {
+                let j = rank % 2;
+                vec![j, 2 + j]
+            }
+        }
+    }
+
+    /// Sync groups for a vector sharded along the token-mix hidden axis
+    /// (tok_b1, [d_tok]) or the token axis (tok_b2, [T]): owners of row
+    /// block i are ranks {2i, 2i+1} in 4-way.
+    pub fn tok_vec_sync_group(&self, rank: usize) -> Vec<usize> {
+        match self.way {
+            Way::One => vec![rank],
+            // tok_b1 is sharded per rank in 2-way (no sync); tok_b2 [T] is
+            // replicated across both ranks (tokens unsplit) -> group {0,1}
+            Way::Two => vec![rank],
+            Way::Four => {
+                let i = rank / 2;
+                vec![2 * i, 2 * i + 1]
+            }
+        }
+    }
+
+    /// tok_b2 [T] in 2-way is replicated on both ranks (token dim is not
+    /// split), so its grads always reduce over the whole group.
+    pub fn tok_b2_sync_group(&self, rank: usize) -> Vec<usize> {
+        match self.way {
+            Way::One => vec![rank],
+            Way::Two => vec![0, 1],
+            Way::Four => {
+                let i = rank / 2;
+                vec![2 * i, 2 * i + 1]
+            }
+        }
+    }
+
+    /// Which channel-column block this rank owns (for slicing per-channel
+    /// vectors like LN affine / biases / channel weights).
+    pub fn ch_block_of(&self, rank: usize) -> usize {
+        match self.way {
+            Way::One => 0,
+            Way::Two => rank,
+            Way::Four => rank % 2,
+        }
+    }
+
+    /// Which token-row block this rank owns.
+    pub fn tok_block_of(&self, rank: usize) -> usize {
+        match self.way {
+            Way::One | Way::Two => 0,
+            Way::Four => rank / 2,
+        }
+    }
+
+    /// Which d_tok row block this rank owns (token-mix hidden axis).
+    pub fn dtok_block_of(&self, rank: usize) -> usize {
+        match self.way {
+            Way::One => 0,
+            Way::Two => rank,
+            Way::Four => rank / 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn way_splits() {
+        assert_eq!(Way::One.ch_split(), 1);
+        assert_eq!(Way::Two.ch_split(), 2);
+        assert_eq!(Way::Four.ch_split(), 2);
+        assert_eq!(Way::Four.tok_split(), 2);
+        assert_eq!(Way::from_n(4), Way::Four);
+    }
+
+    #[test]
+    #[should_panic(expected = "jigsaw supports")]
+    fn way_rejects_3() {
+        Way::from_n(3);
+    }
+
+    #[test]
+    fn act_grid_owners() {
+        let l2 = Layouts::new(Way::Two);
+        assert_eq!(l2.act().owner, vec![vec![0, 1]]);
+        let l4 = Layouts::new(Way::Four);
+        assert_eq!(l4.act().owner, vec![vec![0, 1], vec![2, 3]]);
+    }
+
+    #[test]
+    fn weight_nt_two_way_is_column_sharded() {
+        // paper Eq (1): rank k holds W[:, in-block k], both out blocks
+        let g = Layouts::new(Way::Two).weight_nt();
+        assert_eq!(g.blocks_of(0), vec![(0, 0), (1, 0)]);
+        assert_eq!(g.blocks_of(1), vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn four_way_ln_sync_pairs() {
+        // paper Section 5: ranks 0 & 2 (and 1 & 3) share LN parameters
+        let l = Layouts::new(Way::Four);
+        assert_eq!(l.ch_vec_sync_group(0), vec![0, 2]);
+        assert_eq!(l.ch_vec_sync_group(2), vec![0, 2]);
+        assert_eq!(l.ch_vec_sync_group(1), vec![1, 3]);
+        assert_eq!(l.ch_vec_sync_group(3), vec![1, 3]);
+    }
+
+    #[test]
+    fn every_rank_owns_one_block_of_each_weight() {
+        for way in [Way::Two, Way::Four] {
+            let l = Layouts::new(way);
+            let n = way.n();
+            for g in [l.weight_nt(), l.weight_tok1(), l.weight_tok2(), l.act()] {
+                let total: usize = (0..n).map(|r| g.blocks_of(r).len()).sum();
+                assert_eq!(total, g.rb * g.cb, "all blocks owned");
+                for r in 0..n {
+                    assert!(
+                        !g.blocks_of(r).is_empty() || g.rb * g.cb < n,
+                        "rank {r} owns nothing in {way:?}"
+                    );
+                }
+            }
+        }
+    }
+}

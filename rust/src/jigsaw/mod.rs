@@ -1,0 +1,679 @@
+//! Jigsaw parallelism: the paper's core contribution as a general
+//! block-distributed matmul engine.
+//!
+//! Paper Section 4 derives 2-way (Eq. 1-2) and 4-way (Eq. 3-4) schemes and
+//! notes that "the model parallelism can be extended to arbitrary n-way
+//! parallelism by further splitting up the final dimensions into blockwise
+//! subdivisions". This module implements exactly that generalisation:
+//!
+//!   * a matrix is block-partitioned over a rank grid (`BlockGrid`);
+//!   * `dist_matmul` executes Y = X op W over the blocks, computing each
+//!     term at a stationary operand's owner (weights never move — the
+//!     zero-memory-redundancy property), shipping the mobile operand's
+//!     blocks point-to-point, and reducing partial sums at the output
+//!     owners;
+//!   * communication is overlapped with computation: outgoing blocks are
+//!     posted (isend) before local terms are computed, and partial sums
+//!     are posted before the rank turns to summing its own output blocks
+//!     — the paper's Section 4.1 schedule.
+//!
+//! For the paper's layouts this reproduces the published schedules term
+//! for term: in 2-way each rank computes X_r W_{r,j}^T locally and
+//! exchanges one partial sum per linear layer; in 4-way ranks exchange
+//! data blocks along column pairs (0<->2, 1<->3) and partial sums along
+//! row pairs, and e.g. rank 1 sends X_1 W_1^T to rank 0 while rank 0
+//! computes X_0 W_0^T — the exact example in Section 4.2.
+
+pub mod layouts;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::comm::Comm;
+use crate::runtime::{Backend, MatmulOp};
+use crate::tensor::{ops, Tensor};
+
+/// Block partition of a [rows, cols] matrix over ranks: `owner[bi][bj]`
+/// names the rank holding block (bi, bj). Several blocks may share an
+/// owner; every block has exactly one owner (zero redundancy).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockGrid {
+    pub rb: usize,
+    pub cb: usize,
+    pub owner: Vec<Vec<usize>>,
+}
+
+impl BlockGrid {
+    pub fn new(owner: Vec<Vec<usize>>) -> Self {
+        let rb = owner.len();
+        let cb = owner[0].len();
+        for row in &owner {
+            assert_eq!(row.len(), cb, "ragged owner grid");
+        }
+        BlockGrid { rb, cb, owner }
+    }
+
+    /// Single block owned by rank 0 (the 1-way layout).
+    pub fn single() -> Self {
+        BlockGrid::new(vec![vec![0]])
+    }
+
+    pub fn owner_of(&self, bi: usize, bj: usize) -> usize {
+        self.owner[bi][bj]
+    }
+
+    /// All (bi, bj) owned by `rank`.
+    pub fn blocks_of(&self, rank: usize) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for bi in 0..self.rb {
+            for bj in 0..self.cb {
+                if self.owner[bi][bj] == rank {
+                    out.push((bi, bj));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// One rank's shard of a block-distributed matrix.
+#[derive(Clone, Debug)]
+pub struct DistMat {
+    pub grid: BlockGrid,
+    /// global dims
+    pub rows: usize,
+    pub cols: usize,
+    /// blocks this rank owns
+    pub blocks: BTreeMap<(usize, usize), Tensor>,
+    /// device-buffer cache identity (id base, version) — set for parameter
+    /// matrices so the runtime keeps their blocks resident (§Perf);
+    /// None for activations/gradients.
+    pub cache: Option<crate::runtime::CacheKey>,
+}
+
+/// Per-block cache key derived from a matrix-level base key.
+pub fn block_cache_key(
+    base: crate::runtime::CacheKey,
+    blk: (usize, usize),
+) -> crate::runtime::CacheKey {
+    let (id, version) = base;
+    (
+        id ^ (blk.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (blk.1 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            ^ 1,
+        version,
+    )
+}
+
+impl DistMat {
+    pub fn block_dims(&self) -> (usize, usize) {
+        assert!(
+            self.rows % self.grid.rb == 0 && self.cols % self.grid.cb == 0,
+            "{}x{} not divisible by {}x{} grid",
+            self.rows,
+            self.cols,
+            self.grid.rb,
+            self.grid.cb
+        );
+        (self.rows / self.grid.rb, self.cols / self.grid.cb)
+    }
+
+    /// Shard a global tensor: keep only the blocks `rank` owns.
+    pub fn from_global(global: &Tensor, grid: BlockGrid, rank: usize) -> Self {
+        let (r, c) = global.dims2();
+        let mut m = DistMat { grid, rows: r, cols: c, blocks: BTreeMap::new(), cache: None };
+        let _ = m.block_dims(); // divisibility check
+        for (bi, bj) in m.grid.blocks_of(rank) {
+            m.blocks
+                .insert((bi, bj), global.block(bi, bj, m.grid.rb, m.grid.cb));
+        }
+        m
+    }
+
+    /// Empty (no local blocks yet) with a given layout.
+    pub fn empty(rows: usize, cols: usize, grid: BlockGrid) -> Self {
+        DistMat { grid, rows, cols, blocks: BTreeMap::new(), cache: None }
+    }
+
+    /// Zero-filled local blocks for `rank`.
+    pub fn zeros(rows: usize, cols: usize, grid: BlockGrid, rank: usize) -> Self {
+        let mut m = DistMat::empty(rows, cols, grid);
+        let (br, bc) = m.block_dims();
+        for key in m.grid.blocks_of(rank) {
+            m.blocks.insert(key, Tensor::zeros(&[br, bc]));
+        }
+        m
+    }
+
+    /// Reassemble the global matrix from per-rank shards (test/checkpoint
+    /// helper; `parts` are the same DistMat from every rank).
+    pub fn assemble(parts: &[&DistMat]) -> Tensor {
+        let grid = &parts[0].grid;
+        let mut rows: Vec<Vec<Tensor>> = Vec::new();
+        for bi in 0..grid.rb {
+            let mut row = Vec::new();
+            for bj in 0..grid.cb {
+                let blk = parts
+                    .iter()
+                    .find_map(|p| p.blocks.get(&(bi, bj)))
+                    .unwrap_or_else(|| panic!("no rank holds block ({bi},{bj})"));
+                row.push(blk.clone());
+            }
+            rows.push(row);
+        }
+        Tensor::from_blocks(&rows)
+    }
+
+    /// Apply f to every local block.
+    pub fn map(&self, f: impl Fn(&Tensor) -> Tensor) -> DistMat {
+        DistMat {
+            grid: self.grid.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|(k, v)| (*k, f(v)))
+                .collect(),
+            cache: None,
+        }
+    }
+
+    /// Elementwise combine with another DistMat of identical layout.
+    pub fn zip(&self, other: &DistMat, f: impl Fn(&Tensor, &Tensor) -> Tensor) -> DistMat {
+        assert_eq!(self.grid, other.grid, "layout mismatch in zip");
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        DistMat {
+            grid: self.grid.clone(),
+            rows: self.rows,
+            cols: self.cols,
+            blocks: self
+                .blocks
+                .iter()
+                .map(|(k, v)| (*k, f(v, &other.blocks[k])))
+                .collect(),
+            cache: None,
+        }
+    }
+}
+
+/// Which operand stays put (its owner computes the term). Weights are
+/// stationary — `XIsWeights` for the transposed-MLP layers where the
+/// weight matrix is the left operand.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// terms run at the x-operand owner; w blocks are shipped
+    XOwner,
+    /// terms run at the w-operand owner; x blocks are shipped
+    WOwner,
+}
+
+/// Execution context of one rank inside one jigsaw group.
+pub struct Ctx<'a> {
+    pub rank: usize,
+    pub comm: &'a mut Comm,
+    pub backend: &'a dyn Backend,
+    /// per-group call sequence number (identical across ranks by SPMD
+    /// construction); namespaces message tags per dist_matmul call.
+    pub seq: u64,
+}
+
+impl<'a> Ctx<'a> {
+    pub fn new(rank: usize, comm: &'a mut Comm, backend: &'a dyn Backend) -> Self {
+        Ctx { rank, comm, backend, seq: 0 }
+    }
+}
+
+/// A term of the block matmul: Y[yi,yj] += x_block op w_block.
+#[derive(Clone, Copy, Debug)]
+struct Term {
+    x: (usize, usize),
+    w: (usize, usize),
+    y: (usize, usize),
+}
+
+/// Enumerate the block terms of Y = X op W and check grid conformance.
+fn terms(op: MatmulOp, x: &DistMat, w: &DistMat, y_grid: &BlockGrid) -> Vec<Term> {
+    let (xg, wg) = (&x.grid, &w.grid);
+    let mut out = Vec::new();
+    match op {
+        // Y[i,j] = sum_k X[i,k] W[j,k]^T
+        MatmulOp::NT => {
+            assert_eq!(xg.cb, wg.cb, "nt contraction grids");
+            assert_eq!((y_grid.rb, y_grid.cb), (xg.rb, wg.rb), "nt output grid");
+            for i in 0..xg.rb {
+                for j in 0..wg.rb {
+                    for k in 0..xg.cb {
+                        out.push(Term { x: (i, k), w: (j, k), y: (i, j) });
+                    }
+                }
+            }
+        }
+        // Y[i,j] = sum_k X[i,k] W[k,j]
+        MatmulOp::NN => {
+            assert_eq!(xg.cb, wg.rb, "nn contraction grids");
+            assert_eq!((y_grid.rb, y_grid.cb), (xg.rb, wg.cb), "nn output grid");
+            for i in 0..xg.rb {
+                for j in 0..wg.cb {
+                    for k in 0..xg.cb {
+                        out.push(Term { x: (i, k), w: (k, j), y: (i, j) });
+                    }
+                }
+            }
+        }
+        // Y[i,j] = sum_k X[k,i]^T W[k,j]
+        MatmulOp::TN => {
+            assert_eq!(xg.rb, wg.rb, "tn contraction grids");
+            assert_eq!((y_grid.rb, y_grid.cb), (xg.cb, wg.cb), "tn output grid");
+            for i in 0..xg.cb {
+                for j in 0..wg.cb {
+                    for k in 0..xg.rb {
+                        out.push(Term { x: (k, i), w: (k, j), y: (i, j) });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tag layout for dist_matmul messages:
+/// [63]=0  [62:56]=kind  [55:40]=seq  [39:20]=block id  [19:0]=aux
+fn tag_ship(seq: u64, bi: usize, bj: usize) -> u64 {
+    (1u64 << 56) | ((seq & 0xFFFF) << 40) | ((bi as u64) << 30) | ((bj as u64) << 20)
+}
+
+fn tag_partial(seq: u64, yi: usize, yj: usize, site: usize) -> u64 {
+    (2u64 << 56)
+        | ((seq & 0xFFFF) << 40)
+        | ((yi as u64) << 30)
+        | ((yj as u64) << 20)
+        | site as u64
+}
+
+/// Distributed block matmul. Every rank of the group calls this with the
+/// same arguments structurally (SPMD); returns this rank's shard of Y.
+///
+/// Schedule per rank:
+///   1. post all mobile-operand blocks this rank must ship (isend);
+///   2. compute all local-input terms (overlapping the shipments);
+///   3. receive shipped blocks, compute the remaining terms;
+///   4. post partial sums for output blocks owned elsewhere;
+///   5. receive + reduce partial sums for output blocks owned here.
+pub fn dist_matmul(
+    ctx: &mut Ctx,
+    op: MatmulOp,
+    x: &DistMat,
+    w: &DistMat,
+    y_grid: &BlockGrid,
+    site: Site,
+) -> Result<DistMat> {
+    let me = ctx.rank;
+    let seq = ctx.seq;
+    ctx.seq += 1;
+    let all_terms = terms(op, x, w, y_grid);
+
+    let site_of = |t: &Term| -> usize {
+        match site {
+            Site::XOwner => x.grid.owner_of(t.x.0, t.x.1),
+            Site::WOwner => w.grid.owner_of(t.w.0, t.w.1),
+        }
+    };
+    // mobile operand block owner for a term
+    let mobile_owner = |t: &Term| -> usize {
+        match site {
+            Site::XOwner => w.grid.owner_of(t.w.0, t.w.1),
+            Site::WOwner => x.grid.owner_of(t.x.0, t.x.1),
+        }
+    };
+    let mobile_key = |t: &Term| -> (usize, usize) {
+        match site {
+            Site::XOwner => t.w,
+            Site::WOwner => t.x,
+        }
+    };
+
+    // -- phase 1: ship mobile blocks I own to sites that need them --------
+    let mut shipped: std::collections::BTreeSet<((usize, usize), usize)> =
+        Default::default();
+    for t in &all_terms {
+        let s = site_of(t);
+        let mo = mobile_owner(t);
+        let key = mobile_key(t);
+        if mo == me && s != me && shipped.insert((key, s)) {
+            let blk = match site {
+                Site::XOwner => w.blocks[&key].clone(),
+                Site::WOwner => x.blocks[&key].clone(),
+            };
+            ctx.comm.send(s, tag_ship(seq, key.0, key.1), blk);
+        }
+    }
+
+    // -- phases 2+3: compute my terms (local inputs first = overlap) ------
+    let my_terms: Vec<&Term> = all_terms.iter().filter(|t| site_of(t) == me).collect();
+    let mut received: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    let mut partials: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    let mut ordered: Vec<&&Term> = my_terms
+        .iter()
+        .filter(|t| mobile_owner(t) == me)
+        .collect();
+    ordered.extend(my_terms.iter().filter(|t| mobile_owner(t) != me));
+    for t in ordered {
+        // local blocks of parameter matrices carry a device-buffer cache
+        // key (§Perf); shipped blocks are activations and never cached.
+        let (xb, xkey, wb, wkey) = match site {
+            Site::XOwner => {
+                let xb = &x.blocks[&t.x];
+                let xkey = x.cache.map(|c| block_cache_key(c, t.x));
+                let (wb, wkey) = if w.grid.owner_of(t.w.0, t.w.1) == me {
+                    (&w.blocks[&t.w], w.cache.map(|c| block_cache_key(c, t.w)))
+                } else {
+                    let key = t.w;
+                    if !received.contains_key(&key) {
+                        let src = w.grid.owner_of(key.0, key.1);
+                        let blk = ctx.comm.recv(src, tag_ship(seq, key.0, key.1));
+                        received.insert(key, blk);
+                    }
+                    (&received[&key], None)
+                };
+                (xb, xkey, wb, wkey)
+            }
+            Site::WOwner => {
+                let wb = &w.blocks[&t.w];
+                let wkey = w.cache.map(|c| block_cache_key(c, t.w));
+                let (xb, xkey) = if x.grid.owner_of(t.x.0, t.x.1) == me {
+                    (&x.blocks[&t.x], x.cache.map(|c| block_cache_key(c, t.x)))
+                } else {
+                    let key = t.x;
+                    if !received.contains_key(&key) {
+                        let src = x.grid.owner_of(key.0, key.1);
+                        let blk = ctx.comm.recv(src, tag_ship(seq, key.0, key.1));
+                        received.insert(key, blk);
+                    }
+                    (&received[&key], None)
+                };
+                (xb, xkey, wb, wkey)
+            }
+        };
+        let p = ctx.backend.matmul_cached(op, xb, xkey, wb, wkey)?;
+        match partials.entry(t.y) {
+            std::collections::btree_map::Entry::Vacant(e) => {
+                e.insert(p);
+            }
+            std::collections::btree_map::Entry::Occupied(mut e) => {
+                ops::add_assign(e.get_mut(), &p);
+            }
+        }
+    }
+
+    // -- phase 4: post partial sums owned elsewhere ------------------------
+    let mut mine: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    for (yk, p) in partials {
+        let owner = y_grid.owner_of(yk.0, yk.1);
+        if owner == me {
+            mine.insert(yk, p);
+        } else {
+            ctx.comm.send(owner, tag_partial(seq, yk.0, yk.1, me), p);
+        }
+    }
+
+    // -- phase 5: reduce partials for my output blocks ---------------------
+    let mut y = DistMat::empty(0, 0, y_grid.clone());
+    // output global dims from op
+    let (yr, yc) = match op {
+        MatmulOp::NT => (x.rows, w.rows),
+        MatmulOp::NN => (x.rows, w.cols),
+        MatmulOp::TN => (x.cols, w.cols),
+    };
+    y.rows = yr;
+    y.cols = yc;
+    let (ybr, ybc) = y.block_dims();
+    for yk in y_grid.blocks_of(me) {
+        // which sites produced partials for this block?
+        let mut senders: Vec<usize> = all_terms
+            .iter()
+            .filter(|t| t.y == yk)
+            .map(|t| site_of(t))
+            .collect();
+        senders.sort_unstable();
+        senders.dedup();
+        let mut acc = mine
+            .remove(&yk)
+            .unwrap_or_else(|| Tensor::zeros(&[ybr, ybc]));
+        for s in senders.into_iter().filter(|&s| s != me) {
+            let p = ctx.comm.recv(s, tag_partial(seq, yk.0, yk.1, s));
+            ops::add_assign(&mut acc, &p);
+        }
+        y.blocks.insert(yk, acc);
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::Network;
+    use crate::runtime::native::NativeBackend;
+    use crate::util::prop::{check, Gen};
+    use crate::util::rng::Rng;
+    use std::thread;
+
+    fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+        let mut d = vec![0.0; r * c];
+        rng.fill_normal(&mut d, 1.0);
+        Tensor::new(vec![r, c], d)
+    }
+
+    /// Run dist_matmul across `n` rank threads and reassemble the output.
+    fn run_dist(
+        n: usize,
+        op: MatmulOp,
+        xg: BlockGrid,
+        wg: BlockGrid,
+        yg: BlockGrid,
+        x: &Tensor,
+        w: &Tensor,
+        site: Site,
+    ) -> Tensor {
+        let net = Network::new(n);
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let mut comm = net.endpoint(r);
+            let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
+            let (x, w) = (x.clone(), w.clone());
+            handles.push(thread::spawn(move || {
+                let backend = NativeBackend;
+                let mut ctx = Ctx::new(r, &mut comm, &backend);
+                let xd = DistMat::from_global(&x, xg, r);
+                let wd = DistMat::from_global(&w, wg, r);
+                dist_matmul(&mut ctx, op, &xd, &wd, &yg, site).unwrap()
+            }));
+        }
+        let parts: Vec<DistMat> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let refs: Vec<&DistMat> = parts.iter().collect();
+        DistMat::assemble(&refs)
+    }
+
+    #[test]
+    fn two_way_nt_matches_serial() {
+        // the paper's Eq (1)-(2): channel-sharded activations, weight
+        // in-feature shards, partial-sum exchange.
+        let mut rng = Rng::seed_from(1);
+        let x = rand_t(&mut rng, 6, 8);
+        let w = rand_t(&mut rng, 10, 8);
+        let xg = BlockGrid::new(vec![vec![0, 1]]);
+        let wg = BlockGrid::new(vec![vec![0, 1], vec![0, 1]]);
+        let yg = BlockGrid::new(vec![vec![0, 1]]);
+        let got = run_dist(2, MatmulOp::NT, xg, wg, yg, &x, &w, Site::WOwner);
+        let want = ops::matmul_nt(&x, &w);
+        assert!(got.max_abs_diff(&want) < 1e-4, "err {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn four_way_nt_matches_serial() {
+        // the paper's Eq (3)-(4): 2x2 data & weight grids.
+        let mut rng = Rng::seed_from(2);
+        let x = rand_t(&mut rng, 8, 12);
+        let w = rand_t(&mut rng, 6, 12);
+        let xg = BlockGrid::new(vec![vec![0, 1], vec![2, 3]]);
+        let wg = BlockGrid::new(vec![vec![0, 1], vec![2, 3]]);
+        let yg = BlockGrid::new(vec![vec![0, 1], vec![2, 3]]);
+        let got = run_dist(4, MatmulOp::NT, xg, wg, yg, &x, &w, Site::WOwner);
+        let want = ops::matmul_nt(&x, &w);
+        assert!(got.max_abs_diff(&want) < 1e-4);
+    }
+
+    #[test]
+    fn nn_with_stationary_left_operand() {
+        // transposed-MLP form: weights are the left operand (token mixing)
+        let mut rng = Rng::seed_from(3);
+        let w1 = rand_t(&mut rng, 6, 4); // [d_tok, T]
+        let u = rand_t(&mut rng, 4, 10); // [T, d]
+        let xg = BlockGrid::new(vec![vec![0], vec![1]]); // d_tok row shards
+        let wg = BlockGrid::new(vec![vec![0, 1]]); // d col shards
+        let yg = BlockGrid::new(vec![vec![0, 0], vec![1, 1]]); // rank i holds row i
+        let got = run_dist(2, MatmulOp::NN, xg, wg, yg, &w1, &u, Site::XOwner);
+        assert!(got.max_abs_diff(&ops::matmul_nn(&w1, &u)) < 1e-4);
+    }
+
+    #[test]
+    fn comm_volume_two_way_is_one_partial_per_output_block() {
+        // Eq (2): the only traffic is the bold partial sums.
+        let net = Network::new(2);
+        let x = Tensor::zeros(&[4, 8]);
+        let w = Tensor::zeros(&[6, 8]);
+        let xg = BlockGrid::new(vec![vec![0, 1]]);
+        let wg = BlockGrid::new(vec![vec![0, 1], vec![0, 1]]);
+        let yg = BlockGrid::new(vec![vec![0, 1]]);
+        let mut handles = Vec::new();
+        for r in 0..2 {
+            let mut comm = net.endpoint(r);
+            let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
+            let (x, w) = (x.clone(), w.clone());
+            handles.push(thread::spawn(move || {
+                let backend = NativeBackend;
+                let mut ctx = Ctx::new(r, &mut comm, &backend);
+                let xd = DistMat::from_global(&x, xg, r);
+                let wd = DistMat::from_global(&w, wg, r);
+                dist_matmul(&mut ctx, MatmulOp::NT, &xd, &wd, &yg, Site::WOwner).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // each rank ships exactly one [4, 3] f32 partial = 48 bytes
+        assert_eq!(net.link_bytes(0, 1), 48);
+        assert_eq!(net.link_bytes(1, 0), 48);
+    }
+
+    #[test]
+    fn property_random_grids_match_serial() {
+        check("dist_matmul == serial for random grids", 40, |g: &mut Gen| {
+            let rb = g.int(1, 3);
+            let cb = g.int(1, 3);
+            let kb = g.int(1, 3);
+            let n = g.int(1, 4);
+            let (br, bc, bk) = (g.int(1, 4), g.int(1, 4), g.int(1, 4));
+            let (m, nn, kk) = (rb * br, cb * bc, kb * bk);
+            let mut mk_grid = |r: usize, c: usize| -> BlockGrid {
+                BlockGrid::new(
+                    (0..r)
+                        .map(|_| (0..c).map(|_| g.int(0, n - 1)).collect())
+                        .collect(),
+                )
+            };
+            let xg = mk_grid(rb, kb);
+            let wg = mk_grid(cb, kb);
+            let yg = mk_grid(rb, cb);
+            let xd = g.f32s(m * kk);
+            let wd = g.f32s(nn * kk);
+            let x = Tensor::new(vec![m, kk], xd);
+            let w = Tensor::new(vec![nn, kk], wd);
+            let site = if g.bool() { Site::XOwner } else { Site::WOwner };
+            let got = run_dist(n, MatmulOp::NT, xg, wg, yg, &x, &w, site);
+            let want = ops::matmul_nt(&x, &w);
+            let err = got.max_abs_diff(&want);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn property_nn_tn_random_grids() {
+        check("nn/tn dist == serial", 30, |g: &mut Gen| {
+            let rb = g.int(1, 2);
+            let cb = g.int(1, 2);
+            let kb = g.int(1, 2);
+            let n = g.int(1, 4);
+            let (br, bc, bk) = (g.int(1, 4), g.int(1, 4), g.int(1, 4));
+            let (m, nn, kk) = (rb * br, cb * bc, kb * bk);
+            let op = *g.pick(&[MatmulOp::NN, MatmulOp::TN]);
+            let mut mk_grid = |g: &mut Gen, r: usize, c: usize| -> BlockGrid {
+                BlockGrid::new(
+                    (0..r)
+                        .map(|_| (0..c).map(|_| g.int(0, n - 1)).collect())
+                        .collect(),
+                )
+            };
+            let (xg, wg, yg, x, w) = match op {
+                MatmulOp::NN => {
+                    let xg = mk_grid(g, rb, kb);
+                    let wg = mk_grid(g, kb, cb);
+                    let yg = mk_grid(g, rb, cb);
+                    let x = Tensor::new(vec![m, kk], g.f32s(m * kk));
+                    let w = Tensor::new(vec![kk, nn], g.f32s(kk * nn));
+                    (xg, wg, yg, x, w)
+                }
+                _ => {
+                    let xg = mk_grid(g, kb, rb);
+                    let wg = mk_grid(g, kb, cb);
+                    let yg = mk_grid(g, rb, cb);
+                    let x = Tensor::new(vec![kk, m], g.f32s(kk * m));
+                    let w = Tensor::new(vec![kk, nn], g.f32s(kk * nn));
+                    (xg, wg, yg, x, w)
+                }
+            };
+            let site = if g.bool() { Site::XOwner } else { Site::WOwner };
+            let got = run_dist(n, op, xg, wg, yg, &x, &w, site);
+            let want = match op {
+                MatmulOp::NN => ops::matmul_nn(&x, &w),
+                _ => ops::matmul_tn(&x, &w),
+            };
+            let err = got.max_abs_diff(&want);
+            if err < 1e-3 {
+                Ok(())
+            } else {
+                Err(format!("op {op:?} err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn from_global_assemble_roundtrip() {
+        check("shard/assemble roundtrip", 30, |g: &mut Gen| {
+            let rb = g.int(1, 4);
+            let cb = g.int(1, 4);
+            let n = g.int(1, 4);
+            let (br, bc) = (g.int(1, 5), g.int(1, 5));
+            let t = Tensor::new(vec![rb * br, cb * bc], g.f32s(rb * br * cb * bc));
+            let grid = BlockGrid::new(
+                (0..rb)
+                    .map(|_| (0..cb).map(|_| g.int(0, n - 1)).collect())
+                    .collect(),
+            );
+            let parts: Vec<DistMat> = (0..n)
+                .map(|r| DistMat::from_global(&t, grid.clone(), r))
+                .collect();
+            let refs: Vec<&DistMat> = parts.iter().collect();
+            if DistMat::assemble(&refs) == t {
+                Ok(())
+            } else {
+                Err("roundtrip mismatch".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,40 @@
+//! # Jigsaw — training multi-billion-parameter AI weather models with
+//! optimized model parallelism
+//!
+//! A Rust + JAX + Pallas reproduction of *Kieckhefen et al., 2025*:
+//! the **WeatherMixer** MLP-Mixer atmospheric model and **Jigsaw**
+//! parallelism (combined tensor + domain parallelism with zero memory
+//! redundancy).
+//!
+//! Three layers:
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the matmul
+//!   hot-spots, AOT-lowered to HLO text;
+//! * **L2** (`python/compile/model.py`) — the WeatherMixer forward /
+//!   backward in JAX, exported once at build time;
+//! * **L3** (this crate) — the distributed-training coordinator: the
+//!   jigsaw block-matmul engine, simulated NCCL fabric, sharded data
+//!   loading, optimizer, trainer, and the cluster performance model that
+//!   regenerates the paper's evaluation at 256-GPU scale.
+//!
+//! Python never runs on the training path: the rust binary loads
+//! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate) and is
+//! self-contained afterwards.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod cli;
+pub mod comm;
+pub mod config;
+pub mod data;
+pub mod energy;
+pub mod jigsaw;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod perfmodel;
+pub mod runtime;
+pub mod tensor;
+pub mod trainer;
+pub mod util;
+
+pub use cli::cli_main;

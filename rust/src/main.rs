@@ -1,0 +1,15 @@
+//! `jigsaw` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   train          run distributed training on the synthetic atmosphere
+//!   validate       check jigsaw n-way numerics against the AOT oracle
+//!   simulate       drive the cluster performance model from a spec
+//!   roofline       print the Fig-7 roofline series
+//!   energy-report  print the Table-3 energy/CO2e accounting
+
+use anyhow::Result;
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    jigsaw::cli_main(&args)
+}

@@ -1,0 +1,143 @@
+//! Evaluation metrics: latitude-weighted RMSE (WeatherBench2 convention,
+//! paper Section 6) and training-curve logging.
+
+use std::fs;
+use std::io::Write;
+use std::path::Path;
+
+use crate::model::latitude_weights;
+use crate::tensor::Tensor;
+
+/// Latitude-weighted RMSE of one channel: pred/target are [lat, lon]
+/// fields. `lat0` is the global latitude offset of row 0 (for shard
+/// evaluation).
+pub fn lat_weighted_rmse_field(
+    pred: &Tensor,
+    target: &Tensor,
+    global_lat: usize,
+    lat0: usize,
+) -> f32 {
+    let (lat, lon) = pred.dims2();
+    assert_eq!(pred.shape, target.shape);
+    let w = latitude_weights(global_lat);
+    let mut s = 0.0f32;
+    for i in 0..lat {
+        for j in 0..lon {
+            let e = pred.at2(i, j) - target.at2(i, j);
+            s += w[lat0 + i] * e * e;
+        }
+    }
+    (s / (lat * lon) as f32).sqrt()
+}
+
+/// Per-channel latitude-weighted RMSE over a [lat, lon, C] sample.
+pub fn lat_weighted_rmse(pred: &Tensor, target: &Tensor, global_lat: usize, lat0: usize) -> Vec<f32> {
+    assert_eq!(pred.shape, target.shape);
+    let (lat, lon, c) = (pred.shape[0], pred.shape[1], pred.shape[2]);
+    let w = latitude_weights(global_lat);
+    let mut acc = vec![0.0f32; c];
+    for i in 0..lat {
+        for j in 0..lon {
+            for ci in 0..c {
+                let idx = (i * lon + j) * c + ci;
+                let e = pred.data[idx] - target.data[idx];
+                acc[ci] += w[lat0 + i] * e * e;
+            }
+        }
+    }
+    acc.iter()
+        .map(|s| (s / (lat * lon) as f32).sqrt())
+        .collect()
+}
+
+/// Append-only JSONL training log (loss curves, RMSE series).
+pub struct RunLog {
+    path: String,
+}
+
+impl RunLog {
+    pub fn create(path: &str) -> std::io::Result<Self> {
+        if let Some(dir) = Path::new(path).parent() {
+            fs::create_dir_all(dir)?;
+        }
+        fs::write(path, "")?;
+        Ok(RunLog { path: path.to_string() })
+    }
+
+    pub fn record(&self, fields: &[(&str, f64)]) -> std::io::Result<()> {
+        let mut f = fs::OpenOptions::new().append(true).open(&self.path)?;
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("\"{k}\":{v}"))
+            .collect();
+        writeln!(f, "{{{}}}", body.join(","))
+    }
+}
+
+/// Simple persistence baseline: forecast = current state (the standard
+/// weather-model sanity baseline for Fig-5-style comparisons).
+pub fn persistence_forecast(x: &Tensor) -> Tensor {
+    x.clone()
+}
+
+/// Climatology baseline: forecast = per-channel mean field.
+pub fn climatology_forecast(samples: &[Tensor]) -> Tensor {
+    assert!(!samples.is_empty());
+    let mut acc = Tensor::zeros(&samples[0].shape.clone());
+    for s in samples {
+        crate::tensor::ops::add_assign(&mut acc, s);
+    }
+    crate::tensor::ops::scale(&acc, 1.0 / samples.len() as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rmse_zero_for_perfect_forecast() {
+        let t = Tensor::new(vec![4, 4], (0..16).map(|v| v as f32).collect());
+        assert_eq!(lat_weighted_rmse_field(&t, &t, 4, 0), 0.0);
+    }
+
+    #[test]
+    fn rmse_matches_hand_computation_uniform() {
+        // constant error of 2.0 everywhere -> rmse == 2 (weights mean 1)
+        let a = Tensor::zeros(&[4, 8]);
+        let b = Tensor::new(vec![4, 8], vec![2.0; 32]);
+        let r = lat_weighted_rmse_field(&a, &b, 4, 0);
+        assert!((r - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn per_channel_rmse_shapes() {
+        let a = Tensor::zeros(&[4, 4, 3]);
+        let mut b = Tensor::zeros(&[4, 4, 3]);
+        for i in 0..16 {
+            b.data[i * 3 + 1] = 1.0;
+        }
+        let r = lat_weighted_rmse(&a, &b, 4, 0);
+        assert_eq!(r.len(), 3);
+        assert!(r[0] < 1e-6 && (r[1] - 1.0).abs() < 1e-5 && r[2] < 1e-6);
+    }
+
+    #[test]
+    fn climatology_is_mean() {
+        let a = Tensor::new(vec![2], vec![0.0, 2.0]);
+        let b = Tensor::new(vec![2], vec![4.0, 2.0]);
+        let c = climatology_forecast(&[a, b]);
+        assert_eq!(c.data, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn runlog_appends_jsonl() {
+        let path = std::env::temp_dir().join("jigsaw_runlog_test.jsonl");
+        let log = RunLog::create(path.to_str().unwrap()).unwrap();
+        log.record(&[("step", 1.0), ("loss", 0.5)]).unwrap();
+        log.record(&[("step", 2.0), ("loss", 0.4)]).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(body.lines().count(), 2);
+        assert!(body.contains("\"loss\":0.5"));
+        let _ = std::fs::remove_file(path);
+    }
+}

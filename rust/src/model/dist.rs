@@ -1,0 +1,631 @@
+//! Jigsaw-distributed WeatherMixer: forward, loss, and hand-derived
+//! backward composed from `dist_matmul` calls and rank-local pointwise
+//! stages.
+//!
+//! Every heavy matmul goes through the runtime backend (PJRT primitives);
+//! communication points sit *between* backend executions, exactly where
+//! the paper's MPI isend/irecv sit between cuBLAS calls. Layer norms use
+//! local channel-shard statistics (paper Section 5), which the AOT oracle
+//! reproduces with `ln_groups = 2`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Result};
+
+use super::params::PStore;
+use super::{latitude_weights, patchify, unpatchify};
+use crate::config::ModelConfig;
+use crate::jigsaw::layouts::{Layouts, Way};
+use crate::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Site};
+use crate::runtime::MatmulOp;
+use crate::tensor::{ops, Tensor};
+
+/// Saved layer-norm statistics per local block.
+type LnSavedMap = BTreeMap<(usize, usize), ops::LnSaved>;
+
+/// Forward cache of one mixer block.
+pub struct MixCache {
+    z_in: DistMat,
+    u: DistMat,
+    ln1: LnSavedMap,
+    h1_pre: DistMat,
+    h1: DistMat,
+    z2: DistMat,
+    v: DistMat,
+    ln2: LnSavedMap,
+    h2_pre: DistMat,
+    h2: DistMat,
+}
+
+/// Forward cache of a full pass (supports rollout > 1: one entry of
+/// `iters` per processor application — the paper's randomized-rollout
+/// fine-tuning repeats only the processor, Section 6).
+pub struct FwdCache {
+    pub patches: DistMat,
+    pub z0: DistMat,
+    pub iters: Vec<Vec<MixCache>>,
+    pub z_final: DistMat,
+    pub y_patches: DistMat,
+    pub delta_local: Tensor,
+    pub x_local: Tensor,
+}
+
+/// One rank's WeatherMixer instance.
+pub struct DistModel {
+    pub cfg: ModelConfig,
+    pub way: Way,
+    pub rank: usize,
+    pub params: PStore,
+}
+
+impl DistModel {
+    pub fn new(cfg: ModelConfig, way: Way, rank: usize, params: PStore) -> Self {
+        DistModel { cfg, way, rank, params }
+    }
+
+    fn layouts(&self) -> Layouts {
+        Layouts::new(self.way)
+    }
+
+    /// local spatial/channel extents
+    pub fn local_dims(&self) -> (usize, usize, usize) {
+        let l = self.way;
+        (
+            self.cfg.lat / l.tok_split(),
+            self.cfg.lon,
+            self.cfg.channels_padded / l.ch_split(),
+        )
+    }
+
+    /// global row offset of this rank's latitude slice
+    pub fn lat_offset(&self) -> usize {
+        self.layouts().tok_block_of(self.rank) * (self.cfg.lat / self.way.tok_split())
+    }
+
+    /// global channel offset of this rank's channel slice
+    pub fn ch_offset(&self) -> usize {
+        self.layouts().ch_block_of(self.rank)
+            * (self.cfg.channels_padded / self.way.ch_split())
+    }
+
+    // -- local pointwise helpers -----------------------------------------
+
+    /// column-bias add on every local block (vec sliced to the block's
+    /// global column range).
+    fn add_vec_cols(&self, m: &DistMat, v: &super::params::VecShard) -> DistMat {
+        let (_, bc) = m.block_dims();
+        m_map_keyed(m, |(_, bj), t| {
+            debug_assert_eq!(bj * bc, v.lo, "col-bias slice misaligned");
+            ops::add_bias_cols(t, &v.local)
+        })
+    }
+
+    /// row-bias add on every local block.
+    fn add_vec_rows(&self, m: &DistMat, v: &super::params::VecShard) -> DistMat {
+        let (br, _) = m.block_dims();
+        m_map_keyed(m, |(bi, _), t| {
+            debug_assert_eq!(bi * br, v.lo, "row-bias slice misaligned");
+            ops::add_bias_rows(t, &v.local)
+        })
+    }
+
+    /// layer norm over the local channel shard of every block.
+    fn ln_fwd(
+        &self,
+        m: &DistMat,
+        g: &super::params::VecShard,
+        b: &super::params::VecShard,
+    ) -> (DistMat, LnSavedMap) {
+        let mut saved = LnSavedMap::new();
+        let out = m_map_keyed(m, |key, t| {
+            let (y, s) = ops::layernorm(t, &g.local, &b.local);
+            saved.insert(key, s);
+            y
+        });
+        (out, saved)
+    }
+
+    fn ln_bwd(
+        &self,
+        x: &DistMat,
+        g: &super::params::VecShard,
+        saved: &LnSavedMap,
+        dy: &DistMat,
+    ) -> (DistMat, Tensor, Tensor) {
+        let mut dg_acc: Option<Tensor> = None;
+        let mut db_acc: Option<Tensor> = None;
+        let mut blocks = BTreeMap::new();
+        for (key, xb) in &x.blocks {
+            let (dxb, dgb, dbb) =
+                ops::layernorm_bwd(xb, &g.local, &saved[key], &dy.blocks[key]);
+            blocks.insert(*key, dxb);
+            match &mut dg_acc {
+                None => {
+                    dg_acc = Some(dgb);
+                    db_acc = Some(dbb);
+                }
+                Some(a) => {
+                    ops::add_assign(a, &dgb);
+                    ops::add_assign(db_acc.as_mut().unwrap(), &dbb);
+                }
+            }
+        }
+        let dx = DistMat {
+            grid: x.grid.clone(),
+            rows: x.rows,
+            cols: x.cols,
+            blocks,
+            cache: None,
+        };
+        (dx, dg_acc.unwrap(), db_acc.unwrap())
+    }
+
+    /// grad of a column bias: sum over rows of every local block.
+    fn bias_cols_grad(&self, dy: &DistMat) -> Tensor {
+        let mut acc: Option<Tensor> = None;
+        for b in dy.blocks.values() {
+            let s = ops::sum_rows(b);
+            match &mut acc {
+                None => acc = Some(s),
+                Some(a) => ops::add_assign(a, &s),
+            }
+        }
+        acc.expect("rank owns no blocks")
+    }
+
+    /// grad of a row bias: sum over cols of every local block.
+    fn bias_rows_grad(&self, dy: &DistMat) -> Tensor {
+        let mut acc: Option<Tensor> = None;
+        for b in dy.blocks.values() {
+            let s = ops::sum_cols(b);
+            match &mut acc {
+                None => acc = Some(s),
+                Some(a) => ops::add_assign(a, &s),
+            }
+        }
+        acc.expect("rank owns no blocks")
+    }
+
+    // -- grids -------------------------------------------------------------
+
+    fn act_grid(&self) -> BlockGrid {
+        self.layouts().act()
+    }
+
+    // -- forward ------------------------------------------------------------
+
+    fn mixer_block_fwd(
+        &self,
+        ctx: &mut Ctx,
+        i: usize,
+        z: DistMat,
+    ) -> Result<(DistMat, MixCache)> {
+        let p = &self.params;
+        let l = self.layouts();
+        let name = |s: &str| format!("blk{i}_{s}");
+
+        // token mixing (transposed-MLP form)
+        let (u, ln1) = self.ln_fwd(&z, &p.vecs[&name("ln1_g")], &p.vecs[&name("ln1_b")]);
+        let h1_lin = dist_matmul(
+            ctx,
+            MatmulOp::NN,
+            &p.mats[&name("tok_w1")],
+            &u,
+            &l.tok_hidden(),
+            Site::XOwner,
+        )?;
+        let h1_pre = self.add_vec_rows(&h1_lin, &p.vecs[&name("tok_b1")]);
+        let h1 = h1_pre.map(ops::gelu);
+        let tok_lin = dist_matmul(
+            ctx,
+            MatmulOp::NN,
+            &p.mats[&name("tok_w2")],
+            &h1,
+            &self.act_grid(),
+            Site::XOwner,
+        )?;
+        let tokout = self.add_vec_rows(&tok_lin, &p.vecs[&name("tok_b2")]);
+        let z2 = z.zip(&tokout, |a, b| ops::add(a, b));
+
+        // channel mixing
+        let (v, ln2) = self.ln_fwd(&z2, &p.vecs[&name("ln2_g")], &p.vecs[&name("ln2_b")]);
+        let h2_lin = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            &v,
+            &p.mats[&name("ch_w1")],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let h2_pre = self.add_vec_cols(&h2_lin, &p.vecs[&name("ch_b1")]);
+        let h2 = h2_pre.map(ops::gelu);
+        let ch_lin = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            &h2,
+            &p.mats[&name("ch_w2")],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let chout = self.add_vec_cols(&ch_lin, &p.vecs[&name("ch_b2")]);
+        let z3 = z2.zip(&chout, |a, b| ops::add(a, b));
+
+        let cache = MixCache {
+            z_in: z,
+            u,
+            ln1,
+            h1_pre,
+            h1,
+            z2: z2.clone(),
+            v,
+            ln2,
+            h2_pre,
+            h2,
+        };
+        Ok((z3, cache))
+    }
+
+    /// Full forward from this rank's sample shard. `rollout` repeats the
+    /// processor with a single encode/decode.
+    pub fn forward(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        rollout: usize,
+    ) -> Result<(Tensor, FwdCache)> {
+        let cfg = &self.cfg;
+        let (lat_l, lon_l, c_l) = self.local_dims();
+        ensure!(
+            x_local.shape == vec![lat_l, lon_l, c_l],
+            "sample shard shape {:?}, want [{lat_l},{lon_l},{c_l}]",
+            x_local.shape
+        );
+        let p = &self.params;
+        let l = self.layouts();
+
+        // encoder: local patchify -> this rank's block of the patch matrix
+        let patches_local = patchify(x_local, lat_l, lon_l, c_l, cfg.patch);
+        let mut patches = DistMat::empty(cfg.tokens, cfg.patch_dim, self.act_grid());
+        patches.blocks.insert(
+            (l.tok_block_of(self.rank), l.ch_block_of(self.rank)),
+            patches_local,
+        );
+        let z_lin = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            &patches,
+            &p.mats["enc_w"],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let z0 = self.add_vec_cols(&z_lin, &p.vecs["enc_b"]);
+
+        // processor (rollout repeats)
+        let mut z = z0.clone();
+        let mut iters = Vec::with_capacity(rollout);
+        for _ in 0..rollout {
+            let mut caches = Vec::with_capacity(cfg.blocks);
+            for i in 0..cfg.blocks {
+                let (znext, c) = self.mixer_block_fwd(ctx, i, z)?;
+                z = znext;
+                caches.push(c);
+            }
+            iters.push(caches);
+        }
+        let z_final = z.clone();
+
+        // decoder
+        let y_lin = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            &z,
+            &p.mats["dec_w"],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let y_patches = self.add_vec_cols(&y_lin, &p.vecs["dec_b"]);
+        let y_local = y_patches
+            .blocks
+            .values()
+            .next()
+            .expect("rank owns an output block")
+            .clone();
+        let delta_local = unpatchify(&y_local, lat_l, lon_l, c_l, cfg.patch);
+
+        // blend: out = g*x + (1-g)*delta, per channel
+        let gate = &p.vecs["blend_g"];
+        let mut pred = delta_local.clone();
+        for li in 0..lat_l {
+            for lj in 0..lon_l {
+                for c in 0..c_l {
+                    let idx = (li * lon_l + lj) * c_l + c;
+                    let g = ops::sigmoid(gate.local.data[c]);
+                    pred.data[idx] =
+                        g * x_local.data[idx] + (1.0 - g) * delta_local.data[idx];
+                }
+            }
+        }
+
+        Ok((
+            pred,
+            FwdCache {
+                patches,
+                z0,
+                iters,
+                z_final,
+                y_patches,
+                delta_local,
+                x_local: x_local.clone(),
+            },
+        ))
+    }
+
+    /// Latitude/variable-weighted MSE over the local shard (not yet
+    /// reduced across the group).
+    pub fn local_loss(&self, pred: &Tensor, target: &Tensor) -> f32 {
+        let (lat_l, lon_l, c_l) = self.local_dims();
+        let wlat = latitude_weights(self.cfg.lat);
+        let wch = self.cfg.padded_channel_weights();
+        let (lat0, ch0) = (self.lat_offset(), self.ch_offset());
+        let norm = (self.cfg.lat * self.cfg.lon * self.cfg.channels_padded) as f32;
+        let mut s = 0.0f32;
+        for li in 0..lat_l {
+            for lj in 0..lon_l {
+                for c in 0..c_l {
+                    let idx = (li * lon_l + lj) * c_l + c;
+                    let e = pred.data[idx] - target.data[idx];
+                    s += wlat[lat0 + li] * wch[ch0 + c] * e * e;
+                }
+            }
+        }
+        s / norm
+    }
+
+    /// d(loss)/d(pred) over the local shard.
+    fn loss_grad(&self, pred: &Tensor, target: &Tensor) -> Tensor {
+        let (lat_l, lon_l, c_l) = self.local_dims();
+        let wlat = latitude_weights(self.cfg.lat);
+        let wch = self.cfg.padded_channel_weights();
+        let (lat0, ch0) = (self.lat_offset(), self.ch_offset());
+        let norm = (self.cfg.lat * self.cfg.lon * self.cfg.channels_padded) as f32;
+        let mut out = Tensor::zeros(&[lat_l, lon_l, c_l]);
+        for li in 0..lat_l {
+            for lj in 0..lon_l {
+                for c in 0..c_l {
+                    let idx = (li * lon_l + lj) * c_l + c;
+                    out.data[idx] = 2.0
+                        * wlat[lat0 + li]
+                        * wch[ch0 + c]
+                        * (pred.data[idx] - target.data[idx])
+                        / norm;
+                }
+            }
+        }
+        out
+    }
+
+    fn mixer_block_bwd(
+        &self,
+        ctx: &mut Ctx,
+        i: usize,
+        cache: &MixCache,
+        dz3: &DistMat,
+        grads: &mut PStore,
+    ) -> Result<DistMat> {
+        let p = &self.params;
+        let l = self.layouts();
+        let name = |s: &str| format!("blk{i}_{s}");
+
+        // -- channel mixing backward --
+        let dchout = dz3;
+        add_vec_grad(grads, &name("ch_b2"), &self.bias_cols_grad(dchout));
+        let dh2 = dist_matmul(
+            ctx,
+            MatmulOp::NN,
+            dchout,
+            &p.mats[&name("ch_w2")],
+            &cache.h2.grid,
+            Site::WOwner,
+        )?;
+        let d_ch_w2 = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            dchout,
+            &cache.h2,
+            &p.mats[&name("ch_w2")].grid,
+            Site::WOwner,
+        )?;
+        add_mat_grad(grads, &name("ch_w2"), d_ch_w2);
+        let dh2_pre = cache.h2_pre.zip(&dh2, |x, d| ops::gelu_bwd(x, d));
+        add_vec_grad(grads, &name("ch_b1"), &self.bias_cols_grad(&dh2_pre));
+        let dv = dist_matmul(
+            ctx,
+            MatmulOp::NN,
+            &dh2_pre,
+            &p.mats[&name("ch_w1")],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let d_ch_w1 = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            &dh2_pre,
+            &cache.v,
+            &p.mats[&name("ch_w1")].grid,
+            Site::WOwner,
+        )?;
+        add_mat_grad(grads, &name("ch_w1"), d_ch_w1);
+        let (dz2_ln, dg2, db2) =
+            self.ln_bwd(&cache.z2, &p.vecs[&name("ln2_g")], &cache.ln2, &dv);
+        add_vec_grad(grads, &name("ln2_g"), &dg2);
+        add_vec_grad(grads, &name("ln2_b"), &db2);
+        let dz2 = dz3.zip(&dz2_ln, |a, b| ops::add(a, b));
+
+        // -- token mixing backward --
+        let dtokout = &dz2;
+        add_vec_grad(grads, &name("tok_b2"), &self.bias_rows_grad(dtokout));
+        let dh1 = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            &p.mats[&name("tok_w2")],
+            dtokout,
+            &l.tok_hidden(),
+            Site::XOwner,
+        )?;
+        let d_tok_w2 = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            dtokout,
+            &cache.h1,
+            &p.mats[&name("tok_w2")].grid,
+            Site::WOwner,
+        )?;
+        add_mat_grad(grads, &name("tok_w2"), d_tok_w2);
+        let dh1_pre = cache.h1_pre.zip(&dh1, |x, d| ops::gelu_bwd(x, d));
+        add_vec_grad(grads, &name("tok_b1"), &self.bias_rows_grad(&dh1_pre));
+        let du = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            &p.mats[&name("tok_w1")],
+            &dh1_pre,
+            &self.act_grid(),
+            Site::XOwner,
+        )?;
+        let d_tok_w1 = dist_matmul(
+            ctx,
+            MatmulOp::NT,
+            &dh1_pre,
+            &cache.u,
+            &p.mats[&name("tok_w1")].grid,
+            Site::XOwner,
+        )?;
+        add_mat_grad(grads, &name("tok_w1"), d_tok_w1);
+        let (dz_ln, dg1, db1) =
+            self.ln_bwd(&cache.z_in, &p.vecs[&name("ln1_g")], &cache.ln1, &du);
+        add_vec_grad(grads, &name("ln1_g"), &dg1);
+        add_vec_grad(grads, &name("ln1_b"), &db1);
+        Ok(dz2.zip(&dz_ln, |a, b| ops::add(a, b)))
+    }
+
+    /// Loss + parameter gradients for one (x, y) sample shard. The loss is
+    /// group-reduced; replicated-vector grads are group-synced (the
+    /// paper's pairwise reduce). `rollout` as in `forward`.
+    pub fn loss_and_grad(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        y_local: &Tensor,
+        rollout: usize,
+    ) -> Result<(f32, PStore)> {
+        let cfg = &self.cfg;
+        let (pred, cache) = self.forward(ctx, x_local, rollout)?;
+        let local_loss = self.local_loss(&pred, y_local);
+        let group: Vec<usize> = (0..self.way.n()).collect();
+        let loss = ctx.comm.allreduce_scalar(&group, local_loss);
+
+        let mut grads = self.params.zeros_like();
+        let p = &self.params;
+        let (lat_l, lon_l, c_l) = self.local_dims();
+
+        // blend backward
+        let dpred = self.loss_grad(&pred, y_local);
+        let gate = &p.vecs["blend_g"];
+        let mut ddelta = Tensor::zeros(&[lat_l, lon_l, c_l]);
+        let mut dgate = Tensor::zeros(&[c_l]);
+        for li in 0..lat_l {
+            for lj in 0..lon_l {
+                for c in 0..c_l {
+                    let idx = (li * lon_l + lj) * c_l + c;
+                    let g = ops::sigmoid(gate.local.data[c]);
+                    ddelta.data[idx] = dpred.data[idx] * (1.0 - g);
+                    dgate.data[c] += dpred.data[idx]
+                        * (cache.x_local.data[idx] - cache.delta_local.data[idx])
+                        * g
+                        * (1.0 - g);
+                }
+            }
+        }
+        add_vec_grad(&mut grads, "blend_g", &dgate);
+
+        // decoder backward
+        let dy_local = patchify(&ddelta, lat_l, lon_l, c_l, cfg.patch);
+        let mut dy = DistMat::empty(cfg.tokens, cfg.patch_dim, self.act_grid());
+        let l = self.layouts();
+        dy.blocks.insert(
+            (l.tok_block_of(self.rank), l.ch_block_of(self.rank)),
+            dy_local,
+        );
+        add_vec_grad(&mut grads, "dec_b", &self.bias_cols_grad(&dy));
+        let mut dz = dist_matmul(
+            ctx,
+            MatmulOp::NN,
+            &dy,
+            &p.mats["dec_w"],
+            &self.act_grid(),
+            Site::WOwner,
+        )?;
+        let d_dec_w = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            &dy,
+            &cache.z_final,
+            &p.mats["dec_w"].grid,
+            Site::WOwner,
+        )?;
+        add_mat_grad(&mut grads, "dec_w", d_dec_w);
+
+        // processor backward (reverse rollout, reverse blocks)
+        for iter_cache in cache.iters.iter().rev() {
+            for (i, c) in iter_cache.iter().enumerate().rev() {
+                dz = self.mixer_block_bwd(ctx, i, c, &dz, &mut grads)?;
+            }
+        }
+
+        // encoder backward
+        add_vec_grad(&mut grads, "enc_b", &self.bias_cols_grad(&dz));
+        let d_enc_w = dist_matmul(
+            ctx,
+            MatmulOp::TN,
+            &dz,
+            &cache.patches,
+            &p.mats["enc_w"].grid,
+            Site::WOwner,
+        )?;
+        add_mat_grad(&mut grads, "enc_w", d_enc_w);
+
+        // the paper's pairwise reduce for replicated parameters
+        grads.sync_replicated_grads(ctx.comm);
+
+        Ok((loss, grads))
+    }
+}
+
+fn m_map_keyed(
+    m: &DistMat,
+    mut f: impl FnMut((usize, usize), &Tensor) -> Tensor,
+) -> DistMat {
+    DistMat {
+        grid: m.grid.clone(),
+        rows: m.rows,
+        cols: m.cols,
+        blocks: m.blocks.iter().map(|(k, v)| (*k, f(*k, v))).collect(),
+        cache: None,
+    }
+}
+
+fn add_mat_grad(grads: &mut PStore, name: &str, d: DistMat) {
+    let g = grads.mats.get_mut(name).expect("unknown mat grad");
+    for (k, b) in d.blocks {
+        match g.blocks.get_mut(&k) {
+            Some(acc) => ops::add_assign(acc, &b),
+            None => {
+                g.blocks.insert(k, b);
+            }
+        }
+    }
+}
+
+fn add_vec_grad(grads: &mut PStore, name: &str, d: &Tensor) {
+    let g = grads.vecs.get_mut(name).expect("unknown vec grad");
+    ops::add_assign(&mut g.local, d);
+}

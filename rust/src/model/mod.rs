@@ -1,0 +1,243 @@
+//! WeatherMixer in rust: parameter specification, patchify/unpatchify,
+//! and the jigsaw-distributed forward/backward (`dist`).
+//!
+//! The layer graph mirrors python/compile/model.py exactly — same
+//! parameter names, same (c, pi, pj) patch-feature ordering, same
+//! latitude/variable-weighted loss — so the AOT-exported monolithic
+//! programs are bit-comparable oracles for the distributed engine.
+
+pub mod dist;
+pub mod params;
+
+use crate::config::ModelConfig;
+use crate::tensor::Tensor;
+
+/// Canonical parameter order — the ABI shared with the python exporter
+/// (manifest `param_order`).
+pub fn param_order(cfg: &ModelConfig) -> Vec<String> {
+    let mut names = vec!["enc_w".to_string(), "enc_b".to_string()];
+    for i in 0..cfg.blocks {
+        for suffix in [
+            "ln1_g", "ln1_b", "tok_w1", "tok_b1", "tok_w2", "tok_b2",
+            "ln2_g", "ln2_b", "ch_w1", "ch_b1", "ch_w2", "ch_b2",
+        ] {
+            names.push(format!("blk{i}_{suffix}"));
+        }
+    }
+    names.push("dec_w".into());
+    names.push("dec_b".into());
+    names.push("blend_g".into());
+    names
+}
+
+/// Shape of a named parameter.
+pub fn param_shape(cfg: &ModelConfig, name: &str) -> Vec<usize> {
+    let (t, d, pd) = (cfg.tokens, cfg.d_emb, cfg.patch_dim);
+    let suffix = name.split('_').skip(1).collect::<Vec<_>>().join("_");
+    match name {
+        "enc_w" => vec![d, pd],
+        "enc_b" => vec![d],
+        "dec_w" => vec![pd, d],
+        "dec_b" => vec![pd],
+        "blend_g" => vec![cfg.channels_padded],
+        _ => match suffix.as_str() {
+            "ln1_g" | "ln1_b" | "ln2_g" | "ln2_b" | "ch_b2" => vec![d],
+            "tok_w1" => vec![cfg.d_tok, t],
+            "tok_b1" => vec![cfg.d_tok],
+            "tok_w2" => vec![t, cfg.d_tok],
+            "tok_b2" => vec![t],
+            "ch_w1" => vec![cfg.d_ch, d],
+            "ch_b1" => vec![cfg.d_ch],
+            "ch_w2" => vec![d, cfg.d_ch],
+            _ => panic!("unknown param {name}"),
+        },
+    }
+}
+
+/// Deterministic global parameter init (LeCun-style scale, zero biases,
+/// unit LN gains, zero blend gate — matches the python init *scheme*;
+/// actual values come from the rust RNG since jax.random is not
+/// reproducible here. Oracle tests feed identical params to both sides.)
+pub fn init_global_params(
+    cfg: &ModelConfig,
+    seed: u64,
+) -> Vec<(String, Tensor)> {
+    let mut rng = crate::util::rng::Rng::seed_from(seed);
+    param_order(cfg)
+        .into_iter()
+        .map(|name| {
+            let shape = param_shape(cfg, name.as_str());
+            let t = if name.ends_with("ln1_g")
+                || name.ends_with("ln2_g")
+            {
+                Tensor::new(shape.clone(), vec![1.0; shape.iter().product()])
+            } else if shape.len() == 1 {
+                Tensor::zeros(&shape)
+            } else {
+                let fan_in = *shape.last().unwrap() as f32;
+                let mut data = vec![0.0; shape.iter().product()];
+                rng.fill_normal(&mut data, 1.0 / fan_in.sqrt());
+                Tensor::new(shape.clone(), data)
+            };
+            (name, t)
+        })
+        .collect()
+}
+
+/// [lat, lon, C] -> [T, patch_dim], feature index = c*p*p + pi*p + pj,
+/// token index latitude-major. Must mirror python `patchify` exactly.
+pub fn patchify(
+    x: &Tensor,
+    lat: usize,
+    lon: usize,
+    c: usize,
+    p: usize,
+) -> Tensor {
+    assert_eq!(x.shape, vec![lat, lon, c]);
+    let (lp, lo) = (lat / p, lon / p);
+    let pd = c * p * p;
+    let mut out = vec![0.0f32; lp * lo * pd];
+    for ti in 0..lp {
+        for tj in 0..lo {
+            let tok = ti * lo + tj;
+            for ch in 0..c {
+                for pi in 0..p {
+                    for pj in 0..p {
+                        let src = ((ti * p + pi) * lon + (tj * p + pj)) * c + ch;
+                        let dst = tok * pd + ch * p * p + pi * p + pj;
+                        out[dst] = x.data[src];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![lp * lo, pd], out)
+}
+
+/// Inverse of `patchify`.
+pub fn unpatchify(
+    y: &Tensor,
+    lat: usize,
+    lon: usize,
+    c: usize,
+    p: usize,
+) -> Tensor {
+    let (lp, lo) = (lat / p, lon / p);
+    let pd = c * p * p;
+    assert_eq!(y.shape, vec![lp * lo, pd]);
+    let mut out = vec![0.0f32; lat * lon * c];
+    for ti in 0..lp {
+        for tj in 0..lo {
+            let tok = ti * lo + tj;
+            for ch in 0..c {
+                for pi in 0..p {
+                    for pj in 0..p {
+                        let dst = ((ti * p + pi) * lon + (tj * p + pj)) * c + ch;
+                        let src = tok * pd + ch * p * p + pi * p + pj;
+                        out[dst] = y.data[src];
+                    }
+                }
+            }
+        }
+    }
+    Tensor::new(vec![lat, lon, c], out)
+}
+
+/// cos-latitude cell-center weights normalized to mean 1 (WeatherBench2).
+pub fn latitude_weights(lat: usize) -> Vec<f32> {
+    let mut w: Vec<f32> = (0..lat)
+        .map(|i| {
+            let phi = (-90.0 + (i as f32 + 0.5) * 180.0 / lat as f32)
+                .to_radians();
+            phi.cos()
+        })
+        .collect();
+    let mean = w.iter().sum::<f32>() / lat as f32;
+    for v in w.iter_mut() {
+        *v /= mean;
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            lat: 8,
+            lon: 16,
+            channels: 6,
+            channels_padded: 8,
+            patch: 2,
+            d_emb: 32,
+            d_tok: 48,
+            d_ch: 32,
+            blocks: 2,
+            tokens: 32,
+            patch_dim: 32,
+            param_count: 12904,
+            flops_forward: 0,
+            channel_weights: vec![1.0; 6],
+        }
+    }
+
+    #[test]
+    fn param_order_matches_python_count() {
+        let cfg = tiny_cfg();
+        let order = param_order(&cfg);
+        assert_eq!(order.len(), 2 + 12 * cfg.blocks + 3);
+        assert_eq!(order[0], "enc_w");
+        assert_eq!(order.last().unwrap(), "blend_g");
+    }
+
+    #[test]
+    fn param_count_matches_config() {
+        let cfg = tiny_cfg();
+        let total: usize = param_order(&cfg)
+            .iter()
+            .map(|n| param_shape(&cfg, n).iter().product::<usize>())
+            .sum();
+        assert_eq!(total, cfg.param_count);
+    }
+
+    #[test]
+    fn patchify_roundtrip() {
+        let mut rng = Rng::seed_from(0);
+        let mut data = vec![0.0; 8 * 16 * 8];
+        rng.fill_normal(&mut data, 1.0);
+        let x = Tensor::new(vec![8, 16, 8], data);
+        let p = patchify(&x, 8, 16, 8, 2);
+        assert_eq!(p.shape, vec![32, 32]);
+        assert_eq!(unpatchify(&p, 8, 16, 8, 2), x);
+    }
+
+    #[test]
+    fn patchify_channel_major_feature_order() {
+        // channel 3 at (0,0) lands at feature index 3*p*p
+        let mut x = Tensor::zeros(&[8, 16, 8]);
+        x.data[3] = 1.0;
+        let p = patchify(&x, 8, 16, 8, 2);
+        assert_eq!(p.at2(0, 3 * 4), 1.0);
+    }
+
+    #[test]
+    fn latitude_weights_mean_one() {
+        let w = latitude_weights(16);
+        let mean: f32 = w.iter().sum::<f32>() / 16.0;
+        assert!((mean - 1.0).abs() < 1e-5);
+        assert!(w[0] < w[8]);
+    }
+
+    #[test]
+    fn init_is_deterministic() {
+        let cfg = tiny_cfg();
+        let a = init_global_params(&cfg, 7);
+        let b = init_global_params(&cfg, 7);
+        assert_eq!(a, b);
+        let c = init_global_params(&cfg, 8);
+        assert_ne!(a, c);
+    }
+}

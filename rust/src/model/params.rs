@@ -1,0 +1,378 @@
+//! Per-rank parameter storage: jigsaw-sharded matrices and sliced vectors
+//! with gradient-sync groups.
+//!
+//! Zero memory redundancy (paper Section 4): every weight matrix block has
+//! exactly one owner. The only replicated parameters are small vectors
+//! whose axis is not sharded on this rank's grid (e.g. the token-mix
+//! output bias in 2-way, LN affine pairs in 4-way); their gradients are
+//! reconciled by the pairwise reduce the paper describes for layer norms.
+
+use std::collections::BTreeMap;
+
+use crate::comm::Comm;
+use crate::config::ModelConfig;
+use crate::jigsaw::layouts::{Layouts, Way};
+use crate::jigsaw::{BlockGrid, DistMat};
+use crate::tensor::{ops, Tensor};
+
+/// A rank's slice of a 1-D parameter plus its gradient sync group.
+#[derive(Clone, Debug)]
+pub struct VecShard {
+    pub full_len: usize,
+    pub lo: usize,
+    pub hi: usize,
+    pub local: Tensor,
+    /// ranks holding an identical copy (incl. self); grads allreduce here.
+    pub sync_group: Vec<usize>,
+}
+
+impl VecShard {
+    pub fn from_global(
+        global: &Tensor,
+        n_blocks: usize,
+        block: usize,
+        sync_group: Vec<usize>,
+    ) -> Self {
+        let full_len = global.numel();
+        assert_eq!(full_len % n_blocks, 0, "vector not divisible");
+        let bl = full_len / n_blocks;
+        let (lo, hi) = (block * bl, (block + 1) * bl);
+        VecShard {
+            full_len,
+            lo,
+            hi,
+            local: Tensor::new(vec![hi - lo], global.data[lo..hi].to_vec()),
+            sync_group,
+        }
+    }
+
+    pub fn zeros_like(&self) -> VecShard {
+        VecShard {
+            full_len: self.full_len,
+            lo: self.lo,
+            hi: self.hi,
+            local: Tensor::zeros(&[self.hi - self.lo]),
+            sync_group: self.sync_group.clone(),
+        }
+    }
+}
+
+/// One rank's full parameter (or gradient / optimizer-moment) store.
+#[derive(Clone, Debug, Default)]
+pub struct PStore {
+    pub mats: BTreeMap<String, DistMat>,
+    pub vecs: BTreeMap<String, VecShard>,
+}
+
+impl PStore {
+    pub fn zeros_like(&self) -> PStore {
+        PStore {
+            mats: self
+                .mats
+                .iter()
+                .map(|(k, m)| (k.clone(), m.map(|b| Tensor::zeros(&b.shape))))
+                .collect(),
+            vecs: self
+                .vecs
+                .iter()
+                .map(|(k, v)| (k.clone(), v.zeros_like()))
+                .collect(),
+        }
+    }
+
+    /// Total local parameter count on this rank (the zero-redundancy
+    /// memory footprint check: sums to global count + replicated vectors).
+    pub fn local_count(&self) -> usize {
+        let m: usize = self
+            .mats
+            .values()
+            .flat_map(|d| d.blocks.values().map(|b| b.numel()))
+            .sum();
+        let v: usize = self.vecs.values().map(|v| v.local.numel()).sum();
+        m + v
+    }
+
+    /// Squared L2 norm of the local store, counting synced (replicated)
+    /// vectors at 1/|group| weight so a cross-rank sum gives the true
+    /// global norm.
+    pub fn global_norm_sq_contrib(&self) -> f32 {
+        let mut s = 0.0f32;
+        for m in self.mats.values() {
+            for b in m.blocks.values() {
+                s += b.data.iter().map(|v| v * v).sum::<f32>();
+            }
+        }
+        for v in self.vecs.values() {
+            let w = 1.0 / v.sync_group.len() as f32;
+            s += w * v.local.data.iter().map(|x| x * x).sum::<f32>();
+        }
+        s
+    }
+
+    /// Allreduce grads of replicated vectors within their sync groups
+    /// (the paper's pairwise layer-norm gradient reduce, Section 5).
+    pub fn sync_replicated_grads(&mut self, comm: &mut Comm) {
+        for v in self.vecs.values_mut() {
+            if v.sync_group.len() > 1 {
+                v.local = comm.allreduce_sum(&v.sync_group.clone(), &v.local);
+            }
+        }
+    }
+
+    pub fn scale_all(&mut self, s: f32) {
+        for m in self.mats.values_mut() {
+            for b in m.blocks.values_mut() {
+                for x in b.data.iter_mut() {
+                    *x *= s;
+                }
+            }
+        }
+        for v in self.vecs.values_mut() {
+            for x in v.local.data.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &PStore) {
+        for (k, m) in self.mats.iter_mut() {
+            let o = &other.mats[k];
+            for (bk, b) in m.blocks.iter_mut() {
+                ops::add_assign(b, &o.blocks[bk]);
+            }
+        }
+        for (k, v) in self.vecs.iter_mut() {
+            ops::add_assign(&mut v.local, &other.vecs[k].local);
+        }
+    }
+}
+
+/// Vector-parameter axis kinds (decides slicing + sync groups).
+#[derive(Clone, Copy, Debug)]
+enum VecKind {
+    /// sharded along a channel-like axis (enc_b, LN affine, ch biases,
+    /// dec_b, blend_g)
+    Channel,
+    /// sharded along the token-mix hidden axis (tok_b1)
+    TokHidden,
+    /// sharded along the token axis (tok_b2)
+    Token,
+}
+
+/// Shard a full set of global parameters for `rank` under `way`.
+pub fn shard_params(
+    _cfg: &ModelConfig,
+    way: Way,
+    rank: usize,
+    global: &[(String, Tensor)],
+) -> PStore {
+    let l = Layouts::new(way);
+    let mut store = PStore::default();
+    let vec_of = |name: &str| -> VecKind {
+        if name.ends_with("tok_b1") {
+            VecKind::TokHidden
+        } else if name.ends_with("tok_b2") {
+            VecKind::Token
+        } else {
+            VecKind::Channel
+        }
+    };
+    // unique cache namespace per shard_params call: two models of the
+    // same preset (tests, DP replicas) must never share device buffers.
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static INSTANCE: AtomicU64 = AtomicU64::new(1);
+    let nonce = INSTANCE.fetch_add(1, Ordering::Relaxed);
+
+    for (name, t) in global {
+        if t.rank() == 2 {
+            let grid: BlockGrid = if name.ends_with("tok_w1") {
+                l.weight_tok1()
+            } else if name.ends_with("tok_w2") {
+                l.weight_tok2()
+            } else {
+                l.weight_nt()
+            };
+            let mut dm = DistMat::from_global(t, grid, rank);
+            dm.cache = Some((fnv1a(name) ^ nonce.rotate_left(32) ^ rank as u64, 0));
+            store.mats.insert(name.clone(), dm);
+        } else {
+            let (n_blocks, block, sync) = match vec_of(name) {
+                VecKind::Channel => (
+                    way.ch_split(),
+                    l.ch_block_of(rank),
+                    l.ch_vec_sync_group(rank),
+                ),
+                VecKind::TokHidden => (
+                    way.ch_split(),
+                    l.dtok_block_of(rank),
+                    l.tok_vec_sync_group(rank),
+                ),
+                VecKind::Token => (
+                    way.tok_split(),
+                    l.tok_block_of(rank),
+                    l.tok_b2_sync_group(rank),
+                ),
+            };
+            store.vecs.insert(
+                name.clone(),
+                VecShard::from_global(t, n_blocks, block, sync),
+            );
+        }
+    }
+    store
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Reassemble global parameters from all ranks' stores (tests/checkpoints).
+pub fn assemble_params(
+    cfg: &ModelConfig,
+    stores: &[&PStore],
+) -> Vec<(String, Tensor)> {
+    let order = super::param_order(cfg);
+    order
+        .into_iter()
+        .map(|name| {
+            if let Some(first) = stores[0].mats.get(&name) {
+                let _ = first;
+                let parts: Vec<&DistMat> =
+                    stores.iter().map(|s| &s.mats[&name]).collect();
+                (name, DistMat::assemble(&parts))
+            } else {
+                let full_len = stores[0].vecs[&name].full_len;
+                let mut out = vec![0.0f32; full_len];
+                let mut filled = vec![false; full_len];
+                for s in stores {
+                    let v = &s.vecs[&name];
+                    for (i, &x) in v.local.data.iter().enumerate() {
+                        if !filled[v.lo + i] {
+                            out[v.lo + i] = x;
+                            filled[v.lo + i] = true;
+                        }
+                    }
+                }
+                assert!(filled.iter().all(|&f| f), "vector {name} has holes");
+                (name, Tensor::new(vec![full_len], out))
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::init_global_params;
+
+    fn tiny_cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            lat: 8,
+            lon: 16,
+            channels: 6,
+            channels_padded: 8,
+            patch: 2,
+            d_emb: 32,
+            d_tok: 48,
+            d_ch: 32,
+            blocks: 2,
+            tokens: 32,
+            patch_dim: 32,
+            param_count: 12904,
+            flops_forward: 0,
+            channel_weights: vec![1.0; 6],
+        }
+    }
+
+    #[test]
+    fn shard_assemble_roundtrip_all_ways() {
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 3);
+        for way in [Way::One, Way::Two, Way::Four] {
+            let stores: Vec<PStore> = (0..way.n())
+                .map(|r| shard_params(&cfg, way, r, &global))
+                .collect();
+            let refs: Vec<&PStore> = stores.iter().collect();
+            let back = assemble_params(&cfg, &refs);
+            assert_eq!(back.len(), global.len());
+            for ((n1, t1), (n2, t2)) in global.iter().zip(&back) {
+                assert_eq!(n1, n2);
+                assert!(t1.max_abs_diff(t2) == 0.0, "param {n1} mismatch in {way:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_memory_redundancy_for_matrices() {
+        // sum of local matrix elements across ranks == global element count
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 1);
+        let global_mat_count: usize = global
+            .iter()
+            .filter(|(_, t)| t.rank() == 2)
+            .map(|(_, t)| t.numel())
+            .sum();
+        for way in [Way::Two, Way::Four] {
+            let total: usize = (0..way.n())
+                .map(|r| {
+                    shard_params(&cfg, way, r, &global)
+                        .mats
+                        .values()
+                        .flat_map(|m| m.blocks.values().map(|b| b.numel()))
+                        .sum::<usize>()
+                })
+                .sum();
+            assert_eq!(total, global_mat_count, "{way:?} duplicates weights");
+        }
+    }
+
+    #[test]
+    fn four_way_ln_sync_is_the_paper_pairing() {
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 1);
+        let s0 = shard_params(&cfg, Way::Four, 0, &global);
+        let s2 = shard_params(&cfg, Way::Four, 2, &global);
+        let v0 = &s0.vecs["blk0_ln1_g"];
+        let v2 = &s2.vecs["blk0_ln1_g"];
+        assert_eq!(v0.sync_group, vec![0, 2]);
+        assert_eq!((v0.lo, v0.hi), (v2.lo, v2.hi));
+        assert_eq!(v0.local, v2.local);
+    }
+
+    #[test]
+    fn two_way_tok_b2_is_replicated() {
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 1);
+        let s0 = shard_params(&cfg, Way::Two, 0, &global);
+        let s1 = shard_params(&cfg, Way::Two, 1, &global);
+        let a = &s0.vecs["blk0_tok_b2"];
+        let b = &s1.vecs["blk0_tok_b2"];
+        assert_eq!(a.sync_group, vec![0, 1]);
+        assert_eq!(a.local.numel(), cfg.tokens);
+        assert_eq!(a.local, b.local);
+    }
+
+    #[test]
+    fn norm_contrib_counts_replicas_once() {
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 5);
+        let global_sq: f32 = global
+            .iter()
+            .flat_map(|(_, t)| t.data.iter().map(|v| v * v))
+            .sum();
+        for way in [Way::One, Way::Two, Way::Four] {
+            let total: f32 = (0..way.n())
+                .map(|r| shard_params(&cfg, way, r, &global).global_norm_sq_contrib())
+                .sum();
+            assert!(
+                (total - global_sq).abs() / global_sq < 1e-5,
+                "{way:?}: {total} vs {global_sq}"
+            );
+        }
+    }
+}

@@ -1,0 +1,342 @@
+//! Cluster performance model: the HoreKa-testbed substitute.
+//!
+//! The paper's scaling evaluation (Figs 7-10, Table 3) ran on 256 NVIDIA
+//! A100-40GB GPUs (4/node, NVLink intra-node, InfiniBand 4X HDR inter-
+//! node). That hardware is simulated here by an analytic timing model with
+//! the published peaks/bandwidths; the *comm volumes* mirror the real
+//! jigsaw engine's schedule (and are cross-checked against the engine's
+//! byte counters in rust/tests/).
+//!
+//! Step time decomposes into a prefetch-pipelined I/O stage and a compute
+//! + communication stage (paper Section 6.3: epochs overlap CPU prefetch
+//! with GPU work):
+//!
+//!     t_step = max(t_io, t_compute_path)
+//!     t_compute_path = t_compute + (1 - alpha) * t_mp_comm + t_dp_exposed
+//!
+//! Domain parallelism divides t_io by the jigsaw way (each rank reads only
+//! its partition) — the mechanism behind the paper's superscalar weak
+//! scaling in I/O-bound regimes.
+
+use crate::config::zoo::{ZooModel, PAPER_SAMPLE_BYTES};
+
+/// Numeric precision regimes of the paper's experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    /// uniform single precision: 19.5 TFLOP/s peak on A100
+    Fp32,
+    /// TensorFloat-32 mixed precision: 156 TFLOP/s peak
+    Tf32,
+}
+
+impl Precision {
+    pub fn peak_flops(&self) -> f64 {
+        match self {
+            Precision::Fp32 => 19.5e12,
+            Precision::Tf32 => 156e12,
+        }
+    }
+
+    /// Achievable GEMM fraction of peak. Together with the fixed per-step
+    /// overhead this calibrates to the paper's measured non-MP baselines
+    /// (Section 6.3.1: 81% fp32, 43% TF32 of peak at the 16-TFLOP model).
+    pub fn gemm_efficiency(&self) -> f64 {
+        match self {
+            Precision::Fp32 => 0.83,
+            Precision::Tf32 => 0.46,
+        }
+    }
+}
+
+/// The HoreKa-like cluster description.
+#[derive(Clone, Debug)]
+pub struct ClusterSpec {
+    pub gpus_per_node: usize,
+    /// effective NVLink bandwidth for the 2-way pairwise exchange (bytes/s)
+    pub mp_bw_2way: f64,
+    /// effective NVLink bandwidth for the 4-way pattern — lower: two-hop
+    /// data+partial routing, all-pairs contention, smaller messages
+    pub mp_bw_4way: f64,
+    /// InfiniBand effective per-node bandwidth (bytes/s; HoreKa nodes have
+    /// two HDR adapters), shared by the node's GPUs during the DP allreduce
+    pub ib_bw: f64,
+    /// fabric contention growth per doubling of the node count (ring
+    /// allreduces across more switches expose more synchronization)
+    pub ib_contention_per_doubling: f64,
+    /// storage read bandwidth per node; nodes run fully occupied, so each
+    /// rank gets a 1/gpus_per_node share (domain parallelism divides the
+    /// *bytes*, which is how jigsaw wins the I/O-bound regime)
+    pub storage_bw_node: f64,
+    /// fraction of MP communication hidden under compute, by way
+    pub overlap_2way: f64,
+    pub overlap_4way: f64,
+    /// fraction of the DP allreduce hidden under the backward pass
+    pub dp_overlap: f64,
+    /// fixed per-step overhead (launch, optimizer, host logic), seconds
+    pub step_overhead: f64,
+}
+
+impl ClusterSpec {
+    /// HoreKa per the paper's Section 6.1. Effective bandwidths and the
+    /// step overhead are calibrated against the paper's measured anchors:
+    /// 81%/43% non-MP peak fractions, the ~1 TFLOP fp32 roofline
+    /// crossover, and the 1.9x/2.7x fp32 strong-scaling speedups
+    /// (EXPERIMENTS.md §Calibration).
+    pub fn horeka() -> Self {
+        ClusterSpec {
+            gpus_per_node: 4,
+            mp_bw_2way: 60e9,
+            mp_bw_4way: 8e9,
+            ib_bw: 50e9,
+            ib_contention_per_doubling: 1.5,
+            storage_bw_node: 12e9,
+            overlap_2way: 0.92,
+            overlap_4way: 0.10,
+            dp_overlap: 0.9,
+            step_overhead: 0.05,
+        }
+    }
+}
+
+/// One simulated workload: a Table-1 model trained at a given parallelism.
+#[derive(Clone, Debug)]
+pub struct Workload {
+    pub model: ZooModel,
+    pub way: usize,
+    pub dp: usize,
+    pub precision: Precision,
+    /// include the storage->CPU->GPU data path (paper's "full training
+    /// loop" vs "no data loading" modes)
+    pub dataload: bool,
+}
+
+/// Paper-scale token count (0.25 deg grid, patch 12) used for activation
+/// sizing in the comm model.
+pub const PAPER_TOKENS: f64 = 7200.0;
+
+/// Per-step timing breakdown (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct StepTime {
+    pub io: f64,
+    pub compute: f64,
+    pub mp_comm: f64,
+    pub mp_comm_exposed: f64,
+    pub dp_comm: f64,
+    pub dp_comm_exposed: f64,
+    pub total: f64,
+}
+
+/// Number of jigsaw-distributed linear layers in a WeatherMixer step
+/// (paper architecture: 3 blocks x 4 MLP matmuls + encoder + decoder).
+pub const N_LINEAR: f64 = 3.0 * 4.0 + 2.0;
+
+pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
+    let way = w.way as f64;
+    let mut t = StepTime::default();
+
+    // -- I/O: each jigsaw rank reads sample/way (x and y). Nodes run
+    //    fully occupied, so a rank's storage share is bw/gpus_per_node;
+    //    domain parallelism divides the byte volume by `way`. ------------
+    if w.dataload {
+        let bytes_per_rank = 2.0 * PAPER_SAMPLE_BYTES / way;
+        let node_bw_per_rank =
+            cluster.storage_bw_node / cluster.gpus_per_node as f64;
+        t.io = bytes_per_rank / node_bw_per_rank;
+    }
+
+    // -- compute: fwd + 2x bwd FLOPs, 1/way per rank ----------------------
+    let eff_peak = w.precision.peak_flops() * w.precision.gemm_efficiency();
+    t.compute = w.model.flops_step() / way / eff_peak;
+
+    // -- MP communication: per linear layer and pass, each rank exchanges
+    //    activation-shard-sized messages over NVLink. 2-way: one partial
+    //    sum (Eq. 2); 4-way: a data block + a partial sum (Eq. 4), at a
+    //    lower effective bandwidth (two-hop routing + contention). -------
+    if w.way > 1 {
+        let prec_bytes = 4.0; // activations stay f32 even under TF32
+        let act_bytes = PAPER_TOKENS * w.model.d_emb as f64 * prec_bytes;
+        let msgs_per_linear = if w.way == 2 { 1.0 } else { 2.0 };
+        // forward + backward (dX and dW reuse one exchange each)
+        let passes = 3.0;
+        let bytes = passes * N_LINEAR * msgs_per_linear * act_bytes / way;
+        let (bw, alpha) = if w.way == 2 {
+            (cluster.mp_bw_2way, cluster.overlap_2way)
+        } else {
+            (cluster.mp_bw_4way, cluster.overlap_4way)
+        };
+        t.mp_comm = bytes / bw;
+        t.mp_comm_exposed = (1.0 - alpha) * t.mp_comm;
+    }
+
+    // -- DP allreduce: ring over IB between same-shard ranks; gradient
+    //    volume is the *shard* size (the paper's Fig-10 insight: MP
+    //    shrinks DP traffic by 1/way). The node's IB port is shared. ----
+    if w.dp > 1 {
+        let grad_bytes = w.model.param_bytes() / way;
+        let n = w.dp as f64;
+        let ring = 2.0 * (n - 1.0) / n * grad_bytes;
+        let ib_share = cluster.ib_bw / cluster.gpus_per_node as f64;
+        t.dp_comm = ring / ib_share;
+        // larger rings span more switches: exposure grows with node count
+        let nodes = ((w.way * w.dp) as f64 / cluster.gpus_per_node as f64).max(1.0);
+        let contention = 1.0 + cluster.ib_contention_per_doubling * nodes.log2();
+        t.dp_comm_exposed =
+            t.dp_comm * (((1.0 - cluster.dp_overlap) * contention).min(1.2));
+    }
+
+    let compute_path =
+        t.compute + t.mp_comm_exposed + t.dp_comm_exposed + cluster.step_overhead;
+    t.total = t.io.max(compute_path);
+    t
+}
+
+/// Achieved FLOP/s per GPU for a workload.
+pub fn flops_per_gpu(cluster: &ClusterSpec, w: &Workload) -> f64 {
+    let t = simulate_step(cluster, w);
+    w.model.flops_step() / w.way as f64 / t.total
+}
+
+/// Fraction of theoretical peak.
+pub fn peak_fraction(cluster: &ClusterSpec, w: &Workload) -> f64 {
+    flops_per_gpu(cluster, w) / w.precision.peak_flops()
+}
+
+/// Strong-scaling speedup of `way`-parallel vs 1-way for a fixed model.
+pub fn strong_speedup(
+    cluster: &ClusterSpec,
+    model: ZooModel,
+    way: usize,
+    precision: Precision,
+    dataload: bool,
+) -> f64 {
+    let base = simulate_step(
+        cluster,
+        &Workload { model, way: 1, dp: 1, precision, dataload },
+    );
+    let par = simulate_step(
+        cluster,
+        &Workload { model, way, dp: 1, precision, dataload },
+    );
+    base.total / par.total
+}
+
+/// Weak-scaling efficiency: per-GPU workload kept constant, model grown
+/// `way`-fold (paper Section 6.3.3). `base` is the 1-way model;
+/// `scaled` the model with way-times the FLOPs.
+pub fn weak_efficiency(
+    cluster: &ClusterSpec,
+    base: ZooModel,
+    scaled: ZooModel,
+    way: usize,
+    precision: Precision,
+    dataload: bool,
+) -> f64 {
+    let t1 = simulate_step(
+        cluster,
+        &Workload { model: base, way: 1, dp: 1, precision, dataload },
+    );
+    let tn = simulate_step(
+        cluster,
+        &Workload { model: scaled, way, dp: 1, precision, dataload },
+    );
+    // efficiency = (useful work rate scaled) / (way * base rate)
+    (scaled.flops_step() / tn.total) / (way as f64 * base.flops_step() / t1.total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::zoo::TABLE1;
+
+    fn horeka() -> ClusterSpec {
+        ClusterSpec::horeka()
+    }
+
+    #[test]
+    fn fp32_roofline_crossover_near_1_tflop() {
+        // paper Fig 7 left: compute-bound regime starts ~1 TFLOP/fwd
+        let c = horeka();
+        let small = Workload {
+            model: TABLE1[0], // 0.25 TFLOPs
+            way: 1,
+            dp: 1,
+            precision: Precision::Fp32,
+            dataload: true,
+        };
+        let t_small = simulate_step(&c, &small);
+        assert!(t_small.io > t_small.compute, "0.25TF model should be I/O-bound");
+        let big = Workload { model: TABLE1[4], ..small.clone() }; // 4 TFLOPs
+        let t_big = simulate_step(&c, &big);
+        assert!(t_big.compute > t_big.io, "4TF model should be compute-bound");
+    }
+
+    #[test]
+    fn one_way_baselines_match_paper() {
+        // 81% fp32 and 43% tf32 of peak for large compute-bound models
+        let c = horeka();
+        let m = TABLE1[6]; // 16 TFLOPs
+        let f32frac = peak_fraction(
+            &c,
+            &Workload { model: m, way: 1, dp: 1, precision: Precision::Fp32, dataload: false },
+        );
+        assert!((f32frac - 0.81).abs() < 0.02, "fp32 frac {f32frac}");
+    }
+
+    #[test]
+    fn strong_scaling_fp32_beats_megatron() {
+        // paper 6.3.2: 1.4B model, no-dataload fp32: 1.9x / 2.7x
+        let c = horeka();
+        let m = TABLE1[6];
+        let s2 = strong_speedup(&c, m, 2, Precision::Fp32, false);
+        let s4 = strong_speedup(&c, m, 4, Precision::Fp32, false);
+        assert!(s2 > 1.7 && s2 <= 2.0, "2-way speedup {s2}");
+        assert!(s4 > 2.3 && s4 <= 4.0, "4-way speedup {s4}");
+        assert!(s2 > 1.6 && s4 > 2.3, "must beat Megatron-LM (1.6 / 2.3)");
+    }
+
+    #[test]
+    fn io_bound_regime_benefits_from_domain_parallelism() {
+        // small model, full loop: jigsaw divides the I/O volume
+        let c = horeka();
+        let m = TABLE1[0];
+        let t1 = simulate_step(
+            &c,
+            &Workload { model: m, way: 1, dp: 1, precision: Precision::Tf32, dataload: true },
+        );
+        let t4 = simulate_step(
+            &c,
+            &Workload { model: m, way: 4, dp: 1, precision: Precision::Tf32, dataload: true },
+        );
+        assert!(t4.total < t1.total / 2.0, "superscalar I/O win: {t1:?} {t4:?}");
+    }
+
+    #[test]
+    fn dp_traffic_shrinks_with_way() {
+        let c = horeka();
+        let m = TABLE1[6];
+        let w1 = Workload { model: m, way: 1, dp: 64, precision: Precision::Tf32, dataload: true };
+        let w4 = Workload { model: m, way: 4, dp: 16, precision: Precision::Tf32, dataload: true };
+        let t1 = simulate_step(&c, &w1);
+        let t4 = simulate_step(&c, &w4);
+        assert!(t4.dp_comm < t1.dp_comm, "MP shards the gradient volume");
+    }
+
+    #[test]
+    fn weak_scaling_superscalar_when_io_bound() {
+        // paper Fig 9 bottom right: the smallest (purely I/O-limited)
+        // series is superscalar; in larger models 4-way computational /
+        // communication costs start to dominate.
+        let c = horeka();
+        let eff_small =
+            weak_efficiency(&c, TABLE1[0], TABLE1[2], 4, Precision::Tf32, true);
+        assert!(eff_small > 1.0, "superscalar expected, got {eff_small}");
+        let eff_2way =
+            weak_efficiency(&c, TABLE1[2], TABLE1[3], 2, Precision::Tf32, true);
+        assert!(eff_2way > 1.0, "2-way superscalar expected, got {eff_2way}");
+        // the largest series is no longer superscalar (Fig 9: "in the
+        // largest model communication overhead dominates")
+        let eff_big =
+            weak_efficiency(&c, TABLE1[6], TABLE1[8], 4, Precision::Tf32, true);
+        assert!(eff_big < 1.0, "largest series must not superscale: {eff_big}");
+    }
+}

@@ -1,0 +1,335 @@
+//! PJRT engine: a dedicated thread owning the `xla` PJRT CPU client and an
+//! executable cache, serving matmul-primitive and monolithic-program
+//! executions over a channel.
+//!
+//! Lookup order for a matmul: primitive HLO from the manifest (compile
+//! once, cache forever) -> native fallback (counted; `JIGSAW_STRICT_PJRT=1`
+//! turns a fallback into an error, used by the plan-coverage tests).
+//!
+//! §Perf: inputs go host->device via `buffer_from_host_buffer` (no literal
+//! intermediate), and parameter blocks carry a (id, version) `CacheKey`
+//! whose device buffer stays resident until the optimizer bumps the
+//! version — weight bytes cross the host/device boundary once per
+//! optimizer step instead of once per matmul (EXPERIMENTS.md §Perf).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::{Backend, CacheKey, MatmulOp};
+use crate::config::Manifest;
+use crate::tensor::{ops, Tensor};
+
+enum Req {
+    Matmul {
+        op: MatmulOp,
+        x: Tensor,
+        xkey: Option<CacheKey>,
+        w: Tensor,
+        wkey: Option<CacheKey>,
+        resp: mpsc::Sender<Result<Tensor>>,
+    },
+    Program {
+        tag: String,
+        inputs: Vec<Tensor>,
+        resp: mpsc::Sender<Result<Vec<Tensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable handle to the engine thread.
+pub struct Engine {
+    tx: Mutex<mpsc::Sender<Req>>,
+    stats: Arc<EngineStats>,
+}
+
+/// Execution counters (observable from benches and tests).
+#[derive(Default)]
+pub struct EngineStats {
+    pub pjrt_matmuls: AtomicU64,
+    pub native_fallbacks: AtomicU64,
+    pub programs_run: AtomicU64,
+    pub compiles: AtomicU64,
+    pub flops: AtomicU64,
+    /// weight-buffer cache hits / uploads (the §Perf counter)
+    pub buf_cache_hits: AtomicU64,
+    pub buf_cache_uploads: AtomicU64,
+}
+
+impl Engine {
+    /// Spawn the engine thread for one artifact preset.
+    pub fn start(manifest: Manifest) -> Result<Arc<Engine>> {
+        let (tx, rx) = mpsc::channel::<Req>();
+        let stats = Arc::new(EngineStats::default());
+        let stats2 = stats.clone();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || run_engine(manifest, rx, ready_tx, stats2))
+            .context("spawning engine thread")?;
+        ready_rx
+            .recv()
+            .context("engine thread died during startup")??;
+        Ok(Arc::new(Engine { tx: Mutex::new(tx), stats }))
+    }
+
+    fn send(&self, req: Req) {
+        self.tx
+            .lock()
+            .expect("engine tx poisoned")
+            .send(req)
+            .expect("engine thread gone");
+    }
+
+    /// Execute one matmul primitive (PJRT if the artifact exists).
+    pub fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        self.matmul_cached(op, x, None, w, None)
+    }
+
+    /// Matmul with optional resident device buffers for either operand.
+    pub fn matmul_cached(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        xkey: Option<CacheKey>,
+        w: &Tensor,
+        wkey: Option<CacheKey>,
+    ) -> Result<Tensor> {
+        let (resp, rx) = mpsc::channel();
+        self.send(Req::Matmul {
+            op,
+            x: x.clone(),
+            xkey,
+            w: w.clone(),
+            wkey,
+            resp,
+        });
+        rx.recv().map_err(|_| anyhow!("engine dropped response"))?
+    }
+
+    /// Execute a monolithic program by manifest tag (`forward`,
+    /// `loss_and_grad`, `train_step`, ...).
+    pub fn run_program(&self, tag: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (resp, rx) = mpsc::channel();
+        self.send(Req::Program { tag: tag.to_string(), inputs, resp });
+        rx.recv().map_err(|_| anyhow!("engine dropped response"))?
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn shutdown(&self) {
+        self.send(Req::Shutdown);
+    }
+}
+
+fn strict_pjrt() -> bool {
+    std::env::var("JIGSAW_STRICT_PJRT").map(|v| v == "1").unwrap_or(false)
+}
+
+fn run_engine(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Req>,
+    ready: mpsc::Sender<Result<()>>,
+    stats: Arc<EngineStats>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow!("PjRtClient::cpu failed: {e:?}")));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    // resident weight buffers: id -> (version, device buffer)
+    let mut buf_cache: HashMap<u64, (u64, xla::PjRtBuffer)> = HashMap::new();
+
+    let compile = |cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+                   stats: &EngineStats,
+                   key: &str,
+                   path: &std::path::Path|
+     -> Result<()> {
+        if cache.contains_key(key) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        stats.compiles.fetch_add(1, Ordering::Relaxed);
+        cache.insert(key.to_string(), exe);
+        Ok(())
+    };
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Req::Shutdown => break,
+            Req::Matmul { op, x, xkey, w, wkey, resp } => {
+                let key = op.key(&x, &w);
+                let result = (|| -> Result<Tensor> {
+                    match manifest.primitive_path(&key) {
+                        Some(path) => {
+                            compile(&mut cache, &stats, &key, &path)?;
+                            stats.pjrt_matmuls.fetch_add(1, Ordering::Relaxed);
+                            stats.flops.fetch_add(op.flops(&x, &w), Ordering::Relaxed);
+                            let exe = &cache[&key];
+                            // resolve operands to device buffers (cached
+                            // weights stay resident across calls)
+                            let xb = operand_buffer(
+                                &client, &mut buf_cache, &stats, &x, xkey,
+                            )?;
+                            let wb = operand_buffer(
+                                &client, &mut buf_cache, &stats, &w, wkey,
+                            )?;
+                            let args: Vec<&xla::PjRtBuffer> = vec![
+                                resolve(&buf_cache, &xb),
+                                resolve(&buf_cache, &wb),
+                            ];
+                            let out = execute_buffers(exe, &args)?;
+                            let (m, n) = op.out_dims(&x, &w);
+                            out.into_iter()
+                                .next()
+                                .map(|t| t.reshape(&[m, n]))
+                                .ok_or_else(|| anyhow!("primitive returned no output"))
+                        }
+                        None if strict_pjrt() => {
+                            Err(anyhow!("primitive '{key}' missing from manifest (strict mode)"))
+                        }
+                        None => {
+                            stats.native_fallbacks.fetch_add(1, Ordering::Relaxed);
+                            Ok(match op {
+                                MatmulOp::NT => ops::matmul_nt(&x, &w),
+                                MatmulOp::NN => ops::matmul_nn(&x, &w),
+                                MatmulOp::TN => ops::matmul_tn(&x, &w),
+                            })
+                        }
+                    }
+                })();
+                let _ = resp.send(result);
+            }
+            Req::Program { tag, inputs, resp } => {
+                let result = (|| -> Result<Vec<Tensor>> {
+                    let path = manifest
+                        .program_path(&tag)
+                        .ok_or_else(|| anyhow!("program '{tag}' not in manifest"))?;
+                    compile(&mut cache, &stats, &tag, &path)?;
+                    stats.programs_run.fetch_add(1, Ordering::Relaxed);
+                    let bufs = inputs
+                        .iter()
+                        .map(|t| upload(&client, t))
+                        .collect::<Result<Vec<_>>>()?;
+                    let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+                    execute_buffers(&cache[&tag], &refs)
+                })();
+                let _ = resp.send(result);
+            }
+        }
+    }
+}
+
+/// Either a transient buffer or a reference into the resident cache.
+enum Operand {
+    Transient(xla::PjRtBuffer),
+    Cached(u64),
+}
+
+fn resolve<'a>(
+    buf_cache: &'a HashMap<u64, (u64, xla::PjRtBuffer)>,
+    op: &'a Operand,
+) -> &'a xla::PjRtBuffer {
+    match op {
+        Operand::Transient(b) => b,
+        Operand::Cached(id) => &buf_cache[id].1,
+    }
+}
+
+fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
+    let dims: Vec<usize> = if t.shape.is_empty() { vec![] } else { t.shape.clone() };
+    client
+        .buffer_from_host_buffer::<f32>(&t.data, &dims, None)
+        .map_err(|e| anyhow!("buffer_from_host: {e:?}"))
+}
+
+fn operand_buffer(
+    client: &xla::PjRtClient,
+    buf_cache: &mut HashMap<u64, (u64, xla::PjRtBuffer)>,
+    stats: &EngineStats,
+    t: &Tensor,
+    key: Option<CacheKey>,
+) -> Result<Operand> {
+    match key {
+        None => Ok(Operand::Transient(upload(client, t)?)),
+        Some((id, version)) => {
+            let fresh = matches!(buf_cache.get(&id), Some((v, _)) if *v == version);
+            if fresh {
+                stats.buf_cache_hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                let buf = upload(client, t)?;
+                buf_cache.insert(id, (version, buf));
+                stats.buf_cache_uploads.fetch_add(1, Ordering::Relaxed);
+            }
+            Ok(Operand::Cached(id))
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
+    let dims: Vec<usize> = match shape {
+        xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+        other => return Err(anyhow!("non-array literal output: {other:?}")),
+    };
+    let data = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    Ok(Tensor::new(dims, data))
+}
+
+fn execute_buffers(
+    exe: &xla::PjRtLoadedExecutable,
+    args: &[&xla::PjRtBuffer],
+) -> Result<Vec<Tensor>> {
+    let result = exe
+        .execute_b::<&xla::PjRtBuffer>(args)
+        .map_err(|e| anyhow!("execute_b: {e:?}"))?;
+    let lit = result[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+    // programs are lowered with return_tuple=True
+    let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+    parts.iter().map(literal_to_tensor).collect()
+}
+
+/// `Backend` impl backed by the engine (shared across rank threads).
+pub struct PjrtBackend {
+    pub engine: Arc<Engine>,
+}
+
+impl Backend for PjrtBackend {
+    fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        self.engine.matmul(op, x, w)
+    }
+
+    fn matmul_cached(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        xkey: Option<CacheKey>,
+        w: &Tensor,
+        wkey: Option<CacheKey>,
+    ) -> Result<Tensor> {
+        self.engine.matmul_cached(op, x, xkey, w, wkey)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

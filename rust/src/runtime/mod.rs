@@ -1,0 +1,141 @@
+//! Runtime: executes AOT-compiled HLO programs on the PJRT CPU client and
+//! provides a native fallback backend.
+//!
+//! Python never runs here — artifacts were lowered once at build time
+//! (`make artifacts`) and this module loads the HLO *text*, compiles it via
+//! the `xla` crate (`PjRtClient::cpu` -> `HloModuleProto::from_text_file`
+//! -> `compile` -> `execute`), and exchanges f32 host buffers with the
+//! rest of the coordinator.
+//!
+//! The PJRT client is not thread-safe, so a dedicated engine thread owns
+//! the client and the executable cache; rank threads talk to it through a
+//! channel (a deliberate match for the single-core testbed — on a real
+//! deployment each rank process owns its own device client).
+
+pub mod engine;
+pub mod native;
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// The three matmul primitive forms (paper Section 5: each permutation of
+/// XW / XW^T / X^T W has its own communication pattern; the runtime keys
+/// primitives the same way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum MatmulOp {
+    /// y = x @ w.T   x:[M,K], w:[N,K]
+    NT,
+    /// y = x @ w     x:[M,K], w:[K,N]
+    NN,
+    /// y = x.T @ w   x:[K,M], w:[K,N]
+    TN,
+}
+
+impl MatmulOp {
+    pub fn tag(&self) -> &'static str {
+        match self {
+            MatmulOp::NT => "nt",
+            MatmulOp::NN => "nn",
+            MatmulOp::TN => "tn",
+        }
+    }
+
+    /// The primitive key for operand shapes — must match
+    /// python/compile/aot.py `mm_key_str`.
+    pub fn key(&self, x: &Tensor, w: &Tensor) -> String {
+        let (xr, xc) = x.dims2();
+        let (wr, wc) = w.dims2();
+        format!("{}_{}x{}_{}x{}", self.tag(), xr, xc, wr, wc)
+    }
+
+    /// Output shape [M, N].
+    pub fn out_dims(&self, x: &Tensor, w: &Tensor) -> (usize, usize) {
+        let (xr, xc) = x.dims2();
+        let (wr, wc) = w.dims2();
+        match self {
+            MatmulOp::NT => {
+                assert_eq!(xc, wc, "nt contraction");
+                (xr, wr)
+            }
+            MatmulOp::NN => {
+                assert_eq!(xc, wr, "nn contraction");
+                (xr, wc)
+            }
+            MatmulOp::TN => {
+                assert_eq!(xr, wr, "tn contraction");
+                (xc, wc)
+            }
+        }
+    }
+
+    /// FLOPs of this matmul (2*M*K*N).
+    pub fn flops(&self, x: &Tensor, w: &Tensor) -> u64 {
+        let (xr, xc) = x.dims2();
+        let (_, wc) = w.dims2();
+        let (m, k, n) = match self {
+            MatmulOp::NT => (xr, xc, w.dims2().0),
+            MatmulOp::NN => (xr, xc, wc),
+            MatmulOp::TN => (xc, xr, wc),
+        };
+        2 * (m as u64) * (k as u64) * (n as u64)
+    }
+}
+
+/// Identity + version of a cacheable operand (a parameter block): the
+/// runtime may keep its device buffer resident across calls and skip the
+/// host->device upload until the version changes (i.e. until the
+/// optimizer updates the shard). See EXPERIMENTS.md §Perf.
+pub type CacheKey = (u64, u64);
+
+/// Device compute abstraction: the jigsaw engine issues all heavy math
+/// through this trait. `PjrtBackend` is the deployment path; `Native` is
+/// the dependency-free fallback (tests, CI without artifacts).
+pub trait Backend: Send + Sync {
+    fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor>;
+
+    /// Like `matmul`, with optional device-buffer caching of either
+    /// operand (used for stationary weight blocks). Default: ignore keys.
+    fn matmul_cached(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        xkey: Option<CacheKey>,
+        w: &Tensor,
+        wkey: Option<CacheKey>,
+    ) -> Result<Tensor> {
+        let _ = (xkey, wkey);
+        self.matmul(op, x, w)
+    }
+
+    /// A short description for logs.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_match_python_format() {
+        let x = Tensor::zeros(&[32, 54]);
+        let w = Tensor::zeros(&[48, 54]);
+        assert_eq!(MatmulOp::NT.key(&x, &w), "nt_32x54_48x54");
+    }
+
+    #[test]
+    fn out_dims() {
+        let x = Tensor::zeros(&[3, 5]);
+        assert_eq!(MatmulOp::NT.out_dims(&x, &Tensor::zeros(&[7, 5])), (3, 7));
+        assert_eq!(MatmulOp::NN.out_dims(&x, &Tensor::zeros(&[5, 7])), (3, 7));
+        let xt = Tensor::zeros(&[5, 3]);
+        assert_eq!(MatmulOp::TN.out_dims(&xt, &Tensor::zeros(&[5, 7])), (3, 7));
+    }
+
+    #[test]
+    fn flops_counts() {
+        let x = Tensor::zeros(&[2, 3]);
+        let w = Tensor::zeros(&[4, 3]);
+        assert_eq!(MatmulOp::NT.flops(&x, &w), 2 * 2 * 3 * 4);
+    }
+}

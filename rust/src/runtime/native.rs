@@ -1,0 +1,38 @@
+//! Native (pure-rust) backend: the fallback compute path and the reference
+//! the PJRT path is differentially tested against.
+
+use anyhow::Result;
+
+use super::{Backend, MatmulOp};
+use crate::tensor::{ops, Tensor};
+
+#[derive(Default)]
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        Ok(match op {
+            MatmulOp::NT => ops::matmul_nt(x, w),
+            MatmulOp::NN => ops::matmul_nn(x, w),
+            MatmulOp::TN => ops::matmul_tn(x, w),
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_matmul_dispatch() {
+        let b = NativeBackend;
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        let y = b.matmul(MatmulOp::NT, &x, &w).unwrap();
+        assert_eq!(y.data, vec![11.0]);
+    }
+}

@@ -1,0 +1,219 @@
+//! Host tensor: row-major f32 buffers with the block/partition algebra the
+//! jigsaw engine is built on.
+//!
+//! This is deliberately minimal — device compute happens in the PJRT
+//! runtime (or the native fallback backend); the tensor type exists to
+//! carry shards between ranks, slice/assemble jigsaw blocks, and implement
+//! the cheap pointwise stages of the model natively.
+
+pub mod ops;
+
+/// Row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Rows/cols of a 2-D tensor.
+    pub fn dims2(&self) -> (usize, usize) {
+        assert_eq!(self.rank(), 2, "expected 2-D, got {:?}", self.shape);
+        (self.shape[0], self.shape[1])
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Contiguous column-range slice of a 2-D tensor.
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert!(lo <= hi && hi <= c);
+        let w = hi - lo;
+        let mut data = Vec::with_capacity(r * w);
+        for i in 0..r {
+            data.extend_from_slice(&self.data[i * c + lo..i * c + hi]);
+        }
+        Tensor::new(vec![r, w], data)
+    }
+
+    /// Contiguous row-range slice of a 2-D tensor.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert!(lo <= hi && hi <= r);
+        Tensor::new(vec![hi - lo, c], self.data[lo * c..hi * c].to_vec())
+    }
+
+    /// Block (bi, bj) of a 2-D tensor split into rb x cb equal blocks.
+    pub fn block(&self, bi: usize, bj: usize, rb: usize, cb: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert!(r % rb == 0 && c % cb == 0, "{}x{} into {}x{} blocks", r, c, rb, cb);
+        let (br, bc) = (r / rb, c / cb);
+        let mut data = Vec::with_capacity(br * bc);
+        for i in 0..br {
+            let row = (bi * br + i) * c + bj * bc;
+            data.extend_from_slice(&self.data[row..row + bc]);
+        }
+        Tensor::new(vec![br, bc], data)
+    }
+
+    /// Inverse of `block`: assemble an rb x cb grid of equal blocks.
+    pub fn from_blocks(blocks: &[Vec<Tensor>]) -> Tensor {
+        let rb = blocks.len();
+        let cb = blocks[0].len();
+        let (br, bc) = blocks[0][0].dims2();
+        for row in blocks {
+            assert_eq!(row.len(), cb);
+            for b in row {
+                assert_eq!(b.dims2(), (br, bc), "ragged blocks");
+            }
+        }
+        let (r, c) = (rb * br, cb * bc);
+        let mut data = vec![0.0; r * c];
+        for (bi, row) in blocks.iter().enumerate() {
+            for (bj, b) in row.iter().enumerate() {
+                for i in 0..br {
+                    let src = &b.data[i * bc..(i + 1) * bc];
+                    let dst = (bi * br + i) * c + bj * bc;
+                    data[dst..dst + bc].copy_from_slice(src);
+                }
+            }
+        }
+        Tensor::new(vec![r, c], data)
+    }
+
+    /// Transpose a 2-D tensor (materialized; used off the hot path only —
+    /// the jigsaw matmuls use nt/nn/tn primitives instead).
+    pub fn transposed(&self) -> Tensor {
+        let (r, c) = self.dims2();
+        let mut data = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                data[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], data)
+    }
+
+    /// Zero-pad a 2-D tensor to [rows, cols].
+    pub fn pad_to(&self, rows: usize, cols: usize) -> Tensor {
+        let (r, c) = self.dims2();
+        assert!(rows >= r && cols >= c);
+        if rows == r && cols == c {
+            return self.clone();
+        }
+        let mut data = vec![0.0; rows * cols];
+        for i in 0..r {
+            data[i * cols..i * cols + c]
+                .copy_from_slice(&self.data[i * c..(i + 1) * c]);
+        }
+        Tensor::new(vec![rows, cols], data)
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    pub fn frobenius_norm(&self) -> f32 {
+        self.data.iter().map(|v| v * v).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(r: usize, c: usize) -> Tensor {
+        Tensor::new(vec![r, c], (0..r * c).map(|v| v as f32).collect())
+    }
+
+    #[test]
+    fn block_roundtrip() {
+        let t = t2(6, 8);
+        let blocks: Vec<Vec<Tensor>> = (0..2)
+            .map(|i| (0..4).map(|j| t.block(i, j, 2, 4)).collect())
+            .collect();
+        assert_eq!(Tensor::from_blocks(&blocks), t);
+    }
+
+    #[test]
+    fn slice_cols_values() {
+        let t = t2(2, 4);
+        let s = t.slice_cols(1, 3);
+        assert_eq!(s.data, vec![1.0, 2.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn slice_rows_values() {
+        let t = t2(3, 2);
+        let s = t.slice_rows(1, 2);
+        assert_eq!(s.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let t = t2(3, 5);
+        assert_eq!(t.transposed().transposed(), t);
+    }
+
+    #[test]
+    fn pad_to_extends_with_zeros() {
+        let t = t2(2, 2);
+        let p = t.pad_to(3, 4);
+        assert_eq!(p.shape, vec![3, 4]);
+        assert_eq!(p.at2(0, 0), 0.0);
+        assert_eq!(p.at2(1, 1), 3.0);
+        assert_eq!(p.at2(2, 3), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape")]
+    fn new_checks_len() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,393 @@
+//! Native f32 compute: matmuls (fallback backend / tests) and the
+//! pointwise stages the coordinator runs outside PJRT (GELU, layer norm,
+//! bias/residual adds, blend). All formulas mirror
+//! python/compile/kernels/ref.py bit-for-bit in structure.
+
+use super::Tensor;
+
+pub const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+pub const GELU_C: f32 = 0.044_715;
+pub const LN_EPS: f32 = 1e-5;
+
+// ---------------------------------------------------------------------------
+// Matmuls (native fallback; the hot path uses the PJRT primitives)
+// ---------------------------------------------------------------------------
+
+/// y = x @ w.T   x:[M,K], w:[N,K] -> [M,N]
+pub fn matmul_nt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (n, k2) = w.dims2();
+    assert_eq!(k, k2, "nt contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wj = &w.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += xi[kk] * wj[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// y = x @ w     x:[M,K], w:[K,N] -> [M,N]
+pub fn matmul_nn(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (k2, n) = w.dims2();
+    assert_eq!(k, k2, "nn contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x.data[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xi.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                oi[j] += xv * wr[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// y = x.T @ w   x:[K,M], w:[K,N] -> [M,N]
+pub fn matmul_tn(x: &Tensor, w: &Tensor) -> Tensor {
+    let (k, m) = x.dims2();
+    let (k2, n) = w.dims2();
+    assert_eq!(k, k2, "tn contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let xr = &x.data[kk * m..(kk + 1) * m];
+        let wr = &w.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let xv = xr[i];
+            if xv == 0.0 {
+                continue;
+            }
+            let oi = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                oi[j] += xv * wr[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+// ---------------------------------------------------------------------------
+// Pointwise / reductions (native on the coordinator)
+// ---------------------------------------------------------------------------
+
+pub fn gelu_scalar(x: f32) -> f32 {
+    let x3 = x * x * x;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + GELU_C * x3)).tanh())
+}
+
+pub fn gelu_grad_scalar(x: f32) -> f32 {
+    let x2 = x * x;
+    let inner = SQRT_2_OVER_PI * (x + GELU_C * x * x2);
+    let t = inner.tanh();
+    let sech2 = 1.0 - t * t;
+    let dinner = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x2);
+    0.5 * (1.0 + t) + 0.5 * x * sech2 * dinner
+}
+
+pub fn gelu(x: &Tensor) -> Tensor {
+    Tensor::new(x.shape.clone(), x.data.iter().map(|&v| gelu_scalar(v)).collect())
+}
+
+pub fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
+    assert_eq!(x.shape, dy.shape);
+    Tensor::new(
+        x.shape.clone(),
+        x.data
+            .iter()
+            .zip(&dy.data)
+            .map(|(&v, &d)| d * gelu_grad_scalar(v))
+            .collect(),
+    )
+}
+
+/// y = x + b broadcast over rows (b per column).
+pub fn add_bias_cols(x: &Tensor, b: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    assert_eq!(b.numel(), c);
+    let mut out = x.data.clone();
+    for i in 0..r {
+        for j in 0..c {
+            out[i * c + j] += b.data[j];
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+/// y = x + b broadcast over columns (b per row).
+pub fn add_bias_rows(x: &Tensor, b: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    assert_eq!(b.numel(), r);
+    let mut out = x.data.clone();
+    for i in 0..r {
+        for j in 0..c {
+            out[i * c + j] += b.data[i];
+        }
+    }
+    Tensor::new(x.shape.clone(), out)
+}
+
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    )
+}
+
+pub fn add_assign(a: &mut Tensor, b: &Tensor) {
+    assert_eq!(a.shape, b.shape, "add_assign shape mismatch");
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += y;
+    }
+}
+
+pub fn sub(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x - y).collect(),
+    )
+}
+
+pub fn scale(a: &Tensor, s: f32) -> Tensor {
+    Tensor::new(a.shape.clone(), a.data.iter().map(|x| x * s).collect())
+}
+
+/// Column sums (grad of a per-column bias): [R, C] -> [C].
+pub fn sum_rows(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut out = vec![0.0; c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j] += x.data[i * c + j];
+        }
+    }
+    Tensor::new(vec![c], out)
+}
+
+/// Row sums (grad of a per-row bias): [R, C] -> [R].
+pub fn sum_cols(x: &Tensor) -> Tensor {
+    let (r, c) = x.dims2();
+    let mut out = vec![0.0; r];
+    for i in 0..r {
+        for j in 0..c {
+            out[i] += x.data[i * c + j];
+        }
+    }
+    Tensor::new(vec![r], out)
+}
+
+// ---------------------------------------------------------------------------
+// Layer norm (last axis of [R, C], per-column affine) — mirrors ref.py
+// ---------------------------------------------------------------------------
+
+pub struct LnSaved {
+    pub mean: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+pub fn layernorm(x: &Tensor, gamma: &Tensor, beta: &Tensor) -> (Tensor, LnSaved) {
+    let (r, c) = x.dims2();
+    assert_eq!(gamma.numel(), c);
+    assert_eq!(beta.numel(), c);
+    let mut out = vec![0.0; r * c];
+    let mut mean = vec![0.0; r];
+    let mut rstd = vec![0.0; r];
+    for i in 0..r {
+        let row = &x.data[i * c..(i + 1) * c];
+        let mu = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / c as f32;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        mean[i] = mu;
+        rstd[i] = rs;
+        for j in 0..c {
+            out[i * c + j] = (row[j] - mu) * rs * gamma.data[j] + beta.data[j];
+        }
+    }
+    (Tensor::new(vec![r, c], out), LnSaved { mean, rstd })
+}
+
+/// Returns (dx, dgamma, dbeta).
+pub fn layernorm_bwd(
+    x: &Tensor,
+    gamma: &Tensor,
+    saved: &LnSaved,
+    dy: &Tensor,
+) -> (Tensor, Tensor, Tensor) {
+    let (r, c) = x.dims2();
+    let mut dx = vec![0.0; r * c];
+    let mut dg = vec![0.0; c];
+    let mut db = vec![0.0; c];
+    for i in 0..r {
+        let row = &x.data[i * c..(i + 1) * c];
+        let dyr = &dy.data[i * c..(i + 1) * c];
+        let (mu, rs) = (saved.mean[i], saved.rstd[i]);
+        let mut mean_dxhat = 0.0f32;
+        let mut mean_dxhat_xhat = 0.0f32;
+        for j in 0..c {
+            let xhat = (row[j] - mu) * rs;
+            let dxhat = dyr[j] * gamma.data[j];
+            dg[j] += dyr[j] * xhat;
+            db[j] += dyr[j];
+            mean_dxhat += dxhat;
+            mean_dxhat_xhat += dxhat * xhat;
+        }
+        mean_dxhat /= c as f32;
+        mean_dxhat_xhat /= c as f32;
+        for j in 0..c {
+            let xhat = (row[j] - mu) * rs;
+            let dxhat = dyr[j] * gamma.data[j];
+            dx[i * c + j] = rs * (dxhat - mean_dxhat - xhat * mean_dxhat_xhat);
+        }
+    }
+    (
+        Tensor::new(vec![r, c], dx),
+        Tensor::new(vec![c], dg),
+        Tensor::new(vec![c], db),
+    )
+}
+
+pub fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+        let mut d = vec![0.0; r * c];
+        rng.fill_normal(&mut d, 1.0);
+        Tensor::new(vec![r, c], d)
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = Rng::seed_from(3);
+        let x = rand_t(&mut rng, 5, 7);
+        let w = rand_t(&mut rng, 4, 7); // for nt
+        let a = matmul_nt(&x, &w);
+        let b = matmul_nn(&x, &w.transposed());
+        let c = matmul_tn(&x.transposed(), &w.transposed());
+        assert!(a.max_abs_diff(&b) < 1e-5);
+        assert!(a.max_abs_diff(&c) < 1e-5);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 4;
+        let mut eye = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            eye.data[i * n + i] = 1.0;
+        }
+        let mut rng = Rng::seed_from(4);
+        let x = rand_t(&mut rng, 3, n);
+        assert!(matmul_nn(&x, &eye).max_abs_diff(&x) < 1e-7);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!((gelu_scalar(0.0)).abs() < 1e-7);
+        assert!((gelu_scalar(30.0) - 30.0).abs() < 1e-4);
+        assert!(gelu_scalar(-30.0).abs() < 1e-6);
+        // gelu(1) ~ 0.8412 for the tanh approximation
+        assert!((gelu_scalar(1.0) - 0.8412).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.3, 1.7] {
+            let eps = 1e-3;
+            let fd = (gelu_scalar(x + eps) - gelu_scalar(x - eps)) / (2.0 * eps);
+            assert!(
+                (fd - gelu_grad_scalar(x)).abs() < 1e-3,
+                "x={x} fd={fd} got={}",
+                gelu_grad_scalar(x)
+            );
+        }
+    }
+
+    #[test]
+    fn layernorm_normalizes() {
+        let mut rng = Rng::seed_from(5);
+        let x = rand_t(&mut rng, 6, 32);
+        let g = Tensor::new(vec![32], vec![1.0; 32]);
+        let b = Tensor::zeros(&[32]);
+        let (y, _) = layernorm(&x, &g, &b);
+        for i in 0..6 {
+            let row = &y.data[i * 32..(i + 1) * 32];
+            let mu = row.iter().sum::<f32>() / 32.0;
+            let var = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 32.0;
+            assert!(mu.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_finite_difference() {
+        let mut rng = Rng::seed_from(6);
+        let x = rand_t(&mut rng, 3, 8);
+        let g = rand_t(&mut rng, 1, 8).reshape(&[8]);
+        let b = rand_t(&mut rng, 1, 8).reshape(&[8]);
+        let dy = rand_t(&mut rng, 3, 8);
+        let (_, saved) = layernorm(&x, &g, &b);
+        let (dx, dg, db) = layernorm_bwd(&x, &g, &saved, &dy);
+        let loss = |x: &Tensor, g: &Tensor, b: &Tensor| -> f32 {
+            let (y, _) = layernorm(x, g, b);
+            y.data.iter().zip(&dy.data).map(|(a, d)| a * d).sum()
+        };
+        let eps = 1e-2;
+        // probe a few coordinates of each grad
+        for idx in [0usize, 5, 17] {
+            let mut xp = x.clone();
+            xp.data[idx] += eps;
+            let mut xm = x.clone();
+            xm.data[idx] -= eps;
+            let fd = (loss(&xp, &g, &b) - loss(&xm, &g, &b)) / (2.0 * eps);
+            assert!((fd - dx.data[idx]).abs() < 2e-2, "dx[{idx}] fd={fd} got={}", dx.data[idx]);
+        }
+        for idx in [0usize, 3] {
+            let mut gp = g.clone();
+            gp.data[idx] += eps;
+            let mut gm = g.clone();
+            gm.data[idx] -= eps;
+            let fd = (loss(&x, &gp, &b) - loss(&x, &gm, &b)) / (2.0 * eps);
+            assert!((fd - dg.data[idx]).abs() < 2e-2);
+            let mut bp = b.clone();
+            bp.data[idx] += eps;
+            let mut bm = b.clone();
+            bm.data[idx] -= eps;
+            let fd = (loss(&x, &g, &bp) - loss(&x, &g, &bm)) / (2.0 * eps);
+            assert!((fd - db.data[idx]).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn bias_adds() {
+        let x = Tensor::new(vec![2, 3], vec![0.0; 6]);
+        let bc = Tensor::new(vec![3], vec![1.0, 2.0, 3.0]);
+        let br = Tensor::new(vec![2], vec![10.0, 20.0]);
+        assert_eq!(add_bias_cols(&x, &bc).data, vec![1., 2., 3., 1., 2., 3.]);
+        assert_eq!(add_bias_rows(&x, &br).data, vec![10., 10., 10., 20., 20., 20.]);
+    }
+
+    #[test]
+    fn reductions() {
+        let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(sum_rows(&x).data, vec![4.0, 6.0]);
+        assert_eq!(sum_cols(&x).data, vec![3.0, 7.0]);
+    }
+}

@@ -1,0 +1,200 @@
+//! Oracle validation: the rust jigsaw engine against the AOT-exported JAX
+//! monolithic programs.
+//!
+//! The same global parameters and sample are fed to (a) the jax
+//! `loss_and_grad` HLO program executed via PJRT and (b) the n-way rust
+//! distributed engine; loss and every reassembled parameter gradient must
+//! agree. `ln_groups=2` oracles account for the local-stats layer norm of
+//! 2-/4-way jigsaw (paper Section 5).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::comm::Network;
+use crate::config::{artifacts_dir, Manifest, ModelConfig};
+use crate::jigsaw::layouts::Way;
+use crate::jigsaw::Ctx;
+use crate::model::dist::DistModel;
+use crate::model::params::{assemble_params, shard_params, PStore};
+use crate::model::{init_global_params, param_order};
+use crate::runtime::engine::{Engine, PjrtBackend};
+use crate::runtime::Backend;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Comparison outcome.
+pub struct OracleReport {
+    pub preset: String,
+    pub way: usize,
+    pub loss_oracle: f32,
+    pub loss_dist: f32,
+    pub max_grad_err: f32,
+    pub worst_param: String,
+    pub per_param_err: Vec<(String, f32)>,
+}
+
+impl std::fmt::Display for OracleReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "oracle check: preset={} way={}\n  loss  oracle={:.6} dist={:.6} (diff {:.2e})\n  grads max err {:.3e} (worst: {})",
+            self.preset,
+            self.way,
+            self.loss_oracle,
+            self.loss_dist,
+            (self.loss_oracle - self.loss_dist).abs(),
+            self.max_grad_err,
+            self.worst_param,
+        )?;
+        Ok(())
+    }
+}
+
+impl OracleReport {
+    pub fn passes(&self, tol: f32) -> bool {
+        let loss_ok = (self.loss_oracle - self.loss_dist).abs()
+            <= tol * self.loss_oracle.abs().max(1.0);
+        loss_ok && self.max_grad_err <= tol
+    }
+}
+
+/// Slice a [lat, lon, C] sample to one rank's (lat, channel) shard.
+pub fn sample_shard(
+    x: &Tensor,
+    lat_range: (usize, usize),
+    ch_range: (usize, usize),
+) -> Tensor {
+    let (lat, lon, c) = (x.shape[0], x.shape[1], x.shape[2]);
+    assert_eq!(x.shape.len(), 3);
+    let (la, lb) = lat_range;
+    let (ca, cb) = ch_range;
+    assert!(lb <= lat && cb <= c);
+    let mut out = Tensor::zeros(&[lb - la, lon, cb - ca]);
+    for li in la..lb {
+        for lj in 0..lon {
+            for ci in ca..cb {
+                out.data[((li - la) * lon + lj) * (cb - ca) + (ci - ca)] =
+                    x.data[(li * lon + lj) * c + ci];
+            }
+        }
+    }
+    out
+}
+
+/// Run the n-way rust engine for one (x, y) and reassemble (loss, grads).
+pub fn run_dist_loss_and_grad(
+    cfg: &ModelConfig,
+    way: usize,
+    global_params: &[(String, Tensor)],
+    x: &Tensor,
+    y: &Tensor,
+    backend: Arc<dyn Backend>,
+    rollout: usize,
+) -> Result<(f32, Vec<(String, Tensor)>)> {
+    let w = Way::from_n(way);
+    let net = Network::new(way);
+    let mut handles = Vec::new();
+    for r in 0..way {
+        let cfg = cfg.clone();
+        let params = shard_params(&cfg, w, r, global_params);
+        let mut comm = net.endpoint(r);
+        let backend = backend.clone();
+        let (x, y) = (x.clone(), y.clone());
+        handles.push(std::thread::spawn(move || -> Result<(f32, PStore)> {
+            let model = DistModel::new(cfg, w, r, params);
+            let (la, ll, lc) = model.local_dims();
+            let lat0 = model.lat_offset();
+            let ch0 = model.ch_offset();
+            let _ = ll;
+            let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
+            let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
+            let mut ctx = Ctx::new(r, &mut comm, backend.as_ref());
+            let (loss, grads) = model.loss_and_grad(&mut ctx, &xl, &yl, rollout)?;
+            Ok((loss, grads))
+        }));
+    }
+    let mut outs = Vec::new();
+    for h in handles {
+        outs.push(h.join().expect("rank panicked")?);
+    }
+    let loss = outs[0].0;
+    let stores: Vec<&PStore> = outs.iter().map(|(_, g)| g).collect();
+    Ok((loss, assemble_params(cfg, &stores)))
+}
+
+/// Execute the AOT oracle `loss_and_grad` (ln_groups matched to `way`).
+pub fn run_oracle_loss_and_grad(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    way: usize,
+    global_params: &[(String, Tensor)],
+    x: &Tensor,
+    y: &Tensor,
+) -> Result<(f32, Vec<(String, Tensor)>)> {
+    let tag = if way == 1 { "loss_and_grad".to_string() } else { "loss_and_grad_g2".to_string() };
+    let mut inputs: Vec<Tensor> = global_params.iter().map(|(_, t)| t.clone()).collect();
+    inputs.push(x.clone());
+    inputs.push(y.clone());
+    let outs = engine.run_program(&tag, inputs)?;
+    let order = param_order(cfg);
+    if outs.len() != order.len() + 1 {
+        return Err(anyhow!(
+            "oracle returned {} outputs, expected {}",
+            outs.len(),
+            order.len() + 1
+        ));
+    }
+    let loss = outs[0].data[0];
+    let grads = order
+        .into_iter()
+        .zip(outs.into_iter().skip(1))
+        .collect();
+    Ok((loss, grads))
+}
+
+/// Full oracle comparison for a preset/way (the `jigsaw validate` command).
+pub fn validate_against_oracle(preset: &str, way: usize) -> Result<OracleReport> {
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir, preset)?;
+    let manifest = Manifest::load(&dir, preset)?;
+    let engine = Engine::start(manifest)?;
+    let backend: Arc<dyn Backend> = Arc::new(PjrtBackend { engine: engine.clone() });
+
+    let global_params = init_global_params(&cfg, 0xBEEF);
+    let mut rng = Rng::seed_from(0x5A11);
+    let mut mk_sample = || {
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
+    };
+    let x = mk_sample();
+    let y = mk_sample();
+
+    let (loss_o, grads_o) =
+        run_oracle_loss_and_grad(&engine, &cfg, way, &global_params, &x, &y)?;
+    let (loss_d, grads_d) =
+        run_dist_loss_and_grad(&cfg, way, &global_params, &x, &y, backend, 1)?;
+
+    let mut per_param_err = Vec::new();
+    let mut max_err = 0.0f32;
+    let mut worst = String::new();
+    for ((n1, g1), (n2, g2)) in grads_o.iter().zip(&grads_d) {
+        assert_eq!(n1, n2);
+        let e = g1.max_abs_diff(g2);
+        if e > max_err {
+            max_err = e;
+            worst = n1.clone();
+        }
+        per_param_err.push((n1.clone(), e));
+    }
+    Ok(OracleReport {
+        preset: preset.to_string(),
+        way,
+        loss_oracle: loss_o,
+        loss_dist: loss_d,
+        max_grad_err: max_err,
+        worst_param: worst,
+        per_param_err,
+    })
+}

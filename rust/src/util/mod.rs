@@ -1,0 +1,7 @@
+//! Dependency-free utilities: JSON, deterministic RNG, property testing,
+//! and small table/CSV writers for the bench harness.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod table;

@@ -1,0 +1,93 @@
+//! In-repo property-testing helper (the offline registry has no proptest).
+//!
+//! `check(name, cases, f)` runs `f` against `cases` seeded generators and
+//! reports the failing seed, so a failure reproduces with
+//! `Gen::new(seed)`. Shrinking is by seed replay rather than structural
+//! shrinking — adequate for the partition/comm/schedule invariants tested
+//! here.
+
+use super::rng::Rng;
+
+/// A seeded random-value source handed to property bodies.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Rng::seed_from(seed), seed }
+    }
+
+    /// Integer in [lo, hi] inclusive.
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below(hi - lo + 1)
+    }
+
+    /// Even integer in [lo, hi].
+    pub fn even(&mut self, lo: usize, hi: usize) -> usize {
+        let v = self.int(lo / 2, hi / 2);
+        (v * 2).max(lo + lo % 2)
+    }
+
+    pub fn f32s(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.rng.normal()).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+}
+
+/// Run `f` for `cases` seeds; panic with the seed on the first failure.
+pub fn check<F: FnMut(&mut Gen) -> Result<(), String>>(
+    name: &str,
+    cases: u64,
+    mut f: F,
+) {
+    for seed in 0..cases {
+        let mut g = Gen::new(seed * 0x9E3779B9 + 1);
+        if let Err(msg) = f(&mut g) {
+            panic!("property '{name}' failed at seed {}: {msg}", g.seed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_trivial_property() {
+        check("addition commutes", 50, |g| {
+            let (a, b) = (g.int(0, 100) as i64, g.int(0, 100) as i64);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails'")]
+    fn check_reports_failures() {
+        check("always fails", 5, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn even_is_even() {
+        check("even gen", 100, |g| {
+            let e = g.even(2, 64);
+            if e % 2 == 0 && (2..=64).contains(&e) {
+                Ok(())
+            } else {
+                Err(format!("bad even {e}"))
+            }
+        });
+    }
+}

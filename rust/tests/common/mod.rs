@@ -1,0 +1,36 @@
+//! Shared helpers for the integration tests: one PJRT engine per preset
+//! per test binary (the CPU client is heavyweight; tests share it).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use jigsaw::config::{Manifest, ModelConfig};
+use jigsaw::runtime::engine::Engine;
+
+pub fn artifacts() -> PathBuf {
+    // integration tests run from the workspace root
+    let p = PathBuf::from("artifacts");
+    assert!(
+        p.join("tiny").join("manifest.json").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    p
+}
+
+static ENGINES: OnceLock<Mutex<HashMap<String, Arc<Engine>>>> = OnceLock::new();
+
+pub fn engine(preset: &str) -> Arc<Engine> {
+    let map = ENGINES.get_or_init(|| Mutex::new(HashMap::new()));
+    let mut m = map.lock().unwrap();
+    m.entry(preset.to_string())
+        .or_insert_with(|| {
+            let manifest = Manifest::load(&artifacts(), preset).expect("manifest");
+            Engine::start(manifest).expect("engine start")
+        })
+        .clone()
+}
+
+pub fn config(preset: &str) -> ModelConfig {
+    ModelConfig::load(&artifacts(), preset).expect("config")
+}

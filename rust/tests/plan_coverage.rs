@@ -1,0 +1,47 @@
+//! Plan coverage: every matmul primitive the jigsaw engine needs for the
+//! exported presets must exist in the artifact manifest — no silent
+//! native fallbacks on the deployment path.
+//!
+//! Runs the full 1/2/4-way loss_and_grad with JIGSAW_STRICT_PJRT=1, under
+//! which a missing primitive is a hard error. Kept in its own test binary
+//! because the env var is process-global.
+
+mod common;
+
+use std::sync::Arc;
+
+use jigsaw::model::init_global_params;
+use jigsaw::runtime::engine::PjrtBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::tensor::Tensor;
+use jigsaw::trainer::oracle::run_dist_loss_and_grad;
+use jigsaw::util::rng::Rng;
+
+#[test]
+fn all_plan_shapes_have_pjrt_primitives() {
+    std::env::set_var("JIGSAW_STRICT_PJRT", "1");
+    for preset in ["tiny", "small"] {
+        let cfg = common::config(preset);
+        let engine = common::engine(preset);
+        let backend: Arc<dyn Backend> = Arc::new(PjrtBackend { engine: engine.clone() });
+        let params = init_global_params(&cfg, 1);
+        let mut rng = Rng::seed_from(2);
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        let x = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d.clone());
+        let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
+        for way in [1usize, 2, 4] {
+            run_dist_loss_and_grad(&cfg, way, &params, &x, &y, backend.clone(), 1)
+                .unwrap_or_else(|e| panic!("{preset}/{way}-way missing primitive: {e}"));
+        }
+        let stats = engine.stats();
+        assert_eq!(
+            stats
+                .native_fallbacks
+                .load(std::sync::atomic::Ordering::Relaxed),
+            0,
+            "{preset}: native fallbacks occurred"
+        );
+    }
+    std::env::remove_var("JIGSAW_STRICT_PJRT");
+}
