@@ -1,7 +1,11 @@
-//! Hot-path microbenches for the §Perf pass: matmul backends, jigsaw
-//! dist_matmul overheads, tensor block algebra, comm round-trips, and the
-//! Adam update. Prints ops/sec so before/after comparisons are direct.
+//! Hot-path microbenches for the §Perf pass: matmul backends (blocked vs
+//! the retained naive oracle), jigsaw dist_matmul overheads, DistMat
+//! assemble/exchange, tensor block algebra, comm round-trips, the Adam
+//! update, and steady-state allocation behaviour of the buffer pool.
+//! Prints ops/sec so before/after comparisons are direct, and persists a
+//! machine-readable perf record to BENCH_kernels.json for the trajectory.
 
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use jigsaw::benchkit::{banner, csv_path, time_best};
@@ -9,7 +13,8 @@ use jigsaw::comm::Network;
 use jigsaw::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Site};
 use jigsaw::runtime::native::NativeBackend;
 use jigsaw::runtime::{Backend, MatmulOp};
-use jigsaw::tensor::{ops, Tensor};
+use jigsaw::tensor::{ops, pool, ref_kernels, Tensor};
+use jigsaw::util::json::Json;
 use jigsaw::util::rng::Rng;
 use jigsaw::util::table::{fmt, Table};
 
@@ -19,48 +24,134 @@ fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
     Tensor::new(vec![r, c], d)
 }
 
+fn jnum(v: f64) -> Json {
+    Json::Num(v)
+}
+
+fn jobj(pairs: Vec<(&str, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+}
+
 fn main() {
     banner("hotpath", "microbenchmarks (single core)");
     let mut rng = Rng::seed_from(0);
     let mut t = Table::new(&["op", "size", "time (us)", "rate"]);
+    let mut record: BTreeMap<String, Json> = BTreeMap::new();
+    let mut matmul_records: Vec<Json> = Vec::new();
 
-    // native matmul
-    for n in [64usize, 128, 256] {
+    // blocked vs naive matmul (the kernel-layer acceptance metric):
+    // the naive seed kernels live on in tensor::ref_kernels as the oracle
+    let mut min_nt_speedup_256plus = f64::INFINITY;
+    for op in [MatmulOp::NT, MatmulOp::NN, MatmulOp::TN] {
+        for n in [64usize, 256, 384] {
+            // square operands are shape-valid for all three forms
+            let x = rand_t(&mut rng, n, n);
+            let w = rand_t(&mut rng, n, n);
+            let reps = if n >= 384 { 3 } else { 5 };
+            let naive_secs = time_best(reps, || {
+                std::hint::black_box(match op {
+                    MatmulOp::NT => ref_kernels::matmul_nt(&x, &w),
+                    MatmulOp::NN => ref_kernels::matmul_nn(&x, &w),
+                    MatmulOp::TN => ref_kernels::matmul_tn(&x, &w),
+                });
+            });
+            // blocked kernel into a preallocated buffer: the steady-state
+            // shape of the hot path (zero allocations per call)
+            let mut out = Tensor::zeros(&[n, n]);
+            let blocked_secs = time_best(reps * 2, || {
+                let ov = out.view2_mut();
+                match op {
+                    MatmulOp::NT => ops::matmul_nt_into(ov, x.view2(), w.view2(), false),
+                    MatmulOp::NN => ops::matmul_nn_into(ov, x.view2(), w.view2(), false),
+                    MatmulOp::TN => ops::matmul_tn_into(ov, x.view2(), w.view2(), false),
+                }
+                std::hint::black_box(&out);
+            });
+            let flops = 2.0 * (n as f64).powi(3);
+            let speedup = naive_secs / blocked_secs;
+            if op == MatmulOp::NT && n >= 256 {
+                min_nt_speedup_256plus = min_nt_speedup_256plus.min(speedup);
+            }
+            t.row(&[
+                format!("matmul_{} blocked vs naive", op.tag()),
+                format!("{n}x{n}x{n}"),
+                fmt(blocked_secs * 1e6),
+                format!(
+                    "{:.2} GF/s ({:.1}x naive {:.2} GF/s)",
+                    flops / blocked_secs / 1e9,
+                    speedup,
+                    flops / naive_secs / 1e9
+                ),
+            ]);
+            matmul_records.push(jobj(vec![
+                ("op", Json::Str(op.tag().to_string())),
+                ("n", jnum(n as f64)),
+                ("naive_us", jnum(naive_secs * 1e6)),
+                ("blocked_us", jnum(blocked_secs * 1e6)),
+                ("naive_gflops", jnum(flops / naive_secs / 1e9)),
+                ("blocked_gflops", jnum(flops / blocked_secs / 1e9)),
+                ("speedup", jnum(speedup)),
+                ("threads", jnum(1.0)),
+            ]));
+        }
+    }
+
+    // thread-parallel driver (explicit band counts on a 512 NT matmul)
+    {
+        let n = 512usize;
         let x = rand_t(&mut rng, n, n);
         let w = rand_t(&mut rng, n, n);
-        let secs = time_best(5, || {
-            std::hint::black_box(ops::matmul_nt(&x, &w));
+        let mut out = Tensor::zeros(&[n, n]);
+        let base = time_best(3, || {
+            ops::matmul_nt_into_with(out.view2_mut(), x.view2(), w.view2(), false, 1);
+            std::hint::black_box(&out);
         });
-        let gflops = 2.0 * (n as f64).powi(3) / secs / 1e9;
-        t.row(&[
-            "native matmul_nt".into(),
-            format!("{n}x{n}x{n}"),
-            fmt(secs * 1e6),
-            format!("{:.2} GF/s", gflops),
-        ]);
+        for threads in [2usize, 4] {
+            let secs = time_best(3, || {
+                ops::matmul_nt_into_with(out.view2_mut(), x.view2(), w.view2(), false, threads);
+                std::hint::black_box(&out);
+            });
+            let flops = 2.0 * (n as f64).powi(3);
+            t.row(&[
+                format!("matmul_nt {threads} threads"),
+                format!("{n}x{n}x{n}"),
+                fmt(secs * 1e6),
+                format!("{:.2} GF/s ({:.2}x serial)", flops / secs / 1e9, base / secs),
+            ]);
+            matmul_records.push(jobj(vec![
+                ("op", Json::Str("nt".into())),
+                ("n", jnum(n as f64)),
+                ("blocked_us", jnum(secs * 1e6)),
+                ("blocked_gflops", jnum(flops / secs / 1e9)),
+                ("serial_speedup", jnum(base / secs)),
+                ("threads", jnum(threads as f64)),
+            ]));
+        }
     }
 
     // PJRT matmul (with artifacts)
     if let Ok(manifest) =
         jigsaw::config::Manifest::load(&jigsaw::config::artifacts_dir(), "tiny")
     {
-        let engine = jigsaw::runtime::engine::Engine::start(manifest).unwrap();
-        let x = rand_t(&mut rng, 32, 32);
-        let w = rand_t(&mut rng, 32, 32);
-        // warm the executable cache
-        let _ = engine.matmul(MatmulOp::NT, &x, &w);
-        let secs = time_best(20, || {
-            std::hint::black_box(engine.matmul(MatmulOp::NT, &x, &w).unwrap());
-        });
-        t.row(&[
-            "pjrt matmul_nt (tiny, cached)".into(),
-            "32x32x32".into(),
-            fmt(secs * 1e6),
-            format!("{:.1} us dispatch", secs * 1e6),
-        ]);
+        if let Ok(engine) = jigsaw::runtime::engine::Engine::start(manifest) {
+            let x = rand_t(&mut rng, 32, 32);
+            let w = rand_t(&mut rng, 32, 32);
+            // warm the executable cache
+            let _ = engine.matmul(MatmulOp::NT, &x, &w);
+            let secs = time_best(20, || {
+                std::hint::black_box(engine.matmul(MatmulOp::NT, &x, &w).unwrap());
+            });
+            t.row(&[
+                "pjrt matmul_nt (tiny, cached)".into(),
+                "32x32x32".into(),
+                fmt(secs * 1e6),
+                format!("{:.1} us dispatch", secs * 1e6),
+            ]);
+        }
     }
 
-    // dist_matmul 2-way over the thread fabric
+    // dist_matmul 2-way over the thread fabric (the exchange path: Arc
+    // fan-out shipping + in-place partial reduction)
     {
         let x = rand_t(&mut rng, 64, 128);
         let w = rand_t(&mut rng, 96, 128);
@@ -93,6 +184,28 @@ fn main() {
             fmt(secs * 1e6),
             "-".into(),
         ]);
+        record.insert("exchange_2way_us".into(), jnum(secs * 1e6));
+    }
+
+    // DistMat assemble: 2x2 grid of 256x256 blocks into a 512x512 global
+    // (view-based single-copy path)
+    {
+        let big = rand_t(&mut rng, 512, 512);
+        let grid = BlockGrid::new(vec![vec![0, 1], vec![2, 3]]);
+        let parts: Vec<DistMat> = (0..4)
+            .map(|r| DistMat::from_global(&big, grid.clone(), r))
+            .collect();
+        let refs: Vec<&DistMat> = parts.iter().collect();
+        let secs = time_best(10, || {
+            std::hint::black_box(DistMat::assemble(&refs));
+        });
+        t.row(&[
+            "DistMat assemble".into(),
+            "512^2 / 2x2".into(),
+            fmt(secs * 1e6),
+            format!("{:.2} GB/s", (512.0 * 512.0 * 4.0) / secs / 1e9),
+        ]);
+        record.insert("assemble_512_us".into(), jnum(secs * 1e6));
     }
 
     // tensor block extraction / assembly
@@ -106,6 +219,15 @@ fn main() {
             "512^2 / 2x2".into(),
             fmt(secs * 1e6),
             format!("{:.2} GB/s", (256.0 * 256.0 * 4.0) / secs / 1e9),
+        ]);
+        let secs = time_best(20, || {
+            std::hint::black_box(big.view2().block(1, 1, 2, 2).nrows());
+        });
+        t.row(&[
+            "tensor block view (zero-copy)".into(),
+            "512^2 / 2x2".into(),
+            fmt(secs * 1e6),
+            "O(1)".into(),
         ]);
     }
 
@@ -153,14 +275,66 @@ fn main() {
         ]);
     }
 
+    // steady-state allocation behaviour: pool misses per train step after
+    // warm-up (two runs, subtract the cold first step). Misses are real
+    // heap allocations; zero steady-state misses means the kernel layer
+    // runs allocation-free once the per-thread pools converge.
+    {
+        let cfg = jigsaw::benchkit::synth_config("pool-bench", 96, 64, 2);
+        let run = |steps: usize| -> (u64, u64) {
+            let spec = jigsaw::trainer::TrainSpec::quick(1, 1, steps);
+            let before = pool::stats();
+            jigsaw::trainer::train(&cfg, &spec, Arc::new(NativeBackend)).unwrap();
+            let after = pool::stats();
+            (after.0 - before.0, after.1 - before.1)
+        };
+        let (h1, m1) = run(1);
+        let (h9, m9) = run(9);
+        let steady_misses_per_step = (m9.saturating_sub(m1)) as f64 / 8.0;
+        let steady_hits_per_step = (h9.saturating_sub(h1)) as f64 / 8.0;
+        t.row(&[
+            "pool steady-state".into(),
+            "1-way x 8 steps".into(),
+            format!("{steady_misses_per_step:.1}"),
+            format!(
+                "misses/step ({steady_hits_per_step:.0} hits/step, cold step: {m1} misses)"
+            ),
+        ]);
+        record.insert(
+            "steady_state".into(),
+            jobj(vec![
+                ("cold_step_misses", jnum(m1 as f64)),
+                ("steady_misses_per_step", jnum(steady_misses_per_step)),
+                ("steady_hits_per_step", jnum(steady_hits_per_step)),
+            ]),
+        );
+    }
+
     println!("{}", t.render());
     t.write_csv(&csv_path("hotpath_micro")).unwrap();
 
-    // smoke: a PJRT backend matmul equals native
+    // machine-readable perf record for the trajectory
+    record.insert("bench".into(), Json::Str("kernels".into()));
+    record.insert(
+        "kernel_threads_env".into(),
+        jnum(ops::kernel_threads() as f64),
+    );
+    record.insert("matmul".into(), Json::Arr(matmul_records));
+    record.insert(
+        "min_nt_speedup_256plus".into(),
+        jnum(min_nt_speedup_256plus),
+    );
+    std::fs::write("BENCH_kernels.json", Json::Obj(record).to_string() + "\n").unwrap();
+    println!(
+        "BENCH_kernels.json written (min nt speedup @>=256: {:.1}x)",
+        min_nt_speedup_256plus
+    );
+
+    // smoke: backend matmul equals the naive oracle
     let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
     let x = rand_t(&mut rng, 8, 8);
     let w = rand_t(&mut rng, 8, 8);
     let a = backend.matmul(MatmulOp::NT, &x, &w).unwrap();
-    assert!(a.max_abs_diff(&ops::matmul_nt(&x, &w)) < 1e-5);
+    assert!(a.max_abs_diff(&ref_kernels::matmul_nt(&x, &w)) < 1e-5);
     println!("hotpath_micro OK");
 }

@@ -10,6 +10,12 @@
 //!
 //! Byte counters feed the perf model validation and the comm-volume
 //! benches; timing at paper scale comes from `perfmodel`, not wallclock.
+//!
+//! Messages travel as `Arc<Tensor>`: a block fanned out to several
+//! destinations is materialized once and reference-shared (the jigsaw
+//! exchange path ships borrowed blocks without per-destination clones),
+//! and a uniquely-owned message is recovered by the receiver without a
+//! copy (`Arc::try_unwrap`).
 
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
@@ -19,7 +25,7 @@ use crate::tensor::Tensor;
 type Key = (usize, usize, u64); // (src, dst, tag)
 
 struct Shared {
-    queues: Mutex<HashMap<Key, Vec<Tensor>>>,
+    queues: Mutex<HashMap<Key, Vec<Arc<Tensor>>>>,
     cv: Condvar,
     /// bytes sent per (src, dst) link
     bytes: Mutex<Vec<u64>>,
@@ -91,6 +97,12 @@ impl Comm {
 
     /// Non-blocking send (isend): enqueues and returns.
     pub fn send(&self, dst: usize, tag: u64, t: Tensor) {
+        self.send_shared(dst, tag, Arc::new(t));
+    }
+
+    /// Non-blocking send of a reference-shared tensor: fanning one block
+    /// out to several destinations enqueues Arc clones, not data copies.
+    pub fn send_shared(&self, dst: usize, tag: u64, t: Arc<Tensor>) {
         assert!(dst < self.net.n, "bad dst {dst}");
         assert!(dst != self.rank, "self-send rank {dst}");
         {
@@ -102,8 +114,18 @@ impl Comm {
         self.net.cv.notify_all();
     }
 
-    /// Blocking receive of a specific (src, tag) message.
+    /// Blocking receive of a specific (src, tag) message. Zero-copy when
+    /// the sender moved a uniquely-owned tensor in.
     pub fn recv(&self, src: usize, tag: u64) -> Tensor {
+        match Arc::try_unwrap(self.recv_shared(src, tag)) {
+            Ok(t) => t,
+            Err(shared) => (*shared).clone(),
+        }
+    }
+
+    /// Blocking receive returning the shared handle (read-only use, e.g.
+    /// shipped stationary-operand blocks).
+    pub fn recv_shared(&self, src: usize, tag: u64) -> Arc<Tensor> {
         let key = (src, self.rank, tag);
         let mut q = self.net.queues.lock().unwrap();
         loop {
@@ -150,13 +172,18 @@ impl Comm {
         if self.rank == root {
             let mut acc = t.clone();
             for &r in group.iter().filter(|&&r| r != root) {
-                let part = self.recv(r, tag);
+                let part = self.recv_shared(r, tag);
                 crate::tensor::ops::add_assign(&mut acc, &part);
             }
+            // broadcast one shared copy instead of cloning per peer
+            let acc = Arc::new(acc);
             for &r in group.iter().filter(|&&r| r != root) {
-                self.send(r, tag | 1 << 62, acc.clone());
+                self.send_shared(r, tag | 1 << 62, acc.clone());
             }
-            acc
+            match Arc::try_unwrap(acc) {
+                Ok(t) => t,
+                Err(shared) => (*shared).clone(),
+            }
         } else {
             self.send(root, tag, t.clone());
             self.recv(root, tag | 1 << 62)

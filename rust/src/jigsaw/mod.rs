@@ -27,6 +27,7 @@
 pub mod layouts;
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -147,22 +148,27 @@ impl DistMat {
     }
 
     /// Reassemble the global matrix from per-rank shards (test/checkpoint
-    /// helper; `parts` are the same DistMat from every rank).
+    /// helper; `parts` are the same DistMat from every rank). Each block
+    /// is copied exactly once, straight into its strided slot of the
+    /// output (no intermediate block grid).
     pub fn assemble(parts: &[&DistMat]) -> Tensor {
         let grid = &parts[0].grid;
-        let mut rows: Vec<Vec<Tensor>> = Vec::new();
+        let (rows, cols) = (parts[0].rows, parts[0].cols);
+        let (br, bc) = parts[0].block_dims();
+        let mut out = Tensor::zeros(&[rows, cols]);
         for bi in 0..grid.rb {
-            let mut row = Vec::new();
             for bj in 0..grid.cb {
                 let blk = parts
                     .iter()
                     .find_map(|p| p.blocks.get(&(bi, bj)))
                     .unwrap_or_else(|| panic!("no rank holds block ({bi},{bj})"));
-                row.push(blk.clone());
+                assert_eq!(blk.dims2(), (br, bc), "ragged blocks");
+                out.view2_mut()
+                    .into_block(bi, bj, grid.rb, grid.cb)
+                    .copy_from(blk.view2());
             }
-            rows.push(row);
         }
-        Tensor::from_blocks(&rows)
+        out
     }
 
     /// Apply f to every local block.
@@ -180,6 +186,14 @@ impl DistMat {
         }
     }
 
+    /// Mutate every local block in place (no per-block reallocation).
+    pub fn map_assign(&mut self, f: impl Fn(&mut Tensor)) {
+        for b in self.blocks.values_mut() {
+            f(b);
+        }
+        self.cache = None;
+    }
+
     /// Elementwise combine with another DistMat of identical layout.
     pub fn zip(&self, other: &DistMat, f: impl Fn(&Tensor, &Tensor) -> Tensor) -> DistMat {
         assert_eq!(self.grid, other.grid, "layout mismatch in zip");
@@ -195,6 +209,18 @@ impl DistMat {
                 .collect(),
             cache: None,
         }
+    }
+
+    /// Elementwise combine in place: f(&mut self_block, &other_block) per
+    /// block. The buffer-reuse twin of `zip` for residual adds and
+    /// gradient accumulation on the forward/backward hot path.
+    pub fn zip_assign(&mut self, other: &DistMat, f: impl Fn(&mut Tensor, &Tensor)) {
+        assert_eq!(self.grid, other.grid, "layout mismatch in zip_assign");
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (k, b) in self.blocks.iter_mut() {
+            f(b, &other.blocks[k]);
+        }
+        self.cache = None;
     }
 }
 
@@ -335,24 +361,36 @@ pub fn dist_matmul(
     };
 
     // -- phase 1: ship mobile blocks I own to sites that need them --------
+    // One Arc per block: fanning a block out to several sites enqueues
+    // reference clones, never data copies (the old path cloned the block
+    // once per destination).
     let mut shipped: std::collections::BTreeSet<((usize, usize), usize)> =
         Default::default();
+    let mut outbox: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
     for t in &all_terms {
         let s = site_of(t);
         let mo = mobile_owner(t);
         let key = mobile_key(t);
         if mo == me && s != me && shipped.insert((key, s)) {
-            let blk = match site {
-                Site::XOwner => w.blocks[&key].clone(),
-                Site::WOwner => x.blocks[&key].clone(),
-            };
-            ctx.comm.send(s, tag_ship(seq, key.0, key.1), blk);
+            let arc = outbox
+                .entry(key)
+                .or_insert_with(|| {
+                    let blk = match site {
+                        Site::XOwner => &w.blocks[&key],
+                        Site::WOwner => &x.blocks[&key],
+                    };
+                    Arc::new(blk.clone())
+                })
+                .clone();
+            ctx.comm.send_shared(s, tag_ship(seq, key.0, key.1), arc);
         }
     }
+    drop(outbox);
 
     // -- phases 2+3: compute my terms (local inputs first = overlap) ------
+    let use_into = ctx.backend.supports_into();
     let my_terms: Vec<&Term> = all_terms.iter().filter(|t| site_of(t) == me).collect();
-    let mut received: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    let mut received: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
     let mut partials: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
     let mut ordered: Vec<&&Term> = my_terms
         .iter()
@@ -360,22 +398,24 @@ pub fn dist_matmul(
         .collect();
     ordered.extend(my_terms.iter().filter(|t| mobile_owner(t) != me));
     for t in ordered {
+        let t: &Term = t;
+        // make sure the mobile block is in `received` before borrowing
+        let mkey = mobile_key(t);
+        if mobile_owner(t) != me && !received.contains_key(&mkey) {
+            let src = mobile_owner(t);
+            let blk = ctx.comm.recv_shared(src, tag_ship(seq, mkey.0, mkey.1));
+            received.insert(mkey, blk);
+        }
         // local blocks of parameter matrices carry a device-buffer cache
         // key (§Perf); shipped blocks are activations and never cached.
-        let (xb, xkey, wb, wkey) = match site {
+        let (xb, xkey, wb, wkey): (&Tensor, _, &Tensor, _) = match site {
             Site::XOwner => {
                 let xb = &x.blocks[&t.x];
                 let xkey = x.cache.map(|c| block_cache_key(c, t.x));
                 let (wb, wkey) = if w.grid.owner_of(t.w.0, t.w.1) == me {
                     (&w.blocks[&t.w], w.cache.map(|c| block_cache_key(c, t.w)))
                 } else {
-                    let key = t.w;
-                    if !received.contains_key(&key) {
-                        let src = w.grid.owner_of(key.0, key.1);
-                        let blk = ctx.comm.recv(src, tag_ship(seq, key.0, key.1));
-                        received.insert(key, blk);
-                    }
-                    (&received[&key], None)
+                    (&*received[&t.w], None)
                 };
                 (xb, xkey, wb, wkey)
             }
@@ -385,25 +425,37 @@ pub fn dist_matmul(
                 let (xb, xkey) = if x.grid.owner_of(t.x.0, t.x.1) == me {
                     (&x.blocks[&t.x], x.cache.map(|c| block_cache_key(c, t.x)))
                 } else {
-                    let key = t.x;
-                    if !received.contains_key(&key) {
-                        let src = x.grid.owner_of(key.0, key.1);
-                        let blk = ctx.comm.recv(src, tag_ship(seq, key.0, key.1));
-                        received.insert(key, blk);
-                    }
-                    (&received[&key], None)
+                    (&*received[&t.x], None)
                 };
                 (xb, xkey, wb, wkey)
             }
         };
-        let p = ctx.backend.matmul_cached(op, xb, xkey, wb, wkey)?;
+        // reduce the term straight into the partial-sum accumulator: the
+        // native backend computes in place (zero intermediate tensors),
+        // device backends combine host-side and recycle the transient.
         match partials.entry(t.y) {
             std::collections::btree_map::Entry::Vacant(e) => {
-                e.insert(p);
+                if use_into {
+                    let (m, n) = op.out_dims(xb, wb);
+                    let mut acc = Tensor::pooled_zeros(&[m, n]);
+                    ctx.backend
+                        .matmul_into(op, xb, xkey, wb, wkey, &mut acc, false)?;
+                    e.insert(acc);
+                } else {
+                    e.insert(ctx.backend.matmul_cached(op, xb, xkey, wb, wkey)?);
+                }
             }
             std::collections::btree_map::Entry::Occupied(mut e) => {
-                ops::add_assign(e.get_mut(), &p);
+                ctx.backend
+                    .matmul_into(op, xb, xkey, wb, wkey, e.get_mut(), true)?;
             }
+        }
+    }
+    // shipped activation blocks are dead after the compute phase; return
+    // uniquely-owned buffers to the pool
+    for (_, blk) in received {
+        if let Ok(t) = Arc::try_unwrap(blk) {
+            t.recycle();
         }
     }
 
@@ -440,10 +492,13 @@ pub fn dist_matmul(
         senders.dedup();
         let mut acc = mine
             .remove(&yk)
-            .unwrap_or_else(|| Tensor::zeros(&[ybr, ybc]));
+            .unwrap_or_else(|| Tensor::pooled_zeros(&[ybr, ybc]));
         for s in senders.into_iter().filter(|&s| s != me) {
+            // partial sums were moved into the fabric, so recv is
+            // zero-copy; the drained buffer goes back to the pool
             let p = ctx.comm.recv(s, tag_partial(seq, yk.0, yk.1, s));
             ops::add_assign(&mut acc, &p);
+            p.recycle();
         }
         y.blocks.insert(yk, acc);
     }

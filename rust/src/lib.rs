@@ -16,9 +16,24 @@
 //!   loading, optimizer, trainer, and the cluster performance model that
 //!   regenerates the paper's evaluation at 256-GPU scale.
 //!
+//! L3's compute substrate is the **view/kernel architecture** in
+//! [`tensor`]: zero-copy strided views (`TensorView`/`TensorViewMut`)
+//! carry block slices without allocation; cache-blocked, register-tiled
+//! `_into` kernels (`tensor::ops`) write or accumulate into caller-owned
+//! buffers, optionally across row-band threads
+//! (`JIGSAW_KERNEL_THREADS`); a per-thread buffer pool (`tensor::pool`)
+//! recycles matmul-sized temporaries so a steady-state train step
+//! allocates nothing on the matmul path; and the seed's naive kernels
+//! survive in `tensor::ref_kernels` as the differential-testing oracle.
+//! The jigsaw engine ships blocks over the fabric as `Arc`-shared
+//! messages (one materialization per block regardless of fan-out) and
+//! reduces partial sums in place through `Backend::matmul_into`.
+//!
 //! Python never runs on the training path: the rust binary loads
-//! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate) and is
-//! self-contained afterwards.
+//! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind
+//! the `pjrt` cargo feature; without it an API-identical engine serves
+//! every matmul from the blocked native kernels) and is self-contained
+//! afterwards.
 
 pub mod baselines;
 pub mod benchkit;

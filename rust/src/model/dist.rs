@@ -90,23 +90,25 @@ impl DistModel {
 
     // -- local pointwise helpers -----------------------------------------
 
-    /// column-bias add on every local block (vec sliced to the block's
-    /// global column range).
-    fn add_vec_cols(&self, m: &DistMat, v: &super::params::VecShard) -> DistMat {
+    /// column-bias add, in place on every local block (vec sliced to the
+    /// block's global column range).
+    fn add_vec_cols_assign(&self, m: &mut DistMat, v: &super::params::VecShard) {
         let (_, bc) = m.block_dims();
-        m_map_keyed(m, |(_, bj), t| {
+        for (&(_, bj), t) in m.blocks.iter_mut() {
             debug_assert_eq!(bj * bc, v.lo, "col-bias slice misaligned");
-            ops::add_bias_cols(t, &v.local)
-        })
+            ops::add_bias_cols_assign(t, &v.local);
+        }
+        m.cache = None;
     }
 
-    /// row-bias add on every local block.
-    fn add_vec_rows(&self, m: &DistMat, v: &super::params::VecShard) -> DistMat {
+    /// row-bias add, in place on every local block.
+    fn add_vec_rows_assign(&self, m: &mut DistMat, v: &super::params::VecShard) {
         let (br, _) = m.block_dims();
-        m_map_keyed(m, |(bi, _), t| {
+        for (&(bi, _), t) in m.blocks.iter_mut() {
             debug_assert_eq!(bi * br, v.lo, "row-bias slice misaligned");
-            ops::add_bias_rows(t, &v.local)
-        })
+            ops::add_bias_rows_assign(t, &v.local);
+        }
+        m.cache = None;
     }
 
     /// layer norm over the local channel shard of every block.
@@ -160,30 +162,27 @@ impl DistModel {
         (dx, dg_acc.unwrap(), db_acc.unwrap())
     }
 
-    /// grad of a column bias: sum over rows of every local block.
+    /// grad of a column bias: sum over rows of every local block,
+    /// accumulated in place (no per-block temporaries).
     fn bias_cols_grad(&self, dy: &DistMat) -> Tensor {
-        let mut acc: Option<Tensor> = None;
+        let (_, bc) = dy.block_dims();
+        assert!(!dy.blocks.is_empty(), "rank owns no blocks");
+        let mut acc = Tensor::zeros(&[bc]);
         for b in dy.blocks.values() {
-            let s = ops::sum_rows(b);
-            match &mut acc {
-                None => acc = Some(s),
-                Some(a) => ops::add_assign(a, &s),
-            }
+            ops::sum_rows_acc(b, &mut acc);
         }
-        acc.expect("rank owns no blocks")
+        acc
     }
 
     /// grad of a row bias: sum over cols of every local block.
     fn bias_rows_grad(&self, dy: &DistMat) -> Tensor {
-        let mut acc: Option<Tensor> = None;
+        let (br, _) = dy.block_dims();
+        assert!(!dy.blocks.is_empty(), "rank owns no blocks");
+        let mut acc = Tensor::zeros(&[br]);
         for b in dy.blocks.values() {
-            let s = ops::sum_cols(b);
-            match &mut acc {
-                None => acc = Some(s),
-                Some(a) => ops::add_assign(a, &s),
-            }
+            ops::sum_cols_acc(b, &mut acc);
         }
-        acc.expect("rank owns no blocks")
+        acc
     }
 
     // -- grids -------------------------------------------------------------
@@ -204,9 +203,12 @@ impl DistModel {
         let l = self.layouts();
         let name = |s: &str| format!("blk{i}_{s}");
 
-        // token mixing (transposed-MLP form)
+        // token mixing (transposed-MLP form). Linear outputs are consumed
+        // in place: bias adds and the residual land in the dist_matmul
+        // result's buffers, so no activation-sized temporaries are left
+        // behind (the residual input z survives in the cache).
         let (u, ln1) = self.ln_fwd(&z, &p.vecs[&name("ln1_g")], &p.vecs[&name("ln1_b")]);
-        let h1_lin = dist_matmul(
+        let mut h1_pre = dist_matmul(
             ctx,
             MatmulOp::NN,
             &p.mats[&name("tok_w1")],
@@ -214,9 +216,9 @@ impl DistModel {
             &l.tok_hidden(),
             Site::XOwner,
         )?;
-        let h1_pre = self.add_vec_rows(&h1_lin, &p.vecs[&name("tok_b1")]);
+        self.add_vec_rows_assign(&mut h1_pre, &p.vecs[&name("tok_b1")]);
         let h1 = h1_pre.map(ops::gelu);
-        let tok_lin = dist_matmul(
+        let mut tokout = dist_matmul(
             ctx,
             MatmulOp::NN,
             &p.mats[&name("tok_w2")],
@@ -224,12 +226,13 @@ impl DistModel {
             &self.act_grid(),
             Site::XOwner,
         )?;
-        let tokout = self.add_vec_rows(&tok_lin, &p.vecs[&name("tok_b2")]);
-        let z2 = z.zip(&tokout, |a, b| ops::add(a, b));
+        self.add_vec_rows_assign(&mut tokout, &p.vecs[&name("tok_b2")]);
+        let mut z2 = tokout;
+        z2.zip_assign(&z, |a, b| ops::add_assign(a, b));
 
         // channel mixing
         let (v, ln2) = self.ln_fwd(&z2, &p.vecs[&name("ln2_g")], &p.vecs[&name("ln2_b")]);
-        let h2_lin = dist_matmul(
+        let mut h2_pre = dist_matmul(
             ctx,
             MatmulOp::NT,
             &v,
@@ -237,9 +240,9 @@ impl DistModel {
             &self.act_grid(),
             Site::WOwner,
         )?;
-        let h2_pre = self.add_vec_cols(&h2_lin, &p.vecs[&name("ch_b1")]);
+        self.add_vec_cols_assign(&mut h2_pre, &p.vecs[&name("ch_b1")]);
         let h2 = h2_pre.map(ops::gelu);
-        let ch_lin = dist_matmul(
+        let mut z3 = dist_matmul(
             ctx,
             MatmulOp::NT,
             &h2,
@@ -247,8 +250,8 @@ impl DistModel {
             &self.act_grid(),
             Site::WOwner,
         )?;
-        let chout = self.add_vec_cols(&ch_lin, &p.vecs[&name("ch_b2")]);
-        let z3 = z2.zip(&chout, |a, b| ops::add(a, b));
+        self.add_vec_cols_assign(&mut z3, &p.vecs[&name("ch_b2")]);
+        z3.zip_assign(&z2, |a, b| ops::add_assign(a, b));
 
         let cache = MixCache {
             z_in: z,
@@ -256,7 +259,7 @@ impl DistModel {
             ln1,
             h1_pre,
             h1,
-            z2: z2.clone(),
+            z2,
             v,
             ln2,
             h2_pre,
@@ -290,7 +293,7 @@ impl DistModel {
             (l.tok_block_of(self.rank), l.ch_block_of(self.rank)),
             patches_local,
         );
-        let z_lin = dist_matmul(
+        let mut z0 = dist_matmul(
             ctx,
             MatmulOp::NT,
             &patches,
@@ -298,7 +301,7 @@ impl DistModel {
             &self.act_grid(),
             Site::WOwner,
         )?;
-        let z0 = self.add_vec_cols(&z_lin, &p.vecs["enc_b"]);
+        self.add_vec_cols_assign(&mut z0, &p.vecs["enc_b"]);
 
         // processor (rollout repeats)
         let mut z = z0.clone();
@@ -312,18 +315,18 @@ impl DistModel {
             }
             iters.push(caches);
         }
-        let z_final = z.clone();
+        let z_final = z;
 
         // decoder
-        let y_lin = dist_matmul(
+        let mut y_patches = dist_matmul(
             ctx,
             MatmulOp::NT,
-            &z,
+            &z_final,
             &p.mats["dec_w"],
             &self.act_grid(),
             Site::WOwner,
         )?;
-        let y_patches = self.add_vec_cols(&y_lin, &p.vecs["dec_b"]);
+        self.add_vec_cols_assign(&mut y_patches, &p.vecs["dec_b"]);
         let y_local = y_patches
             .blocks
             .values()
@@ -436,7 +439,8 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("ch_w2"), d_ch_w2);
-        let dh2_pre = cache.h2_pre.zip(&dh2, |x, d| ops::gelu_bwd(x, d));
+        let mut dh2_pre = dh2;
+        dh2_pre.zip_assign(&cache.h2_pre, |d, x| ops::gelu_bwd_assign(x, d));
         add_vec_grad(grads, &name("ch_b1"), &self.bias_cols_grad(&dh2_pre));
         let dv = dist_matmul(
             ctx,
@@ -455,11 +459,11 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("ch_w1"), d_ch_w1);
-        let (dz2_ln, dg2, db2) =
+        let (mut dz2, dg2, db2) =
             self.ln_bwd(&cache.z2, &p.vecs[&name("ln2_g")], &cache.ln2, &dv);
         add_vec_grad(grads, &name("ln2_g"), &dg2);
         add_vec_grad(grads, &name("ln2_b"), &db2);
-        let dz2 = dz3.zip(&dz2_ln, |a, b| ops::add(a, b));
+        dz2.zip_assign(dz3, |a, b| ops::add_assign(a, b));
 
         // -- token mixing backward --
         let dtokout = &dz2;
@@ -481,7 +485,8 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("tok_w2"), d_tok_w2);
-        let dh1_pre = cache.h1_pre.zip(&dh1, |x, d| ops::gelu_bwd(x, d));
+        let mut dh1_pre = dh1;
+        dh1_pre.zip_assign(&cache.h1_pre, |d, x| ops::gelu_bwd_assign(x, d));
         add_vec_grad(grads, &name("tok_b1"), &self.bias_rows_grad(&dh1_pre));
         let du = dist_matmul(
             ctx,
@@ -500,11 +505,12 @@ impl DistModel {
             Site::XOwner,
         )?;
         add_mat_grad(grads, &name("tok_w1"), d_tok_w1);
-        let (dz_ln, dg1, db1) =
+        let (mut dz, dg1, db1) =
             self.ln_bwd(&cache.z_in, &p.vecs[&name("ln1_g")], &cache.ln1, &du);
         add_vec_grad(grads, &name("ln1_g"), &dg1);
         add_vec_grad(grads, &name("ln1_b"), &db1);
-        Ok(dz2.zip(&dz_ln, |a, b| ops::add(a, b)))
+        dz.zip_assign(&dz2, |a, b| ops::add_assign(a, b));
+        Ok(dz)
     }
 
     /// Loss + parameter gradients for one (x, y) sample shard. The loss is

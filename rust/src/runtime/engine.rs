@@ -11,17 +11,54 @@
 //! whose device buffer stays resident until the optimizer bumps the
 //! version — weight bytes cross the host/device boundary once per
 //! optimizer step instead of once per matmul (EXPERIMENTS.md §Perf).
+//!
+//! The whole PJRT path sits behind the `pjrt` cargo feature (the `xla`
+//! crate needs a native XLA toolchain the offline build lacks). Without
+//! the feature an API-identical in-process engine serves every matmul
+//! from the blocked native kernel layer — counted as native fallbacks so
+//! coverage stats stay honest — and `run_program` reports that monolithic
+//! artifacts require the feature.
 
+use std::sync::atomic::AtomicU64;
+#[cfg(feature = "pjrt")]
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+#[cfg(feature = "pjrt")]
+use std::sync::{mpsc, Mutex};
+
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::Result;
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
 
 use super::{Backend, CacheKey, MatmulOp};
 use crate::config::Manifest;
-use crate::tensor::{ops, Tensor};
+use crate::tensor::Tensor;
 
+/// Execution counters (observable from benches and tests).
+#[derive(Default)]
+pub struct EngineStats {
+    pub pjrt_matmuls: AtomicU64,
+    pub native_fallbacks: AtomicU64,
+    pub programs_run: AtomicU64,
+    pub compiles: AtomicU64,
+    pub flops: AtomicU64,
+    /// weight-buffer cache hits / uploads (the §Perf counter)
+    pub buf_cache_hits: AtomicU64,
+    pub buf_cache_uploads: AtomicU64,
+}
+
+fn strict_pjrt() -> bool {
+    std::env::var("JIGSAW_STRICT_PJRT").map(|v| v == "1").unwrap_or(false)
+}
+
+// ---------------------------------------------------------------------------
+// PJRT implementation (feature = "pjrt")
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
 enum Req {
     Matmul {
         op: MatmulOp,
@@ -40,24 +77,13 @@ enum Req {
 }
 
 /// Cloneable handle to the engine thread.
+#[cfg(feature = "pjrt")]
 pub struct Engine {
     tx: Mutex<mpsc::Sender<Req>>,
     stats: Arc<EngineStats>,
 }
 
-/// Execution counters (observable from benches and tests).
-#[derive(Default)]
-pub struct EngineStats {
-    pub pjrt_matmuls: AtomicU64,
-    pub native_fallbacks: AtomicU64,
-    pub programs_run: AtomicU64,
-    pub compiles: AtomicU64,
-    pub flops: AtomicU64,
-    /// weight-buffer cache hits / uploads (the §Perf counter)
-    pub buf_cache_hits: AtomicU64,
-    pub buf_cache_uploads: AtomicU64,
-}
-
+#[cfg(feature = "pjrt")]
 impl Engine {
     /// Spawn the engine thread for one artifact preset.
     pub fn start(manifest: Manifest) -> Result<Arc<Engine>> {
@@ -126,10 +152,7 @@ impl Engine {
     }
 }
 
-fn strict_pjrt() -> bool {
-    std::env::var("JIGSAW_STRICT_PJRT").map(|v| v == "1").unwrap_or(false)
-}
-
+#[cfg(feature = "pjrt")]
 fn run_engine(
     manifest: Manifest,
     rx: mpsc::Receiver<Req>,
@@ -205,11 +228,7 @@ fn run_engine(
                         }
                         None => {
                             stats.native_fallbacks.fetch_add(1, Ordering::Relaxed);
-                            Ok(match op {
-                                MatmulOp::NT => ops::matmul_nt(&x, &w),
-                                MatmulOp::NN => ops::matmul_nn(&x, &w),
-                                MatmulOp::TN => ops::matmul_tn(&x, &w),
-                            })
+                            Ok(super::native::native_matmul(op, &x, &w))
                         }
                     }
                 })();
@@ -236,11 +255,13 @@ fn run_engine(
 }
 
 /// Either a transient buffer or a reference into the resident cache.
+#[cfg(feature = "pjrt")]
 enum Operand {
     Transient(xla::PjRtBuffer),
     Cached(u64),
 }
 
+#[cfg(feature = "pjrt")]
 fn resolve<'a>(
     buf_cache: &'a HashMap<u64, (u64, xla::PjRtBuffer)>,
     op: &'a Operand,
@@ -251,6 +272,7 @@ fn resolve<'a>(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
     let dims: Vec<usize> = if t.shape.is_empty() { vec![] } else { t.shape.clone() };
     client
@@ -258,6 +280,7 @@ fn upload(client: &xla::PjRtClient, t: &Tensor) -> Result<xla::PjRtBuffer> {
         .map_err(|e| anyhow!("buffer_from_host: {e:?}"))
 }
 
+#[cfg(feature = "pjrt")]
 fn operand_buffer(
     client: &xla::PjRtClient,
     buf_cache: &mut HashMap<u64, (u64, xla::PjRtBuffer)>,
@@ -281,6 +304,7 @@ fn operand_buffer(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     let shape = lit.shape().map_err(|e| anyhow!("literal shape: {e:?}"))?;
     let dims: Vec<usize> = match shape {
@@ -293,6 +317,7 @@ fn literal_to_tensor(lit: &xla::Literal) -> Result<Tensor> {
     Ok(Tensor::new(dims, data))
 }
 
+#[cfg(feature = "pjrt")]
 fn execute_buffers(
     exe: &xla::PjRtLoadedExecutable,
     args: &[&xla::PjRtBuffer],
@@ -306,6 +331,67 @@ fn execute_buffers(
     // programs are lowered with return_tuple=True
     let parts = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
     parts.iter().map(literal_to_tensor).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Featureless fallback (no `pjrt`): same API, blocked native kernels
+// ---------------------------------------------------------------------------
+
+/// In-process engine handle: every matmul runs on the blocked native
+/// kernel layer (counted as a native fallback); programs need `pjrt`.
+#[cfg(not(feature = "pjrt"))]
+pub struct Engine {
+    manifest: Manifest,
+    stats: Arc<EngineStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Engine {
+    pub fn start(manifest: Manifest) -> Result<Arc<Engine>> {
+        Ok(Arc::new(Engine { manifest, stats: Arc::new(EngineStats::default()) }))
+    }
+
+    pub fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor> {
+        self.matmul_cached(op, x, None, w, None)
+    }
+
+    pub fn matmul_cached(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        xkey: Option<CacheKey>,
+        w: &Tensor,
+        wkey: Option<CacheKey>,
+    ) -> Result<Tensor> {
+        use std::sync::atomic::Ordering;
+        let _ = (xkey, wkey);
+        if strict_pjrt() {
+            let key = op.key(x, w);
+            let detail = if self.manifest.primitive_path(&key).is_some() {
+                "runtime built without the 'pjrt' feature"
+            } else {
+                "missing from manifest"
+            };
+            return Err(anyhow::anyhow!("primitive '{key}' {detail} (strict mode)"));
+        }
+        self.stats.native_fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.stats.flops.fetch_add(op.flops(x, w), Ordering::Relaxed);
+        Ok(super::native::native_matmul(op, x, w))
+    }
+
+    pub fn run_program(&self, tag: &str, _inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        Err(anyhow::anyhow!(
+            "program '{tag}' ({}): monolithic HLO execution requires the \
+             'pjrt' cargo feature",
+            self.manifest.preset
+        ))
+    }
+
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    pub fn shutdown(&self) {}
 }
 
 /// `Backend` impl backed by the engine (shared across rank threads).
@@ -331,5 +417,46 @@ impl Backend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod tests {
+    use super::*;
+
+    fn empty_manifest() -> Manifest {
+        Manifest {
+            preset: "test".into(),
+            dir: std::path::PathBuf::from("artifacts/test"),
+            param_order: vec![],
+            param_shapes: vec![],
+            programs: vec![],
+            primitives: vec![],
+            adam_b1: 0.9,
+            adam_b2: 0.999,
+            adam_eps: 1e-8,
+            grad_clip: 1.0,
+        }
+    }
+
+    #[test]
+    fn fallback_engine_serves_matmuls() {
+        let e = Engine::start(empty_manifest()).unwrap();
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        let y = e.matmul(MatmulOp::NT, &x, &w).unwrap();
+        assert_eq!(y.data, vec![11.0]);
+        assert_eq!(
+            e.stats()
+                .native_fallbacks
+                .load(std::sync::atomic::Ordering::Relaxed),
+            1
+        );
+    }
+
+    #[test]
+    fn fallback_engine_rejects_programs() {
+        let e = Engine::start(empty_manifest()).unwrap();
+        assert!(e.run_program("forward", vec![]).is_err());
     }
 }

@@ -108,6 +108,40 @@ pub trait Backend: Send + Sync {
         self.matmul(op, x, w)
     }
 
+    /// Out-parameter matmul: write (or, with `accumulate`, add) the
+    /// product into a caller-owned tensor of the correct output shape.
+    /// The jigsaw engine reduces partial sums through this entry so the
+    /// native backend runs allocation-free; device backends fall back to
+    /// `matmul_cached` plus a host-side combine (the old buffer is
+    /// recycled into the pool).
+    fn matmul_into(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        xkey: Option<CacheKey>,
+        w: &Tensor,
+        wkey: Option<CacheKey>,
+        out: &mut Tensor,
+        accumulate: bool,
+    ) -> Result<()> {
+        let p = self.matmul_cached(op, x, xkey, w, wkey)?;
+        debug_assert_eq!(p.shape, out.shape, "matmul_into shape mismatch");
+        if accumulate {
+            crate::tensor::ops::add_assign(out, &p);
+            p.recycle();
+        } else {
+            let old = std::mem::replace(out, p);
+            old.recycle();
+        }
+        Ok(())
+    }
+
+    /// True when `matmul_into` computes directly into the output buffer
+    /// (no intermediate tensor) — lets callers pick the cheaper schedule.
+    fn supports_into(&self) -> bool {
+        false
+    }
+
     /// A short description for logs.
     fn name(&self) -> &'static str;
 }

@@ -1,21 +1,62 @@
 //! Native (pure-rust) backend: the fallback compute path and the reference
 //! the PJRT path is differentially tested against.
+//!
+//! Since the kernel-layer rework this dispatches to the blocked, register-
+//! tiled `_into` kernels in `tensor::ops` (thread-parallel under
+//! `JIGSAW_KERNEL_THREADS`); output buffers come from the per-thread pool,
+//! so a steady-state train step performs no matmul-sized allocations. The
+//! seed's naive kernels survive as `tensor::ref_kernels`, the oracle the
+//! property tests hold this backend to.
 
 use anyhow::Result;
 
-use super::{Backend, MatmulOp};
+use super::{Backend, CacheKey, MatmulOp};
 use crate::tensor::{ops, Tensor};
+
+/// One blocked native matmul with a pooled output buffer. Shared by this
+/// backend and the engine's no-artifact fallback path.
+pub fn native_matmul(op: MatmulOp, x: &Tensor, w: &Tensor) -> Tensor {
+    match op {
+        MatmulOp::NT => ops::matmul_nt(x, w),
+        MatmulOp::NN => ops::matmul_nn(x, w),
+        MatmulOp::TN => ops::matmul_tn(x, w),
+    }
+}
+
+/// Blocked native matmul into an existing buffer (optionally accumulating).
+pub fn native_matmul_into(op: MatmulOp, x: &Tensor, w: &Tensor, out: &mut Tensor, acc: bool) {
+    let ov = out.view2_mut();
+    match op {
+        MatmulOp::NT => ops::matmul_nt_into(ov, x.view2(), w.view2(), acc),
+        MatmulOp::NN => ops::matmul_nn_into(ov, x.view2(), w.view2(), acc),
+        MatmulOp::TN => ops::matmul_tn_into(ov, x.view2(), w.view2(), acc),
+    }
+}
 
 #[derive(Default)]
 pub struct NativeBackend;
 
 impl Backend for NativeBackend {
     fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> Result<Tensor> {
-        Ok(match op {
-            MatmulOp::NT => ops::matmul_nt(x, w),
-            MatmulOp::NN => ops::matmul_nn(x, w),
-            MatmulOp::TN => ops::matmul_tn(x, w),
-        })
+        Ok(native_matmul(op, x, w))
+    }
+
+    fn matmul_into(
+        &self,
+        op: MatmulOp,
+        x: &Tensor,
+        _xkey: Option<CacheKey>,
+        w: &Tensor,
+        _wkey: Option<CacheKey>,
+        out: &mut Tensor,
+        accumulate: bool,
+    ) -> Result<()> {
+        native_matmul_into(op, x, w, out, accumulate);
+        Ok(())
+    }
+
+    fn supports_into(&self) -> bool {
+        true
     }
 
     fn name(&self) -> &'static str {
@@ -34,5 +75,20 @@ mod tests {
         let w = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
         let y = b.matmul(MatmulOp::NT, &x, &w).unwrap();
         assert_eq!(y.data, vec![11.0]);
+    }
+
+    #[test]
+    fn native_matmul_into_accumulates() {
+        let b = NativeBackend;
+        let x = Tensor::new(vec![1, 2], vec![1.0, 2.0]);
+        let w = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        let mut out = Tensor::new(vec![1, 1], vec![100.0]);
+        b.matmul_into(MatmulOp::NT, &x, None, &w, None, &mut out, true)
+            .unwrap();
+        assert_eq!(out.data, vec![111.0]);
+        b.matmul_into(MatmulOp::NT, &x, None, &w, None, &mut out, false)
+            .unwrap();
+        assert_eq!(out.data, vec![11.0]);
+        assert!(b.supports_into());
     }
 }

@@ -5,8 +5,24 @@
 //! runtime (or the native fallback backend); the tensor type exists to
 //! carry shards between ranks, slice/assemble jigsaw blocks, and implement
 //! the cheap pointwise stages of the model natively.
+//!
+//! Sub-modules:
+//! * [`view`] — zero-copy strided views (`TensorView`/`TensorViewMut`);
+//!   row/column/block slicing without allocation, the substrate of the
+//!   blocked kernels;
+//! * [`ops`] — the optimized kernel layer (blocked `_into` matmuls,
+//!   pointwise stages);
+//! * [`ref_kernels`] — the retained naive matmuls, the property-test
+//!   oracle for `ops`;
+//! * [`pool`] — per-thread buffer recycling so steady-state training does
+//!   no matmul-sized heap allocations.
 
 pub mod ops;
+pub mod pool;
+pub mod ref_kernels;
+pub mod view;
+
+pub use view::{TensorView, TensorViewMut};
 
 /// Row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]
@@ -65,36 +81,34 @@ impl Tensor {
         self.data[i * self.shape[1] + j]
     }
 
-    /// Contiguous column-range slice of a 2-D tensor.
+    /// Zero-copy view of a 2-D tensor.
+    pub fn view2(&self) -> TensorView<'_> {
+        let (r, c) = self.dims2();
+        TensorView::new(&self.data, r, c, c)
+    }
+
+    /// Zero-copy mutable view of a 2-D tensor.
+    pub fn view2_mut(&mut self) -> TensorViewMut<'_> {
+        let (r, c) = self.dims2();
+        TensorViewMut::new(&mut self.data, r, c, c)
+    }
+
+    /// Column-range slice of a 2-D tensor (materialized; use
+    /// `view2().slice_cols(..)` for the O(1) borrow).
     pub fn slice_cols(&self, lo: usize, hi: usize) -> Tensor {
-        let (r, c) = self.dims2();
-        assert!(lo <= hi && hi <= c);
-        let w = hi - lo;
-        let mut data = Vec::with_capacity(r * w);
-        for i in 0..r {
-            data.extend_from_slice(&self.data[i * c + lo..i * c + hi]);
-        }
-        Tensor::new(vec![r, w], data)
+        self.view2().slice_cols(lo, hi).to_tensor()
     }
 
-    /// Contiguous row-range slice of a 2-D tensor.
+    /// Row-range slice of a 2-D tensor (materialized; use
+    /// `view2().slice_rows(..)` for the O(1) borrow).
     pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor {
-        let (r, c) = self.dims2();
-        assert!(lo <= hi && hi <= r);
-        Tensor::new(vec![hi - lo, c], self.data[lo * c..hi * c].to_vec())
+        self.view2().slice_rows(lo, hi).to_tensor()
     }
 
-    /// Block (bi, bj) of a 2-D tensor split into rb x cb equal blocks.
+    /// Block (bi, bj) of a 2-D tensor split into rb x cb equal blocks
+    /// (materialized; use `view2().block(..)` for the O(1) borrow).
     pub fn block(&self, bi: usize, bj: usize, rb: usize, cb: usize) -> Tensor {
-        let (r, c) = self.dims2();
-        assert!(r % rb == 0 && c % cb == 0, "{}x{} into {}x{} blocks", r, c, rb, cb);
-        let (br, bc) = (r / rb, c / cb);
-        let mut data = Vec::with_capacity(br * bc);
-        for i in 0..br {
-            let row = (bi * br + i) * c + bj * bc;
-            data.extend_from_slice(&self.data[row..row + bc]);
-        }
-        Tensor::new(vec![br, bc], data)
+        self.view2().block(bi, bj, rb, cb).to_tensor()
     }
 
     /// Inverse of `block`: assemble an rb x cb grid of equal blocks.
@@ -108,18 +122,15 @@ impl Tensor {
                 assert_eq!(b.dims2(), (br, bc), "ragged blocks");
             }
         }
-        let (r, c) = (rb * br, cb * bc);
-        let mut data = vec![0.0; r * c];
+        let mut out = Tensor::zeros(&[rb * br, cb * bc]);
         for (bi, row) in blocks.iter().enumerate() {
             for (bj, b) in row.iter().enumerate() {
-                for i in 0..br {
-                    let src = &b.data[i * bc..(i + 1) * bc];
-                    let dst = (bi * br + i) * c + bj * bc;
-                    data[dst..dst + bc].copy_from_slice(src);
-                }
+                out.view2_mut()
+                    .into_block(bi, bj, rb, cb)
+                    .copy_from(b.view2());
             }
         }
-        Tensor::new(vec![r, c], data)
+        out
     }
 
     /// Transpose a 2-D tensor (materialized; used off the hot path only —

@@ -1,8 +1,34 @@
-//! Native f32 compute: matmuls (fallback backend / tests) and the
-//! pointwise stages the coordinator runs outside PJRT (GELU, layer norm,
-//! bias/residual adds, blend). All formulas mirror
+//! Native f32 compute: blocked matmul kernels (fallback backend / tests)
+//! and the pointwise stages the coordinator runs outside PJRT (GELU, layer
+//! norm, bias/residual adds, blend). Pointwise formulas mirror
 //! python/compile/kernels/ref.py bit-for-bit in structure.
+//!
+//! # Kernel layer
+//!
+//! The matmuls are out-parameter kernels over [`TensorView`]s:
+//! `matmul_{nt,nn,tn}_into(out, x, w, accumulate)` write (or accumulate
+//! into) a caller-owned buffer, so the jigsaw engine's partial-sum
+//! reductions and the runtime's fallback path run without intermediate
+//! allocations. The schedule is the classic cache-blocked AXPY form:
+//!
+//! * output columns blocked by `NC`, contraction blocked by `KC`;
+//! * a 4x8 register micro-tile (`MR` x `NR`) with the contraction
+//!   innermost, so each loaded operand row feeds 32 FLOPs;
+//! * for the `nt` form the weight block is packed into a K-major panel
+//!   once per (j, k) block (K-panel packing), turning the strided
+//!   dot-product traversal into contiguous SIMD-friendly rows;
+//! * an optional row-band parallel driver (`std::thread::scope`) gated by
+//!   the `JIGSAW_KERNEL_THREADS` env knob (default 1: the trainer already
+//!   runs one thread per rank). Bands split the *output*, so no reduction
+//!   or synchronization is needed.
+//!
+//! The seed's naive triple loops live on in [`super::ref_kernels`] as the
+//! property-test oracle (`rust/tests/kernel_props.rs`).
 
+use std::sync::OnceLock;
+
+use super::pool;
+use super::view::{TensorView, TensorViewMut};
 use super::Tensor;
 
 pub const SQRT_2_OVER_PI: f32 = 0.797_884_56;
@@ -10,72 +36,479 @@ pub const GELU_C: f32 = 0.044_715;
 pub const LN_EPS: f32 = 1e-5;
 
 // ---------------------------------------------------------------------------
-// Matmuls (native fallback; the hot path uses the PJRT primitives)
+// Blocked matmul kernels
 // ---------------------------------------------------------------------------
 
-/// y = x @ w.T   x:[M,K], w:[N,K] -> [M,N]
+/// Register micro-tile rows.
+const MR: usize = 4;
+/// Register micro-tile cols (one/two SIMD vectors).
+const NR: usize = 8;
+/// Output-column block (fits the micro-panel in L1).
+const NC: usize = 128;
+/// Contraction block (keeps the packed panel L2-resident).
+const KC: usize = 256;
+/// Below this many FLOPs the thread-spawn overhead dominates.
+const PAR_MIN_FLOPS: usize = 1 << 21;
+
+static THREADS: OnceLock<usize> = OnceLock::new();
+
+/// Kernel thread count: `JIGSAW_KERNEL_THREADS` (>= 1), default 1. Read
+/// once; tests that need specific counts use the `*_into_with` entry
+/// points instead of the env.
+pub fn kernel_threads() -> usize {
+    *THREADS.get_or_init(|| {
+        std::env::var("JIGSAW_KERNEL_THREADS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&t| t >= 1)
+            .unwrap_or(1)
+    })
+}
+
+fn effective_threads(requested: usize, rows: usize, flops: usize) -> usize {
+    if requested <= 1 || rows < 2 || flops < PAR_MIN_FLOPS {
+        1
+    } else {
+        requested.min(rows)
+    }
+}
+
+/// Split `rows` into `bands` near-equal contiguous ranges.
+fn band_ranges(rows: usize, bands: usize) -> Vec<(usize, usize)> {
+    let base = rows / bands;
+    let extra = rows % bands;
+    let mut out = Vec::with_capacity(bands);
+    let mut lo = 0;
+    for b in 0..bands {
+        let take = base + usize::from(b < extra);
+        out.push((lo, lo + take));
+        lo += take;
+    }
+    out
+}
+
+/// Four disjoint mutable row slices (cols j0..j1) of a strided buffer.
+#[inline(always)]
+fn quad_rows<'o>(
+    out: &'o mut [f32],
+    os: usize,
+    i0: usize,
+    j0: usize,
+    j1: usize,
+) -> [&'o mut [f32]; 4] {
+    let base = &mut out[i0 * os..];
+    let (a, rest) = base.split_at_mut(os);
+    let (b, rest) = rest.split_at_mut(os);
+    let (c, rest) = rest.split_at_mut(os);
+    let dlen = rest.len().min(os);
+    let d = &mut rest[..dlen];
+    [&mut a[j0..j1], &mut b[j0..j1], &mut c[j0..j1], &mut d[j0..j1]]
+}
+
+#[inline(always)]
+fn row_slice<'o>(out: &'o mut [f32], os: usize, i: usize, j0: usize, j1: usize) -> &'o mut [f32] {
+    let start = i * os;
+    &mut out[start + j0..start + j1]
+}
+
+/// Core blocked GEMM block: out[0..m, j0..j1] (+)= sum_{k0..k1} a(i,k)*b(k,j).
+///
+/// `a(i, k)` loads the left operand; `brow(k)` yields the right operand's
+/// row k restricted to columns j0..j1 (a packed panel row for `nt`). When
+/// `init` is set the tile is overwritten instead of accumulated into.
+#[inline(always)]
+fn kernel_block<'b, FA, FB>(
+    out: &mut [f32],
+    os: usize,
+    m: usize,
+    j0: usize,
+    j1: usize,
+    k0: usize,
+    k1: usize,
+    init: bool,
+    a: FA,
+    brow: FB,
+) where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize) -> &'b [f32],
+{
+    let width = j1 - j0;
+    if width == 0 || m == 0 {
+        return;
+    }
+    let mut i0 = 0;
+    while i0 + MR <= m {
+        let [r0, r1, r2, r3] = quad_rows(out, os, i0, j0, j1);
+        let mut jj = 0;
+        while jj + NR <= width {
+            let mut acc = [[0.0f32; NR]; MR];
+            if !init {
+                for t in 0..NR {
+                    acc[0][t] = r0[jj + t];
+                    acc[1][t] = r1[jj + t];
+                    acc[2][t] = r2[jj + t];
+                    acc[3][t] = r3[jj + t];
+                }
+            }
+            for kk in k0..k1 {
+                let b = &brow(kk)[jj..jj + NR];
+                let av = [a(i0, kk), a(i0 + 1, kk), a(i0 + 2, kk), a(i0 + 3, kk)];
+                for (accr, &ar) in acc.iter_mut().zip(av.iter()) {
+                    for t in 0..NR {
+                        accr[t] += ar * b[t];
+                    }
+                }
+            }
+            for t in 0..NR {
+                r0[jj + t] = acc[0][t];
+                r1[jj + t] = acc[1][t];
+                r2[jj + t] = acc[2][t];
+                r3[jj + t] = acc[3][t];
+            }
+            jj += NR;
+        }
+        while jj < width {
+            let mut s = if init {
+                [0.0f32; MR]
+            } else {
+                [r0[jj], r1[jj], r2[jj], r3[jj]]
+            };
+            for kk in k0..k1 {
+                let b = brow(kk)[jj];
+                s[0] += a(i0, kk) * b;
+                s[1] += a(i0 + 1, kk) * b;
+                s[2] += a(i0 + 2, kk) * b;
+                s[3] += a(i0 + 3, kk) * b;
+            }
+            r0[jj] = s[0];
+            r1[jj] = s[1];
+            r2[jj] = s[2];
+            r3[jj] = s[3];
+            jj += 1;
+        }
+        i0 += MR;
+    }
+    while i0 < m {
+        let row = row_slice(out, os, i0, j0, j1);
+        let mut jj = 0;
+        while jj + NR <= width {
+            let mut acc = [0.0f32; NR];
+            if !init {
+                acc.copy_from_slice(&row[jj..jj + NR]);
+            }
+            for kk in k0..k1 {
+                let b = &brow(kk)[jj..jj + NR];
+                let av = a(i0, kk);
+                for t in 0..NR {
+                    acc[t] += av * b[t];
+                }
+            }
+            row[jj..jj + NR].copy_from_slice(&acc);
+            jj += NR;
+        }
+        while jj < width {
+            let mut s = if init { 0.0 } else { row[jj] };
+            for kk in k0..k1 {
+                s += a(i0, kk) * brow(kk)[jj];
+            }
+            row[jj] = s;
+            jj += 1;
+        }
+        i0 += 1;
+    }
+}
+
+/// Panel workspace length for an nt matmul with the given (n, k).
+fn nt_panel_len(n: usize, k: usize) -> usize {
+    n.min(NC) * k.min(KC)
+}
+
+/// Serial blocked y (+)= x @ w.T with K-panel packing of w. Takes the
+/// pack workspace from this thread's pool and returns it afterwards.
+fn nt_serial(out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    let mut panel = pool::take(nt_panel_len(w.nrows(), w.ncols()));
+    nt_serial_panel(out, x, w, acc, &mut panel);
+    pool::put(panel);
+}
+
+/// `nt_serial` with a caller-provided pack panel (the banded driver packs
+/// into panels owned by the calling thread's pool, so scoped band threads
+/// don't heap-allocate).
+fn nt_serial_panel(
+    mut out: TensorViewMut<'_>,
+    x: TensorView<'_>,
+    w: TensorView<'_>,
+    acc: bool,
+    panel: &mut [f32],
+) {
+    let (m, k) = x.dims();
+    let (n, k2) = w.dims();
+    assert_eq!(k, k2, "nt contraction mismatch {:?} {:?}", x.dims(), w.dims());
+    assert_eq!(out.dims(), (m, n), "nt out shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            out.fill(0.0);
+        }
+        return;
+    }
+    assert!(panel.len() >= nt_panel_len(n, k), "nt pack panel too small");
+    let os = out.stride;
+    let od: &mut [f32] = out.data;
+    let (xd, xs) = (x.data, x.stride);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NC).min(n);
+        let width = j1 - j0;
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            // pack panel[kk - k0][j - j0] = w[j, kk]: contiguous reads of
+            // w's rows, K-major writes so the kernel streams panel rows.
+            for j in j0..j1 {
+                let wr = &w.row(j)[k0..k1];
+                for (kk, &v) in wr.iter().enumerate() {
+                    panel[kk * width + (j - j0)] = v;
+                }
+            }
+            let init = k0 == 0 && !acc;
+            kernel_block(
+                od,
+                os,
+                m,
+                j0,
+                j1,
+                k0,
+                k1,
+                init,
+                |i, kk| xd[i * xs + kk],
+                |kk| &panel[(kk - k0) * width..(kk - k0) * width + width],
+            );
+            k0 = k1;
+        }
+        j0 = j1;
+    }
+}
+
+/// Serial blocked y (+)= x @ w (w rows are already contraction-major).
+fn nn_serial(mut out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    let (m, k) = x.dims();
+    let (k2, n) = w.dims();
+    assert_eq!(k, k2, "nn contraction mismatch {:?} {:?}", x.dims(), w.dims());
+    assert_eq!(out.dims(), (m, n), "nn out shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            out.fill(0.0);
+        }
+        return;
+    }
+    let os = out.stride;
+    let od: &mut [f32] = out.data;
+    let (xd, xs) = (x.data, x.stride);
+    let (wd, ws) = (w.data, w.stride);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NC).min(n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let init = k0 == 0 && !acc;
+            kernel_block(
+                od,
+                os,
+                m,
+                j0,
+                j1,
+                k0,
+                k1,
+                init,
+                |i, kk| xd[i * xs + kk],
+                |kk| &wd[kk * ws + j0..kk * ws + j1],
+            );
+            k0 = k1;
+        }
+        j0 = j1;
+    }
+}
+
+/// Serial blocked y (+)= x.T @ w (x is [K, M]; columns of x drive rows of y).
+fn tn_serial(mut out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    let (k, m) = x.dims();
+    let (k2, n) = w.dims();
+    assert_eq!(k, k2, "tn contraction mismatch {:?} {:?}", x.dims(), w.dims());
+    assert_eq!(out.dims(), (m, n), "tn out shape");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !acc {
+            out.fill(0.0);
+        }
+        return;
+    }
+    let os = out.stride;
+    let od: &mut [f32] = out.data;
+    let (xd, xs) = (x.data, x.stride);
+    let (wd, ws) = (w.data, w.stride);
+    let mut j0 = 0;
+    while j0 < n {
+        let j1 = (j0 + NC).min(n);
+        let mut k0 = 0;
+        while k0 < k {
+            let k1 = (k0 + KC).min(k);
+            let init = k0 == 0 && !acc;
+            kernel_block(
+                od,
+                os,
+                m,
+                j0,
+                j1,
+                k0,
+                k1,
+                init,
+                |i, kk| xd[kk * xs + i],
+                |kk| &wd[kk * ws + j0..kk * ws + j1],
+            );
+            k0 = k1;
+        }
+        j0 = j1;
+    }
+}
+
+/// y (+)= x @ w.T with an explicit thread count (row-band parallel).
+pub fn matmul_nt_into_with(
+    out: TensorViewMut<'_>,
+    x: TensorView<'_>,
+    w: TensorView<'_>,
+    acc: bool,
+    threads: usize,
+) {
+    let (m, k) = x.dims();
+    let n = w.nrows();
+    assert_eq!(out.dims(), (m, n), "nt out shape");
+    let t = effective_threads(threads, m, 2 * m * n * k);
+    if t <= 1 {
+        return nt_serial(out, x, w, acc);
+    }
+    // pack panels are taken from (and returned to) the calling thread's
+    // pool: the short-lived band threads would otherwise heap-allocate
+    // one panel per call and leak it into their dying thread-locals.
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(t);
+        let mut rest = out;
+        for (lo, hi) in band_ranges(m, t) {
+            let (band, r) = rest.split_at_rows(hi - lo);
+            rest = r;
+            let xb = x.slice_rows(lo, hi);
+            let mut panel = pool::take(nt_panel_len(n, k));
+            handles.push(s.spawn(move || {
+                nt_serial_panel(band, xb, w, acc, &mut panel);
+                panel
+            }));
+        }
+        for h in handles {
+            pool::put(h.join().expect("nt kernel band thread panicked"));
+        }
+    });
+}
+
+/// y (+)= x @ w with an explicit thread count.
+pub fn matmul_nn_into_with(
+    out: TensorViewMut<'_>,
+    x: TensorView<'_>,
+    w: TensorView<'_>,
+    acc: bool,
+    threads: usize,
+) {
+    let (m, k) = x.dims();
+    let n = w.ncols();
+    assert_eq!(out.dims(), (m, n), "nn out shape");
+    let t = effective_threads(threads, m, 2 * m * n * k);
+    if t <= 1 {
+        return nn_serial(out, x, w, acc);
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for (lo, hi) in band_ranges(m, t) {
+            let (band, r) = rest.split_at_rows(hi - lo);
+            rest = r;
+            let xb = x.slice_rows(lo, hi);
+            s.spawn(move || nn_serial(band, xb, w, acc));
+        }
+    });
+}
+
+/// y (+)= x.T @ w with an explicit thread count (bands over x's columns).
+pub fn matmul_tn_into_with(
+    out: TensorViewMut<'_>,
+    x: TensorView<'_>,
+    w: TensorView<'_>,
+    acc: bool,
+    threads: usize,
+) {
+    let (k, m) = x.dims();
+    let n = w.ncols();
+    assert_eq!(out.dims(), (m, n), "tn out shape");
+    let t = effective_threads(threads, m, 2 * m * n * k);
+    if t <= 1 {
+        return tn_serial(out, x, w, acc);
+    }
+    std::thread::scope(|s| {
+        let mut rest = out;
+        for (lo, hi) in band_ranges(m, t) {
+            let (band, r) = rest.split_at_rows(hi - lo);
+            rest = r;
+            let xb = x.slice_cols(lo, hi);
+            s.spawn(move || tn_serial(band, xb, w, acc));
+        }
+    });
+}
+
+/// y (+)= x @ w.T   x:[M,K], w:[N,K] -> [M,N]
+pub fn matmul_nt_into(out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    matmul_nt_into_with(out, x, w, acc, kernel_threads());
+}
+
+/// y (+)= x @ w     x:[M,K], w:[K,N] -> [M,N]
+pub fn matmul_nn_into(out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    matmul_nn_into_with(out, x, w, acc, kernel_threads());
+}
+
+/// y (+)= x.T @ w   x:[K,M], w:[K,N] -> [M,N]
+pub fn matmul_tn_into(out: TensorViewMut<'_>, x: TensorView<'_>, w: TensorView<'_>, acc: bool) {
+    matmul_tn_into_with(out, x, w, acc, kernel_threads());
+}
+
+/// y = x @ w.T (allocating wrapper; output buffer comes from the pool).
 pub fn matmul_nt(x: &Tensor, w: &Tensor) -> Tensor {
-    let (m, k) = x.dims2();
-    let (n, k2) = w.dims2();
-    assert_eq!(k, k2, "nt contraction mismatch {:?} {:?}", x.shape, w.shape);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let xi = &x.data[i * k..(i + 1) * k];
-        for j in 0..n {
-            let wj = &w.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for kk in 0..k {
-                acc += xi[kk] * wj[kk];
-            }
-            out[i * n + j] = acc;
-        }
-    }
-    Tensor::new(vec![m, n], out)
+    let (m, _) = x.dims2();
+    let (n, _) = w.dims2();
+    let mut out = Tensor::pooled_zeros(&[m, n]);
+    matmul_nt_into(out.view2_mut(), x.view2(), w.view2(), false);
+    out
 }
 
-/// y = x @ w     x:[M,K], w:[K,N] -> [M,N]
+/// y = x @ w (allocating wrapper).
 pub fn matmul_nn(x: &Tensor, w: &Tensor) -> Tensor {
-    let (m, k) = x.dims2();
-    let (k2, n) = w.dims2();
-    assert_eq!(k, k2, "nn contraction mismatch {:?} {:?}", x.shape, w.shape);
-    let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let xi = &x.data[i * k..(i + 1) * k];
-        let oi = &mut out[i * n..(i + 1) * n];
-        for (kk, &xv) in xi.iter().enumerate() {
-            if xv == 0.0 {
-                continue;
-            }
-            let wr = &w.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                oi[j] += xv * wr[j];
-            }
-        }
-    }
-    Tensor::new(vec![m, n], out)
+    let (m, _) = x.dims2();
+    let (_, n) = w.dims2();
+    let mut out = Tensor::pooled_zeros(&[m, n]);
+    matmul_nn_into(out.view2_mut(), x.view2(), w.view2(), false);
+    out
 }
 
-/// y = x.T @ w   x:[K,M], w:[K,N] -> [M,N]
+/// y = x.T @ w (allocating wrapper).
 pub fn matmul_tn(x: &Tensor, w: &Tensor) -> Tensor {
-    let (k, m) = x.dims2();
-    let (k2, n) = w.dims2();
-    assert_eq!(k, k2, "tn contraction mismatch {:?} {:?}", x.shape, w.shape);
-    let mut out = vec![0.0f32; m * n];
-    for kk in 0..k {
-        let xr = &x.data[kk * m..(kk + 1) * m];
-        let wr = &w.data[kk * n..(kk + 1) * n];
-        for i in 0..m {
-            let xv = xr[i];
-            if xv == 0.0 {
-                continue;
-            }
-            let oi = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                oi[j] += xv * wr[j];
-            }
-        }
-    }
-    Tensor::new(vec![m, n], out)
+    let (_, m) = x.dims2();
+    let (_, n) = w.dims2();
+    let mut out = Tensor::pooled_zeros(&[m, n]);
+    matmul_tn_into(out.view2_mut(), x.view2(), w.view2(), false);
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -112,30 +545,49 @@ pub fn gelu_bwd(x: &Tensor, dy: &Tensor) -> Tensor {
     )
 }
 
+/// In-place gelu backward: dy <- dy * gelu'(x).
+pub fn gelu_bwd_assign(x: &Tensor, dy: &mut Tensor) {
+    assert_eq!(x.shape, dy.shape);
+    for (d, &v) in dy.data.iter_mut().zip(&x.data) {
+        *d *= gelu_grad_scalar(v);
+    }
+}
+
 /// y = x + b broadcast over rows (b per column).
 pub fn add_bias_cols(x: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    add_bias_cols_assign(&mut out, b);
+    out
+}
+
+/// In-place x += b broadcast over rows (b per column).
+pub fn add_bias_cols_assign(x: &mut Tensor, b: &Tensor) {
     let (r, c) = x.dims2();
     assert_eq!(b.numel(), c);
-    let mut out = x.data.clone();
     for i in 0..r {
-        for j in 0..c {
-            out[i * c + j] += b.data[j];
+        for (v, bv) in x.data[i * c..(i + 1) * c].iter_mut().zip(&b.data) {
+            *v += bv;
         }
     }
-    Tensor::new(x.shape.clone(), out)
 }
 
 /// y = x + b broadcast over columns (b per row).
 pub fn add_bias_rows(x: &Tensor, b: &Tensor) -> Tensor {
+    let mut out = x.clone();
+    add_bias_rows_assign(&mut out, b);
+    out
+}
+
+/// In-place x += b broadcast over columns (b per row).
+pub fn add_bias_rows_assign(x: &mut Tensor, b: &Tensor) {
     let (r, c) = x.dims2();
     assert_eq!(b.numel(), r);
-    let mut out = x.data.clone();
     for i in 0..r {
-        for j in 0..c {
-            out[i * c + j] += b.data[i];
+        let bv = b.data[i];
+        for v in x.data[i * c..(i + 1) * c].iter_mut() {
+            *v += bv;
         }
     }
-    Tensor::new(x.shape.clone(), out)
 }
 
 pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
@@ -167,26 +619,38 @@ pub fn scale(a: &Tensor, s: f32) -> Tensor {
 
 /// Column sums (grad of a per-column bias): [R, C] -> [C].
 pub fn sum_rows(x: &Tensor) -> Tensor {
+    let (_, c) = x.dims2();
+    let mut out = Tensor::zeros(&[c]);
+    sum_rows_acc(x, &mut out);
+    out
+}
+
+/// Accumulating column sums: acc[C] += per-column sums of x[R, C].
+pub fn sum_rows_acc(x: &Tensor, acc: &mut Tensor) {
     let (r, c) = x.dims2();
-    let mut out = vec![0.0; c];
+    assert_eq!(acc.numel(), c, "sum_rows_acc shape");
     for i in 0..r {
-        for j in 0..c {
-            out[j] += x.data[i * c + j];
+        for (a, v) in acc.data.iter_mut().zip(&x.data[i * c..(i + 1) * c]) {
+            *a += v;
         }
     }
-    Tensor::new(vec![c], out)
 }
 
 /// Row sums (grad of a per-row bias): [R, C] -> [R].
 pub fn sum_cols(x: &Tensor) -> Tensor {
+    let (r, _) = x.dims2();
+    let mut out = Tensor::zeros(&[r]);
+    sum_cols_acc(x, &mut out);
+    out
+}
+
+/// Accumulating row sums: acc[R] += per-row sums of x[R, C].
+pub fn sum_cols_acc(x: &Tensor, acc: &mut Tensor) {
     let (r, c) = x.dims2();
-    let mut out = vec![0.0; r];
+    assert_eq!(acc.numel(), r, "sum_cols_acc shape");
     for i in 0..r {
-        for j in 0..c {
-            out[i] += x.data[i * c + j];
-        }
+        acc.data[i] += x.data[i * c..(i + 1) * c].iter().sum::<f32>();
     }
-    Tensor::new(vec![r], out)
 }
 
 // ---------------------------------------------------------------------------
@@ -266,6 +730,7 @@ pub fn sigmoid(x: f32) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::ref_kernels;
     use crate::util::rng::Rng;
 
     fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
@@ -299,6 +764,95 @@ mod tests {
     }
 
     #[test]
+    fn blocked_matches_reference_on_awkward_shapes() {
+        // shapes chosen to hit every remainder path of the 4x8 micro-tile
+        let mut rng = Rng::seed_from(9);
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 7), (4, 8, 8), (5, 9, 17), (13, 33, 29)] {
+            let x = rand_t(&mut rng, m, k);
+            let w = rand_t(&mut rng, n, k);
+            let got = matmul_nt(&x, &w);
+            let want = ref_kernels::matmul_nt(&x, &w);
+            assert!(got.max_abs_diff(&want) < 1e-5, "nt {m}x{k}x{n}");
+
+            let wn = rand_t(&mut rng, k, n);
+            let got = matmul_nn(&x, &wn);
+            let want = ref_kernels::matmul_nn(&x, &wn);
+            assert!(got.max_abs_diff(&want) < 1e-5, "nn {m}x{k}x{n}");
+
+            let xt = rand_t(&mut rng, k, m);
+            let got = matmul_tn(&xt, &wn);
+            let want = ref_kernels::matmul_tn(&xt, &wn);
+            assert!(got.max_abs_diff(&want) < 1e-5, "tn {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn into_kernel_accumulates() {
+        let mut rng = Rng::seed_from(10);
+        let x = rand_t(&mut rng, 6, 11);
+        let w = rand_t(&mut rng, 9, 11);
+        let mut out = rand_t(&mut rng, 6, 9);
+        let before = out.clone();
+        matmul_nt_into(out.view2_mut(), x.view2(), w.view2(), true);
+        let want = add(&before, &ref_kernels::matmul_nt(&x, &w));
+        assert!(out.max_abs_diff(&want) < 1e-5);
+    }
+
+    #[test]
+    fn into_kernel_writes_through_strided_views() {
+        // compute a matmul directly into the (1,1) block of a 2x2 output
+        let mut rng = Rng::seed_from(11);
+        let x = rand_t(&mut rng, 4, 6);
+        let w = rand_t(&mut rng, 5, 6);
+        let mut big = Tensor::zeros(&[8, 10]);
+        matmul_nt_into(
+            big.view2_mut().into_rows(4, 8).into_cols(5, 10),
+            x.view2(),
+            w.view2(),
+            false,
+        );
+        let want = ref_kernels::matmul_nt(&x, &w);
+        let got = big.view2().slice_rows(4, 8).slice_cols(5, 10).to_tensor();
+        assert!(got.max_abs_diff(&want) < 1e-5);
+        // untouched quadrant stays zero
+        assert_eq!(big.at2(0, 0), 0.0);
+        assert_eq!(big.at2(3, 9), 0.0);
+    }
+
+    #[test]
+    fn threaded_kernel_matches_serial() {
+        // large enough to clear PAR_MIN_FLOPS so bands really spawn
+        let (m, k, n) = (131usize, 120usize, 97usize);
+        assert!(2 * m * k * n >= PAR_MIN_FLOPS);
+        let mut rng = Rng::seed_from(12);
+        let x = rand_t(&mut rng, m, k);
+        let w = rand_t(&mut rng, n, k);
+        let mut serial = Tensor::zeros(&[m, n]);
+        matmul_nt_into_with(serial.view2_mut(), x.view2(), w.view2(), false, 1);
+        for threads in [2, 3, 8] {
+            let mut par = Tensor::zeros(&[m, n]);
+            matmul_nt_into_with(par.view2_mut(), x.view2(), w.view2(), false, threads);
+            assert!(par.max_abs_diff(&serial) < 1e-6, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn band_ranges_cover_exactly() {
+        for rows in [1usize, 2, 7, 16, 33] {
+            for bands in [1usize, 2, 3, 8] {
+                let bands = bands.min(rows);
+                let r = band_ranges(rows, bands);
+                assert_eq!(r.len(), bands);
+                assert_eq!(r[0].0, 0);
+                assert_eq!(r.last().unwrap().1, rows);
+                for w in r.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+            }
+        }
+    }
+
+    #[test]
     fn gelu_known_values() {
         assert!((gelu_scalar(0.0)).abs() < 1e-7);
         assert!((gelu_scalar(30.0) - 30.0).abs() < 1e-4);
@@ -318,6 +872,17 @@ mod tests {
                 gelu_grad_scalar(x)
             );
         }
+    }
+
+    #[test]
+    fn gelu_bwd_assign_matches_alloc_version() {
+        let mut rng = Rng::seed_from(13);
+        let x = rand_t(&mut rng, 4, 9);
+        let dy = rand_t(&mut rng, 4, 9);
+        let want = gelu_bwd(&x, &dy);
+        let mut got = dy.clone();
+        gelu_bwd_assign(&x, &mut got);
+        assert!(got.max_abs_diff(&want) == 0.0);
     }
 
     #[test]
@@ -389,5 +954,8 @@ mod tests {
         let x = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
         assert_eq!(sum_rows(&x).data, vec![4.0, 6.0]);
         assert_eq!(sum_cols(&x).data, vec![3.0, 7.0]);
+        let mut acc = Tensor::new(vec![2], vec![1.0, 1.0]);
+        sum_rows_acc(&x, &mut acc);
+        assert_eq!(acc.data, vec![5.0, 7.0]);
     }
 }

@@ -1,0 +1,139 @@
+//! Reusable f32 buffer pool for matmul-sized temporaries.
+//!
+//! The jigsaw hot path allocates the same handful of buffer shapes every
+//! step (matmul outputs, partial-sum accumulators, packed kernel panels,
+//! shipped activation blocks). This pool recycles them per thread so
+//! steady-state training performs no matmul-sized heap allocations: each
+//! rank thread's free list converges after the first step and every
+//! subsequent `take` is a hit.
+//!
+//! Buffers are zero-filled on `take` (a memset is noise next to the
+//! matmul that follows, and it keeps callers honest). Hit/miss counters
+//! are process-global atomics so benches can report allocation behaviour
+//! across rank threads (`hotpath_micro` records them in
+//! BENCH_kernels.json).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::Tensor;
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+/// Per-thread free list; bounded so a burst of odd shapes cannot pin
+/// unbounded memory.
+const MAX_FREE: usize = 32;
+
+thread_local! {
+    static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Take a zero-filled buffer of exactly `len` elements (best fit: the
+/// smallest free buffer that holds `len`, so small requests don't steal
+/// the large panels/accumulators and force them to reallocate).
+pub fn take(len: usize) -> Vec<f32> {
+    let reused = FREE.with(|f| {
+        let mut f = f.borrow_mut();
+        f.iter()
+            .enumerate()
+            .filter(|(_, v)| v.capacity() >= len)
+            .min_by_key(|(_, v)| v.capacity())
+            .map(|(pos, _)| pos)
+            .map(|pos| f.swap_remove(pos))
+    });
+    match reused {
+        Some(mut v) => {
+            HITS.fetch_add(1, Ordering::Relaxed);
+            v.clear();
+            v.resize(len, 0.0);
+            v
+        }
+        None => {
+            MISSES.fetch_add(1, Ordering::Relaxed);
+            vec![0.0; len]
+        }
+    }
+}
+
+/// Return a buffer to this thread's free list.
+pub fn put(v: Vec<f32>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    FREE.with(|f| {
+        let mut f = f.borrow_mut();
+        if f.len() < MAX_FREE {
+            f.push(v);
+        } else if let Some(smallest) = f
+            .iter()
+            .enumerate()
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i)
+        {
+            // keep the largest buffers: they are the expensive ones
+            if f[smallest].capacity() < v.capacity() {
+                f[smallest] = v;
+            }
+        }
+    });
+}
+
+/// (hits, misses) since process start or the last `reset_stats`.
+pub fn stats() -> (u64, u64) {
+    (HITS.load(Ordering::Relaxed), MISSES.load(Ordering::Relaxed))
+}
+
+pub fn reset_stats() {
+    HITS.store(0, Ordering::Relaxed);
+    MISSES.store(0, Ordering::Relaxed);
+}
+
+impl Tensor {
+    /// Zero tensor backed by a pooled buffer.
+    pub fn pooled_zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: take(n) }
+    }
+
+    /// Return this tensor's buffer to the thread-local pool.
+    pub fn recycle(self) {
+        put(self.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_zeroed_after_reuse() {
+        let mut v = take(16);
+        v.iter_mut().for_each(|x| *x = 7.0);
+        put(v);
+        let v2 = take(8);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        assert_eq!(v2.len(), 8);
+    }
+
+    #[test]
+    fn pooled_tensor_roundtrip() {
+        let t = Tensor::pooled_zeros(&[4, 4]);
+        assert_eq!(t.shape, vec![4, 4]);
+        assert_eq!(t.data, vec![0.0; 16]);
+        t.recycle();
+        let t2 = Tensor::pooled_zeros(&[2, 2]);
+        assert_eq!(t2.numel(), 4);
+    }
+
+    #[test]
+    fn stats_count_hits_and_misses() {
+        // other tests run concurrently; only check monotonicity
+        let (h0, m0) = stats();
+        let v = take(1024 * 9);
+        put(v);
+        let _v2 = take(1024 * 9);
+        let (h1, m1) = stats();
+        assert!(h1 + m1 > h0 + m0);
+    }
+}

@@ -1,0 +1,72 @@
+//! Reference (naive) matmul kernels — the seed implementations, kept
+//! verbatim as the differential-testing oracle for the blocked/parallel
+//! kernels in `ops`. Never used on a hot path; property tests assert the
+//! optimized kernels match these to tight tolerance across random shapes,
+//! strides, and thread counts.
+
+use super::Tensor;
+
+/// y = x @ w.T   x:[M,K], w:[N,K] -> [M,N]
+pub fn matmul_nt(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (n, k2) = w.dims2();
+    assert_eq!(k, k2, "nt contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wj = &w.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += xi[kk] * wj[kk];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// y = x @ w     x:[M,K], w:[K,N] -> [M,N]
+pub fn matmul_nn(x: &Tensor, w: &Tensor) -> Tensor {
+    let (m, k) = x.dims2();
+    let (k2, n) = w.dims2();
+    assert_eq!(k, k2, "nn contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xi = &x.data[i * k..(i + 1) * k];
+        let oi = &mut out[i * n..(i + 1) * n];
+        for (kk, &xv) in xi.iter().enumerate() {
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                oi[j] += xv * wr[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// y = x.T @ w   x:[K,M], w:[K,N] -> [M,N]
+pub fn matmul_tn(x: &Tensor, w: &Tensor) -> Tensor {
+    let (k, m) = x.dims2();
+    let (k2, n) = w.dims2();
+    assert_eq!(k, k2, "tn contraction mismatch {:?} {:?}", x.shape, w.shape);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let xr = &x.data[kk * m..(kk + 1) * m];
+        let wr = &w.data[kk * n..(kk + 1) * n];
+        for i in 0..m {
+            let xv = xr[i];
+            if xv == 0.0 {
+                continue;
+            }
+            let oi = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                oi[j] += xv * wr[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}

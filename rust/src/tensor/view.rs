@@ -1,0 +1,331 @@
+//! Zero-copy strided 2-D views over `Tensor` storage.
+//!
+//! A view is (base slice, rows, cols, row stride): `slice_rows`,
+//! `slice_cols`, and jigsaw block extraction become O(1) borrows instead
+//! of per-call allocations, and the blocked kernels in `ops` read/write
+//! through views so one packed output buffer can back many logical
+//! sub-matrices.
+//!
+//! Safety model: everything here is safe Rust. Mutable views hand out
+//! disjoint row bands via `split_at_rows` (built on `split_at_mut`), which
+//! is what the thread-parallel kernel driver uses to farm out bands
+//! without copies or locks. The invariant `stride >= cols` guarantees the
+//! rows of a view never overlap.
+
+use super::Tensor;
+
+/// Immutable strided view of a 2-D matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorView<'a> {
+    pub(crate) data: &'a [f32],
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) stride: usize,
+}
+
+fn check_extent(len: usize, rows: usize, cols: usize, stride: usize) {
+    assert!(stride >= cols, "stride {stride} < cols {cols}");
+    if rows > 0 && cols > 0 {
+        let need = (rows - 1) * stride + cols;
+        assert!(len >= need, "view needs {need} elems, slice has {len}");
+    }
+}
+
+impl<'a> TensorView<'a> {
+    pub fn new(data: &'a [f32], rows: usize, cols: usize, stride: usize) -> Self {
+        check_extent(data.len(), rows, cols, stride);
+        TensorView { data, rows, cols, stride }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// One row as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &'a [f32] {
+        debug_assert!(i < self.rows);
+        if self.cols == 0 {
+            return &[];
+        }
+        &self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.stride + j]
+    }
+
+    /// Row-range sub-view (O(1), no copy).
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> TensorView<'a> {
+        assert!(lo <= hi && hi <= self.rows, "rows {lo}..{hi} of {}", self.rows);
+        let data = if hi > lo { &self.data[lo * self.stride..] } else { &self.data[..0] };
+        TensorView { data, rows: hi - lo, cols: self.cols, stride: self.stride }
+    }
+
+    /// Column-range sub-view (O(1), no copy).
+    pub fn slice_cols(&self, lo: usize, hi: usize) -> TensorView<'a> {
+        assert!(lo <= hi && hi <= self.cols, "cols {lo}..{hi} of {}", self.cols);
+        let data = if hi > lo && self.rows > 0 { &self.data[lo..] } else { &self.data[..0] };
+        TensorView { data, rows: self.rows, cols: hi - lo, stride: self.stride }
+    }
+
+    /// Block (bi, bj) of this matrix split into an rb x cb grid (O(1)).
+    pub fn block(&self, bi: usize, bj: usize, rb: usize, cb: usize) -> TensorView<'a> {
+        assert!(
+            self.rows % rb == 0 && self.cols % cb == 0,
+            "{}x{} into {}x{} blocks",
+            self.rows,
+            self.cols,
+            rb,
+            cb
+        );
+        let (br, bc) = (self.rows / rb, self.cols / cb);
+        self.slice_rows(bi * br, (bi + 1) * br)
+            .slice_cols(bj * bc, (bj + 1) * bc)
+    }
+
+    /// True when the rows are adjacent in memory (single memcpy suffices).
+    pub fn is_contiguous(&self) -> bool {
+        self.stride == self.cols || self.rows <= 1
+    }
+
+    /// Materialize into an owned tensor (the only copying operation here).
+    pub fn to_tensor(&self) -> Tensor {
+        let mut data = Vec::with_capacity(self.rows * self.cols);
+        if self.is_contiguous() && self.rows > 0 && self.cols > 0 {
+            data.extend_from_slice(&self.data[..self.rows * self.cols]);
+        } else {
+            for i in 0..self.rows {
+                data.extend_from_slice(self.row(i));
+            }
+        }
+        Tensor { shape: vec![self.rows, self.cols], data }
+    }
+
+    pub fn max_abs_diff(&self, other: &TensorView<'_>) -> f32 {
+        assert_eq!(self.dims(), other.dims());
+        let mut m = 0.0f32;
+        for i in 0..self.rows {
+            for (a, b) in self.row(i).iter().zip(other.row(i)) {
+                m = m.max((a - b).abs());
+            }
+        }
+        m
+    }
+}
+
+/// Mutable strided view of a 2-D matrix.
+#[derive(Debug)]
+pub struct TensorViewMut<'a> {
+    pub(crate) data: &'a mut [f32],
+    pub(crate) rows: usize,
+    pub(crate) cols: usize,
+    pub(crate) stride: usize,
+}
+
+impl<'a> TensorViewMut<'a> {
+    pub fn new(data: &'a mut [f32], rows: usize, cols: usize, stride: usize) -> Self {
+        check_extent(data.len(), rows, cols, stride);
+        TensorViewMut { data, rows, cols, stride }
+    }
+
+    pub fn nrows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn ncols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn row_stride(&self) -> usize {
+        self.stride
+    }
+
+    pub fn dims(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        if self.cols == 0 {
+            return &mut [];
+        }
+        &mut self.data[i * self.stride..i * self.stride + self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.stride + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.stride + j] = v;
+    }
+
+    /// Reborrow as an immutable view.
+    pub fn as_view(&self) -> TensorView<'_> {
+        TensorView { data: self.data, rows: self.rows, cols: self.cols, stride: self.stride }
+    }
+
+    /// Split into two disjoint row bands at row `r` (consumes the view —
+    /// the parallel kernel driver hands each band to its own thread).
+    pub fn split_at_rows(self, r: usize) -> (TensorViewMut<'a>, TensorViewMut<'a>) {
+        assert!(r <= self.rows, "split at {r} of {} rows", self.rows);
+        let off = (r * self.stride).min(self.data.len());
+        let (top, bot) = self.data.split_at_mut(off);
+        (
+            TensorViewMut { data: top, rows: r, cols: self.cols, stride: self.stride },
+            TensorViewMut {
+                data: bot,
+                rows: self.rows - r,
+                cols: self.cols,
+                stride: self.stride,
+            },
+        )
+    }
+
+    /// Row-range sub-view (consuming; O(1)).
+    pub fn into_rows(self, lo: usize, hi: usize) -> TensorViewMut<'a> {
+        assert!(lo <= hi && hi <= self.rows);
+        let data = if hi > lo {
+            &mut self.data[lo * self.stride..]
+        } else {
+            &mut self.data[..0]
+        };
+        TensorViewMut { data, rows: hi - lo, cols: self.cols, stride: self.stride }
+    }
+
+    /// Column-range sub-view (consuming; O(1)).
+    pub fn into_cols(self, lo: usize, hi: usize) -> TensorViewMut<'a> {
+        assert!(lo <= hi && hi <= self.cols);
+        let data = if hi > lo && self.rows > 0 {
+            &mut self.data[lo..]
+        } else {
+            &mut self.data[..0]
+        };
+        TensorViewMut { data, rows: self.rows, cols: hi - lo, stride: self.stride }
+    }
+
+    /// Block (bi, bj) of an rb x cb grid (consuming; O(1)).
+    pub fn into_block(self, bi: usize, bj: usize, rb: usize, cb: usize) -> TensorViewMut<'a> {
+        assert!(self.rows % rb == 0 && self.cols % cb == 0);
+        let (br, bc) = (self.rows / rb, self.cols / cb);
+        self.into_rows(bi * br, (bi + 1) * br)
+            .into_cols(bj * bc, (bj + 1) * bc)
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        for i in 0..self.rows {
+            self.row_mut(i).fill(v);
+        }
+    }
+
+    /// Copy `src` into this view row by row.
+    pub fn copy_from(&mut self, src: TensorView<'_>) {
+        assert_eq!(self.dims(), src.dims(), "copy_from shape mismatch");
+        for i in 0..self.rows {
+            self.row_mut(i).copy_from_slice(src.row(i));
+        }
+    }
+
+    /// Elementwise add `src` into this view.
+    pub fn add_from(&mut self, src: TensorView<'_>) {
+        assert_eq!(self.dims(), src.dims(), "add_from shape mismatch");
+        for i in 0..self.rows {
+            for (d, s) in self.row_mut(i).iter_mut().zip(src.row(i)) {
+                *d += s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t2(r: usize, c: usize) -> Tensor {
+        Tensor::new(vec![r, c], (0..r * c).map(|v| v as f32).collect())
+    }
+
+    #[test]
+    fn view_row_col_slicing_matches_copying() {
+        let t = t2(6, 8);
+        let v = t.view2();
+        assert_eq!(v.slice_rows(1, 4).to_tensor(), t.slice_rows(1, 4));
+        assert_eq!(v.slice_cols(2, 7).to_tensor(), t.slice_cols(2, 7));
+        assert_eq!(
+            v.slice_rows(2, 6).slice_cols(1, 5).to_tensor(),
+            t.slice_rows(2, 6).slice_cols(1, 5)
+        );
+    }
+
+    #[test]
+    fn view_block_matches_tensor_block() {
+        let t = t2(6, 8);
+        for bi in 0..2 {
+            for bj in 0..4 {
+                assert_eq!(t.view2().block(bi, bj, 2, 4).to_tensor(), t.block(bi, bj, 2, 4));
+            }
+        }
+    }
+
+    #[test]
+    fn split_at_rows_is_disjoint_and_complete() {
+        let mut t = t2(5, 3);
+        let v = t.view2_mut();
+        let (mut top, mut bot) = v.split_at_rows(2);
+        top.fill(1.0);
+        bot.fill(2.0);
+        assert_eq!(t.data[..6], vec![1.0; 6][..]);
+        assert_eq!(t.data[6..], vec![2.0; 9][..]);
+    }
+
+    #[test]
+    fn split_at_rows_edges() {
+        let mut t = t2(3, 4);
+        let (top, bot) = t.view2_mut().split_at_rows(0);
+        assert_eq!((top.nrows(), bot.nrows()), (0, 3));
+        let (top, bot) = t.view2_mut().split_at_rows(3);
+        assert_eq!((top.nrows(), bot.nrows()), (3, 0));
+    }
+
+    #[test]
+    fn copy_and_add_between_strided_views() {
+        let src = t2(4, 6);
+        let mut dst = Tensor::zeros(&[4, 6]);
+        {
+            let sv = src.view2().slice_cols(1, 4);
+            let mut dv = dst.view2_mut().into_cols(1, 4);
+            dv.copy_from(sv);
+            dv.add_from(sv);
+        }
+        assert_eq!(dst.at2(0, 1), 2.0 * src.at2(0, 1));
+        assert_eq!(dst.at2(3, 3), 2.0 * src.at2(3, 3));
+        assert_eq!(dst.at2(0, 0), 0.0);
+        assert_eq!(dst.at2(0, 5), 0.0);
+    }
+
+    #[test]
+    fn contiguity() {
+        let t = t2(4, 4);
+        assert!(t.view2().is_contiguous());
+        assert!(!t.view2().slice_cols(0, 2).is_contiguous());
+        assert!(t.view2().slice_rows(1, 2).slice_cols(0, 2).is_contiguous());
+    }
+}

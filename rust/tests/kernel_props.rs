@@ -1,0 +1,237 @@
+//! Property tests for the blocked/parallel kernel layer: the optimized
+//! `_into` kernels and the zero-copy view slicing must match the retained
+//! naive oracle (`tensor::ref_kernels`) to 1e-5 across random shapes,
+//! strides (views carved out of larger parents), accumulate modes, and
+//! thread counts.
+
+use jigsaw::tensor::{ops, ref_kernels, Tensor};
+use jigsaw::util::prop::{check, Gen};
+
+fn rand_t(g: &mut Gen, r: usize, c: usize) -> Tensor {
+    Tensor::new(vec![r, c], g.f32s(r * c))
+}
+
+/// Max elementwise error, relative to the oracle's scale.
+fn rel_err(got: &Tensor, want: &Tensor) -> f32 {
+    assert_eq!(got.shape, want.shape);
+    let scale = 1.0
+        + want
+            .data
+            .iter()
+            .map(|v| v.abs())
+            .fold(0.0f32, f32::max);
+    got.max_abs_diff(want) / scale
+}
+
+/// Embed `inner` in a larger random parent and return (parent, row0, col0)
+/// so `parent.view2().slice_rows(..).slice_cols(..)` is a strided view of
+/// `inner`'s values.
+fn embed(g: &mut Gen, inner: &Tensor) -> (Tensor, usize, usize) {
+    let (r, c) = inner.dims2();
+    let (pr, pc) = (g.int(0, 3), g.int(0, 3));
+    let (r0, c0) = (g.int(0, pr), g.int(0, pc));
+    let mut parent = rand_t(g, r + pr, c + pc);
+    for i in 0..r {
+        for j in 0..c {
+            parent.data[(i + r0) * (c + pc) + (j + c0)] = inner.at2(i, j);
+        }
+    }
+    (parent, r0, c0)
+}
+
+#[test]
+fn blocked_kernels_match_reference_oracle() {
+    check("blocked matmul == ref_kernels over shapes/strides/threads", 80, |g| {
+        let m = g.int(1, 24);
+        let k = g.int(1, 24);
+        let n = g.int(1, 24);
+        let threads = g.int(1, 4);
+        let acc = g.bool();
+        let which = g.int(0, 2); // 0 = nt, 1 = nn, 2 = tn
+
+        let (x, w, want_product) = match which {
+            0 => {
+                let x = rand_t(g, m, k);
+                let w = rand_t(g, n, k);
+                let p = ref_kernels::matmul_nt(&x, &w);
+                (x, w, p)
+            }
+            1 => {
+                let x = rand_t(g, m, k);
+                let w = rand_t(g, k, n);
+                let p = ref_kernels::matmul_nn(&x, &w);
+                (x, w, p)
+            }
+            _ => {
+                let x = rand_t(g, k, m);
+                let w = rand_t(g, k, n);
+                let p = ref_kernels::matmul_tn(&x, &w);
+                (x, w, p)
+            }
+        };
+
+        // operands and output live as strided views inside larger parents
+        let (xp, xr0, xc0) = embed(g, &x);
+        let (wp, wr0, wc0) = embed(g, &w);
+        let out0 = rand_t(g, m, n);
+        let (mut op_parent, or0, oc0) = embed(g, &out0);
+        let before = op_parent.clone();
+
+        {
+            let xv = xp
+                .view2()
+                .slice_rows(xr0, xr0 + x.shape[0])
+                .slice_cols(xc0, xc0 + x.shape[1]);
+            let wv = wp
+                .view2()
+                .slice_rows(wr0, wr0 + w.shape[0])
+                .slice_cols(wc0, wc0 + w.shape[1]);
+            let ov = op_parent
+                .view2_mut()
+                .into_rows(or0, or0 + m)
+                .into_cols(oc0, oc0 + n);
+            match which {
+                0 => ops::matmul_nt_into_with(ov, xv, wv, acc, threads),
+                1 => ops::matmul_nn_into_with(ov, xv, wv, acc, threads),
+                _ => ops::matmul_tn_into_with(ov, xv, wv, acc, threads),
+            }
+        }
+
+        let want = if acc { ops::add(&out0, &want_product) } else { want_product };
+        let got = op_parent
+            .view2()
+            .slice_rows(or0, or0 + m)
+            .slice_cols(oc0, oc0 + n)
+            .to_tensor();
+        let err = rel_err(&got, &want);
+        if err >= 1e-5 {
+            return Err(format!(
+                "op {which} m={m} k={k} n={n} threads={threads} acc={acc}: err {err}"
+            ));
+        }
+
+        // everything outside the output window is untouched
+        let (prow, pcol) = op_parent.dims2();
+        for i in 0..prow {
+            for j in 0..pcol {
+                let inside =
+                    (or0..or0 + m).contains(&i) && (oc0..oc0 + n).contains(&j);
+                if !inside && op_parent.at2(i, j) != before.at2(i, j) {
+                    return Err(format!("kernel wrote outside its window at ({i},{j})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn view_slicing_matches_materialized_slicing() {
+    check("view slicing == copying slicing", 60, |g: &mut Gen| {
+        let r = g.int(1, 12);
+        let c = g.int(1, 12);
+        let t = rand_t(g, r, c);
+        let rl = g.int(0, r - 1);
+        let rh = g.int(rl, r);
+        let cl = g.int(0, c - 1);
+        let ch = g.int(cl, c);
+        let via_view = t.view2().slice_rows(rl, rh).slice_cols(cl, ch).to_tensor();
+        let mut manual = Vec::new();
+        for i in rl..rh {
+            for j in cl..ch {
+                manual.push(t.at2(i, j));
+            }
+        }
+        if via_view.data == manual && via_view.shape == vec![rh - rl, ch - cl] {
+            Ok(())
+        } else {
+            Err(format!("mismatch r{rl}..{rh} c{cl}..{ch}"))
+        }
+    });
+}
+
+#[test]
+fn view_block_roundtrip_random_grids() {
+    check("view block extraction == Tensor::block", 40, |g: &mut Gen| {
+        let rb = g.int(1, 4);
+        let cb = g.int(1, 4);
+        let (br, bc) = (g.int(1, 5), g.int(1, 5));
+        let t = rand_t(g, rb * br, cb * bc);
+        for bi in 0..rb {
+            for bj in 0..cb {
+                let a = t.view2().block(bi, bj, rb, cb).to_tensor();
+                let b = t.block(bi, bj, rb, cb);
+                if a != b {
+                    return Err(format!("block ({bi},{bj}) of {rb}x{cb} differs"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn threaded_bands_match_serial_above_flop_threshold() {
+    // The random property cases above stay below the kernel's FLOP
+    // threshold, so their threads dimension exercises only the serial
+    // path; this test is the one that actually spawns bands, for all
+    // three ops (tn is the tricky case: bands split x by *columns*).
+    let mut g = Gen::new(7);
+    let (m, k, n) = (150, 140, 90);
+    let x = rand_t(&mut g, m, k);
+    let w = rand_t(&mut g, n, k);
+    let want = ref_kernels::matmul_nt(&x, &w);
+    for threads in [1usize, 2, 3, 5, 8] {
+        let mut out = Tensor::zeros(&[m, n]);
+        ops::matmul_nt_into_with(out.view2_mut(), x.view2(), w.view2(), false, threads);
+        let err = rel_err(&out, &want);
+        assert!(err < 1e-5, "threads={threads} err={err}");
+    }
+    let wn = rand_t(&mut g, k, n);
+    let want = ref_kernels::matmul_nn(&x, &wn);
+    for threads in [1usize, 3, 8] {
+        let mut out = Tensor::zeros(&[m, n]);
+        ops::matmul_nn_into_with(out.view2_mut(), x.view2(), wn.view2(), false, threads);
+        let err = rel_err(&out, &want);
+        assert!(err < 1e-5, "nn threads={threads} err={err}");
+    }
+    let xt = rand_t(&mut g, k, m);
+    let want = ref_kernels::matmul_tn(&xt, &wn);
+    for threads in [1usize, 2, 4, 7] {
+        let mut out = Tensor::zeros(&[m, n]);
+        ops::matmul_tn_into_with(out.view2_mut(), xt.view2(), wn.view2(), false, threads);
+        let err = rel_err(&out, &want);
+        assert!(err < 1e-5, "tn threads={threads} err={err}");
+    }
+    // accumulate mode through the banded path
+    let base = rand_t(&mut g, m, n);
+    let mut out = base.clone();
+    ops::matmul_nt_into_with(out.view2_mut(), x.view2(), w.view2(), true, 4);
+    let want = ops::add(&base, &ref_kernels::matmul_nt(&x, &w));
+    assert!(rel_err(&out, &want) < 1e-5, "banded accumulate");
+}
+
+#[test]
+fn allocating_wrappers_match_oracle() {
+    check("ops::matmul_* == ref_kernels::matmul_*", 40, |g: &mut Gen| {
+        let m = g.int(1, 16);
+        let k = g.int(1, 16);
+        let n = g.int(1, 16);
+        let x = rand_t(g, m, k);
+        let wt = rand_t(g, n, k);
+        let wn = rand_t(g, k, n);
+        let xt = rand_t(g, k, m);
+        let cases = [
+            (ops::matmul_nt(&x, &wt), ref_kernels::matmul_nt(&x, &wt), "nt"),
+            (ops::matmul_nn(&x, &wn), ref_kernels::matmul_nn(&x, &wn), "nn"),
+            (ops::matmul_tn(&xt, &wn), ref_kernels::matmul_tn(&xt, &wn), "tn"),
+        ];
+        for (got, want, tag) in &cases {
+            let err = rel_err(got, want);
+            if err >= 1e-5 {
+                return Err(format!("{tag} {m}x{k}x{n} err {err}"));
+            }
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,117 @@
+//! The primitive-cache keying contract: `MatmulOp::key` on the rust side
+//! must stay format-identical to `mm_key_str` in python/compile/aot.py —
+//! the runtime looks HLO primitives up by these strings, so silent drift
+//! would send every matmul down the native fallback path.
+//!
+//! Two layers of defence: (1) a generated manifest of keys round-trips
+//! through a rust reimplementation of the python format and back through
+//! a parser; (2) the python source itself is scanned for the exact
+//! format expression.
+
+use std::path::Path;
+
+use jigsaw::runtime::MatmulOp;
+use jigsaw::tensor::Tensor;
+
+/// Rust twin of python `aot.mm_key_str`.
+fn mm_key_str(op: &str, xr: usize, xc: usize, wr: usize, wc: usize) -> String {
+    format!("{op}_{xr}x{xc}_{wr}x{wc}")
+}
+
+/// Parse "<op>_<xr>x<xc>_<wr>x<wc>" back into its parts.
+fn parse_key(key: &str) -> Option<(String, usize, usize, usize, usize)> {
+    let mut parts = key.split('_');
+    let op = parts.next()?.to_string();
+    let (xr, xc) = parts.next()?.split_once('x')?;
+    let (wr, wc) = parts.next()?.split_once('x')?;
+    if parts.next().is_some() {
+        return None;
+    }
+    Some((
+        op,
+        xr.parse().ok()?,
+        xc.parse().ok()?,
+        wr.parse().ok()?,
+        wc.parse().ok()?,
+    ))
+}
+
+/// Generate a manifest of conforming (op, shapes) keys the way
+/// `aot.primitive_keys` does: every halving combination of a dim set,
+/// filtered to executable contractions.
+fn generated_manifest() -> Vec<(MatmulOp, usize, usize, usize, usize)> {
+    let dims = [8usize, 16, 32, 54, 48, 128, 6];
+    let halvings = |d: usize| -> Vec<usize> {
+        if d % 2 == 0 {
+            vec![d, d / 2]
+        } else {
+            vec![d]
+        }
+    };
+    let mut keys = Vec::new();
+    for &a in &dims {
+        for &b in &dims {
+            for xr in halvings(a) {
+                for xc in halvings(b) {
+                    for wr in halvings(a) {
+                        for wc in halvings(b) {
+                            // contraction conformance per op
+                            if xc == wc {
+                                keys.push((MatmulOp::NT, xr, xc, wr, wc));
+                            }
+                            if xc == wr {
+                                keys.push((MatmulOp::NN, xr, xc, wr, wc));
+                            }
+                            if xr == wr {
+                                keys.push((MatmulOp::TN, xr, xc, wr, wc));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    keys
+}
+
+#[test]
+fn generated_manifest_keys_round_trip() {
+    let manifest = generated_manifest();
+    assert!(manifest.len() > 100, "manifest generator produced too few keys");
+    for (op, xr, xc, wr, wc) in manifest {
+        let x = Tensor::zeros(&[xr, xc]);
+        let w = Tensor::zeros(&[wr, wc]);
+        let rust_key = op.key(&x, &w);
+        // format-identical to the python mm_key_str
+        assert_eq!(rust_key, mm_key_str(op.tag(), xr, xc, wr, wc));
+        // and round-trips through a parser (no ambiguity / truncation)
+        let (ptag, pxr, pxc, pwr, pwc) =
+            parse_key(&rust_key).unwrap_or_else(|| panic!("unparseable key {rust_key}"));
+        assert_eq!((ptag.as_str(), pxr, pxc, pwr, pwc), (op.tag(), xr, xc, wr, wc));
+    }
+}
+
+#[test]
+fn python_source_still_uses_the_same_format() {
+    // CARGO_MANIFEST_DIR is the repo root; the python exporter lives
+    // alongside the rust tree.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("python/compile/aot.py");
+    let src = match std::fs::read_to_string(&path) {
+        Ok(s) => s,
+        Err(e) => {
+            // vendored/packaged builds may omit the python tree; the
+            // round-trip test above still guards the rust side
+            eprintln!("skipping python drift check: {}: {e}", path.display());
+            return;
+        }
+    };
+    assert!(
+        src.contains(r#"f"{op}_{xr}x{xc}_{wr}x{wc}""#),
+        "python mm_key_str no longer matches MatmulOp::key's format — \
+         update rust/src/runtime/mod.rs and this test together"
+    );
+    assert!(
+        src.contains("def mm_key_str"),
+        "python/compile/aot.py lost mm_key_str"
+    );
+}

@@ -1,0 +1,139 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The jigsaw runtime's `pjrt` feature compiles against this API surface.
+//! In an offline build there is no XLA toolchain, so every entry point
+//! returns `Error::Stub` at runtime (`PjRtClient::cpu()` fails first, and
+//! the engine reports it cleanly). A real deployment swaps this crate for
+//! the actual bindings with a `[patch]` section or by replacing the path
+//! dependency — the signatures below mirror the subset the engine uses.
+
+use std::path::Path;
+
+/// Error type for every stub operation.
+#[derive(Debug, Clone)]
+pub enum Error {
+    /// The operation needs the real XLA/PJRT toolchain.
+    Stub(&'static str),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::Stub(what) => write!(
+                f,
+                "{what}: built against the offline xla stub (patch in the \
+                 real `xla` crate for PJRT execution)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::Stub("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::Stub("PjRtClient::compile"))
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::Stub("buffer_from_host_buffer"))
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::Stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable handle.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::Stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// Parsed HLO module proto.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(Error::Stub("HloModuleProto::from_text_file"))
+    }
+}
+
+/// Computation wrapper.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Host literal.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn shape(&self) -> Result<Shape> {
+        Err(Error::Stub("Literal::shape"))
+    }
+
+    pub fn to_vec<T: Copy>(&self) -> Result<Vec<T>> {
+        Err(Error::Stub("Literal::to_vec"))
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::Stub("Literal::to_tuple"))
+    }
+}
+
+/// Shape of a literal.
+#[derive(Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Array shape with i64 dims (mirrors the real binding).
+#[derive(Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
