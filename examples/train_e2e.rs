@@ -7,13 +7,25 @@
 //!     make artifacts && cargo run --release --example train_e2e -- \
 //!         [--preset e2e100m] [--way 2] [--steps 200] [--lr 3e-4]
 //!
+//! Alternatively `--zoo <id>` (1-9) trains a scaled-down counterpart of
+//! the paper's Table-1 row on the native kernel path — no artifacts
+//! needed; `--zoo-scale` (default 8) divides the row's hidden dims. The
+//! mid-size rows (4-6) are the realistic shapes the ready-queue overlap
+//! work targets:
+//!
+//!     cargo run --release --example train_e2e -- --zoo 5 --way 2 --steps 60
+//!
 //! The default run is recorded in EXPERIMENTS.md §E2E.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use jigsaw::cli::make_backend;
+use jigsaw::config::zoo::ZooModel;
 use jigsaw::config::{artifacts_dir, ModelConfig};
 use jigsaw::metrics::RunLog;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
 use jigsaw::trainer::{train, TrainSpec};
 
 fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, d: T) -> T {
@@ -31,14 +43,24 @@ fn main() -> anyhow::Result<()> {
             }
         }
     }
-    let preset: String = flag(&flags, "preset", "e2e100m".to_string());
-    let cfg = ModelConfig::load(&artifacts_dir(), &preset)?;
-    let backend = make_backend(&preset, "pjrt")?;
+    let zoo: usize = flag(&flags, "zoo", 0usize);
+    let (cfg, backend): (ModelConfig, Arc<dyn Backend>) = if zoo > 0 {
+        anyhow::ensure!((1..=9).contains(&zoo), "--zoo takes a Table-1 id (1-9)");
+        let scale: usize = flag(&flags, "zoo-scale", 8usize);
+        let cfg = ZooModel::by_id(zoo).native_config(scale);
+        // the zoo path is the native-kernel path by construction
+        (cfg, Arc::new(NativeBackend))
+    } else {
+        let preset: String = flag(&flags, "preset", "e2e100m".to_string());
+        let cfg = ModelConfig::load(&artifacts_dir(), &preset)?;
+        let backend = make_backend(&preset, "pjrt")?;
+        (cfg, backend)
+    };
 
     let mut spec = TrainSpec::quick(
         flag(&flags, "way", 2usize),
         flag(&flags, "dp", 1usize),
-        flag(&flags, "steps", 200usize),
+        flag(&flags, "steps", if zoo > 0 { 60 } else { 200 }),
     );
     spec.lr = flag(&flags, "lr", 3e-4f32);
     spec.encdec_lr_factor = 0.2; // the paper's enc/dec LR ratio
@@ -89,10 +111,18 @@ fn main() -> anyhow::Result<()> {
         wall / spec.steps as f64,
         report.comm_bytes / (1 << 20)
     );
-    anyhow::ensure!(
-        last10 < first * 0.6,
-        "e2e loss must drop >= 40% (got {first} -> {last10})"
-    );
+    if zoo > 0 {
+        // short zoo runs only need to establish a downward trend
+        anyhow::ensure!(
+            last10 < first,
+            "zoo e2e loss must decrease (got {first} -> {last10})"
+        );
+    } else {
+        anyhow::ensure!(
+            last10 < first * 0.6,
+            "e2e loss must drop >= 40% (got {first} -> {last10})"
+        );
+    }
     println!("train_e2e OK — loss curve in bench_results/e2e_loss.jsonl");
     Ok(())
 }

@@ -55,20 +55,7 @@ pub fn synth_config(name: &str, d_emb: usize, d_tok: usize, blocks: usize) -> Mo
         flops_forward: 0,
         channel_weights: weights,
     };
-    // param count: mirrors configs.ModelConfig.param_count
-    let (t, d) = (cfg.tokens, cfg.d_emb);
-    let mut n = cfg.patch_dim * d + d;
-    for _ in 0..cfg.blocks {
-        n += 2 * d;
-        n += t * cfg.d_tok + cfg.d_tok;
-        n += cfg.d_tok * t + t;
-        n += 2 * d;
-        n += d * cfg.d_ch + cfg.d_ch;
-        n += cfg.d_ch * d + d;
-    }
-    n += d * cfg.patch_dim + cfg.patch_dim;
-    n += cfg.channels_padded;
-    cfg.param_count = n;
+    cfg.param_count = cfg.derived_param_count();
     cfg
 }
 

@@ -1,15 +1,34 @@
 //! Simulated NCCL/MPI: tagged point-to-point message passing between rank
-//! threads plus the collectives jigsaw needs (allreduce, pairwise grad
-//! reduce, barrier), with per-link byte accounting.
+//! threads plus the collectives jigsaw needs (ring allreduce, pairwise
+//! grad reduce, barrier), with per-link byte accounting and an optional
+//! fabric model that injects per-message latency/bandwidth delays.
 //!
 //! The paper implements communication with MPI non-blocking point-to-point
-//! operations (Section 5); here `send` is non-blocking (enqueue) and
-//! `recv` blocks, which preserves the overlap structure: a rank posts its
-//! outgoing partial sums, computes its local terms, then blocks on the
-//! partner's message — the same isend/compute/wait pattern.
+//! operations (Section 5). Here `send` is non-blocking (enqueue) and the
+//! receive side offers the full non-blocking surface the ready-queue
+//! schedules need:
+//!
+//!   * `recv`/`recv_shared` — blocking receive of a specific (src, tag);
+//!   * `try_recv`/`try_recv_shared` — non-blocking poll (MPI `irecv` +
+//!     `test`): returns `None` until the message has arrived;
+//!   * `recv_any` — blocking poll over a *set* of (src, tag) keys (MPI
+//!     `waitany`): returns whichever message lands first, which is what
+//!     lets `dist_matmul` compute terms in arrival order instead of a
+//!     fixed order.
+//!
+//! Collectives: `allreduce_sum` runs a ring reduce-scatter + allgather
+//! (bandwidth-optimal, 2(n-1)/n of the payload per link — the schedule
+//! `perfmodel` prices) for payloads worth chunking, and falls back to
+//! gather-to-root for latency-bound scalars. Both variants are public so
+//! benches and tests can compare them.
 //!
 //! Byte counters feed the perf model validation and the comm-volume
-//! benches; timing at paper scale comes from `perfmodel`, not wallclock.
+//! benches. Wall-clock timing at paper scale comes from `perfmodel`; the
+//! in-process fabric is instantaneous unless a `FabricSpec` is installed
+//! (`Network::set_fabric`), which delays each message by latency + jitter
+//! + bytes/bandwidth with per-endpoint link serialization — the
+//! fault/latency injector behind the overlap benches and the
+//! delivery-delay property tests.
 //!
 //! Messages travel as `Arc<Tensor>`: a block fanned out to several
 //! destinations is materialized once and reference-shared (the jigsaw
@@ -17,18 +36,62 @@
 //! and a uniquely-owned message is recovered by the receiver without a
 //! copy (`Arc::try_unwrap`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
 
 type Key = (usize, usize, u64); // (src, dst, tag)
 
+/// One in-flight message. `ready_at` is `None` on the instantaneous
+/// fabric; under a `FabricSpec` it is the simulated delivery time and the
+/// receive side withholds the message until then.
+struct Msg {
+    t: Arc<Tensor>,
+    ready_at: Option<Instant>,
+}
+
+impl Msg {
+    fn deliverable(&self, now: Instant) -> bool {
+        self.ready_at.map_or(true, |r| r <= now)
+    }
+}
+
+/// Injected fabric timing: every message is delayed by
+/// `latency + U[0, jitter) + bytes / bytes_per_sec`, and transfers
+/// serialize on the sender's egress and the receiver's ingress link
+/// (latency pipelines; occupancy does not) — enough structure to make
+/// gather-to-root pay its root bottleneck and a fixed-order receive pay
+/// for out-of-order arrivals.
+#[derive(Clone, Copy, Debug)]
+pub struct FabricSpec {
+    pub latency: Duration,
+    /// per-message uniform jitter added to `latency` (seeded, so delivery
+    /// reorderings reproduce)
+    pub jitter: Duration,
+    pub bytes_per_sec: f64,
+}
+
+struct FabricState {
+    spec: FabricSpec,
+    /// when each rank's egress link frees up
+    egress_free: Vec<Instant>,
+    /// when each rank's ingress link frees up
+    ingress_free: Vec<Instant>,
+    /// xorshift state for the jitter draw
+    rng: u64,
+}
+
 struct Shared {
-    queues: Mutex<HashMap<Key, Vec<Arc<Tensor>>>>,
+    queues: Mutex<HashMap<Key, VecDeque<Msg>>>,
     cv: Condvar,
     /// bytes sent per (src, dst) link
     bytes: Mutex<Vec<u64>>,
+    /// deepest any per-key queue has grown (receive-side backlog stat)
+    max_depth: AtomicU64,
+    fabric: Mutex<Option<FabricState>>,
     n: usize,
 }
 
@@ -45,6 +108,8 @@ impl Network {
                 queues: Mutex::new(HashMap::new()),
                 cv: Condvar::new(),
                 bytes: Mutex::new(vec![0; n * n]),
+                max_depth: AtomicU64::new(0),
+                fabric: Mutex::new(None),
                 n,
             }),
         }
@@ -57,7 +122,24 @@ impl Network {
     /// Endpoint for one rank (hand one to each rank thread).
     pub fn endpoint(&self, rank: usize) -> Comm {
         assert!(rank < self.inner.n);
-        Comm { rank, net: self.inner.clone(), coll_seq: 0 }
+        Comm { rank, net: self.inner.clone(), coll_seq: HashMap::new() }
+    }
+
+    /// Install the delay injector: subsequent sends acquire simulated
+    /// delivery times. `seed` drives the per-message jitter draw.
+    pub fn set_fabric(&self, spec: FabricSpec, seed: u64) {
+        let now = Instant::now();
+        *self.inner.fabric.lock().unwrap() = Some(FabricState {
+            spec,
+            egress_free: vec![now; self.inner.n],
+            ingress_free: vec![now; self.inner.n],
+            rng: seed | 1,
+        });
+    }
+
+    /// Remove the delay injector (messages deliver instantly again).
+    pub fn clear_fabric(&self) {
+        *self.inner.fabric.lock().unwrap() = None;
     }
 
     /// Total bytes sent over every link.
@@ -70,10 +152,17 @@ impl Network {
         self.inner.bytes.lock().unwrap()[src * self.inner.n + dst]
     }
 
+    /// Deepest backlog any (src, dst, tag) queue reached — how far sends
+    /// ran ahead of receives (benches record this alongside timings).
+    pub fn max_queue_depth(&self) -> u64 {
+        self.inner.max_depth.load(Ordering::Relaxed)
+    }
+
     pub fn reset_bytes(&self) {
         for b in self.inner.bytes.lock().unwrap().iter_mut() {
             *b = 0;
         }
+        self.inner.max_depth.store(0, Ordering::Relaxed);
     }
 }
 
@@ -81,9 +170,12 @@ impl Network {
 pub struct Comm {
     pub rank: usize,
     net: Arc<Shared>,
-    /// local collective sequence number; all ranks must issue collectives
-    /// in the same order (MPI semantics).
-    coll_seq: u64,
+    /// per-group collective sequence numbers (keyed by group hash): the
+    /// members of a group must issue its collectives in the same order,
+    /// but collectives on *different* groups may interleave freely —
+    /// which lets e.g. the bucketed replicated-grad sync visit each
+    /// rank's own sync groups without global coordination.
+    coll_seq: HashMap<u64, u64>,
 }
 
 /// Tag namespaces so user tags, collectives, and engine-internal messages
@@ -105,12 +197,35 @@ impl Comm {
     pub fn send_shared(&self, dst: usize, tag: u64, t: Arc<Tensor>) {
         assert!(dst < self.net.n, "bad dst {dst}");
         assert!(dst != self.rank, "self-send rank {dst}");
+        let bytes = (t.numel() * 4) as u64;
         {
-            let mut bytes = self.net.bytes.lock().unwrap();
-            bytes[self.rank * self.net.n + dst] += (t.numel() * 4) as u64;
+            let mut b = self.net.bytes.lock().unwrap();
+            b[self.rank * self.net.n + dst] += bytes;
         }
+        // simulated delivery time, when the injector is installed
+        let ready_at = {
+            let mut fab = self.net.fabric.lock().unwrap();
+            fab.as_mut().map(|f| {
+                let now = Instant::now();
+                let start = now.max(f.egress_free[self.rank]).max(f.ingress_free[dst]);
+                let xfer = Duration::from_secs_f64(bytes as f64 / f.spec.bytes_per_sec);
+                let busy = start + xfer;
+                f.egress_free[self.rank] = busy;
+                f.ingress_free[dst] = busy;
+                // xorshift64 jitter draw
+                f.rng ^= f.rng << 13;
+                f.rng ^= f.rng >> 7;
+                f.rng ^= f.rng << 17;
+                let frac = (f.rng >> 11) as f64 / (1u64 << 53) as f64;
+                busy + f.spec.latency + f.spec.jitter.mul_f64(frac)
+            })
+        };
         let mut q = self.net.queues.lock().unwrap();
-        q.entry((self.rank, dst, tag)).or_default().push(t);
+        let list = q.entry((self.rank, dst, tag)).or_default();
+        list.push_back(Msg { t, ready_at });
+        self.net
+            .max_depth
+            .fetch_max(list.len() as u64, Ordering::Relaxed);
         self.net.cv.notify_all();
     }
 
@@ -129,16 +244,106 @@ impl Comm {
         let key = (src, self.rank, tag);
         let mut q = self.net.queues.lock().unwrap();
         loop {
+            let now = Instant::now();
+            let mut wait_for: Option<Duration> = None;
             if let Some(list) = q.get_mut(&key) {
-                if !list.is_empty() {
-                    let t = list.remove(0);
+                if let Some(head) = list.front() {
+                    if head.deliverable(now) {
+                        let msg = list.pop_front().unwrap();
+                        if list.is_empty() {
+                            q.remove(&key);
+                        }
+                        return msg.t;
+                    }
+                    // head still in flight: sleep until its delivery time
+                    wait_for =
+                        Some(head.ready_at.unwrap().saturating_duration_since(now));
+                }
+            }
+            q = match wait_for {
+                Some(d) => self.net.cv.wait_timeout(q, d).unwrap().0,
+                None => self.net.cv.wait(q).unwrap(),
+            };
+        }
+    }
+
+    /// Non-blocking receive (irecv + test): `None` until the message from
+    /// (src, tag) has arrived. Delivery stays in send order per key.
+    pub fn try_recv_shared(&self, src: usize, tag: u64) -> Option<Arc<Tensor>> {
+        let key = (src, self.rank, tag);
+        let mut q = self.net.queues.lock().unwrap();
+        let now = Instant::now();
+        if let Some(list) = q.get_mut(&key) {
+            if list.front().map_or(false, |m| m.deliverable(now)) {
+                let msg = list.pop_front().unwrap();
+                if list.is_empty() {
+                    q.remove(&key);
+                }
+                return Some(msg.t);
+            }
+        }
+        None
+    }
+
+    /// Non-blocking owned receive.
+    pub fn try_recv(&self, src: usize, tag: u64) -> Option<Tensor> {
+        self.try_recv_shared(src, tag).map(|a| match Arc::try_unwrap(a) {
+            Ok(t) => t,
+            Err(shared) => (*shared).clone(),
+        })
+    }
+
+    /// Non-blocking poll over a key set (testany): the first key with a
+    /// deliverable message wins. One lock acquisition for the whole set —
+    /// the ready-queue scheduler's per-term probe.
+    pub fn try_recv_any(&self, keys: &[(usize, u64)]) -> Option<(usize, Arc<Tensor>)> {
+        let mut q = self.net.queues.lock().unwrap();
+        let now = Instant::now();
+        for (i, &(src, tag)) in keys.iter().enumerate() {
+            let key = (src, self.rank, tag);
+            if let Some(list) = q.get_mut(&key) {
+                if list.front().map_or(false, |m| m.deliverable(now)) {
+                    let msg = list.pop_front().unwrap();
                     if list.is_empty() {
                         q.remove(&key);
                     }
-                    return t;
+                    return Some((i, msg.t));
                 }
             }
-            q = self.net.cv.wait(q).unwrap();
+        }
+        None
+    }
+
+    /// Blocking receive of *whichever* of `keys` = [(src, tag), ..]
+    /// arrives first (MPI waitany). Returns the index into `keys` and the
+    /// message. Ready-queue schedules use this to take work in arrival
+    /// order once local compute runs dry.
+    pub fn recv_any(&self, keys: &[(usize, u64)]) -> (usize, Arc<Tensor>) {
+        assert!(!keys.is_empty(), "recv_any over an empty key set");
+        let mut q = self.net.queues.lock().unwrap();
+        loop {
+            let now = Instant::now();
+            let mut next_ready: Option<Duration> = None;
+            for (i, &(src, tag)) in keys.iter().enumerate() {
+                let key = (src, self.rank, tag);
+                if let Some(list) = q.get_mut(&key) {
+                    if let Some(head) = list.front() {
+                        if head.deliverable(now) {
+                            let msg = list.pop_front().unwrap();
+                            if list.is_empty() {
+                                q.remove(&key);
+                            }
+                            return (i, msg.t);
+                        }
+                        let d = head.ready_at.unwrap().saturating_duration_since(now);
+                        next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
+                    }
+                }
+            }
+            q = match next_ready {
+                Some(d) => self.net.cv.wait_timeout(q, d).unwrap().0,
+                None => self.net.cv.wait(q).unwrap(),
+            };
         }
     }
 
@@ -149,20 +354,41 @@ impl Comm {
         for &r in group {
             gh = (gh ^ r as u64).wrapping_mul(0x100000001b3);
         }
-        // layout: [63]=collective  [62]=reply  [61:32]=group hash  [31:0]=seq
+        // layout: [63]=collective  [62]=reply  [61:32]=group hash  [31:0]=
+        // seq XOR the hash's high bits — the XOR keeps per-group tags
+        // unique (bijective in seq) while giving colliding 30-bit hashes
+        // another 32 bits of discrimination.
+        let seq = self.coll_seq.entry(gh).or_insert(0);
         let tag = COLLECTIVE_BIT
             | ((gh & 0x3FFF_FFFF) << 32)
-            | (self.coll_seq & 0xFFFF_FFFF);
-        self.coll_seq += 1;
+            | ((*seq ^ (gh >> 30)) & 0xFFFF_FFFF);
+        *seq += 1;
         tag
     }
 
-    /// Sum-allreduce across `group` (must contain self; all members call).
+    /// Sum-allreduce across `group` (must contain self; all members call
+    /// with the same group in the same order).
     ///
-    /// Gather-to-root + broadcast: root = lowest rank in the group. The
-    /// simulated fabric has no topology, so ring vs tree only matters to
-    /// the perf model (which models a ring, Section `perfmodel`).
+    /// Dispatch: payloads worth chunking run the bandwidth-optimal ring
+    /// (`allreduce_sum_ring`); scalars and other latency-bound messages
+    /// take the two-hop gather-to-root path (`allreduce_sum_gather`) —
+    /// the same small-message switch real collective libraries make.
     pub fn allreduce_sum(&mut self, group: &[usize], t: &Tensor) -> Tensor {
+        assert!(group.contains(&self.rank), "allreduce group excludes self");
+        if group.len() == 1 {
+            return t.clone();
+        }
+        if t.numel() < group.len() * 4 {
+            self.allreduce_sum_gather(group, t)
+        } else {
+            self.allreduce_sum_ring(group, t)
+        }
+    }
+
+    /// Gather-to-root + broadcast allreduce: root = lowest rank in the
+    /// group. Two message hops total — best for tiny payloads, but the
+    /// root's links serialize O(n) full-size transfers.
+    pub fn allreduce_sum_gather(&mut self, group: &[usize], t: &Tensor) -> Tensor {
         assert!(group.contains(&self.rank));
         if group.len() == 1 {
             return t.clone();
@@ -190,6 +416,93 @@ impl Comm {
         }
     }
 
+    /// Ring allreduce: reduce-scatter then allgather, 2(n-1) steps of
+    /// payload/n each, so every link carries 2(n-1)/n of the payload —
+    /// the collective `perfmodel` prices for the DP gradient reduction.
+    /// Chunk messages ride pooled buffers; the reduction is in place over
+    /// slices of one working copy.
+    pub fn allreduce_sum_ring(&mut self, group: &[usize], t: &Tensor) -> Tensor {
+        assert!(group.contains(&self.rank));
+        let n = group.len();
+        if n == 1 {
+            return t.clone();
+        }
+        let tag = self.next_coll_tag(group);
+        let p = group.iter().position(|&r| r == self.rank).unwrap();
+        let right = group[(p + 1) % n];
+        let left = group[(p + n - 1) % n];
+        let numel = t.numel();
+        // balanced chunk bounds, identical on every rank
+        let bounds: Vec<(usize, usize)> = (0..n)
+            .map(|i| {
+                let (q, r) = (numel / n, numel % n);
+                let lo = i * q + i.min(r);
+                (lo, lo + q + usize::from(i < r))
+            })
+            .collect();
+        let send_chunk = |me: &Comm, idx: usize, data: &[f32], tag: u64| {
+            let (lo, hi) = bounds[idx];
+            let mut buf = crate::tensor::pool::take(hi - lo);
+            buf.copy_from_slice(&data[lo..hi]);
+            me.send(right, tag, Tensor::new(vec![hi - lo], buf));
+        };
+        let mut out = t.clone();
+        // reduce-scatter: after n-1 steps this rank holds the fully
+        // reduced chunk (p+1) % n
+        for step in 0..n - 1 {
+            let sc = (p + n - step) % n;
+            let rc = (p + n - step - 1) % n;
+            send_chunk(self, sc, &out.data, tag);
+            let got = self.recv(left, tag);
+            let (lo, hi) = bounds[rc];
+            debug_assert_eq!(got.numel(), hi - lo);
+            for (o, g) in out.data[lo..hi].iter_mut().zip(got.data.iter()) {
+                *o += *g;
+            }
+            got.recycle();
+        }
+        // allgather: cascade the reduced chunks around the ring
+        for step in 0..n - 1 {
+            let sc = (p + 1 + n - step) % n;
+            let rc = (p + n - step) % n;
+            send_chunk(self, sc, &out.data, tag | 1 << 62);
+            let got = self.recv(left, tag | 1 << 62);
+            let (lo, hi) = bounds[rc];
+            debug_assert_eq!(got.numel(), hi - lo);
+            out.data[lo..hi].copy_from_slice(&got.data);
+            got.recycle();
+        }
+        out
+    }
+
+    /// Allreduce a set of tensors as one packed payload: pack flat (via a
+    /// pooled buffer) -> a single collective -> unpack in place. The
+    /// bucketing primitive behind the DP gradient reduction and the
+    /// replicated-vector grad sync; all group members must pass tensors
+    /// of identical shapes in identical order.
+    pub fn allreduce_packed(&mut self, group: &[usize], tensors: &mut [&mut Tensor]) {
+        if group.len() <= 1 || tensors.is_empty() {
+            return;
+        }
+        let total: usize = tensors.iter().map(|t| t.numel()).sum();
+        let mut flat = crate::tensor::pool::take(total);
+        let mut off = 0usize;
+        for t in tensors.iter() {
+            flat[off..off + t.numel()].copy_from_slice(&t.data);
+            off += t.numel();
+        }
+        let packed = Tensor::new(vec![total], flat);
+        let reduced = self.allreduce_sum(group, &packed);
+        packed.recycle();
+        let mut off = 0usize;
+        for t in tensors.iter_mut() {
+            let n = t.numel();
+            t.data.copy_from_slice(&reduced.data[off..off + n]);
+            off += n;
+        }
+        reduced.recycle();
+    }
+
     /// Scalar allreduce convenience (loss, grad-norm).
     pub fn allreduce_scalar(&mut self, group: &[usize], v: f32) -> f32 {
         self.allreduce_sum(group, &Tensor::scalar(v)).data[0]
@@ -204,6 +517,7 @@ impl Comm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::prop::{check, Gen};
     use std::thread;
 
     #[test]
@@ -232,6 +546,60 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_none_before_arrival_in_order_after() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        assert!(b.try_recv(0, 9).is_none(), "nothing sent yet");
+        a.send(1, 9, Tensor::scalar(1.0));
+        a.send(1, 9, Tensor::scalar(2.0));
+        assert_eq!(b.try_recv(0, 9).unwrap().data, vec![1.0]);
+        assert_eq!(b.try_recv(0, 9).unwrap().data, vec![2.0]);
+        assert!(b.try_recv(0, 9).is_none(), "queue drained");
+    }
+
+    #[test]
+    fn recv_any_returns_whichever_arrived() {
+        let net = Network::new(3);
+        let b = net.endpoint(1);
+        let c = net.endpoint(2);
+        let r = net.endpoint(0);
+        c.send(0, 5, Tensor::scalar(30.0));
+        let keys = [(1usize, 5u64), (2usize, 5u64)];
+        let (idx, got) = r.recv_any(&keys);
+        assert_eq!(idx, 1, "only rank 2's message is in flight");
+        assert_eq!(got.data, vec![30.0]);
+        b.send(0, 5, Tensor::scalar(20.0));
+        let (idx, got) = r.recv_any(&keys);
+        assert_eq!(idx, 0);
+        assert_eq!(got.data, vec![20.0]);
+    }
+
+    #[test]
+    fn fabric_latency_withholds_then_delivers() {
+        let net = Network::new(2);
+        net.set_fabric(
+            FabricSpec {
+                latency: Duration::from_millis(30),
+                jitter: Duration::ZERO,
+                bytes_per_sec: 1e12,
+            },
+            7,
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let t0 = Instant::now();
+        a.send(1, 3, Tensor::scalar(5.0));
+        assert!(b.try_recv(0, 3).is_none(), "message still in flight");
+        let got = b.recv(0, 3);
+        assert_eq!(got.data, vec![5.0]);
+        assert!(
+            t0.elapsed() >= Duration::from_millis(25),
+            "delivered before the injected latency"
+        );
+    }
+
+    #[test]
     fn allreduce_sums_over_group() {
         let net = Network::new(4);
         let group = vec![0, 1, 2, 3];
@@ -250,8 +618,62 @@ mod tests {
     }
 
     #[test]
+    fn ring_matches_gather_exactly() {
+        // integer-valued payloads add exactly in any order, so the ring
+        // must reproduce gather-to-root bit for bit
+        check("ring == gather allreduce", 25, |g: &mut Gen| {
+            let n = g.int(2, 6);
+            let numel = g.int(1, 97);
+            let net = Network::new(n);
+            let group: Vec<usize> = (0..n).collect();
+            let mut handles = Vec::new();
+            for r in 0..n {
+                let mut c = net.endpoint(r);
+                let grp = group.clone();
+                let data: Vec<f32> =
+                    (0..numel).map(|i| ((i * 7 + r * 13) % 32) as f32).collect();
+                handles.push(thread::spawn(move || {
+                    let t = Tensor::new(vec![numel], data);
+                    let ring = c.allreduce_sum_ring(&grp, &t);
+                    let gather = c.allreduce_sum_gather(&grp, &t);
+                    (ring.data, gather.data)
+                }));
+            }
+            for h in handles {
+                let (ring, gather) = h.join().unwrap();
+                if ring != gather {
+                    return Err(format!("n={n} numel={numel}: ring != gather"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn ring_on_disjoint_dp_groups() {
+        // the paper's DP groups: ranks with equal r % way share params.
+        // Both groups ring concurrently without cross-talk.
+        let net = Network::new(4);
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let mut c = net.endpoint(r);
+            let g = if r % 2 == 0 { vec![0, 2] } else { vec![1, 3] };
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![16], vec![(r + 1) as f32; 16]);
+                c.allreduce_sum_ring(&g, &t).data
+            }));
+        }
+        let sums: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert_eq!(sums[0], vec![4.0; 16]); // 1 + 3
+        assert_eq!(sums[1], vec![6.0; 16]); // 2 + 4
+        assert_eq!(sums[2], vec![4.0; 16]);
+        assert_eq!(sums[3], vec![6.0; 16]);
+    }
+
+    #[test]
     fn disjoint_groups_do_not_interfere() {
-        // the paper's DP groups: ranks with equal r % n share parameters
+        // scalar path (gather dispatch) on the r%n DP groups
         let net = Network::new(4);
         let mut handles = Vec::new();
         for r in 0..4 {
@@ -275,5 +697,50 @@ mod tests {
         assert_eq!(net.total_bytes(), 400);
         net.reset_bytes();
         assert_eq!(net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn max_queue_depth_tracks_backlog() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        assert_eq!(net.max_queue_depth(), 0);
+        for i in 0..3 {
+            a.send(1, 4, Tensor::scalar(i as f32));
+        }
+        assert_eq!(net.max_queue_depth(), 3);
+        for _ in 0..3 {
+            let _ = b.recv(0, 4);
+        }
+        // draining does not lower the high-water mark
+        assert_eq!(net.max_queue_depth(), 3);
+        net.reset_bytes();
+        assert_eq!(net.max_queue_depth(), 0);
+    }
+
+    #[test]
+    fn ring_bytes_are_2_nm1_over_n() {
+        // 4 ranks, 16 floats: each rank sends 2*(n-1) chunks of numel/n
+        // = 6 * 4 floats = 96 bytes
+        let net = Network::new(4);
+        let group = vec![0, 1, 2, 3];
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let mut c = net.endpoint(r);
+            let g = group.clone();
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![16], vec![r as f32; 16]);
+                c.allreduce_sum_ring(&g, &t)
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        // every rank ships only to its right neighbour
+        assert_eq!(net.link_bytes(0, 1), 96);
+        assert_eq!(net.link_bytes(1, 2), 96);
+        assert_eq!(net.link_bytes(2, 3), 96);
+        assert_eq!(net.link_bytes(3, 0), 96);
+        assert_eq!(net.link_bytes(0, 2), 0);
     }
 }

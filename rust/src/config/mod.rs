@@ -83,6 +83,26 @@ impl ModelConfig {
     pub fn sample_bytes(&self) -> u64 {
         (self.lat * self.lon * self.channels_padded * 4) as u64
     }
+
+    /// Parameter count implied by the architecture fields (mirrors
+    /// python configs.ModelConfig.param_count): encoder + per-block
+    /// LN/token/channel MLPs + decoder + blend gate. Synthetic configs
+    /// (benchkit, zoo) derive `param_count` from this.
+    pub fn derived_param_count(&self) -> usize {
+        let (t, d) = (self.tokens, self.d_emb);
+        let mut n = self.patch_dim * d + d;
+        for _ in 0..self.blocks {
+            n += 2 * d;
+            n += t * self.d_tok + self.d_tok;
+            n += self.d_tok * t + t;
+            n += 2 * d;
+            n += d * self.d_ch + self.d_ch;
+            n += self.d_ch * d + d;
+        }
+        n += d * self.patch_dim + self.patch_dim;
+        n += self.channels_padded;
+        n
+    }
 }
 
 /// Artifact manifest (program + primitive index, parameter ABI).

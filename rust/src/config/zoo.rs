@@ -50,6 +50,40 @@ impl ZooModel {
     pub fn param_bytes(&self) -> f64 {
         self.params_mil * 1e6 * 4.0
     }
+
+    /// Natively-runnable counterpart of this Table-1 row: the synthetic
+    /// 16x32 grid of the bench presets with this row's hidden dims
+    /// divided by `scale` (rounded up to a multiple of 16, so every
+    /// 2-/4-way sharding divides evenly). `scale=1` keeps the paper's
+    /// dims; the e2e driver defaults to 8, which puts the mid-size rows
+    /// within thread-fabric reach.
+    pub fn native_config(&self, scale: usize) -> crate::config::ModelConfig {
+        let scale = scale.max(1);
+        let dim = |v: usize| (((v + scale - 1) / scale).max(16) + 15) / 16 * 16;
+        let (lat, lon, channels, patch) = (16usize, 32usize, 20usize, 4usize);
+        let channels_padded = channels + (channels.wrapping_neg() & 3);
+        let tokens = (lat / patch) * (lon / patch);
+        let patch_dim = channels_padded * patch * patch;
+        let mut cfg = crate::config::ModelConfig {
+            name: format!("zoo{}-s{}", self.id, scale),
+            lat,
+            lon,
+            channels,
+            channels_padded,
+            patch,
+            d_emb: dim(self.d_emb),
+            d_tok: dim(self.d_tok),
+            d_ch: dim(self.d_ch),
+            blocks: 3,
+            tokens,
+            patch_dim,
+            param_count: 0,
+            flops_forward: 0,
+            channel_weights: crate::config::zoo_channel_weights(channels),
+        };
+        cfg.param_count = cfg.derived_param_count();
+        cfg
+    }
 }
 
 /// Paper Section 6: ERA5 0.25-degree sample = 721 x 1440 x 69 channels f32.
@@ -106,6 +140,23 @@ mod tests {
         assert_eq!(TABLE2[2].dp_instances(256), Some(64));
         // 4-way does not fit on fewer than 4 GPUs
         assert_eq!(TABLE2[2].dp_instances(2), None);
+    }
+
+    #[test]
+    fn native_configs_are_runnable_shapes() {
+        for row in TABLE1.iter() {
+            let cfg = row.native_config(8);
+            assert_eq!(cfg.d_emb % 16, 0);
+            assert_eq!(cfg.d_tok % 16, 0);
+            assert_eq!(cfg.d_ch % 16, 0);
+            assert_eq!(cfg.channels_padded % 4, 0);
+            assert_eq!(cfg.tokens, 32);
+            assert!(cfg.param_count > 0);
+        }
+        // scaling down preserves the zoo's workload ordering
+        let a = ZooModel::by_id(4).native_config(8);
+        let b = ZooModel::by_id(6).native_config(8);
+        assert!(b.param_count > a.param_count);
     }
 
     #[test]

@@ -12,10 +12,18 @@
 //!     zero-memory-redundancy property), shipping the mobile operand's
 //!     blocks point-to-point, and reducing partial sums at the output
 //!     owners;
-//!   * communication is overlapped with computation: outgoing blocks are
-//!     posted (isend) before local terms are computed, and partial sums
-//!     are posted before the rank turns to summing its own output blocks
-//!     — the paper's Section 4.1 schedule.
+//!   * communication overlaps computation through a *ready-queue*
+//!     schedule over the non-blocking fabric, mirroring the paper's
+//!     Section 4.1/5 isend/irecv pipelining: outgoing blocks are posted
+//!     (isend) up front; local-input terms compute while the fabric is
+//!     polled (`try_recv`); each remote term runs the moment its mobile
+//!     block lands (`recv_any` = waitany once local work runs dry); and
+//!     every partial sum is posted the moment its accumulator completes,
+//!     not after the whole term loop. Output owners receive incoming
+//!     partials in arrival order and reduce them in a fixed order. The
+//!     pre-ready-queue fixed-order pipeline survives as
+//!     `dist_matmul_blocking` — the overlap benches' baseline and a
+//!     second oracle for the scheduler.
 //!
 //! For the paper's layouts this reproduces the published schedules term
 //! for term: in 2-way each rank computes X_r W_{r,j}^T locally and
@@ -26,7 +34,7 @@
 
 pub mod layouts;
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
 
 use anyhow::Result;
@@ -318,59 +326,48 @@ fn tag_partial(seq: u64, yi: usize, yj: usize, site: usize) -> u64 {
         | site as u64
 }
 
-/// Distributed block matmul. Every rank of the group calls this with the
-/// same arguments structurally (SPMD); returns this rank's shard of Y.
-///
-/// Schedule per rank:
-///   1. post all mobile-operand blocks this rank must ship (isend);
-///   2. compute all local-input terms (overlapping the shipments);
-///   3. receive shipped blocks, compute the remaining terms;
-///   4. post partial sums for output blocks owned elsewhere;
-///   5. receive + reduce partial sums for output blocks owned here.
-pub fn dist_matmul(
-    ctx: &mut Ctx,
-    op: MatmulOp,
+/// The rank a term computes at.
+fn term_site(site: Site, x: &DistMat, w: &DistMat, t: &Term) -> usize {
+    match site {
+        Site::XOwner => x.grid.owner_of(t.x.0, t.x.1),
+        Site::WOwner => w.grid.owner_of(t.w.0, t.w.1),
+    }
+}
+
+/// The rank that owns (and may have to ship) a term's mobile operand.
+fn term_mobile_owner(site: Site, x: &DistMat, w: &DistMat, t: &Term) -> usize {
+    match site {
+        Site::XOwner => w.grid.owner_of(t.w.0, t.w.1),
+        Site::WOwner => x.grid.owner_of(t.x.0, t.x.1),
+    }
+}
+
+/// Block key of a term's mobile operand.
+fn term_mobile_key(site: Site, t: &Term) -> (usize, usize) {
+    match site {
+        Site::XOwner => t.w,
+        Site::WOwner => t.x,
+    }
+}
+
+/// Phase 1 of both schedules: post every mobile-operand block this rank
+/// must ship (isend). One Arc per block: fanning a block out to several
+/// sites enqueues reference clones, never data copies.
+fn ship_mobile_blocks(
+    comm: &Comm,
+    me: usize,
+    seq: u64,
+    site: Site,
     x: &DistMat,
     w: &DistMat,
-    y_grid: &BlockGrid,
-    site: Site,
-) -> Result<DistMat> {
-    let me = ctx.rank;
-    let seq = ctx.seq;
-    ctx.seq += 1;
-    let all_terms = terms(op, x, w, y_grid);
-
-    let site_of = |t: &Term| -> usize {
-        match site {
-            Site::XOwner => x.grid.owner_of(t.x.0, t.x.1),
-            Site::WOwner => w.grid.owner_of(t.w.0, t.w.1),
-        }
-    };
-    // mobile operand block owner for a term
-    let mobile_owner = |t: &Term| -> usize {
-        match site {
-            Site::XOwner => w.grid.owner_of(t.w.0, t.w.1),
-            Site::WOwner => x.grid.owner_of(t.x.0, t.x.1),
-        }
-    };
-    let mobile_key = |t: &Term| -> (usize, usize) {
-        match site {
-            Site::XOwner => t.w,
-            Site::WOwner => t.x,
-        }
-    };
-
-    // -- phase 1: ship mobile blocks I own to sites that need them --------
-    // One Arc per block: fanning a block out to several sites enqueues
-    // reference clones, never data copies (the old path cloned the block
-    // once per destination).
-    let mut shipped: std::collections::BTreeSet<((usize, usize), usize)> =
-        Default::default();
+    all_terms: &[Term],
+) {
+    let mut shipped: BTreeSet<((usize, usize), usize)> = Default::default();
     let mut outbox: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
-    for t in &all_terms {
-        let s = site_of(t);
-        let mo = mobile_owner(t);
-        let key = mobile_key(t);
+    for t in all_terms {
+        let s = term_site(site, x, w, t);
+        let mo = term_mobile_owner(site, x, w, t);
+        let key = term_mobile_key(site, t);
         if mo == me && s != me && shipped.insert((key, s)) {
             let arc = outbox
                 .entry(key)
@@ -382,72 +379,204 @@ pub fn dist_matmul(
                     Arc::new(blk.clone())
                 })
                 .clone();
-            ctx.comm.send_shared(s, tag_ship(seq, key.0, key.1), arc);
+            comm.send_shared(s, tag_ship(seq, key.0, key.1), arc);
         }
     }
-    drop(outbox);
+}
 
-    // -- phases 2+3: compute my terms (local inputs first = overlap) ------
-    let use_into = ctx.backend.supports_into();
-    let my_terms: Vec<&Term> = all_terms.iter().filter(|t| site_of(t) == me).collect();
+/// Resolve a term's operands (local blocks carry their device-buffer
+/// cache key; shipped blocks are activations and never cached) and reduce
+/// it straight into the partial-sum accumulator: the native backend
+/// computes in place (zero intermediate tensors), device backends combine
+/// host-side and recycle the transient.
+#[allow(clippy::too_many_arguments)]
+fn compute_term(
+    backend: &dyn Backend,
+    op: MatmulOp,
+    site: Site,
+    me: usize,
+    x: &DistMat,
+    w: &DistMat,
+    received: &BTreeMap<(usize, usize), Arc<Tensor>>,
+    partials: &mut BTreeMap<(usize, usize), Tensor>,
+    use_into: bool,
+    t: &Term,
+) -> Result<()> {
+    let (xb, xkey, wb, wkey): (&Tensor, _, &Tensor, _) = match site {
+        Site::XOwner => {
+            let xb = &x.blocks[&t.x];
+            let xkey = x.cache.map(|c| block_cache_key(c, t.x));
+            let (wb, wkey) = if w.grid.owner_of(t.w.0, t.w.1) == me {
+                (&w.blocks[&t.w], w.cache.map(|c| block_cache_key(c, t.w)))
+            } else {
+                (&*received[&t.w], None)
+            };
+            (xb, xkey, wb, wkey)
+        }
+        Site::WOwner => {
+            let wb = &w.blocks[&t.w];
+            let wkey = w.cache.map(|c| block_cache_key(c, t.w));
+            let (xb, xkey) = if x.grid.owner_of(t.x.0, t.x.1) == me {
+                (&x.blocks[&t.x], x.cache.map(|c| block_cache_key(c, t.x)))
+            } else {
+                (&*received[&t.x], None)
+            };
+            (xb, xkey, wb, wkey)
+        }
+    };
+    match partials.entry(t.y) {
+        std::collections::btree_map::Entry::Vacant(e) => {
+            if use_into {
+                let (m, n) = op.out_dims(xb, wb);
+                let mut acc = Tensor::pooled_zeros(&[m, n]);
+                backend.matmul_into(op, xb, xkey, wb, wkey, &mut acc, false)?;
+                e.insert(acc);
+            } else {
+                e.insert(backend.matmul_cached(op, xb, xkey, wb, wkey)?);
+            }
+        }
+        std::collections::btree_map::Entry::Occupied(mut e) => {
+            backend.matmul_into(op, xb, xkey, wb, wkey, e.get_mut(), true)?;
+        }
+    }
+    Ok(())
+}
+
+/// Global output dims of Y = X op W.
+fn out_global_dims(op: MatmulOp, x: &DistMat, w: &DistMat) -> (usize, usize) {
+    match op {
+        MatmulOp::NT => (x.rows, w.rows),
+        MatmulOp::NN => (x.rows, w.cols),
+        MatmulOp::TN => (x.cols, w.cols),
+    }
+}
+
+/// Distributed block matmul. Every rank of the group calls this with the
+/// same arguments structurally (SPMD); returns this rank's shard of Y.
+///
+/// Ready-queue schedule per rank:
+///   1. post all mobile-operand blocks this rank must ship (isend);
+///   2. compute terms off a ready queue: local-input terms fill the
+///      pipeline while the fabric is polled (`try_recv`); each remote
+///      term runs the moment its mobile block lands, and once local work
+///      runs dry the rank blocks on *whichever* in-flight block arrives
+///      first (`recv_any`) — no fixed receive order;
+///   3. each partial sum is posted the moment its accumulator is
+///      complete (not after the whole term loop), so downstream owners
+///      start receiving while this rank still computes;
+///   4. receive partial sums for output blocks owned here in arrival
+///      order, then apply the adds in fixed (block, sender) order so the
+///      final reduction is deterministic.
+///
+/// Note on determinism: like NCCL/MPI overlap schedules, the order in
+/// which a site *accumulates its own terms* follows operand arrival, so
+/// results can wobble within fp tolerance run to run when a rank computes
+/// several remote terms; the partial-sum reduction itself is
+/// order-fixed. `dist_matmul_blocking` remains fully deterministic.
+pub fn dist_matmul(
+    ctx: &mut Ctx,
+    op: MatmulOp,
+    x: &DistMat,
+    w: &DistMat,
+    y_grid: &BlockGrid,
+    site: Site,
+) -> Result<DistMat> {
+    let me = ctx.rank;
+    let seq = ctx.seq;
+    ctx.seq += 1;
+    let backend = ctx.backend;
+    let use_into = backend.supports_into();
+    let comm = &mut *ctx.comm;
+    let all_terms = terms(op, x, w, y_grid);
+
+    // -- phase 1: ship mobile blocks I own to sites that need them --------
+    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms);
+
+    // -- phases 2+3: ready-queue term loop --------------------------------
+    let my_terms: Vec<&Term> = all_terms
+        .iter()
+        .filter(|t| term_site(site, x, w, t) == me)
+        .collect();
+    // terms outstanding per output block, for eager partial posting
+    let mut remaining: BTreeMap<(usize, usize), usize> = BTreeMap::new();
+    for t in &my_terms {
+        *remaining.entry(t.y).or_insert(0) += 1;
+    }
+    let mut local_terms: Vec<&Term> = Vec::new();
+    // mobile blocks still in flight: block key -> (src, dependent terms)
+    let mut waiting: BTreeMap<(usize, usize), (usize, Vec<&Term>)> = BTreeMap::new();
+    for &t in &my_terms {
+        let mo = term_mobile_owner(site, x, w, t);
+        if mo == me {
+            local_terms.push(t);
+        } else {
+            waiting
+                .entry(term_mobile_key(site, t))
+                .or_insert_with(|| (mo, Vec::new()))
+                .1
+                .push(t);
+        }
+    }
+
     let mut received: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
     let mut partials: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
-    let mut ordered: Vec<&&Term> = my_terms
-        .iter()
-        .filter(|t| mobile_owner(t) == me)
-        .collect();
-    ordered.extend(my_terms.iter().filter(|t| mobile_owner(t) != me));
-    for t in ordered {
-        let t: &Term = t;
-        // make sure the mobile block is in `received` before borrowing
-        let mkey = mobile_key(t);
-        if mobile_owner(t) != me && !received.contains_key(&mkey) {
-            let src = mobile_owner(t);
-            let blk = ctx.comm.recv_shared(src, tag_ship(seq, mkey.0, mkey.1));
-            received.insert(mkey, blk);
+    let mut mine: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    let mut ready: VecDeque<&Term> = VecDeque::new();
+    let mut next_local = 0usize;
+    let mut done = 0usize;
+    let total = my_terms.len();
+    while done < total {
+        // poll the fabric: take (at most) one mobile block that has
+        // landed since the last term — a single lock acquisition
+        if !waiting.is_empty() && ready.is_empty() {
+            let polled: Vec<(usize, usize)> = waiting.keys().copied().collect();
+            let keys: Vec<(usize, u64)> = polled
+                .iter()
+                .map(|k| (waiting[k].0, tag_ship(seq, k.0, k.1)))
+                .collect();
+            if let Some((idx, blk)) = comm.try_recv_any(&keys) {
+                let mkey = polled[idx];
+                received.insert(mkey, blk);
+                let (_, ts) = waiting.remove(&mkey).unwrap();
+                ready.extend(ts);
+            }
         }
-        // local blocks of parameter matrices carry a device-buffer cache
-        // key (§Perf); shipped blocks are activations and never cached.
-        let (xb, xkey, wb, wkey): (&Tensor, _, &Tensor, _) = match site {
-            Site::XOwner => {
-                let xb = &x.blocks[&t.x];
-                let xkey = x.cache.map(|c| block_cache_key(c, t.x));
-                let (wb, wkey) = if w.grid.owner_of(t.w.0, t.w.1) == me {
-                    (&w.blocks[&t.w], w.cache.map(|c| block_cache_key(c, t.w)))
-                } else {
-                    (&*received[&t.w], None)
-                };
-                (xb, xkey, wb, wkey)
-            }
-            Site::WOwner => {
-                let wb = &w.blocks[&t.w];
-                let wkey = w.cache.map(|c| block_cache_key(c, t.w));
-                let (xb, xkey) = if x.grid.owner_of(t.x.0, t.x.1) == me {
-                    (&x.blocks[&t.x], x.cache.map(|c| block_cache_key(c, t.x)))
-                } else {
-                    (&*received[&t.x], None)
-                };
-                (xb, xkey, wb, wkey)
-            }
+        let t: &Term = if let Some(t) = ready.pop_front() {
+            t
+        } else if next_local < local_terms.len() {
+            // no remote operand has landed: overlap the wait with a
+            // local-input term
+            next_local += 1;
+            local_terms[next_local - 1]
+        } else {
+            // local work exhausted: block on whichever in-flight mobile
+            // block arrives first
+            let polled: Vec<(usize, usize)> = waiting.keys().copied().collect();
+            let keys: Vec<(usize, u64)> = polled
+                .iter()
+                .map(|k| (waiting[k].0, tag_ship(seq, k.0, k.1)))
+                .collect();
+            let (idx, blk) = comm.recv_any(&keys);
+            let mkey = polled[idx];
+            received.insert(mkey, blk);
+            let (_, ts) = waiting.remove(&mkey).unwrap();
+            ready.extend(ts);
+            ready.pop_front().unwrap()
         };
-        // reduce the term straight into the partial-sum accumulator: the
-        // native backend computes in place (zero intermediate tensors),
-        // device backends combine host-side and recycle the transient.
-        match partials.entry(t.y) {
-            std::collections::btree_map::Entry::Vacant(e) => {
-                if use_into {
-                    let (m, n) = op.out_dims(xb, wb);
-                    let mut acc = Tensor::pooled_zeros(&[m, n]);
-                    ctx.backend
-                        .matmul_into(op, xb, xkey, wb, wkey, &mut acc, false)?;
-                    e.insert(acc);
-                } else {
-                    e.insert(ctx.backend.matmul_cached(op, xb, xkey, wb, wkey)?);
-                }
-            }
-            std::collections::btree_map::Entry::Occupied(mut e) => {
-                ctx.backend
-                    .matmul_into(op, xb, xkey, wb, wkey, e.get_mut(), true)?;
+        compute_term(
+            backend, op, site, me, x, w, &received, &mut partials, use_into, t,
+        )?;
+        done += 1;
+        // eager partial posting: the accumulator may now be complete
+        let r = remaining.get_mut(&t.y).unwrap();
+        *r -= 1;
+        if *r == 0 {
+            let p = partials.remove(&t.y).unwrap();
+            let owner = y_grid.owner_of(t.y.0, t.y.1);
+            if owner == me {
+                mine.insert(t.y, p);
+            } else {
+                comm.send(owner, tag_partial(seq, t.y.0, t.y.1, me), p);
             }
         }
     }
@@ -459,34 +588,136 @@ pub fn dist_matmul(
         }
     }
 
-    // -- phase 4: post partial sums owned elsewhere ------------------------
+    // -- phase 4: collect partials for my output blocks ------------------
+    let mut y = DistMat::empty(0, 0, y_grid.clone());
+    let (yr, yc) = out_global_dims(op, x, w);
+    y.rows = yr;
+    y.cols = yc;
+    let (ybr, ybc) = y.block_dims();
+    let mut pending: Vec<((usize, usize), usize)> = Vec::new();
+    for yk in y_grid.blocks_of(me) {
+        // which sites produce partials for this block?
+        let mut senders: Vec<usize> = all_terms
+            .iter()
+            .filter(|t| t.y == yk)
+            .map(|t| term_site(site, x, w, t))
+            .collect();
+        senders.sort_unstable();
+        senders.dedup();
+        let acc = mine
+            .remove(&yk)
+            .unwrap_or_else(|| Tensor::pooled_zeros(&[ybr, ybc]));
+        y.blocks.insert(yk, acc);
+        pending.extend(senders.into_iter().filter(|&s| s != me).map(|s| (yk, s)));
+    }
+    // receive in arrival order (overlapping senders' tails), but apply
+    // the adds in (block, sender) order so the reduction itself stays
+    // deterministic run to run — the adds are noise next to the matmuls.
+    let mut arrived: BTreeMap<((usize, usize), usize), Arc<Tensor>> = BTreeMap::new();
+    while arrived.len() < pending.len() {
+        let outstanding: Vec<((usize, usize), usize)> = pending
+            .iter()
+            .filter(|k| !arrived.contains_key(k))
+            .copied()
+            .collect();
+        let keys: Vec<(usize, u64)> = outstanding
+            .iter()
+            .map(|&(yk, s)| (s, tag_partial(seq, yk.0, yk.1, s)))
+            .collect();
+        let (idx, p) = comm.recv_any(&keys);
+        arrived.insert(outstanding[idx], p);
+    }
+    for ((yk, _s), p) in arrived {
+        // partial sums were moved into the fabric, so the buffer is
+        // uniquely owned; the drained copy goes back to the pool
+        ops::add_assign(y.blocks.get_mut(&yk).unwrap(), &p);
+        if let Ok(t) = Arc::try_unwrap(p) {
+            t.recycle();
+        }
+    }
+    Ok(y)
+}
+
+/// Reference fixed-order schedule (the pre-ready-queue pipeline): local
+/// terms first, then each shipped operand awaited in term order
+/// (`recv_shared`), every partial sum posted only after the whole term
+/// loop, and incoming partials reduced in sender order. Numerically a
+/// second oracle for `dist_matmul`; wall-clock the overlap benches'
+/// baseline.
+pub fn dist_matmul_blocking(
+    ctx: &mut Ctx,
+    op: MatmulOp,
+    x: &DistMat,
+    w: &DistMat,
+    y_grid: &BlockGrid,
+    site: Site,
+) -> Result<DistMat> {
+    let me = ctx.rank;
+    let seq = ctx.seq;
+    ctx.seq += 1;
+    let backend = ctx.backend;
+    let use_into = backend.supports_into();
+    let comm = &mut *ctx.comm;
+    let all_terms = terms(op, x, w, y_grid);
+
+    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms);
+
+    let my_terms: Vec<&Term> = all_terms
+        .iter()
+        .filter(|t| term_site(site, x, w, t) == me)
+        .collect();
+    let mut received: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
+    let mut partials: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
+    let mut ordered: Vec<&Term> = my_terms
+        .iter()
+        .filter(|t| term_mobile_owner(site, x, w, t) == me)
+        .copied()
+        .collect();
+    ordered.extend(
+        my_terms
+            .iter()
+            .filter(|t| term_mobile_owner(site, x, w, t) != me)
+            .copied(),
+    );
+    for t in ordered {
+        let mkey = term_mobile_key(site, t);
+        if term_mobile_owner(site, x, w, t) != me && !received.contains_key(&mkey) {
+            let src = term_mobile_owner(site, x, w, t);
+            let blk = comm.recv_shared(src, tag_ship(seq, mkey.0, mkey.1));
+            received.insert(mkey, blk);
+        }
+        compute_term(
+            backend, op, site, me, x, w, &received, &mut partials, use_into, t,
+        )?;
+    }
+    for (_, blk) in received {
+        if let Ok(t) = Arc::try_unwrap(blk) {
+            t.recycle();
+        }
+    }
+
+    // post partial sums owned elsewhere, all at once
     let mut mine: BTreeMap<(usize, usize), Tensor> = BTreeMap::new();
     for (yk, p) in partials {
         let owner = y_grid.owner_of(yk.0, yk.1);
         if owner == me {
             mine.insert(yk, p);
         } else {
-            ctx.comm.send(owner, tag_partial(seq, yk.0, yk.1, me), p);
+            comm.send(owner, tag_partial(seq, yk.0, yk.1, me), p);
         }
     }
 
-    // -- phase 5: reduce partials for my output blocks ---------------------
+    // reduce partials for my output blocks in fixed sender order
     let mut y = DistMat::empty(0, 0, y_grid.clone());
-    // output global dims from op
-    let (yr, yc) = match op {
-        MatmulOp::NT => (x.rows, w.rows),
-        MatmulOp::NN => (x.rows, w.cols),
-        MatmulOp::TN => (x.cols, w.cols),
-    };
+    let (yr, yc) = out_global_dims(op, x, w);
     y.rows = yr;
     y.cols = yc;
     let (ybr, ybc) = y.block_dims();
     for yk in y_grid.blocks_of(me) {
-        // which sites produced partials for this block?
         let mut senders: Vec<usize> = all_terms
             .iter()
             .filter(|t| t.y == yk)
-            .map(|t| site_of(t))
+            .map(|t| term_site(site, x, w, t))
             .collect();
         senders.sort_unstable();
         senders.dedup();
@@ -494,8 +725,6 @@ pub fn dist_matmul(
             .remove(&yk)
             .unwrap_or_else(|| Tensor::pooled_zeros(&[ybr, ybc]));
         for s in senders.into_iter().filter(|&s| s != me) {
-            // partial sums were moved into the fabric, so recv is
-            // zero-copy; the drained buffer goes back to the pool
             let p = ctx.comm.recv(s, tag_partial(seq, yk.0, yk.1, s));
             ops::add_assign(&mut acc, &p);
             p.recycle();
@@ -508,11 +737,12 @@ pub fn dist_matmul(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::comm::Network;
+    use crate::comm::{FabricSpec, Network};
     use crate::runtime::native::NativeBackend;
     use crate::util::prop::{check, Gen};
     use crate::util::rng::Rng;
     use std::thread;
+    use std::time::Duration;
 
     fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
         let mut d = vec![0.0; r * c];
@@ -520,7 +750,44 @@ mod tests {
         Tensor::new(vec![r, c], d)
     }
 
-    /// Run dist_matmul across `n` rank threads and reassemble the output.
+    /// Run a dist matmul schedule across `n` rank threads on `net` and
+    /// reassemble the output.
+    #[allow(clippy::too_many_arguments)]
+    fn run_dist_on(
+        net: &Network,
+        n: usize,
+        op: MatmulOp,
+        xg: BlockGrid,
+        wg: BlockGrid,
+        yg: BlockGrid,
+        x: &Tensor,
+        w: &Tensor,
+        site: Site,
+        blocking: bool,
+    ) -> Tensor {
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let mut comm = net.endpoint(r);
+            let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
+            let (x, w) = (x.clone(), w.clone());
+            handles.push(thread::spawn(move || {
+                let backend = NativeBackend;
+                let mut ctx = Ctx::new(r, &mut comm, &backend);
+                let xd = DistMat::from_global(&x, xg, r);
+                let wd = DistMat::from_global(&w, wg, r);
+                if blocking {
+                    dist_matmul_blocking(&mut ctx, op, &xd, &wd, &yg, site).unwrap()
+                } else {
+                    dist_matmul(&mut ctx, op, &xd, &wd, &yg, site).unwrap()
+                }
+            }));
+        }
+        let parts: Vec<DistMat> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let refs: Vec<&DistMat> = parts.iter().collect();
+        DistMat::assemble(&refs)
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn run_dist(
         n: usize,
         op: MatmulOp,
@@ -532,22 +799,7 @@ mod tests {
         site: Site,
     ) -> Tensor {
         let net = Network::new(n);
-        let mut handles = Vec::new();
-        for r in 0..n {
-            let mut comm = net.endpoint(r);
-            let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
-            let (x, w) = (x.clone(), w.clone());
-            handles.push(thread::spawn(move || {
-                let backend = NativeBackend;
-                let mut ctx = Ctx::new(r, &mut comm, &backend);
-                let xd = DistMat::from_global(&x, xg, r);
-                let wd = DistMat::from_global(&w, wg, r);
-                dist_matmul(&mut ctx, op, &xd, &wd, &yg, site).unwrap()
-            }));
-        }
-        let parts: Vec<DistMat> = handles.into_iter().map(|h| h.join().unwrap()).collect();
-        let refs: Vec<&DistMat> = parts.iter().collect();
-        DistMat::assemble(&refs)
+        run_dist_on(&net, n, op, xg, wg, yg, x, w, site, false)
     }
 
     #[test]
@@ -658,6 +910,67 @@ mod tests {
     }
 
     #[test]
+    fn property_ready_queue_matches_serial_under_delivery_delay() {
+        // the satellite fault injector: seeded per-message delays scramble
+        // arrival order; the ready-queue schedule (and the blocking
+        // reference) must still reproduce the serial product.
+        check("ready-queue == serial under delay", 12, |g: &mut Gen| {
+            let rb = g.int(1, 2);
+            let cb = g.int(1, 2);
+            let kb = g.int(1, 3);
+            let n = g.int(2, 4);
+            let (br, bc, bk) = (g.int(1, 4), g.int(1, 4), g.int(1, 4));
+            let (m, nn, kk) = (rb * br, cb * bc, kb * bk);
+            let mut mk_grid = |r: usize, c: usize| -> BlockGrid {
+                BlockGrid::new(
+                    (0..r)
+                        .map(|_| (0..c).map(|_| g.int(0, n - 1)).collect())
+                        .collect(),
+                )
+            };
+            let xg = mk_grid(rb, kb);
+            let wg = mk_grid(cb, kb);
+            let yg = mk_grid(rb, cb);
+            let x = Tensor::new(vec![m, kk], g.f32s(m * kk));
+            let w = Tensor::new(vec![nn, kk], g.f32s(nn * kk));
+            let site = if g.bool() { Site::XOwner } else { Site::WOwner };
+            let net = Network::new(n);
+            net.set_fabric(
+                FabricSpec {
+                    latency: Duration::from_micros(30),
+                    jitter: Duration::from_micros(400),
+                    bytes_per_sec: 1e9,
+                },
+                g.seed,
+            );
+            let got = run_dist_on(
+                &net,
+                n,
+                MatmulOp::NT,
+                xg.clone(),
+                wg.clone(),
+                yg.clone(),
+                &x,
+                &w,
+                site,
+                false,
+            );
+            let want = ops::matmul_nt(&x, &w);
+            let err = got.max_abs_diff(&want);
+            if err >= 1e-3 {
+                return Err(format!("ready-queue err {err}"));
+            }
+            let got_blocking =
+                run_dist_on(&net, n, MatmulOp::NT, xg, wg, yg, &x, &w, site, true);
+            let err = got_blocking.max_abs_diff(&want);
+            if err >= 1e-3 {
+                return Err(format!("blocking err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn property_nn_tn_random_grids() {
         check("nn/tn dist == serial", 30, |g: &mut Gen| {
             let rb = g.int(1, 2);
@@ -703,6 +1016,51 @@ mod tests {
                 Ok(())
             } else {
                 Err(format!("op {op:?} err {err}"))
+            }
+        });
+    }
+
+    #[test]
+    fn blocking_schedule_matches_ready_queue() {
+        check("blocking == ready-queue", 20, |g: &mut Gen| {
+            let rb = g.int(1, 3);
+            let cb = g.int(1, 3);
+            let kb = g.int(1, 3);
+            let n = g.int(1, 4);
+            let (br, bc, bk) = (g.int(1, 3), g.int(1, 3), g.int(1, 3));
+            let (m, nn, kk) = (rb * br, cb * bc, kb * bk);
+            let mut mk_grid = |r: usize, c: usize| -> BlockGrid {
+                BlockGrid::new(
+                    (0..r)
+                        .map(|_| (0..c).map(|_| g.int(0, n - 1)).collect())
+                        .collect(),
+                )
+            };
+            let xg = mk_grid(rb, kb);
+            let wg = mk_grid(cb, kb);
+            let yg = mk_grid(rb, cb);
+            let x = Tensor::new(vec![m, kk], g.f32s(m * kk));
+            let w = Tensor::new(vec![nn, kk], g.f32s(nn * kk));
+            let site = if g.bool() { Site::XOwner } else { Site::WOwner };
+            let net = Network::new(n);
+            let a = run_dist_on(
+                &net,
+                n,
+                MatmulOp::NT,
+                xg.clone(),
+                wg.clone(),
+                yg.clone(),
+                &x,
+                &w,
+                site,
+                false,
+            );
+            let b = run_dist_on(&net, n, MatmulOp::NT, xg, wg, yg, &x, &w, site, true);
+            let err = a.max_abs_diff(&b);
+            if err < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("schedules diverge: {err}"))
             }
         });
     }

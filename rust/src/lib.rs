@@ -27,7 +27,14 @@
 //! survive in `tensor::ref_kernels` as the differential-testing oracle.
 //! The jigsaw engine ships blocks over the fabric as `Arc`-shared
 //! messages (one materialization per block regardless of fan-out) and
-//! reduces partial sums in place through `Backend::matmul_into`.
+//! reduces partial sums in place through `Backend::matmul_into`. The
+//! fabric itself is non-blocking end to end ([`comm`]): `dist_matmul`
+//! runs a ready-queue schedule (poll `try_recv`, compute whichever
+//! term's operands arrived, post each partial sum as its accumulator
+//! completes), collectives ride a ring reduce-scatter + allgather, and
+//! the DP gradient reduction packs parameter grads into flat buckets —
+//! the paper's isend/irecv overlap, measurable under the fabric's
+//! injected-delay model (`BENCH_overlap.json`).
 //!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind

@@ -4,9 +4,13 @@
 //!
 //! Every heavy matmul goes through the runtime backend (PJRT primitives);
 //! communication points sit *between* backend executions, exactly where
-//! the paper's MPI isend/irecv sit between cuBLAS calls. Layer norms use
-//! local channel-shard statistics (paper Section 5), which the AOT oracle
-//! reproduces with `ln_groups = 2`.
+//! the paper's MPI isend/irecv sit between cuBLAS calls — and each
+//! `dist_matmul` below runs the ready-queue overlap schedule internally,
+//! so a layer's exchanges hide under its own block compute. Layer norms
+//! use local channel-shard statistics (paper Section 5), which the AOT
+//! oracle reproduces with `ln_groups = 2`; their replicated affine grads
+//! are reconciled by the bucketed per-sync-group reduce in
+//! `PStore::sync_replicated_grads`.
 
 use std::collections::BTreeMap;
 

@@ -111,12 +111,42 @@ impl PStore {
 
     /// Allreduce grads of replicated vectors within their sync groups
     /// (the paper's pairwise layer-norm gradient reduce, Section 5).
+    ///
+    /// Vectors sharing a sync group are packed into one flat payload and
+    /// reduced with a single collective per group instead of one per
+    /// vector — the same bucketing the DP gradient reduction uses.
+    /// Groups are visited in a globally sorted order, so overlapping
+    /// groups on different ranks can never issue collectives in
+    /// conflicting orders.
     pub fn sync_replicated_grads(&mut self, comm: &mut Comm) {
+        let mut by_group: BTreeMap<Vec<usize>, Vec<&mut Tensor>> = BTreeMap::new();
         for v in self.vecs.values_mut() {
             if v.sync_group.len() > 1 {
-                v.local = comm.allreduce_sum(&v.sync_group.clone(), &v.local);
+                by_group
+                    .entry(v.sync_group.clone())
+                    .or_default()
+                    .push(&mut v.local);
             }
         }
+        for (group, mut tensors) in by_group {
+            comm.allreduce_packed(&group, &mut tensors);
+        }
+    }
+
+    /// Every local gradient tensor, in a deterministic order shared by
+    /// all ranks of a DP group (same preset => same keys): the flat view
+    /// the bucketed DP gradient reduction packs from.
+    pub fn grad_tensors_mut(&mut self) -> Vec<&mut Tensor> {
+        let mut out: Vec<&mut Tensor> = Vec::new();
+        for m in self.mats.values_mut() {
+            for b in m.blocks.values_mut() {
+                out.push(b);
+            }
+        }
+        for v in self.vecs.values_mut() {
+            out.push(&mut v.local);
+        }
+        out
     }
 
     pub fn scale_all(&mut self, s: f32) {
