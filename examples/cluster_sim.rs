@@ -6,6 +6,7 @@
 
 use jigsaw::baselines::{fsdp_step, megatron_step};
 use jigsaw::config::zoo::TABLE1;
+use jigsaw::jigsaw::Mesh;
 use jigsaw::perfmodel::{simulate_step, ClusterSpec, Precision, Workload};
 use jigsaw::util::table::{fmt, Table};
 
@@ -20,10 +21,18 @@ fn main() -> anyhow::Result<()> {
         m.tflops_fwd, m.params_mil
     );
     let mut t = Table::new(&["scheme", "io (s)", "compute (s)", "mp exposed (s)", "step (s)"]);
-    for (name, way) in [("1-way", 1usize), ("jigsaw 2-way", 2), ("jigsaw 4-way", 4)] {
+    let shapes = [
+        ("1x1", 1usize),
+        ("jigsaw 1x2", 2),
+        ("jigsaw 2x2", 4),
+        ("jigsaw 2x4", 8),
+        ("jigsaw 4x4", 16),
+    ];
+    for (name, way) in shapes {
+        let mesh = Mesh::from_degree(way)?;
         let st = simulate_step(
             &cluster,
-            &Workload { model: m, way, dp: 1, precision: Precision::Tf32, dataload: true },
+            &Workload { model: m, mesh, dp: 1, precision: Precision::Tf32, dataload: true },
         );
         t.row(&[
             name.to_string(),
@@ -50,10 +59,11 @@ fn main() -> anyhow::Result<()> {
     println!("I/O-bound regime (model 1, 0.25 TFLOPs): domain parallelism divides the read volume:");
     let small = TABLE1[0];
     let mut t2 = Table::new(&["scheme", "io (s)", "step (s)"]);
-    for (name, way) in [("1-way", 1usize), ("jigsaw 4-way", 4)] {
+    for (name, way) in [("1x1", 1usize), ("jigsaw 2x2", 4)] {
+        let mesh = Mesh::from_degree(way)?;
         let st = simulate_step(
             &cluster,
-            &Workload { model: small, way, dp: 1, precision: Precision::Tf32, dataload: true },
+            &Workload { model: small, mesh, dp: 1, precision: Precision::Tf32, dataload: true },
         );
         t2.row(&[name.to_string(), fmt(st.io), fmt(st.total)]);
     }

@@ -9,8 +9,7 @@ use std::sync::Arc;
 
 use jigsaw::benchkit::synth_config;
 use jigsaw::comm::Network;
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::metrics::lat_weighted_rmse;
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::params::shard_params;
@@ -53,10 +52,11 @@ fn main() -> anyhow::Result<()> {
     let params = r1.final_params;
 
     // fine-tune on rank 0 (1-way) with randomized rollout
-    let store = shard_params(&cfg, Way::One, 0, &params);
-    let mut model = DistModel::new(cfg.clone(), Way::One, 0, store);
+    let mesh = Mesh::unit();
+    let store = shard_params(&cfg, &mesh, 0, &params)?;
+    let mut model = DistModel::new(cfg.clone(), &mesh, 0, store);
     let mut loader =
-        jigsaw::data::ShardedLoader::new(&cfg, 1, 0, spec2.n_times, 1, 99, spec2.n_modes);
+        jigsaw::data::ShardedLoader::new(&cfg, &mesh, 0, spec2.n_times, 1, 99, spec2.n_modes)?;
     let net = Network::new(1);
     let mut comm = net.endpoint(0);
     let mut adam = jigsaw::optim::Adam::new(&model.params, spec2.lr);
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
     for step in 0..spec2.steps {
         let item = loader.next_item();
         let rollout = 1 + rng.below(spec2.max_rollout);
-        let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+        let mut ctx = Ctx::new(mesh, 0, &mut comm, backend.as_ref());
         let (loss, grads) = model.loss_and_grad(&mut ctx, &item.x, &item.y, rollout)?;
         let clip = jigsaw::optim::Adam::clip_scale(&grads, &mut comm, &[0]);
         adam.update(&mut model.params, &grads, clip);
@@ -80,7 +80,7 @@ fn main() -> anyhow::Result<()> {
     let (x0, _) = loader.read_shard(t0);
     for lead in [1usize, 2, 4, 8, 12, 20] {
         let (target, _) = loader.read_shard(t0 + lead as f32);
-        let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+        let mut ctx = Ctx::new(mesh, 0, &mut comm, backend.as_ref());
         let (pred, _) = model.forward(&mut ctx, &x0, lead)?;
         let rmse_model = mean_rmse(&pred, &target, cfg.lat);
         let rmse_persist = mean_rmse(&x0, &target, cfg.lat);

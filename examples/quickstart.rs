@@ -7,8 +7,7 @@ use std::sync::Arc;
 
 use jigsaw::comm::Network;
 use jigsaw::config::{artifacts_dir, Manifest, ModelConfig};
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::init_global_params;
 use jigsaw::model::params::shard_params;
@@ -39,24 +38,24 @@ fn main() -> anyhow::Result<()> {
     rng.fill_normal(&mut d, 1.0);
     let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
 
-    let way = 2usize;
+    let mesh = Mesh::from_degree(2)?;
     let global = init_global_params(&cfg, 0);
-    let net = Network::new(way);
+    let net = Network::new(mesh.n());
     let mut handles = Vec::new();
-    for r in 0..way {
+    for r in 0..mesh.n() {
         let cfg = cfg.clone();
         let global = global.clone();
         let backend = backend.clone();
         let mut comm = net.endpoint(r);
         let (x, y) = (x.clone(), y.clone());
         handles.push(std::thread::spawn(move || -> anyhow::Result<f32> {
-            let store = shard_params(&cfg, Way::Two, r, &global);
-            let model = DistModel::new(cfg, Way::Two, r, store);
+            let store = shard_params(&cfg, &mesh, r, &global)?;
+            let model = DistModel::new(cfg, &mesh, r, store);
             let (la, _, lc) = model.local_dims();
             let (lat0, ch0) = (model.lat_offset(), model.ch_offset());
             let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
             let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
-            let mut ctx = Ctx::new(r, &mut comm, backend.as_ref());
+            let mut ctx = Ctx::new(mesh, r, &mut comm, backend.as_ref());
             let (loss, grads) = model.loss_and_grad(&mut ctx, &xl, &yl, 1)?;
             let gnorm = grads.global_norm_sq_contrib().sqrt();
             println!("  rank {r}: loss {loss:.5}, local |g| {gnorm:.5}");

@@ -5,7 +5,7 @@
 //! per-shard Adam. Logs the loss curve and asserts it decreases.
 //!
 //!     make artifacts && cargo run --release --example train_e2e -- \
-//!         [--preset e2e100m] [--way 2] [--steps 200] [--lr 3e-4]
+//!         [--preset e2e100m] [--mesh 1x2 | --way 2] [--steps 200] [--lr 3e-4]
 //!
 //! Alternatively `--zoo <id>` (1-9) trains a scaled-down counterpart of
 //! the paper's Table-1 row on the native kernel path — no artifacts
@@ -57,8 +57,13 @@ fn main() -> anyhow::Result<()> {
         (cfg, backend)
     };
 
-    let mut spec = TrainSpec::quick(
-        flag(&flags, "way", 2usize),
+    // --mesh TOKxCH wins; --way N maps to the balanced mesh of degree N.
+    // Invalid shapes (4x2, an axis that doesn't divide the model) come
+    // back as typed MeshErrors through anyhow.
+    let mesh = jigsaw::cli::mesh_flag(&flags, 2)?;
+    mesh.validate_config(&cfg)?;
+    let mut spec = TrainSpec::with_mesh(
+        mesh,
         flag(&flags, "dp", 1usize),
         flag(&flags, "steps", if zoo > 0 { 60 } else { 200 }),
     );
@@ -68,10 +73,11 @@ fn main() -> anyhow::Result<()> {
     spec.n_modes = 16;
     spec.val_every = flag(&flags, "val-every", 50usize);
     println!(
-        "e2e: preset={} ({:.1}M params), way={}, dp={}, steps={}, backend={}",
+        "e2e: preset={} ({:.1}M params), mesh={} ({}-way), dp={}, steps={}, backend={}",
         cfg.name,
         cfg.param_count as f64 / 1e6,
-        spec.way,
+        spec.mesh,
+        spec.way(),
         spec.dp,
         spec.steps,
         backend.name()

@@ -28,7 +28,7 @@ fn main() {
         let model = nearest_model(plan);
         let base = Workload {
             model,
-            way: plan.way,
+            mesh: plan.mesh().unwrap(),
             dp: 1,
             precision: Precision::Tf32,
             dataload: true,

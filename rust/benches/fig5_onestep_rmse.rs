@@ -9,8 +9,7 @@ use std::sync::Arc;
 use jigsaw::benchkit::{banner, csv_path, synth_config};
 use jigsaw::comm::Network;
 use jigsaw::data::ShardedLoader;
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::metrics::lat_weighted_rmse;
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::params::shard_params;
@@ -37,9 +36,10 @@ fn main() {
     );
 
     // evaluate on 1 rank with the reassembled parameters
-    let store = shard_params(&cfg, Way::One, 0, &r.final_params);
-    let model = DistModel::new(cfg.clone(), Way::One, 0, store);
-    let mut loader = ShardedLoader::new(&cfg, 1, 0, 8, 1, 77, spec.n_modes);
+    let store = shard_params(&cfg, &Mesh::unit(), 0, &r.final_params).unwrap();
+    let model = DistModel::new(cfg.clone(), &Mesh::unit(), 0, store);
+    let mut loader =
+        ShardedLoader::new(&cfg, &Mesh::unit(), 0, 8, 1, 77, spec.n_modes).unwrap();
     let net = Network::new(1);
     let mut comm = net.endpoint(0);
 
@@ -52,7 +52,7 @@ fn main() {
     for &t0 in &val_times {
         let (x, _) = loader.read_shard(t0 as f32);
         let (y, _) = loader.read_shard((t0 + 1) as f32);
-        let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+        let mut ctx = Ctx::new(Mesh::unit(), 0, &mut comm, backend.as_ref());
         let (pred, _) = model.forward(&mut ctx, &x, 1).unwrap();
         for (acc, p) in [
             (&mut rmse_model, &pred),

@@ -11,8 +11,7 @@ use std::sync::Arc;
 use jigsaw::benchkit::{banner, csv_path, synth_config};
 use jigsaw::comm::Network;
 use jigsaw::data::ShardedLoader;
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::metrics::lat_weighted_rmse;
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::params::shard_params;
@@ -42,9 +41,11 @@ fn main() {
     let r = train(&cfg, &spec, backend.clone()).unwrap();
 
     // fine-tune on 1 rank with randomized rollout lengths
-    let store = shard_params(&cfg, Way::One, 0, &r.final_params);
-    let mut model = DistModel::new(cfg.clone(), Way::One, 0, store);
-    let mut loader = ShardedLoader::new(&cfg, 1, 0, spec.n_times, 1, 42, spec.n_modes);
+    let store = shard_params(&cfg, &Mesh::unit(), 0, &r.final_params).unwrap();
+    let mut model = DistModel::new(cfg.clone(), &Mesh::unit(), 0, store);
+    let mut loader =
+        ShardedLoader::new(&cfg, &Mesh::unit(), 0, spec.n_times, 1, 42, spec.n_modes)
+            .unwrap();
     let net = Network::new(1);
     let mut comm = net.endpoint(0);
     let mut adam = Adam::new(&model.params, 4e-4);
@@ -52,7 +53,7 @@ fn main() {
     for _ in 0..60 {
         let item = loader.next_item();
         let rollout = 1 + rng.below(4);
-        let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+        let mut ctx = Ctx::new(Mesh::unit(), 0, &mut comm, backend.as_ref());
         let (_, grads) = model
             .loss_and_grad(&mut ctx, &item.x, &item.y, rollout)
             .unwrap();
@@ -68,7 +69,7 @@ fn main() {
     let mut monotonic_violations = 0;
     for lead in 1..=20usize {
         let (y, _) = loader.read_shard(t0 + lead as f32);
-        let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+        let mut ctx = Ctx::new(Mesh::unit(), 0, &mut comm, backend.as_ref());
         let (pred, _) = model.forward(&mut ctx, &x0, lead).unwrap();
         let rm = mean(&lat_weighted_rmse(&pred, &y, cfg.lat, 0), cfg.channels);
         let rp = mean(&lat_weighted_rmse(&x0, &y, cfg.lat, 0), cfg.channels);

@@ -9,6 +9,7 @@
 
 use jigsaw::benchkit::{banner, csv_path};
 use jigsaw::config::zoo::TABLE1;
+use jigsaw::jigsaw::Mesh;
 use jigsaw::perfmodel::{
     flops_per_gpu, simulate_step, ClusterSpec, Precision, Workload,
 };
@@ -29,8 +30,9 @@ fn main() {
                 match model_at(m.tflops_fwd * way as f64) {
                     None => "-".into(),
                     Some(scaled) => {
+                        let mesh = Mesh::from_degree(way).unwrap();
                         let w = Workload {
-                            model: scaled, way, dp: 1, precision, dataload: true,
+                            model: scaled, mesh, dp: 1, precision, dataload: true,
                         };
                         fmt(flops_per_gpu(&cluster, &w) / 1e12)
                     }
@@ -38,7 +40,7 @@ fn main() {
             };
             let st = simulate_step(
                 &cluster,
-                &Workload { model: *m, way: 1, dp: 1, precision, dataload: true },
+                &Workload { model: *m, mesh: Mesh::unit(), dp: 1, precision, dataload: true },
             );
             let regime = if st.io >= st.total { "I/O-bound" } else { "compute-bound" };
             t.row(&[
@@ -59,7 +61,8 @@ fn main() {
 
     // -- anchor assertions -------------------------------------------------
     let frac = |m: usize, way: usize, p: Precision, dl: bool| {
-        let w = Workload { model: TABLE1[m], way, dp: 1, precision: p, dataload: dl };
+        let mesh = Mesh::from_degree(way).unwrap();
+        let w = Workload { model: TABLE1[m], mesh, dp: 1, precision: p, dataload: dl };
         flops_per_gpu(&cluster, &w) / p.peak_flops()
     };
     // fp32 1-way reaches ~81% of peak in the compute-bound regime
@@ -74,9 +77,11 @@ fn main() {
     // small per-GPU workloads: parallel beats 1-way under TF32 (I/O-bound,
     // Fig 7 right) — 4-way at 0.25 TF/GPU runs the 1-TF model
     let w1 = flops_per_gpu(&cluster, &Workload {
-        model: TABLE1[0], way: 1, dp: 1, precision: Precision::Tf32, dataload: true });
+        model: TABLE1[0], mesh: Mesh::unit(), dp: 1,
+        precision: Precision::Tf32, dataload: true });
     let w4 = flops_per_gpu(&cluster, &Workload {
-        model: TABLE1[2], way: 4, dp: 1, precision: Precision::Tf32, dataload: true });
+        model: TABLE1[2], mesh: Mesh::from_degree(4).unwrap(), dp: 1,
+        precision: Precision::Tf32, dataload: true });
     assert!(w4 > w1, "domain parallelism must win the I/O-bound regime: {w1} vs {w4}");
     println!("roofline anchors reproduced (81%/43% baselines, 2-way near-unity, I/O-bound wins) — OK");
 }

@@ -1,17 +1,20 @@
-//! Paper Fig 8: strong scaling of 1/4/16-TFLOP models over 1/2/4-way
-//! jigsaw, in the four quadrants {no data loading, full loop} x
+//! Paper Fig 8: strong scaling of 1/4/16-TFLOP models over jigsaw
+//! meshes, in the four quadrants {no data loading, full loop} x
 //! {fp32, TF32}, with the Megatron-LM reference speedups, plus a
 //! *measured* strong-scaling run of the real engine at `tiny`/`small`
 //! scale (wallclock + comm bytes on this testbed).
 //!
 //! Paper anchors: fp32 no-dataload 1.4B speedups 1.9 / 2.7 vs
-//! Megatron-LM's 1.6 / 2.3.
+//! Megatron-LM's 1.6 / 2.3. Beyond the paper: the mesh API sweeps the
+//! 8-way (2x4) and 16-way (4x4) regimes the hand-written layouts could
+//! not express, including the flat-vs-square comparison at degree 4.
 
 use std::sync::Arc;
 
 use jigsaw::baselines::{MEGATRON_STRONG_2WAY, MEGATRON_STRONG_4WAY};
 use jigsaw::benchkit::{banner, csv_path, time_best};
 use jigsaw::config::zoo::{ZooModel, TABLE1};
+use jigsaw::jigsaw::Mesh;
 use jigsaw::perfmodel::{strong_speedup, ClusterSpec, Precision};
 use jigsaw::runtime::native::NativeBackend;
 use jigsaw::runtime::Backend;
@@ -23,6 +26,8 @@ use jigsaw::util::table::{fmt, Table};
 fn main() {
     let cluster = ClusterSpec::horeka();
     let models: [ZooModel; 3] = [TABLE1[2], TABLE1[4], TABLE1[6]]; // 1/4/16 TF
+    let mesh2 = Mesh::from_degree(2).unwrap();
+    let mesh4 = Mesh::from_degree(4).unwrap();
 
     for (dataload, dl_name) in [(false, "no data loading"), (true, "full training loop")] {
         for precision in [Precision::Fp32, Precision::Tf32] {
@@ -32,8 +37,8 @@ fn main() {
             for m in models {
                 t.row(&[
                     fmt(m.tflops_fwd),
-                    fmt(strong_speedup(&cluster, m, 2, precision, dataload)),
-                    fmt(strong_speedup(&cluster, m, 4, precision, dataload)),
+                    fmt(strong_speedup(&cluster, m, &mesh2, precision, dataload)),
+                    fmt(strong_speedup(&cluster, m, &mesh4, precision, dataload)),
                 ]);
             }
             t.row(&[
@@ -55,10 +60,32 @@ fn main() {
     }
 
     // anchor: fp32 no-dataload 16TF beats Megatron on both ways
-    let s2 = strong_speedup(&cluster, TABLE1[6], 2, Precision::Fp32, false);
-    let s4 = strong_speedup(&cluster, TABLE1[6], 4, Precision::Fp32, false);
+    let s2 = strong_speedup(&cluster, TABLE1[6], &mesh2, Precision::Fp32, false);
+    let s4 = strong_speedup(&cluster, TABLE1[6], &mesh4, Precision::Fp32, false);
     assert!(s2 > MEGATRON_STRONG_2WAY && s4 > MEGATRON_STRONG_4WAY,
         "jigsaw must beat Megatron in compute-bound fp32: {s2} {s4}");
+
+    // -- mesh-shape sweep through 8-/16-way (beyond the paper) ------------
+    banner("Fig 8 (mesh sweep)", "strong scaling over mesh shapes, fp32 no-dataload");
+    let sweep_meshes: Vec<Mesh> = [(1usize, 2usize), (2, 2), (1, 4), (2, 4), (4, 4)]
+        .iter()
+        .map(|&(t, c)| Mesh::new(t, c).unwrap())
+        .collect();
+    let mut t = Table::new(&["model TFLOPs", "1x2", "2x2", "1x4", "2x4", "4x4"]);
+    for m in models {
+        let mut row = vec![fmt(m.tflops_fwd)];
+        for mesh in &sweep_meshes {
+            row.push(fmt(strong_speedup(&cluster, m, mesh, Precision::Fp32, false)));
+        }
+        t.row(&row);
+    }
+    println!("{}", t.render());
+    t.write_csv(&csv_path("fig8_mesh_sweep")).unwrap();
+    // larger meshes keep helping the biggest model in the compute-bound
+    // regime even after the contention premium
+    let s8 = strong_speedup(
+        &cluster, TABLE1[6], &Mesh::new(2, 4).unwrap(), Precision::Fp32, false);
+    assert!(s8 > s4, "8-way must extend the 16TF fp32 speedup: {s4} -> {s8}");
 
     // -- measured strong scaling on the real engine (CPU testbed) ---------
     banner("Fig 8 (measured)", "real jigsaw engine, tiny preset, native backend");
@@ -72,14 +99,18 @@ fn main() {
     rng.fill_normal(&mut d, 1.0);
     let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
     let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
-    let mut t = Table::new(&["way", "step wall (ms)", "note"]);
-    for way in [1usize, 2, 4] {
+    let mut t = Table::new(&["mesh", "step wall (ms)", "note"]);
+    for way in [1usize, 2, 4, 8] {
+        let mesh = Mesh::from_degree(way).unwrap();
+        if mesh.validate_config(&cfg).is_err() {
+            continue;
+        }
         let secs = time_best(3, || {
-            run_dist_loss_and_grad(&cfg, way, &global, &x, &y, backend.clone(), 1)
+            run_dist_loss_and_grad(&cfg, &mesh, &global, &x, &y, backend.clone(), 1)
                 .unwrap();
         });
         t.row(&[
-            way.to_string(),
+            mesh.to_string(),
             fmt(secs * 1e3),
             "single-core: concurrency not parallelism".into(),
         ]);

@@ -10,6 +10,7 @@
 use jigsaw::baselines::MEGATRON_WEAK_EFF;
 use jigsaw::benchkit::{banner, csv_path};
 use jigsaw::config::zoo::{ZooModel, TABLE1};
+use jigsaw::jigsaw::Mesh;
 use jigsaw::perfmodel::{weak_efficiency, ClusterSpec, Precision};
 use jigsaw::util::table::{fmt, Table};
 
@@ -26,6 +27,8 @@ fn series() -> Vec<(&'static str, ZooModel, ZooModel, ZooModel)> {
 
 fn main() {
     let cluster = ClusterSpec::horeka();
+    let mesh2 = Mesh::from_degree(2).unwrap();
+    let mesh4 = Mesh::from_degree(4).unwrap();
     for (dataload, dl_name) in [(false, "no data loading"), (true, "full training loop")] {
         for precision in [Precision::Fp32, Precision::Tf32] {
             banner("Fig 9", &format!("weak scaling, {precision:?}, {dl_name}"));
@@ -33,8 +36,8 @@ fn main() {
             for (name, base, m2, m4) in series() {
                 t.row(&[
                     name.to_string(),
-                    fmt(weak_efficiency(&cluster, base, m2, 2, precision, dataload)),
-                    fmt(weak_efficiency(&cluster, base, m4, 4, precision, dataload)),
+                    fmt(weak_efficiency(&cluster, base, m2, &mesh2, precision, dataload)),
+                    fmt(weak_efficiency(&cluster, base, m4, &mesh4, precision, dataload)),
                 ]);
             }
             t.row(&["Megatron-LM ref".into(), "-".into(), fmt(MEGATRON_WEAK_EFF)]);
@@ -53,12 +56,13 @@ fn main() {
 
     // anchors
     let small_super =
-        weak_efficiency(&cluster, TABLE1[0], TABLE1[2], 4, Precision::Tf32, true);
+        weak_efficiency(&cluster, TABLE1[0], TABLE1[2], &mesh4, Precision::Tf32, true);
     assert!(small_super > 1.0, "small I/O-bound series must superscale: {small_super}");
-    let big = weak_efficiency(&cluster, TABLE1[6], TABLE1[8], 4, Precision::Tf32, true);
+    let big =
+        weak_efficiency(&cluster, TABLE1[6], TABLE1[8], &mesh4, Precision::Tf32, true);
     assert!(big < 1.0, "largest series must not superscale: {big}");
     let fp32_2way =
-        weak_efficiency(&cluster, TABLE1[2], TABLE1[3], 2, Precision::Fp32, false);
+        weak_efficiency(&cluster, TABLE1[2], TABLE1[3], &mesh2, Precision::Fp32, false);
     assert!(
         fp32_2way > MEGATRON_WEAK_EFF,
         "2-way compute-bound weak efficiency {fp32_2way} must beat Megatron 0.82"

@@ -15,7 +15,7 @@ use std::time::Duration;
 
 use jigsaw::benchkit::{banner, csv_path, time_best};
 use jigsaw::comm::{FabricSpec, Network};
-use jigsaw::jigsaw::{dist_matmul, dist_matmul_blocking, BlockGrid, Ctx, DistMat, Site};
+use jigsaw::jigsaw::{dist_matmul, dist_matmul_blocking, BlockGrid, Ctx, DistMat, Mesh, Site};
 use jigsaw::runtime::native::NativeBackend;
 use jigsaw::runtime::{Backend, MatmulOp};
 use jigsaw::tensor::{ops, pool, ref_kernels, Tensor};
@@ -172,7 +172,7 @@ fn main() {
                 let (x, w) = (x.clone(), w.clone());
                 handles.push(std::thread::spawn(move || {
                     let b = NativeBackend;
-                    let mut ctx = Ctx::new(r, &mut comm, &b);
+                    let mut ctx = Ctx::new(Mesh::flat(2).unwrap(), r, &mut comm, &b);
                     let xd = DistMat::from_global(&x, xg, r);
                     let wd = DistMat::from_global(&w, wg, r);
                     dist_matmul(&mut ctx, MatmulOp::NT, &xd, &wd, &yg, Site::WOwner)
@@ -262,10 +262,11 @@ fn main() {
         let global = jigsaw::model::init_global_params(&cfg, 0);
         let mut params = jigsaw::model::params::shard_params(
             &cfg,
-            jigsaw::jigsaw::layouts::Way::One,
+            &Mesh::unit(),
             0,
             &global,
-        );
+        )
+        .unwrap();
         let grads = params.zeros_like();
         let mut adam = jigsaw::optim::Adam::new(&params, 1e-3);
         let n = params.local_count();
@@ -363,7 +364,7 @@ fn main() {
                     let (x, w) = (x.clone(), w.clone());
                     handles.push(std::thread::spawn(move || {
                         let b = NativeBackend;
-                        let mut ctx = Ctx::new(r, &mut comm, &b);
+                        let mut ctx = Ctx::new(Mesh::flat(n).unwrap(), r, &mut comm, &b);
                         let xd = DistMat::from_global(&x, xg, r);
                         let wd = DistMat::from_global(&w, wg, r);
                         if blocking {
@@ -490,10 +491,11 @@ fn main() {
         let global = jigsaw::model::init_global_params(&cfg, 0);
         let template = jigsaw::model::params::shard_params(
             &cfg,
-            jigsaw::jigsaw::layouts::Way::One,
+            &Mesh::unit(),
             0,
             &global,
-        );
+        )
+        .unwrap();
         let spec = FabricSpec {
             latency: Duration::from_micros(50),
             jitter: Duration::from_micros(10),
@@ -582,7 +584,7 @@ fn main() {
         let c = jigsaw::perfmodel::ClusterSpec::horeka();
         let w = jigsaw::perfmodel::Workload {
             model: jigsaw::config::zoo::TABLE1[6],
-            way: 2,
+            mesh: Mesh::from_degree(2).unwrap(),
             dp: 8,
             precision: jigsaw::perfmodel::Precision::Tf32,
             dataload: false,
@@ -604,6 +606,108 @@ fn main() {
     std::fs::write("BENCH_overlap.json", Json::Obj(overlap).to_string() + "\n")
         .unwrap();
     println!("BENCH_overlap.json written");
+
+    // ================= §Mesh: shape sweep through 8-/16-way ==============
+    // The first-class mesh API: run the *real* engine's loss_and_grad
+    // over every supported mesh shape of a fixed model and record
+    // per-shape step wall time + fabric comm volume, next to what the
+    // cluster model predicts for the same shapes at paper scale.
+    {
+        use jigsaw::model::dist::DistModel;
+        use jigsaw::model::params::shard_params;
+        use jigsaw::trainer::oracle::sample_shard;
+
+        let cfg = jigsaw::benchkit::synth_config("mesh-bench", 64, 48, 2);
+        let global = jigsaw::model::init_global_params(&cfg, 3);
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        let x = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d.clone());
+        rng.fill_normal(&mut d, 1.0);
+        let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
+
+        // one full loss_and_grad over a fresh fabric: (wall s, bytes)
+        let mesh_step = |mesh: Mesh| -> (f64, u64) {
+            let net = Network::new(mesh.n());
+            let t0 = std::time::Instant::now();
+            let mut handles = Vec::new();
+            for r in 0..mesh.n() {
+                let cfg = cfg.clone();
+                let params = shard_params(&cfg, &mesh, r, &global).unwrap();
+                let mut comm = net.endpoint(r);
+                let (x, y) = (x.clone(), y.clone());
+                handles.push(std::thread::spawn(move || {
+                    let b = NativeBackend;
+                    let model = DistModel::new(cfg, &mesh, r, params);
+                    let (la, _, lc) = model.local_dims();
+                    let (lat0, ch0) = (model.lat_offset(), model.ch_offset());
+                    let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
+                    let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
+                    let mut ctx = Ctx::new(mesh, r, &mut comm, &b);
+                    model.loss_and_grad(&mut ctx, &xl, &yl, 1).unwrap();
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+            (t0.elapsed().as_secs_f64(), net.total_bytes())
+        };
+
+        let shapes: Vec<Mesh> = [(1usize, 1usize), (1, 2), (2, 2), (2, 4), (4, 4)]
+            .iter()
+            .map(|&(tk, c)| Mesh::new(tk, c).unwrap())
+            .collect();
+        let cluster = jigsaw::perfmodel::ClusterSpec::horeka();
+        let predicted = jigsaw::perfmodel::mesh_sweep(
+            &cluster,
+            jigsaw::config::zoo::TABLE1[6],
+            jigsaw::perfmodel::Precision::Tf32,
+            false,
+            &shapes,
+        );
+        let mut mesh_rows: Vec<Json> = Vec::new();
+        let mut bytes_by_n: Vec<(usize, u64)> = Vec::new();
+        for (mesh, pred) in &predicted {
+            mesh.validate_config(&cfg).unwrap();
+            // warm the pools/caches once, then take the best of 3
+            let _ = mesh_step(*mesh);
+            let mut best = f64::INFINITY;
+            let mut bytes = 0u64;
+            for _ in 0..3 {
+                let (secs, b) = mesh_step(*mesh);
+                best = best.min(secs);
+                bytes = b;
+            }
+            t.row(&[
+                format!("loss_and_grad mesh {mesh} ({}-way)", mesh.n()),
+                cfg.name.clone(),
+                fmt(best * 1e6),
+                format!("{} KiB fabric", bytes / 1024),
+            ]);
+            mesh_rows.push(jobj(vec![
+                ("tok", jnum(mesh.tok() as f64)),
+                ("ch", jnum(mesh.ch() as f64)),
+                ("ranks", jnum(mesh.n() as f64)),
+                ("step_us", jnum(best * 1e6)),
+                ("fabric_bytes", jnum(bytes as f64)),
+                ("predicted_step_s_16tf", jnum(pred.total)),
+                ("predicted_mp_comm_s_16tf", jnum(pred.mp_comm)),
+            ]));
+            bytes_by_n.push((mesh.n(), bytes));
+        }
+        // sanity: 1x1 is comm-free; larger meshes communicate
+        assert_eq!(bytes_by_n[0].1, 0, "1x1 mesh must not communicate");
+        assert!(
+            bytes_by_n.iter().skip(1).all(|&(_, b)| b > 0),
+            "every multi-rank mesh exchanges blocks/partials"
+        );
+        let mesh_record = jobj(vec![
+            ("bench", Json::Str("mesh".into())),
+            ("config", Json::Str(cfg.name.clone())),
+            ("shapes", Json::Arr(mesh_rows)),
+        ]);
+        std::fs::write("BENCH_mesh.json", mesh_record.to_string() + "\n").unwrap();
+        println!("BENCH_mesh.json written");
+    }
 
     println!("{}", t.render());
     t.write_csv(&csv_path("hotpath_micro")).unwrap();

@@ -7,6 +7,7 @@
 
 use jigsaw::benchkit::{banner, csv_path};
 use jigsaw::config::zoo::TABLE1;
+use jigsaw::jigsaw::Mesh;
 use jigsaw::energy::{training_energy, PowerModel};
 use jigsaw::perfmodel::{ClusterSpec, Precision, Workload};
 use jigsaw::util::table::{fmt, Table};
@@ -28,7 +29,8 @@ fn main() {
         ("2-way", 2, 4, 643.0),
         ("4-way", 4, 2, 855.0),
     ] {
-        let w = Workload { model, way, dp, precision: Precision::Tf32, dataload: true };
+        let mesh = Mesh::from_degree(way).unwrap();
+        let w = Workload { model, mesh, dp, precision: Precision::Tf32, dataload: true };
         let steps = epochs * dataset * 8 / (dp); // fixed sample budget
         let r = training_energy(&cluster, &power, &w, steps / 8);
         rows.push((name, r.kwh));
@@ -46,7 +48,9 @@ fn main() {
         for way in [1usize, 2, 4] {
             for prec in [Precision::Fp32, Precision::Tf32] {
                 let samples = if prec == Precision::Fp32 { 500 } else { 1250 };
-                let w = Workload { model: *m, way, dp: 1, precision: prec, dataload: true };
+                let mesh = Mesh::from_degree(way).unwrap();
+                let w =
+                    Workload { model: *m, mesh, dp: 1, precision: prec, dataload: true };
                 scaling_kwh +=
                     training_energy(&cluster, &power, &w, 10 * samples).kwh;
             }

@@ -125,7 +125,7 @@ mod tests {
             &c,
             &crate::perfmodel::Workload {
                 model: m,
-                way: 4,
+                mesh: crate::jigsaw::Mesh::from_degree(4).unwrap(),
                 dp: 1,
                 precision: Precision::Tf32,
                 dataload: true,
@@ -185,7 +185,7 @@ mod tests {
             &c,
             &crate::perfmodel::Workload {
                 model: m,
-                way: 4,
+                mesh: crate::jigsaw::Mesh::from_degree(4).unwrap(),
                 dp: 1,
                 precision: Precision::Fp32,
                 dataload: true,

@@ -8,6 +8,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::zoo::{ParallelPlan, ZooModel, TABLE1, TABLE2};
 use crate::config::{artifacts_dir, Manifest, ModelConfig};
 use crate::energy::{training_energy, PowerModel};
+use crate::jigsaw::Mesh;
 use crate::perfmodel::{
     peak_fraction, simulate_step, ClusterSpec, Precision, Workload,
 };
@@ -46,6 +47,17 @@ fn flag<T: std::str::FromStr>(
         .get(key)
         .and_then(|v| v.parse().ok())
         .unwrap_or(default)
+}
+
+/// Resolve the jigsaw mesh from `--mesh TOKxCH` (preferred) or the
+/// legacy `--way N` degree. Invalid shapes surface as typed MeshErrors.
+/// Shared with the examples (train_e2e) so flag precedence never forks.
+pub fn mesh_flag(flags: &HashMap<String, String>, default_way: usize) -> Result<Mesh> {
+    let mesh = match flags.get("mesh") {
+        Some(s) => Mesh::parse(s)?,
+        None => Mesh::from_degree(flag(flags, "way", default_way))?,
+    };
+    Ok(mesh)
 }
 
 /// Build the compute backend: PJRT when artifacts exist, native otherwise
@@ -99,12 +111,16 @@ fn print_usage() {
          USAGE: jigsaw <command> [--flags]\n\
          \n\
          COMMANDS\n\
-           train     --preset tiny --way 2 --dp 2 --steps 50 --lr 1e-3\n\
+           train     --preset tiny --mesh 2x4 --dp 2 --steps 50 --lr 1e-3\n\
+                     [--way N: legacy degree, N -> balanced mesh]\n\
                      [--backend auto|pjrt|native] [--rollout 1] [--log path]\n\
-           validate  --preset tiny --way 2   check n-way numerics vs the AOT oracle\n\
-           simulate  --model 7 --way 2 --dp 8 --precision tf32 [--no-dataload]\n\
+           validate  --preset tiny --mesh 1x2  check mesh numerics vs the AOT oracle\n\
+           simulate  --model 7 --mesh 2x2 --dp 8 --precision tf32 [--no-dataload]\n\
            roofline  [--precision fp32]      print the Fig-7 series\n\
-           energy-report                     print the Table-3 accounting\n"
+           energy-report                     print the Table-3 accounting\n\
+         \n\
+         MESHES: TOKxCH device grids (1x2 = paper 2-way, 2x2 = 4-way,\n\
+         2x4 = 8-way, 4x4 = 16-way); tok must not exceed ch.\n"
     );
 }
 
@@ -112,8 +128,9 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let preset: String = flag(flags, "preset", "tiny".to_string());
     let cfg = ModelConfig::load(&artifacts_dir(), &preset)?;
     let backend = make_backend(&preset, &flag(flags, "backend", "auto".to_string()))?;
-    let mut spec = TrainSpec::quick(
-        flag(flags, "way", 1usize),
+    let mesh = mesh_flag(flags, 1)?;
+    let mut spec = TrainSpec::with_mesh(
+        mesh,
         flag(flags, "dp", 1usize),
         flag(flags, "steps", 50usize),
     );
@@ -123,8 +140,8 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     spec.val_every = flag(flags, "val-every", 0usize);
     spec.seed = flag(flags, "seed", 0u64);
     println!(
-        "training {} ({} params) way={} dp={} steps={} backend={}",
-        cfg.name, cfg.param_count, spec.way, spec.dp, spec.steps,
+        "training {} ({} params) mesh={} ({}-way) dp={} steps={} backend={}",
+        cfg.name, cfg.param_count, spec.mesh, spec.way(), spec.dp, spec.steps,
         backend.name()
     );
     let report = train(&cfg, &spec, backend)?;
@@ -150,8 +167,8 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_validate(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let preset: String = flag(flags, "preset", "tiny".to_string());
-    let way: usize = flag(flags, "way", 2usize);
-    let report = crate::trainer::oracle::validate_against_oracle(&preset, way)?;
+    let mesh = mesh_flag(flags, 2)?;
+    let report = crate::trainer::oracle::validate_against_oracle(&preset, &mesh)?;
     println!("{report}");
     Ok(())
 }
@@ -171,15 +188,15 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     }
     let w = Workload {
         model: ZooModel::by_id(id),
-        way: flag(flags, "way", 1usize),
+        mesh: mesh_flag(flags, 1)?,
         dp: flag(flags, "dp", 1usize),
         precision: parse_precision(flags),
         dataload: !flags.contains_key("no-dataload"),
     };
     let t = simulate_step(&cluster, &w);
     println!(
-        "model {} ({} TFLOPs/fwd, {} M params) way={} dp={} {:?}",
-        id, w.model.tflops_fwd, w.model.params_mil, w.way, w.dp, w.precision
+        "model {} ({} TFLOPs/fwd, {} M params) mesh={} ({}-way) dp={} {:?}",
+        id, w.model.tflops_fwd, w.model.params_mil, w.mesh, w.way(), w.dp, w.precision
     );
     println!("  io        {:>9.4} s", t.io);
     println!("  compute   {:>9.4} s", t.compute);
@@ -197,20 +214,24 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_roofline(flags: &HashMap<String, String>) -> Result<()> {
     let cluster = ClusterSpec::horeka();
     let precision = parse_precision(flags);
-    let mut t = Table::new(&["TFLOPs/fwd", "1-way", "2-way", "4-way", "unit"]);
+    let mut t = Table::new(&[
+        "TFLOPs/fwd", "1x1", "1x2", "2x2", "2x4", "4x4", "unit",
+    ]);
     for m in TABLE1 {
-        let frac = |way: usize| -> String {
-            if way > 1 && m.params_mil > 1400.0 && way == 2 && m.params_mil > 2000.0 {
+        let frac = |mesh: Mesh| -> String {
+            if mesh.n() == 2 && m.params_mil > 2000.0 {
                 return "-".into();
             }
-            let w = Workload { model: m, way, dp: 1, precision, dataload: true };
+            let w = Workload { model: m, mesh, dp: 1, precision, dataload: true };
             fmt(crate::perfmodel::flops_per_gpu(&cluster, &w) / 1e12)
         };
         t.row(&[
             fmt(m.tflops_fwd),
-            frac(1),
-            frac(2),
-            frac(4),
+            frac(Mesh::unit()),
+            frac(Mesh::from_degree(2).unwrap()),
+            frac(Mesh::from_degree(4).unwrap()),
+            frac(Mesh::from_degree(8).unwrap()),
+            frac(Mesh::from_degree(16).unwrap()),
             "TFLOP/s/GPU".into(),
         ]);
     }
@@ -225,7 +246,7 @@ fn cmd_energy(_flags: &HashMap<String, String>) -> Result<()> {
     for plan in TABLE2 {
         let w = Workload {
             model: nearest_model(plan),
-            way: plan.way,
+            mesh: plan.mesh()?,
             dp: 8 / plan.way,
             precision: Precision::Tf32,
             dataload: true,
@@ -296,6 +317,34 @@ mod tests {
     fn roofline_and_simulate_run() {
         cli_main(&["roofline".to_string()]).unwrap();
         cli_main(&["simulate".to_string(), "--model".into(), "3".into()]).unwrap();
+        cli_main(&[
+            "simulate".to_string(),
+            "--model".into(),
+            "3".into(),
+            "--mesh".into(),
+            "2x4".into(),
+        ])
+        .unwrap();
         cli_main(&["energy-report".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn invalid_mesh_is_a_clean_cli_error() {
+        // a 4x2 mesh cannot keep zero weight redundancy: typed MeshError,
+        // surfaced through the CLI instead of a panic
+        let err = cli_main(&[
+            "simulate".to_string(),
+            "--mesh".into(),
+            "4x2".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("tok"), "{err}");
+        let err = cli_main(&[
+            "simulate".to_string(),
+            "--mesh".into(),
+            "wat".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("parse"), "{err}");
     }
 }

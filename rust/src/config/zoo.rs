@@ -59,7 +59,7 @@ impl ZooModel {
     /// within thread-fabric reach.
     pub fn native_config(&self, scale: usize) -> crate::config::ModelConfig {
         let scale = scale.max(1);
-        let dim = |v: usize| (((v + scale - 1) / scale).max(16) + 15) / 16 * 16;
+        let dim = |v: usize| v.div_ceil(scale).max(16).div_ceil(16) * 16;
         let (lat, lon, channels, patch) = (16usize, 32usize, 20usize, 4usize);
         let channels_padded = channels + (channels.wrapping_neg() & 3);
         let tokens = (lat / patch) * (lon / patch);
@@ -112,6 +112,12 @@ impl ParallelPlan {
         } else {
             Some(gpus / self.way)
         }
+    }
+
+    /// The plan's jigsaw mesh (Table 2 uses the balanced factorization
+    /// of its degree: 1 -> 1x1, 2 -> 1x2, 4 -> 2x2).
+    pub fn mesh(&self) -> Result<crate::jigsaw::Mesh, crate::jigsaw::MeshError> {
+        crate::jigsaw::Mesh::from_degree(self.way)
     }
 }
 

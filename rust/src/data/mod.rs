@@ -211,13 +211,13 @@ impl ShardedLoader {
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         cfg: &ModelConfig,
-        way: usize,
+        mesh: &crate::jigsaw::Mesh,
         rank: usize,
         n_times: usize,
         lead: usize,
         mp_seed: u64,
         n_modes: usize,
-    ) -> Self {
+    ) -> Result<Self, crate::jigsaw::MeshError> {
         let atmos = SpectralAtmosphere::new(
             cfg.lat,
             cfg.lon,
@@ -226,11 +226,12 @@ impl ShardedLoader {
             0xC11A_7E, // the *world* is shared by everyone
         );
         let norm = Normalizer::fit(&atmos, &[0.0, 3.5, 7.25, 11.75]);
-        let l = crate::jigsaw::layouts::Layouts::new(
-            crate::jigsaw::layouts::Way::from_n(way),
-        );
-        let ts = l.way.tok_split();
-        let cs = l.way.ch_split();
+        // the seed's Way::from_n panicked on unsupported degrees here; a
+        // non-dividing mesh must not silently truncate the shard ranges
+        mesh.validate_config(cfg)?;
+        let l = crate::jigsaw::Planner::new(*mesh);
+        let ts = mesh.tok();
+        let cs = mesh.ch();
         let lat_l = cfg.lat / ts;
         let ti = l.tok_block_of(rank);
         let cj = l.ch_block_of(rank);
@@ -244,7 +245,7 @@ impl ShardedLoader {
             let j = rng.below(i + 1);
             order.swap(i, j);
         }
-        ShardedLoader {
+        Ok(ShardedLoader {
             atmos,
             norm,
             lat_range: (ti * lat_l, (ti + 1) * lat_l),
@@ -255,7 +256,7 @@ impl ShardedLoader {
             order,
             cursor: 0,
             rng,
-        }
+        })
     }
 
     pub fn epoch_len(&self) -> usize {
@@ -313,6 +314,11 @@ impl ShardedLoader {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::jigsaw::Mesh;
+
+    fn mesh(n: usize) -> Mesh {
+        Mesh::from_degree(n).unwrap()
+    }
 
     fn cfg() -> ModelConfig {
         ModelConfig {
@@ -383,7 +389,9 @@ mod tests {
         // 4-way shards partition the (lat, channel) plane
         let c = cfg();
         let loaders: Vec<ShardedLoader> =
-            (0..4).map(|r| ShardedLoader::new(&c, 4, r, 4, 1, 9, 8)).collect();
+            (0..4)
+                .map(|r| ShardedLoader::new(&c, &mesh(4), r, 4, 1, 9, 8).unwrap())
+                .collect();
         let mut covered = vec![false; c.lat * c.channels_padded];
         for l in &loaders {
             for li in l.lat_range.0..l.lat_range.1 {
@@ -398,15 +406,34 @@ mod tests {
     }
 
     #[test]
+    fn eight_way_mesh_shards_partition_the_plane() {
+        // a 2x4 mesh partitions (lat, channel) into 8 disjoint tiles
+        let c = cfg();
+        let m = Mesh::new(2, 4).unwrap();
+        let mut covered = vec![false; c.lat * c.channels_padded];
+        for r in 0..m.n() {
+            let l = ShardedLoader::new(&c, &m, r, 4, 1, 9, 8).unwrap();
+            for li in l.lat_range.0..l.lat_range.1 {
+                for ci in l.ch_range.0..l.ch_range.1 {
+                    let idx = li * c.channels_padded + ci;
+                    assert!(!covered[idx], "overlap at lat {li} ch {ci}");
+                    covered[idx] = true;
+                }
+            }
+        }
+        assert!(covered.iter().all(|&v| v), "holes in 2x4 coverage");
+    }
+
+    #[test]
     fn mp_group_reads_same_sample_order() {
         let c = cfg();
-        let mut l0 = ShardedLoader::new(&c, 2, 0, 10, 1, 42, 8);
-        let mut l1 = ShardedLoader::new(&c, 2, 1, 10, 1, 42, 8);
+        let mut l0 = ShardedLoader::new(&c, &mesh(2), 0, 10, 1, 42, 8).unwrap();
+        let mut l1 = ShardedLoader::new(&c, &mesh(2), 1, 10, 1, 42, 8).unwrap();
         for _ in 0..10 {
             assert_eq!(l0.next_item().t, l1.next_item().t);
         }
         // different DP seed -> different order
-        let mut l2 = ShardedLoader::new(&c, 2, 0, 10, 1, 43, 8);
+        let mut l2 = ShardedLoader::new(&c, &mesh(2), 0, 10, 1, 43, 8).unwrap();
         let order_a: Vec<usize> = (0..10).map(|_| l0.next_item().t).collect();
         let order_b: Vec<usize> = (0..10).map(|_| l2.next_item().t).collect();
         assert_ne!(order_a, order_b);
@@ -415,8 +442,8 @@ mod tests {
     #[test]
     fn domain_parallel_io_is_fraction_of_sample() {
         let c = cfg();
-        let mut l1 = ShardedLoader::new(&c, 1, 0, 4, 1, 7, 8);
-        let mut l4 = ShardedLoader::new(&c, 4, 0, 4, 1, 7, 8);
+        let mut l1 = ShardedLoader::new(&c, &mesh(1), 0, 4, 1, 7, 8).unwrap();
+        let mut l4 = ShardedLoader::new(&c, &mesh(4), 0, 4, 1, 7, 8).unwrap();
         let full = l1.next_item().bytes_read;
         let quarter = l4.next_item().bytes_read;
         // rank 0 of 4-way holds channels 0..4 (all physical) of lat half
@@ -426,7 +453,7 @@ mod tests {
     #[test]
     fn padded_channels_are_zero() {
         let c = cfg();
-        let mut l = ShardedLoader::new(&c, 2, 1, 4, 1, 7, 8);
+        let mut l = ShardedLoader::new(&c, &mesh(2), 1, 4, 1, 7, 8).unwrap();
         // rank 1 of 2-way holds channels 4..8; physical end at 6
         let item = l.next_item();
         let cl = l.ch_pad_to;
@@ -439,12 +466,12 @@ mod tests {
     #[test]
     fn halo_read_extends_rows() {
         let c = cfg();
-        let mut l = ShardedLoader::new(&c, 4, 2, 4, 1, 7, 8);
+        let mut l = ShardedLoader::new(&c, &mesh(4), 2, 4, 1, 7, 8).unwrap();
         l.halo = 1;
         // rank 2 (lat half 1) with halo: reads one extra row above
         let (_, bytes) = l.read_shard(0.0);
         let l0 = {
-            let mut l2 = ShardedLoader::new(&c, 4, 2, 4, 1, 7, 8);
+            let mut l2 = ShardedLoader::new(&c, &mesh(4), 2, 4, 1, 7, 8).unwrap();
             l2.halo = 0;
             l2.read_shard(0.0).1
         };

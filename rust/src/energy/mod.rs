@@ -59,7 +59,7 @@ pub fn training_energy(
     steps: usize,
 ) -> EnergyReport {
     let t = simulate_step(cluster, w);
-    let gpus = w.way * w.dp;
+    let gpus = w.way() * w.dp;
     let nodes = (gpus as f64 / cluster.gpus_per_node as f64).ceil();
     let gpus_per_node = (gpus as f64 / nodes).min(cluster.gpus_per_node as f64);
     let util = (t.compute / t.total).clamp(0.05, 1.0);
@@ -97,7 +97,7 @@ mod tests {
         let p = PowerModel::horeka();
         let w = Workload {
             model: TABLE1[6],
-            way: 2,
+            mesh: crate::jigsaw::Mesh::from_degree(2).unwrap(),
             dp: 4,
             precision: Precision::Tf32,
             dataload: true,
@@ -122,7 +122,7 @@ mod tests {
                 &p,
                 &Workload {
                     model: TABLE1[5], // ~1B params
-                    way,
+                    mesh: crate::jigsaw::Mesh::from_degree(way).unwrap(),
                     dp,
                     precision: Precision::Tf32,
                     dataload: true,

@@ -1,0 +1,659 @@
+//! First-class parallelism API: the device **Mesh**, per-tensor
+//! **ShardSpec**s, and the **Planner** that derives block-ownership grids
+//! from them.
+//!
+//! The paper derives 2-way (Eq. 1-2) and 4-way (Eq. 3-4) jigsaw schemes by
+//! hand and notes the construction extends to arbitrary degrees. This
+//! module is that extension as an API: a mesh names two axes,
+//!
+//!   * `tok` — the token (spatial) axis; activations split their row
+//!     (token) dimension across it, the data loader splits latitude;
+//!   * `ch`  — the channel axis; activations and channel-like parameter
+//!     dimensions split across it (the paper's 2-way axis).
+//!
+//! Rank layout is row-major: `rank = tok_coord * ch + ch_coord`, which
+//! reproduces the paper's "rank = 2*spatial_half + channel_half" for the
+//! 2x2 mesh. Legacy degrees map to meshes `1x1`, `1x2`, `2x2`; the same
+//! planner formulas generalize to `2x4` (8-way), `4x4` (16-way) and any
+//! `tok <= ch` grid — the planner-derived grids are bit-identical to the
+//! seed's hand-enumerated `Layouts` tables for the paper's degrees (see
+//! the golden tests below).
+//!
+//! A [`ShardSpec`] states which logical axis shards each matrix dimension
+//! ([`LAxis`]); [`Planner::grid`] turns a spec into a [`BlockGrid`]
+//! (block counts + owner map). Invalid shapes (a `4x2` mesh, an axis that
+//! does not divide a model dimension) surface as typed [`MeshError`]s
+//! instead of panics, so the CLI and the examples can report them
+//! cleanly.
+
+use std::fmt;
+
+use super::BlockGrid;
+use crate::config::ModelConfig;
+
+/// Typed mesh/config validation error (replaces the seed's
+/// `Way::from_n` panic and the scattered shape `assert!`s).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum MeshError {
+    /// an axis length of zero
+    EmptyAxis,
+    /// tok > ch: NT weights form a `ch x ch` block grid, so a mesh with
+    /// more token shards than channel shards cannot keep zero weight
+    /// redundancy (more ranks than weight blocks)
+    TokExceedsCh { tok: usize, ch: usize },
+    /// a parallel degree with no valid mesh factorization (n = 0)
+    Degree(usize),
+    /// a mesh axis does not divide a model dimension
+    Indivisible { what: &'static str, dim: usize, split: usize },
+    /// unparsable mesh spec string
+    Parse(String),
+    /// a ShardSpec axis combination with no planner rule
+    UnsupportedSpec(String),
+}
+
+impl fmt::Display for MeshError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MeshError::EmptyAxis => write!(f, "mesh axes must be >= 1"),
+            MeshError::TokExceedsCh { tok, ch } => write!(
+                f,
+                "mesh {tok}x{ch} invalid: tok ({tok}) must not exceed ch ({ch}) — \
+                 NT weight grids are ch x ch, so tok > ch leaves ranks without blocks"
+            ),
+            MeshError::Degree(n) => write!(f, "no mesh factorization for degree {n}"),
+            MeshError::Indivisible { what, dim, split } => write!(
+                f,
+                "mesh does not fit the model: {what} ({dim}) is not divisible by {split}"
+            ),
+            MeshError::Parse(s) => {
+                write!(f, "cannot parse mesh '{s}' (want TOKxCH, e.g. 2x4)")
+            }
+            MeshError::UnsupportedSpec(s) => {
+                write!(f, "no planner rule for shard spec {s}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MeshError {}
+
+/// The device grid of one jigsaw group: `tok * ch` ranks with named axes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mesh {
+    tok: usize,
+    ch: usize,
+}
+
+impl Mesh {
+    /// A validated `tok x ch` mesh.
+    pub fn new(tok: usize, ch: usize) -> Result<Mesh, MeshError> {
+        if tok == 0 || ch == 0 {
+            return Err(MeshError::EmptyAxis);
+        }
+        if tok > ch {
+            return Err(MeshError::TokExceedsCh { tok, ch });
+        }
+        Ok(Mesh { tok, ch })
+    }
+
+    /// The single-rank mesh (the 1-way layout).
+    pub fn unit() -> Mesh {
+        Mesh { tok: 1, ch: 1 }
+    }
+
+    /// A `1 x n` mesh: every rank on the channel axis. Always valid —
+    /// the SPMD shape raw `dist_matmul` callers want for ad-hoc groups.
+    pub fn flat(n: usize) -> Result<Mesh, MeshError> {
+        Mesh::new(1, n)
+    }
+
+    /// Most-balanced mesh for a total degree: the largest `tok` with
+    /// `tok * ch == n` and `tok <= ch`. Reproduces the paper's layouts
+    /// for the published degrees (1 -> 1x1, 2 -> 1x2, 4 -> 2x2) and
+    /// extends them (8 -> 2x4, 16 -> 4x4). Primes fall back to `1 x n`.
+    pub fn from_degree(n: usize) -> Result<Mesh, MeshError> {
+        let mut best = None;
+        let mut t = 1;
+        while t * t <= n {
+            if n % t == 0 {
+                best = Some(Mesh { tok: t, ch: n / t });
+            }
+            t += 1;
+        }
+        best.ok_or(MeshError::Degree(n))
+    }
+
+    /// Parse a `TOKxCH` spec like `2x4` (also accepts a bare degree).
+    pub fn parse(s: &str) -> Result<Mesh, MeshError> {
+        let err = || MeshError::Parse(s.to_string());
+        if let Some((a, b)) = s.split_once(['x', 'X']) {
+            let tok: usize = a.trim().parse().map_err(|_| err())?;
+            let ch: usize = b.trim().parse().map_err(|_| err())?;
+            Mesh::new(tok, ch)
+        } else {
+            let n: usize = s.trim().parse().map_err(|_| err())?;
+            Mesh::from_degree(n)
+        }
+    }
+
+    /// Token-axis length.
+    pub fn tok(&self) -> usize {
+        self.tok
+    }
+
+    /// Channel-axis length.
+    pub fn ch(&self) -> usize {
+        self.ch
+    }
+
+    /// Total ranks in the mesh.
+    pub fn n(&self) -> usize {
+        self.tok * self.ch
+    }
+
+    /// Flattened rank of a (tok, ch) coordinate (row-major).
+    pub fn rank_of(&self, tok: usize, ch: usize) -> usize {
+        debug_assert!(tok < self.tok && ch < self.ch);
+        tok * self.ch + ch
+    }
+
+    /// (tok, ch) coordinate of a rank.
+    pub fn coord_of(&self, rank: usize) -> (usize, usize) {
+        debug_assert!(rank < self.n());
+        (rank / self.ch, rank % self.ch)
+    }
+
+    /// All ranks of the mesh, in rank order — the model-parallel
+    /// communication group.
+    pub fn ranks(&self) -> Vec<usize> {
+        (0..self.n()).collect()
+    }
+
+    /// The data-parallel peer group of `mp_rank`: with `dp` replicas of
+    /// this mesh packed world-rank = dp_idx * n + mp_rank, the ranks
+    /// holding the same parameter shard (the paper's `r % way` rule).
+    pub fn dp_group(&self, dp: usize, mp_rank: usize) -> Vec<usize> {
+        (0..dp).map(|g| g * self.n() + mp_rank).collect()
+    }
+
+    /// Check the mesh against a model architecture: every sharded
+    /// dimension must divide evenly. Returns the first violation.
+    pub fn validate_config(&self, cfg: &ModelConfig) -> Result<(), MeshError> {
+        let (t, c) = (self.tok, self.ch);
+        let div = |what: &'static str, dim: usize, split: usize| {
+            if split > 1 && dim % split != 0 {
+                Err(MeshError::Indivisible { what, dim, split })
+            } else {
+                Ok(())
+            }
+        };
+        div("channels_padded", cfg.channels_padded, c)?;
+        div("d_emb", cfg.d_emb, c)?;
+        div("d_ch", cfg.d_ch, c)?;
+        div("d_tok", cfg.d_tok, c)?;
+        div("patch_dim", cfg.patch_dim, c)?;
+        div("lat", cfg.lat, t)?;
+        // token rows are latitude-major patches: the latitude band of a
+        // token shard must hold whole patch rows
+        div("lat patch-rows (lat/patch)", cfg.lat / cfg.patch.max(1), t)?;
+        div("tokens", cfg.tokens, t)?;
+        Ok(())
+    }
+}
+
+impl fmt::Display for Mesh {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}x{}", self.tok, self.ch)
+    }
+}
+
+impl std::str::FromStr for Mesh {
+    type Err = MeshError;
+
+    fn from_str(s: &str) -> Result<Mesh, MeshError> {
+        Mesh::parse(s)
+    }
+}
+
+/// Logical sharding axis of one matrix dimension.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LAxis {
+    /// unsharded
+    Full,
+    /// the spatial token dimension — splits `mesh.tok` ways
+    Token,
+    /// a channel-like dimension (d_emb, d_ch, patch_dim, out-features) —
+    /// splits `mesh.ch` ways
+    Channel,
+    /// the token-mix hidden dimension — splits `mesh.ch` ways, assigned
+    /// row-cyclically over the tok axis (the paper's 2-way/4-way W1 rule)
+    DTok,
+}
+
+/// Which logical axes shard a matrix's rows and columns.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub rows: LAxis,
+    pub cols: LAxis,
+}
+
+impl ShardSpec {
+    pub const fn new(rows: LAxis, cols: LAxis) -> ShardSpec {
+        ShardSpec { rows, cols }
+    }
+
+    /// Activations [T, d] and everything act-shaped (z, u, v, h_ch,
+    /// patches, y): token rows x channel cols.
+    pub const ACT: ShardSpec = ShardSpec::new(LAxis::Token, LAxis::Channel);
+    /// NT-form weights W[N, K] (encoder, channel MLPs, decoder):
+    /// out-features x in-features, both channel-like.
+    pub const WEIGHT_NT: ShardSpec = ShardSpec::new(LAxis::Channel, LAxis::Channel);
+    /// Token-mix W1 [d_tok, T].
+    pub const WEIGHT_TOK1: ShardSpec = ShardSpec::new(LAxis::DTok, LAxis::Token);
+    /// Token-mix hidden h [d_tok, d].
+    pub const TOK_HIDDEN: ShardSpec = ShardSpec::new(LAxis::DTok, LAxis::Channel);
+    /// Token-mix W2 [T, d_tok].
+    pub const WEIGHT_TOK2: ShardSpec = ShardSpec::new(LAxis::Token, LAxis::DTok);
+}
+
+/// Per-block cache key derived from a matrix-level base key (device
+/// buffer identity for resident parameter blocks). Lives with the
+/// planner because it is part of the block-ownership contract.
+pub fn block_cache_key(
+    base: crate::runtime::CacheKey,
+    blk: (usize, usize),
+) -> crate::runtime::CacheKey {
+    let (id, version) = base;
+    (
+        id ^ (blk.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            ^ (blk.1 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
+            ^ 1,
+        version,
+    )
+}
+
+/// Derives block grids, owner maps, vector slicing, and gradient
+/// sync groups from (mesh, spec) pairs — the single source of the
+/// sharding truth that `layouts.rs` used to hand-enumerate per way.
+#[derive(Clone, Copy, Debug)]
+pub struct Planner {
+    mesh: Mesh,
+}
+
+impl Planner {
+    pub fn new(mesh: Mesh) -> Planner {
+        Planner { mesh }
+    }
+
+    pub fn mesh(&self) -> Mesh {
+        self.mesh
+    }
+
+    /// Split count of a logical axis on this mesh.
+    pub fn splits(&self, axis: LAxis) -> usize {
+        match axis {
+            LAxis::Full => 1,
+            LAxis::Token => self.mesh.tok,
+            LAxis::Channel | LAxis::DTok => self.mesh.ch,
+        }
+    }
+
+    /// Block grid for a shard spec. The owner formulas reproduce the
+    /// paper's hand-derived 2-way/4-way assignments and generalize:
+    ///
+    ///   * act (Token x Channel): owner(i, j) = rank(i, j)
+    ///   * W_nt (Channel x Channel): owner(j, k) = rank(j mod tok, k) —
+    ///     out-feature blocks cycle over the tok axis so every rank holds
+    ///     some block (zero redundancy); exactly ch/tok each when tok
+    ///     divides ch, otherwise within one block of even
+    ///   * W1 (DTok x Token): owner(i, k) = i*tok + k — a bijection onto
+    ///     the flattened mesh (each rank owns exactly one block)
+    ///   * h (DTok x Channel): owner(i, j) = i*tok + (j mod tok) — rank r
+    ///     owns d_tok row block r/tok, matching its W1 rows
+    ///   * W2 (Token x DTok): owner(i, k) = rank(i, k)
+    pub fn grid(&self, spec: ShardSpec) -> Result<BlockGrid, MeshError> {
+        let (t, c) = (self.mesh.tok, self.mesh.ch);
+        let owner: Vec<Vec<usize>> = match (spec.rows, spec.cols) {
+            (LAxis::Full, LAxis::Full) => vec![vec![0]],
+            (LAxis::Token, LAxis::Channel) => (0..t)
+                .map(|i| (0..c).map(|j| self.mesh.rank_of(i, j)).collect())
+                .collect(),
+            (LAxis::Channel, LAxis::Channel) => (0..c)
+                .map(|j| (0..c).map(|k| self.mesh.rank_of(j % t, k)).collect())
+                .collect(),
+            (LAxis::DTok, LAxis::Token) => {
+                (0..c).map(|i| (0..t).map(|k| i * t + k).collect()).collect()
+            }
+            (LAxis::DTok, LAxis::Channel) => {
+                (0..c).map(|i| (0..c).map(|j| i * t + (j % t)).collect()).collect()
+            }
+            (LAxis::Token, LAxis::DTok) => (0..t)
+                .map(|i| (0..c).map(|k| self.mesh.rank_of(i, k)).collect())
+                .collect(),
+            _ => return Err(MeshError::UnsupportedSpec(format!("{spec:?}"))),
+        };
+        Ok(BlockGrid::new(owner))
+    }
+
+    // -- the model's tensor-class grids (specs are always supported) ------
+
+    pub fn act(&self) -> BlockGrid {
+        self.grid(ShardSpec::ACT).expect("act spec")
+    }
+
+    pub fn weight_nt(&self) -> BlockGrid {
+        self.grid(ShardSpec::WEIGHT_NT).expect("weight_nt spec")
+    }
+
+    pub fn weight_tok1(&self) -> BlockGrid {
+        self.grid(ShardSpec::WEIGHT_TOK1).expect("weight_tok1 spec")
+    }
+
+    pub fn tok_hidden(&self) -> BlockGrid {
+        self.grid(ShardSpec::TOK_HIDDEN).expect("tok_hidden spec")
+    }
+
+    pub fn weight_tok2(&self) -> BlockGrid {
+        self.grid(ShardSpec::WEIGHT_TOK2).expect("weight_tok2 spec")
+    }
+
+    /// Grid for a named weight matrix (the parameter-ABI mapping the
+    /// sharder uses; previously inlined in `shard_params`).
+    pub fn param_grid(&self, name: &str) -> BlockGrid {
+        if name.ends_with("tok_w1") {
+            self.weight_tok1()
+        } else if name.ends_with("tok_w2") {
+            self.weight_tok2()
+        } else {
+            self.weight_nt()
+        }
+    }
+
+    // -- per-rank block coordinates ---------------------------------------
+
+    /// Which channel-column block this rank owns (slicing per-channel
+    /// vectors: LN affine, channel biases, blend gate).
+    pub fn ch_block_of(&self, rank: usize) -> usize {
+        rank % self.mesh.ch
+    }
+
+    /// Which token-row block this rank owns.
+    pub fn tok_block_of(&self, rank: usize) -> usize {
+        rank / self.mesh.ch
+    }
+
+    /// Which d_tok row block this rank owns (token-mix hidden axis).
+    pub fn dtok_block_of(&self, rank: usize) -> usize {
+        rank / self.mesh.tok
+    }
+
+    // -- gradient sync groups ---------------------------------------------
+
+    /// Ranks holding this rank's channel-axis vector shard (LN affine,
+    /// channel biases, blend): the tok-axis fiber through the mesh —
+    /// the paper's Section-5 pairwise layer-norm reduce at 2x2.
+    pub fn ch_vec_sync_group(&self, rank: usize) -> Vec<usize> {
+        let j = self.ch_block_of(rank);
+        (0..self.mesh.tok).map(|i| self.mesh.rank_of(i, j)).collect()
+    }
+
+    /// Ranks holding this rank's d_tok-axis vector shard (tok_b1):
+    /// the `tok` consecutive ranks sharing d_tok block rank/tok.
+    pub fn tok_vec_sync_group(&self, rank: usize) -> Vec<usize> {
+        let i = self.dtok_block_of(rank);
+        (0..self.mesh.tok).map(|k| i * self.mesh.tok + k).collect()
+    }
+
+    /// Ranks holding this rank's token-axis vector shard (tok_b2 [T]):
+    /// the ch-axis fiber (token rows are replicated across channels).
+    pub fn tok_b2_sync_group(&self, rank: usize) -> Vec<usize> {
+        let i = self.tok_block_of(rank);
+        (0..self.mesh.ch).map(|j| self.mesh.rank_of(i, j)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_factorizations_match_paper() {
+        assert_eq!(Mesh::from_degree(1).unwrap(), Mesh::unit());
+        assert_eq!(Mesh::from_degree(2).unwrap(), Mesh::new(1, 2).unwrap());
+        assert_eq!(Mesh::from_degree(4).unwrap(), Mesh::new(2, 2).unwrap());
+        assert_eq!(Mesh::from_degree(8).unwrap(), Mesh::new(2, 4).unwrap());
+        assert_eq!(Mesh::from_degree(16).unwrap(), Mesh::new(4, 4).unwrap());
+        assert_eq!(Mesh::from_degree(3).unwrap(), Mesh::new(1, 3).unwrap());
+        assert_eq!(Mesh::from_degree(0), Err(MeshError::Degree(0)));
+    }
+
+    #[test]
+    fn invalid_shapes_are_typed_errors() {
+        assert_eq!(
+            Mesh::new(4, 2),
+            Err(MeshError::TokExceedsCh { tok: 4, ch: 2 })
+        );
+        assert_eq!(Mesh::new(0, 2), Err(MeshError::EmptyAxis));
+        assert!(matches!(Mesh::parse("wat"), Err(MeshError::Parse(_))));
+        assert_eq!(Mesh::parse("2x4").unwrap(), Mesh::new(2, 4).unwrap());
+        assert_eq!(Mesh::parse("8").unwrap(), Mesh::new(2, 4).unwrap());
+        assert_eq!(Mesh::parse("2X4").unwrap(), Mesh::new(2, 4).unwrap());
+    }
+
+    #[test]
+    fn rank_coord_roundtrip() {
+        let m = Mesh::new(2, 4).unwrap();
+        assert_eq!(m.n(), 8);
+        for r in 0..m.n() {
+            let (i, j) = m.coord_of(r);
+            assert_eq!(m.rank_of(i, j), r);
+        }
+        // the paper's 2x2 rule: rank = 2*spatial_half + channel_half
+        let m4 = Mesh::from_degree(4).unwrap();
+        assert_eq!(m4.rank_of(1, 0), 2);
+        assert_eq!(m4.rank_of(1, 1), 3);
+    }
+
+    /// The seed's hand-written `Layouts` tables, verbatim — the golden
+    /// reference the planner must reproduce bit-identically.
+    fn legacy_tables(way: usize) -> [(&'static str, Vec<Vec<usize>>); 5] {
+        match way {
+            1 => [
+                ("act", vec![vec![0]]),
+                ("weight_nt", vec![vec![0]]),
+                ("weight_tok1", vec![vec![0]]),
+                ("tok_hidden", vec![vec![0]]),
+                ("weight_tok2", vec![vec![0]]),
+            ],
+            2 => [
+                ("act", vec![vec![0, 1]]),
+                ("weight_nt", vec![vec![0, 1], vec![0, 1]]),
+                ("weight_tok1", vec![vec![0], vec![1]]),
+                ("tok_hidden", vec![vec![0, 0], vec![1, 1]]),
+                ("weight_tok2", vec![vec![0, 1]]),
+            ],
+            4 => [
+                ("act", vec![vec![0, 1], vec![2, 3]]),
+                ("weight_nt", vec![vec![0, 1], vec![2, 3]]),
+                ("weight_tok1", vec![vec![0, 1], vec![2, 3]]),
+                ("tok_hidden", vec![vec![0, 1], vec![2, 3]]),
+                ("weight_tok2", vec![vec![0, 1], vec![2, 3]]),
+            ],
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn golden_planner_grids_match_seed_layouts() {
+        for way in [1usize, 2, 4] {
+            let p = Planner::new(Mesh::from_degree(way).unwrap());
+            for (name, want) in legacy_tables(way) {
+                let got = match name {
+                    "act" => p.act(),
+                    "weight_nt" => p.weight_nt(),
+                    "weight_tok1" => p.weight_tok1(),
+                    "tok_hidden" => p.tok_hidden(),
+                    _ => p.weight_tok2(),
+                };
+                assert_eq!(got.owner, want, "{way}-way {name} drifted from the seed");
+            }
+        }
+    }
+
+    #[test]
+    fn golden_sync_groups_match_seed_layouts() {
+        // 2-way (seed `Layouts`): ch vectors private, tok_b2 replicated
+        let p2 = Planner::new(Mesh::from_degree(2).unwrap());
+        for r in 0..2 {
+            assert_eq!(p2.ch_vec_sync_group(r), vec![r]);
+            assert_eq!(p2.tok_vec_sync_group(r), vec![r]);
+            assert_eq!(p2.tok_b2_sync_group(r), vec![0, 1]);
+            assert_eq!(p2.ch_block_of(r), r);
+            assert_eq!(p2.tok_block_of(r), 0);
+            assert_eq!(p2.dtok_block_of(r), r);
+        }
+        // 4-way: the paper's Section-5 pairings
+        let p4 = Planner::new(Mesh::from_degree(4).unwrap());
+        for r in 0..4 {
+            assert_eq!(p4.ch_vec_sync_group(r), vec![r % 2, 2 + r % 2]);
+            let i = r / 2;
+            assert_eq!(p4.tok_vec_sync_group(r), vec![2 * i, 2 * i + 1]);
+            assert_eq!(p4.tok_b2_sync_group(r), vec![2 * i, 2 * i + 1]);
+            assert_eq!(p4.ch_block_of(r), r % 2);
+            assert_eq!(p4.tok_block_of(r), r / 2);
+            assert_eq!(p4.dtok_block_of(r), r / 2);
+        }
+    }
+
+    #[test]
+    fn general_mesh_grids_cover_every_rank() {
+        for (t, c) in [(1usize, 1usize), (1, 4), (2, 4), (4, 4), (2, 8)] {
+            let m = Mesh::new(t, c).unwrap();
+            let p = Planner::new(m);
+            for (name, g) in [
+                ("weight_nt", p.weight_nt()),
+                ("weight_tok1", p.weight_tok1()),
+                ("tok_hidden", p.tok_hidden()),
+                ("weight_tok2", p.weight_tok2()),
+                ("act", p.act()),
+            ] {
+                let mut counts = vec![0usize; m.n()];
+                for row in &g.owner {
+                    for &o in row {
+                        assert!(o < m.n(), "{t}x{c} {name} owner {o} out of range");
+                        counts[o] += 1;
+                    }
+                }
+                assert!(
+                    counts.iter().all(|&k| k > 0),
+                    "{t}x{c} {name} leaves ranks idle: {counts:?}"
+                );
+                // perfect balance whenever tok divides ch
+                if c % t == 0 {
+                    assert_eq!(
+                        counts.iter().max(),
+                        counts.iter().min(),
+                        "{t}x{c} {name} unbalanced"
+                    );
+                }
+            }
+            // W1 is a bijection: exactly one block per rank
+            let w1 = p.weight_tok1();
+            let mut owners: Vec<usize> =
+                w1.owner.iter().flatten().copied().collect();
+            owners.sort_unstable();
+            assert_eq!(owners, m.ranks(), "{t}x{c} weight_tok1 not bijective");
+        }
+    }
+
+    #[test]
+    fn sync_groups_partition_and_agree() {
+        for (t, c) in [(2usize, 4usize), (4, 4), (2, 6)] {
+            let m = Mesh::new(t, c).unwrap();
+            let p = Planner::new(m);
+            type GroupFn = fn(&Planner, usize) -> Vec<usize>;
+            let fns: [(&str, GroupFn); 3] = [
+                ("ch_vec", Planner::ch_vec_sync_group),
+                ("tok_vec", Planner::tok_vec_sync_group),
+                ("tok_b2", Planner::tok_b2_sync_group),
+            ];
+            for (name, f) in fns {
+                for r in 0..m.n() {
+                    let g = f(&p, r);
+                    assert!(g.contains(&r), "{t}x{c} {name}: {r} not in own group");
+                    for &s in &g {
+                        assert_eq!(f(&p, s), g, "{t}x{c} {name}: group of {s} != {r}");
+                    }
+                }
+            }
+            // members of a sync group hold the same vector block
+            for r in 0..m.n() {
+                for &s in &p.ch_vec_sync_group(r) {
+                    assert_eq!(p.ch_block_of(s), p.ch_block_of(r));
+                }
+                for &s in &p.tok_vec_sync_group(r) {
+                    assert_eq!(p.dtok_block_of(s), p.dtok_block_of(r));
+                }
+                for &s in &p.tok_b2_sync_group(r) {
+                    assert_eq!(p.tok_block_of(s), p.tok_block_of(r));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tok_hidden_rows_match_w1_ownership() {
+        // rank r's tok_hidden row block must equal its W1 row block
+        // (dtok_block_of), or its row-bias adds would misalign
+        for (t, c) in [(1usize, 2usize), (2, 2), (2, 4), (4, 4)] {
+            let p = Planner::new(Mesh::new(t, c).unwrap());
+            let th = p.tok_hidden();
+            for r in 0..t * c {
+                for (i, row) in th.owner.iter().enumerate() {
+                    if row.contains(&r) {
+                        assert_eq!(i, p.dtok_block_of(r), "{t}x{c} rank {r}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn validate_config_reports_indivisible_dims() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            lat: 8,
+            lon: 16,
+            channels: 6,
+            channels_padded: 8,
+            patch: 2,
+            d_emb: 32,
+            d_tok: 48,
+            d_ch: 32,
+            blocks: 2,
+            tokens: 32,
+            patch_dim: 32,
+            param_count: 0,
+            flops_forward: 0,
+            channel_weights: vec![1.0; 6],
+        };
+        for (t, c) in [(1usize, 1usize), (1, 2), (2, 2), (2, 4), (4, 4)] {
+            Mesh::new(t, c).unwrap().validate_config(&cfg).unwrap();
+        }
+        // ch = 3 does not divide channels_padded = 8
+        let e = Mesh::new(1, 3).unwrap().validate_config(&cfg).unwrap_err();
+        assert!(matches!(e, MeshError::Indivisible { split: 3, .. }), "{e}");
+        // tok = 4 works on lat 8 / patch 2 (4 patch rows)...
+        Mesh::new(4, 4).unwrap().validate_config(&cfg).unwrap();
+        // ...but a lat-16/patch-4 grid only has 4 patch rows: tok 8 fails
+        let mut big = cfg.clone();
+        big.lat = 16;
+        big.patch = 4;
+        big.channels_padded = 16;
+        big.d_emb = 64;
+        big.d_tok = 64;
+        big.d_ch = 64;
+        big.patch_dim = 256;
+        assert!(Mesh::new(8, 8).unwrap().validate_config(&big).is_err());
+    }
+}

@@ -31,8 +31,18 @@
 //! data blocks along column pairs (0<->2, 1<->3) and partial sums along
 //! row pairs, and e.g. rank 1 sends X_1 W_1^T to rank 0 while rank 0
 //! computes X_0 W_0^T — the exact example in Section 4.2.
+//!
+//! *Which* blocks live where is no longer hand-enumerated per parallel
+//! degree: the [`mesh`] module holds the first-class parallelism API — a
+//! [`Mesh`] describing the device grid with named `tok x ch` axes, a
+//! [`ShardSpec`] per logical tensor, and a [`Planner`] deriving the
+//! `BlockGrid`s/owner maps this engine consumes. The paper's 1/2/4-way
+//! schemes are the `1x1`, `1x2`, and `2x2` meshes; `2x4` and `4x4` give
+//! 8- and 16-way jigsaw with the same schedule machinery.
 
-pub mod layouts;
+pub mod mesh;
+
+pub use mesh::{block_cache_key, LAxis, Mesh, MeshError, Planner, ShardSpec};
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::sync::Arc;
@@ -99,20 +109,6 @@ pub struct DistMat {
     /// matrices so the runtime keeps their blocks resident (§Perf);
     /// None for activations/gradients.
     pub cache: Option<crate::runtime::CacheKey>,
-}
-
-/// Per-block cache key derived from a matrix-level base key.
-pub fn block_cache_key(
-    base: crate::runtime::CacheKey,
-    blk: (usize, usize),
-) -> crate::runtime::CacheKey {
-    let (id, version) = base;
-    (
-        id ^ (blk.0 as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            ^ (blk.1 as u64).wrapping_mul(0xC2B2_AE3D_27D4_EB4F)
-            ^ 1,
-        version,
-    )
 }
 
 impl DistMat {
@@ -243,8 +239,11 @@ pub enum Site {
     WOwner,
 }
 
-/// Execution context of one rank inside one jigsaw group.
+/// Execution context of one rank inside one jigsaw group: the group's
+/// device mesh, this rank's flattened coordinate on it, and the fabric +
+/// compute handles.
 pub struct Ctx<'a> {
+    pub mesh: Mesh,
     pub rank: usize,
     pub comm: &'a mut Comm,
     pub backend: &'a dyn Backend,
@@ -254,8 +253,13 @@ pub struct Ctx<'a> {
 }
 
 impl<'a> Ctx<'a> {
-    pub fn new(rank: usize, comm: &'a mut Comm, backend: &'a dyn Backend) -> Self {
-        Ctx { rank, comm, backend, seq: 0 }
+    pub fn new(
+        mesh: Mesh,
+        rank: usize,
+        comm: &'a mut Comm,
+        backend: &'a dyn Backend,
+    ) -> Self {
+        Ctx { mesh, rank, comm, backend, seq: 0 }
     }
 }
 
@@ -765,6 +769,7 @@ mod tests {
         site: Site,
         blocking: bool,
     ) -> Tensor {
+        let mesh = Mesh::flat(n).unwrap();
         let mut handles = Vec::new();
         for r in 0..n {
             let mut comm = net.endpoint(r);
@@ -772,7 +777,7 @@ mod tests {
             let (x, w) = (x.clone(), w.clone());
             handles.push(thread::spawn(move || {
                 let backend = NativeBackend;
-                let mut ctx = Ctx::new(r, &mut comm, &backend);
+                let mut ctx = Ctx::new(mesh, r, &mut comm, &backend);
                 let xd = DistMat::from_global(&x, xg, r);
                 let wd = DistMat::from_global(&w, wg, r);
                 if blocking {
@@ -860,7 +865,7 @@ mod tests {
             let (x, w) = (x.clone(), w.clone());
             handles.push(thread::spawn(move || {
                 let backend = NativeBackend;
-                let mut ctx = Ctx::new(r, &mut comm, &backend);
+                let mut ctx = Ctx::new(Mesh::flat(2).unwrap(), r, &mut comm, &backend);
                 let xd = DistMat::from_global(&x, xg, r);
                 let wd = DistMat::from_global(&w, wg, r);
                 dist_matmul(&mut ctx, MatmulOp::NT, &xd, &wd, &yg, Site::WOwner).unwrap();

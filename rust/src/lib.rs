@@ -16,6 +16,21 @@
 //!   loading, optimizer, trainer, and the cluster performance model that
 //!   regenerates the paper's evaluation at 256-GPU scale.
 //!
+//! Parallelism is a first-class API ([`jigsaw::mesh`]): a
+//! [`jigsaw::Mesh`] names the device grid's `tok x ch` axes, a
+//! [`jigsaw::ShardSpec`] states which axis shards each tensor dimension,
+//! and the [`jigsaw::Planner`] derives every block grid, owner map,
+//! vector slice, and gradient sync group from them. The paper's 1-, 2-,
+//! and 4-way schemes are the `1x1`, `1x2`, and `2x2` meshes (the planner
+//! reproduces the hand-derived layouts bit-identically — golden-tested);
+//! `2x4` and `4x4` extend the same machinery to 8- and 16-way jigsaw.
+//! Everything downstream is mesh-keyed: `DistModel::new(cfg, &mesh, rank,
+//! params)`, `Ctx` carries the mesh handle, `TrainSpec`/the CLI take a
+//! mesh shape (`--mesh 2x4`), the sharded loader splits latitude and
+//! channels along the mesh axes, and `perfmodel` prices arbitrary mesh
+//! shapes (`BENCH_mesh.json` sweeps them on the real engine). Invalid
+//! shapes surface as typed [`jigsaw::MeshError`]s, not panics.
+//!
 //! L3's compute substrate is the **view/kernel architecture** in
 //! [`tensor`]: zero-copy strided views (`TensorView`/`TensorViewMut`)
 //! carry block slices without allocation; cache-blocked, register-tiled

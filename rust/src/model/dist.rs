@@ -19,8 +19,7 @@ use anyhow::{ensure, Result};
 use super::params::PStore;
 use super::{latitude_weights, patchify, unpatchify};
 use crate::config::ModelConfig;
-use crate::jigsaw::layouts::{Layouts, Way};
-use crate::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Site};
+use crate::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Mesh, Planner, Site};
 use crate::runtime::MatmulOp;
 use crate::tensor::{ops, Tensor};
 
@@ -54,42 +53,46 @@ pub struct FwdCache {
     pub x_local: Tensor,
 }
 
-/// One rank's WeatherMixer instance.
+/// One rank's WeatherMixer instance on a device mesh.
 pub struct DistModel {
     pub cfg: ModelConfig,
-    pub way: Way,
+    pub mesh: Mesh,
     pub rank: usize,
     pub params: PStore,
 }
 
 impl DistModel {
-    pub fn new(cfg: ModelConfig, way: Way, rank: usize, params: PStore) -> Self {
-        DistModel { cfg, way, rank, params }
+    pub fn new(cfg: ModelConfig, mesh: &Mesh, rank: usize, params: PStore) -> Self {
+        DistModel { cfg, mesh: *mesh, rank, params }
     }
 
-    fn layouts(&self) -> Layouts {
-        Layouts::new(self.way)
+    fn planner(&self) -> Planner {
+        Planner::new(self.mesh)
+    }
+
+    /// This rank's (tok, ch) coordinate on the mesh.
+    pub fn coord(&self) -> (usize, usize) {
+        self.mesh.coord_of(self.rank)
     }
 
     /// local spatial/channel extents
     pub fn local_dims(&self) -> (usize, usize, usize) {
-        let l = self.way;
         (
-            self.cfg.lat / l.tok_split(),
+            self.cfg.lat / self.mesh.tok(),
             self.cfg.lon,
-            self.cfg.channels_padded / l.ch_split(),
+            self.cfg.channels_padded / self.mesh.ch(),
         )
     }
 
     /// global row offset of this rank's latitude slice
     pub fn lat_offset(&self) -> usize {
-        self.layouts().tok_block_of(self.rank) * (self.cfg.lat / self.way.tok_split())
+        self.planner().tok_block_of(self.rank) * (self.cfg.lat / self.mesh.tok())
     }
 
     /// global channel offset of this rank's channel slice
     pub fn ch_offset(&self) -> usize {
-        self.layouts().ch_block_of(self.rank)
-            * (self.cfg.channels_padded / self.way.ch_split())
+        self.planner().ch_block_of(self.rank)
+            * (self.cfg.channels_padded / self.mesh.ch())
     }
 
     // -- local pointwise helpers -----------------------------------------
@@ -192,7 +195,7 @@ impl DistModel {
     // -- grids -------------------------------------------------------------
 
     fn act_grid(&self) -> BlockGrid {
-        self.layouts().act()
+        self.planner().act()
     }
 
     // -- forward ------------------------------------------------------------
@@ -204,7 +207,7 @@ impl DistModel {
         z: DistMat,
     ) -> Result<(DistMat, MixCache)> {
         let p = &self.params;
-        let l = self.layouts();
+        let l = self.planner();
         let name = |s: &str| format!("blk{i}_{s}");
 
         // token mixing (transposed-MLP form). Linear outputs are consumed
@@ -281,6 +284,12 @@ impl DistModel {
         rollout: usize,
     ) -> Result<(Tensor, FwdCache)> {
         let cfg = &self.cfg;
+        ensure!(
+            ctx.mesh == self.mesh,
+            "ctx mesh {} != model mesh {}",
+            ctx.mesh,
+            self.mesh
+        );
         let (lat_l, lon_l, c_l) = self.local_dims();
         ensure!(
             x_local.shape == vec![lat_l, lon_l, c_l],
@@ -288,7 +297,7 @@ impl DistModel {
             x_local.shape
         );
         let p = &self.params;
-        let l = self.layouts();
+        let l = self.planner();
 
         // encoder: local patchify -> this rank's block of the patch matrix
         let patches_local = patchify(x_local, lat_l, lon_l, c_l, cfg.patch);
@@ -420,7 +429,7 @@ impl DistModel {
         grads: &mut PStore,
     ) -> Result<DistMat> {
         let p = &self.params;
-        let l = self.layouts();
+        let l = self.planner();
         let name = |s: &str| format!("blk{i}_{s}");
 
         // -- channel mixing backward --
@@ -530,7 +539,7 @@ impl DistModel {
         let cfg = &self.cfg;
         let (pred, cache) = self.forward(ctx, x_local, rollout)?;
         let local_loss = self.local_loss(&pred, y_local);
-        let group: Vec<usize> = (0..self.way.n()).collect();
+        let group = self.mesh.ranks();
         let loss = ctx.comm.allreduce_scalar(&group, local_loss);
 
         let mut grads = self.params.zeros_like();
@@ -560,7 +569,7 @@ impl DistModel {
         // decoder backward
         let dy_local = patchify(&ddelta, lat_l, lon_l, c_l, cfg.patch);
         let mut dy = DistMat::empty(cfg.tokens, cfg.patch_dim, self.act_grid());
-        let l = self.layouts();
+        let l = self.planner();
         dy.blocks.insert(
             (l.tok_block_of(self.rank), l.ch_block_of(self.rank)),
             dy_local,

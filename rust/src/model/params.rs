@@ -4,15 +4,16 @@
 //! Zero memory redundancy (paper Section 4): every weight matrix block has
 //! exactly one owner. The only replicated parameters are small vectors
 //! whose axis is not sharded on this rank's grid (e.g. the token-mix
-//! output bias in 2-way, LN affine pairs in 4-way); their gradients are
-//! reconciled by the pairwise reduce the paper describes for layer norms.
+//! output bias on a `1x2` mesh, LN affine fibers on meshes with `tok > 1`);
+//! their gradients are reconciled by the sync-group reduce the paper
+//! describes for layer norms. All grids and sync groups come from the
+//! mesh [`Planner`] — `shard_params` is mesh-keyed.
 
 use std::collections::BTreeMap;
 
 use crate::comm::Comm;
 use crate::config::ModelConfig;
-use crate::jigsaw::layouts::{Layouts, Way};
-use crate::jigsaw::{BlockGrid, DistMat};
+use crate::jigsaw::{BlockGrid, DistMat, Mesh, MeshError, Planner};
 use crate::tensor::{ops, Tensor};
 
 /// A rank's slice of a 1-D parameter plus its gradient sync group.
@@ -189,14 +190,18 @@ enum VecKind {
     Token,
 }
 
-/// Shard a full set of global parameters for `rank` under `way`.
+/// Shard a full set of global parameters for `rank` on `mesh`. The mesh
+/// is validated against the architecture first, so an incompatible shape
+/// surfaces as a typed [`MeshError`] rather than a slicing panic deep in
+/// a rank thread.
 pub fn shard_params(
-    _cfg: &ModelConfig,
-    way: Way,
+    cfg: &ModelConfig,
+    mesh: &Mesh,
     rank: usize,
     global: &[(String, Tensor)],
-) -> PStore {
-    let l = Layouts::new(way);
+) -> Result<PStore, MeshError> {
+    mesh.validate_config(cfg)?;
+    let l = Planner::new(*mesh);
     let mut store = PStore::default();
     let vec_of = |name: &str| -> VecKind {
         if name.ends_with("tok_b1") {
@@ -215,30 +220,24 @@ pub fn shard_params(
 
     for (name, t) in global {
         if t.rank() == 2 {
-            let grid: BlockGrid = if name.ends_with("tok_w1") {
-                l.weight_tok1()
-            } else if name.ends_with("tok_w2") {
-                l.weight_tok2()
-            } else {
-                l.weight_nt()
-            };
+            let grid: BlockGrid = l.param_grid(name);
             let mut dm = DistMat::from_global(t, grid, rank);
             dm.cache = Some((fnv1a(name) ^ nonce.rotate_left(32) ^ rank as u64, 0));
             store.mats.insert(name.clone(), dm);
         } else {
             let (n_blocks, block, sync) = match vec_of(name) {
                 VecKind::Channel => (
-                    way.ch_split(),
+                    mesh.ch(),
                     l.ch_block_of(rank),
                     l.ch_vec_sync_group(rank),
                 ),
                 VecKind::TokHidden => (
-                    way.ch_split(),
+                    mesh.ch(),
                     l.dtok_block_of(rank),
                     l.tok_vec_sync_group(rank),
                 ),
                 VecKind::Token => (
-                    way.tok_split(),
+                    mesh.tok(),
                     l.tok_block_of(rank),
                     l.tok_b2_sync_group(rank),
                 ),
@@ -249,7 +248,7 @@ pub fn shard_params(
             );
         }
     }
-    store
+    Ok(store)
 }
 
 fn fnv1a(s: &str) -> u64 {
@@ -269,8 +268,7 @@ pub fn assemble_params(
     order
         .into_iter()
         .map(|name| {
-            if let Some(first) = stores[0].mats.get(&name) {
-                let _ = first;
+            if stores[0].mats.contains_key(&name) {
                 let parts: Vec<&DistMat> =
                     stores.iter().map(|s| &s.mats[&name]).collect();
                 (name, DistMat::assemble(&parts))
@@ -319,20 +317,27 @@ mod tests {
         }
     }
 
+    fn meshes() -> Vec<Mesh> {
+        [(1, 1), (1, 2), (2, 2), (2, 4), (4, 4)]
+            .iter()
+            .map(|&(t, c)| Mesh::new(t, c).unwrap())
+            .collect()
+    }
+
     #[test]
-    fn shard_assemble_roundtrip_all_ways() {
+    fn shard_assemble_roundtrip_all_meshes() {
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 3);
-        for way in [Way::One, Way::Two, Way::Four] {
-            let stores: Vec<PStore> = (0..way.n())
-                .map(|r| shard_params(&cfg, way, r, &global))
+        for mesh in meshes() {
+            let stores: Vec<PStore> = (0..mesh.n())
+                .map(|r| shard_params(&cfg, &mesh, r, &global).unwrap())
                 .collect();
             let refs: Vec<&PStore> = stores.iter().collect();
             let back = assemble_params(&cfg, &refs);
             assert_eq!(back.len(), global.len());
             for ((n1, t1), (n2, t2)) in global.iter().zip(&back) {
                 assert_eq!(n1, n2);
-                assert!(t1.max_abs_diff(t2) == 0.0, "param {n1} mismatch in {way:?}");
+                assert!(t1.max_abs_diff(t2) == 0.0, "param {n1} mismatch on {mesh}");
             }
         }
     }
@@ -347,17 +352,21 @@ mod tests {
             .filter(|(_, t)| t.rank() == 2)
             .map(|(_, t)| t.numel())
             .sum();
-        for way in [Way::Two, Way::Four] {
-            let total: usize = (0..way.n())
+        for mesh in meshes() {
+            if mesh.n() == 1 {
+                continue;
+            }
+            let total: usize = (0..mesh.n())
                 .map(|r| {
-                    shard_params(&cfg, way, r, &global)
+                    shard_params(&cfg, &mesh, r, &global)
+                        .unwrap()
                         .mats
                         .values()
                         .flat_map(|m| m.blocks.values().map(|b| b.numel()))
                         .sum::<usize>()
                 })
                 .sum();
-            assert_eq!(total, global_mat_count, "{way:?} duplicates weights");
+            assert_eq!(total, global_mat_count, "{mesh} duplicates weights");
         }
     }
 
@@ -365,8 +374,9 @@ mod tests {
     fn four_way_ln_sync_is_the_paper_pairing() {
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 1);
-        let s0 = shard_params(&cfg, Way::Four, 0, &global);
-        let s2 = shard_params(&cfg, Way::Four, 2, &global);
+        let mesh = Mesh::from_degree(4).unwrap();
+        let s0 = shard_params(&cfg, &mesh, 0, &global).unwrap();
+        let s2 = shard_params(&cfg, &mesh, 2, &global).unwrap();
         let v0 = &s0.vecs["blk0_ln1_g"];
         let v2 = &s2.vecs["blk0_ln1_g"];
         assert_eq!(v0.sync_group, vec![0, 2]);
@@ -378,8 +388,9 @@ mod tests {
     fn two_way_tok_b2_is_replicated() {
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 1);
-        let s0 = shard_params(&cfg, Way::Two, 0, &global);
-        let s1 = shard_params(&cfg, Way::Two, 1, &global);
+        let mesh = Mesh::from_degree(2).unwrap();
+        let s0 = shard_params(&cfg, &mesh, 0, &global).unwrap();
+        let s1 = shard_params(&cfg, &mesh, 1, &global).unwrap();
         let a = &s0.vecs["blk0_tok_b2"];
         let b = &s1.vecs["blk0_tok_b2"];
         assert_eq!(a.sync_group, vec![0, 1]);
@@ -395,14 +406,27 @@ mod tests {
             .iter()
             .flat_map(|(_, t)| t.data.iter().map(|v| v * v))
             .sum();
-        for way in [Way::One, Way::Two, Way::Four] {
-            let total: f32 = (0..way.n())
-                .map(|r| shard_params(&cfg, way, r, &global).global_norm_sq_contrib())
+        for mesh in meshes() {
+            let total: f32 = (0..mesh.n())
+                .map(|r| {
+                    shard_params(&cfg, &mesh, r, &global)
+                        .unwrap()
+                        .global_norm_sq_contrib()
+                })
                 .sum();
             assert!(
                 (total - global_sq).abs() / global_sq < 1e-5,
-                "{way:?}: {total} vs {global_sq}"
+                "{mesh}: {total} vs {global_sq}"
             );
         }
+    }
+
+    #[test]
+    fn incompatible_mesh_is_a_typed_error() {
+        let cfg = tiny_cfg();
+        let global = init_global_params(&cfg, 1);
+        // ch = 3 does not divide channels_padded = 8
+        let err = shard_params(&cfg, &Mesh::new(1, 3).unwrap(), 0, &global).unwrap_err();
+        assert!(matches!(err, MeshError::Indivisible { .. }), "{err}");
     }
 }

@@ -162,7 +162,7 @@ impl LrSchedule {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
-    use crate::jigsaw::layouts::Way;
+    use crate::jigsaw::Mesh;
     use crate::model::params::shard_params;
     use crate::model::init_global_params;
 
@@ -192,7 +192,7 @@ mod tests {
         // mhat = g, vhat = g^2, so delta = lr * g / (|g| + eps)
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 0);
-        let mut params = shard_params(&cfg, Way::One, 0, &global);
+        let mut params = shard_params(&cfg, &Mesh::unit(), 0, &global).unwrap();
         let mut grads = params.zeros_like();
         let g0 = 0.5f32;
         grads.mats.get_mut("enc_w").unwrap().blocks.values_mut().for_each(|b| {
@@ -210,7 +210,7 @@ mod tests {
     fn encdec_lr_factor_applies() {
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 0);
-        let mut p1 = shard_params(&cfg, Way::One, 0, &global);
+        let mut p1 = shard_params(&cfg, &Mesh::unit(), 0, &global).unwrap();
         let mut p2 = p1.clone();
         let mut grads = p1.zeros_like();
         for m in grads.mats.values_mut() {
@@ -249,7 +249,7 @@ mod tests {
         use crate::comm::Network;
         let cfg = tiny_cfg();
         let global = init_global_params(&cfg, 0);
-        let params = shard_params(&cfg, Way::One, 0, &global);
+        let params = shard_params(&cfg, &Mesh::unit(), 0, &global).unwrap();
         let mut grads = params.zeros_like();
         grads.mats.get_mut("enc_w").unwrap().blocks.values_mut().for_each(|b| {
             b.data[0] = 0.1;

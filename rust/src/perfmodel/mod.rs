@@ -19,6 +19,7 @@
 //! scaling in I/O-bound regimes.
 
 use crate::config::zoo::{ZooModel, PAPER_SAMPLE_BYTES};
+use crate::jigsaw::Mesh;
 
 /// Numeric precision regimes of the paper's experiments.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,9 +68,15 @@ pub struct ClusterSpec {
     /// rank gets a 1/gpus_per_node share (domain parallelism divides the
     /// *bytes*, which is how jigsaw wins the I/O-bound regime)
     pub storage_bw_node: f64,
-    /// fraction of MP communication hidden under compute, by way
+    /// fraction of MP communication hidden under compute: `overlap_2way`
+    /// for channel-only meshes (tok = 1), `overlap_4way` once the token
+    /// axis joins (two-hop data + partial routing)
     pub overlap_2way: f64,
     pub overlap_4way: f64,
+    /// MP bandwidth degradation per doubling of the mesh beyond its
+    /// calibrated anchor (2 ranks for channel-only, 4 for token x channel):
+    /// larger meshes contend for the same NVLink fabric
+    pub mp_contention_per_doubling: f64,
     /// fraction of the DP allreduce hidden under the backward pass
     pub dp_overlap: f64,
     /// fixed per-step overhead (launch, optimizer, host logic), seconds
@@ -92,6 +99,7 @@ impl ClusterSpec {
             storage_bw_node: 12e9,
             overlap_2way: 0.92,
             overlap_4way: 0.10,
+            mp_contention_per_doubling: 0.6,
             dp_overlap: 0.9,
             step_overhead: 0.05,
         }
@@ -102,12 +110,20 @@ impl ClusterSpec {
 #[derive(Clone, Debug)]
 pub struct Workload {
     pub model: ZooModel,
-    pub way: usize,
+    /// jigsaw mesh of each model instance (legacy "way" = `mesh.n()`)
+    pub mesh: Mesh,
     pub dp: usize,
     pub precision: Precision,
     /// include the storage->CPU->GPU data path (paper's "full training
     /// loop" vs "no data loading" modes)
     pub dataload: bool,
+}
+
+impl Workload {
+    /// Model-parallel degree of the mesh.
+    pub fn way(&self) -> usize {
+        self.mesh.n()
+    }
 }
 
 /// Paper-scale token count (0.25 deg grid, patch 12) used for activation
@@ -131,7 +147,7 @@ pub struct StepTime {
 pub const N_LINEAR: f64 = 3.0 * 4.0 + 2.0;
 
 pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
-    let way = w.way as f64;
+    let way = w.way() as f64;
     let mut t = StepTime::default();
 
     // -- I/O: each jigsaw rank reads sample/way (x and y). Nodes run
@@ -148,23 +164,32 @@ pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
     let eff_peak = w.precision.peak_flops() * w.precision.gemm_efficiency();
     t.compute = w.model.flops_step() / way / eff_peak;
 
-    // -- MP communication: per linear layer and pass, each rank exchanges
-    //    activation-shard-sized messages over NVLink. 2-way: one partial
-    //    sum (Eq. 2); 4-way: a data block + a partial sum (Eq. 4), at a
-    //    lower effective bandwidth (two-hop routing + contention). -------
-    if w.way > 1 {
+    // -- MP communication: per linear layer and pass, each rank ships
+    //    activation-shard-sized messages over NVLink. The count follows
+    //    the planner's schedule: a rank exchanges partial sums across the
+    //    channel axis (ch - 1 shard messages; Eq. 2's single exchange at
+    //    ch = 2) and, once the token axis joins, data blocks across the
+    //    token axis as well (tok - 1 more; Eq. 4's data + partial at
+    //    2x2). Token-axis meshes ride the lower-effective-bandwidth
+    //    4-way path (two-hop routing + all-pairs contention), and meshes
+    //    beyond the calibrated 2-/4-rank anchors pay a per-doubling
+    //    fabric-contention premium on top. -------------------------------
+    if w.way() > 1 {
         let prec_bytes = 4.0; // activations stay f32 even under TF32
         let act_bytes = PAPER_TOKENS * w.model.d_emb as f64 * prec_bytes;
-        let msgs_per_linear = if w.way == 2 { 1.0 } else { 2.0 };
+        let channel_only = w.mesh.tok() == 1;
+        let msgs_per_linear = ((w.mesh.tok() - 1) + (w.mesh.ch() - 1)) as f64;
         // forward + backward (dX and dW reuse one exchange each)
         let passes = 3.0;
         let bytes = passes * N_LINEAR * msgs_per_linear * act_bytes / way;
-        let (bw, alpha) = if w.way == 2 {
-            (cluster.mp_bw_2way, cluster.overlap_2way)
+        let (bw, alpha, anchor) = if channel_only {
+            (cluster.mp_bw_2way, cluster.overlap_2way, 2.0)
         } else {
-            (cluster.mp_bw_4way, cluster.overlap_4way)
+            (cluster.mp_bw_4way, cluster.overlap_4way, 4.0)
         };
-        t.mp_comm = bytes / bw;
+        let contention =
+            1.0 + cluster.mp_contention_per_doubling * (way / anchor).max(1.0).log2();
+        t.mp_comm = bytes * contention / bw;
         t.mp_comm_exposed = (1.0 - alpha) * t.mp_comm;
     }
 
@@ -178,7 +203,7 @@ pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
         let ib_share = cluster.ib_bw / cluster.gpus_per_node as f64;
         t.dp_comm = ring / ib_share;
         // larger rings span more switches: exposure grows with node count
-        let nodes = ((w.way * w.dp) as f64 / cluster.gpus_per_node as f64).max(1.0);
+        let nodes = ((w.way() * w.dp) as f64 / cluster.gpus_per_node as f64).max(1.0);
         let contention = 1.0 + cluster.ib_contention_per_doubling * nodes.log2();
         t.dp_comm_exposed =
             t.dp_comm * (((1.0 - cluster.dp_overlap) * contention).min(1.2));
@@ -235,7 +260,7 @@ pub fn overlap_report(cluster: &ClusterSpec, w: &Workload) -> OverlapReport {
 /// Achieved FLOP/s per GPU for a workload.
 pub fn flops_per_gpu(cluster: &ClusterSpec, w: &Workload) -> f64 {
     let t = simulate_step(cluster, w);
-    w.model.flops_step() / w.way as f64 / t.total
+    w.model.flops_step() / w.way() as f64 / t.total
 }
 
 /// Fraction of theoretical peak.
@@ -243,23 +268,41 @@ pub fn peak_fraction(cluster: &ClusterSpec, w: &Workload) -> f64 {
     flops_per_gpu(cluster, w) / w.precision.peak_flops()
 }
 
-/// Strong-scaling speedup of `way`-parallel vs 1-way for a fixed model.
+/// Strong-scaling speedup of a mesh vs the single rank for a fixed model.
 pub fn strong_speedup(
     cluster: &ClusterSpec,
     model: ZooModel,
-    way: usize,
+    mesh: &Mesh,
     precision: Precision,
     dataload: bool,
 ) -> f64 {
     let base = simulate_step(
         cluster,
-        &Workload { model, way: 1, dp: 1, precision, dataload },
+        &Workload { model, mesh: Mesh::unit(), dp: 1, precision, dataload },
     );
     let par = simulate_step(
         cluster,
-        &Workload { model, way, dp: 1, precision, dataload },
+        &Workload { model, mesh: *mesh, dp: 1, precision, dataload },
     );
     base.total / par.total
+}
+
+/// Step-time sweep over a set of mesh shapes for one model — the
+/// planning view behind the mesh benches (`BENCH_mesh.json`).
+pub fn mesh_sweep(
+    cluster: &ClusterSpec,
+    model: ZooModel,
+    precision: Precision,
+    dataload: bool,
+    meshes: &[Mesh],
+) -> Vec<(Mesh, StepTime)> {
+    meshes
+        .iter()
+        .map(|m| {
+            let w = Workload { model, mesh: *m, dp: 1, precision, dataload };
+            (*m, simulate_step(cluster, &w))
+        })
+        .collect()
 }
 
 /// Weak-scaling efficiency: per-GPU workload kept constant, model grown
@@ -269,20 +312,20 @@ pub fn weak_efficiency(
     cluster: &ClusterSpec,
     base: ZooModel,
     scaled: ZooModel,
-    way: usize,
+    mesh: &Mesh,
     precision: Precision,
     dataload: bool,
 ) -> f64 {
     let t1 = simulate_step(
         cluster,
-        &Workload { model: base, way: 1, dp: 1, precision, dataload },
+        &Workload { model: base, mesh: Mesh::unit(), dp: 1, precision, dataload },
     );
     let tn = simulate_step(
         cluster,
-        &Workload { model: scaled, way, dp: 1, precision, dataload },
+        &Workload { model: scaled, mesh: *mesh, dp: 1, precision, dataload },
     );
-    // efficiency = (useful work rate scaled) / (way * base rate)
-    (scaled.flops_step() / tn.total) / (way as f64 * base.flops_step() / t1.total)
+    // efficiency = (useful work rate scaled) / (mesh.n() * base rate)
+    (scaled.flops_step() / tn.total) / (mesh.n() as f64 * base.flops_step() / t1.total)
 }
 
 #[cfg(test)]
@@ -294,13 +337,17 @@ mod tests {
         ClusterSpec::horeka()
     }
 
+    fn mesh(way: usize) -> Mesh {
+        Mesh::from_degree(way).unwrap()
+    }
+
     #[test]
     fn fp32_roofline_crossover_near_1_tflop() {
         // paper Fig 7 left: compute-bound regime starts ~1 TFLOP/fwd
         let c = horeka();
         let small = Workload {
             model: TABLE1[0], // 0.25 TFLOPs
-            way: 1,
+            mesh: mesh(1),
             dp: 1,
             precision: Precision::Fp32,
             dataload: true,
@@ -319,7 +366,7 @@ mod tests {
         let m = TABLE1[6]; // 16 TFLOPs
         let f32frac = peak_fraction(
             &c,
-            &Workload { model: m, way: 1, dp: 1, precision: Precision::Fp32, dataload: false },
+            &Workload { model: m, mesh: mesh(1), dp: 1, precision: Precision::Fp32, dataload: false },
         );
         assert!((f32frac - 0.81).abs() < 0.02, "fp32 frac {f32frac}");
     }
@@ -329,8 +376,8 @@ mod tests {
         // paper 6.3.2: 1.4B model, no-dataload fp32: 1.9x / 2.7x
         let c = horeka();
         let m = TABLE1[6];
-        let s2 = strong_speedup(&c, m, 2, Precision::Fp32, false);
-        let s4 = strong_speedup(&c, m, 4, Precision::Fp32, false);
+        let s2 = strong_speedup(&c, m, &mesh(2), Precision::Fp32, false);
+        let s4 = strong_speedup(&c, m, &mesh(4), Precision::Fp32, false);
         assert!(s2 > 1.7 && s2 <= 2.0, "2-way speedup {s2}");
         assert!(s4 > 2.3 && s4 <= 4.0, "4-way speedup {s4}");
         assert!(s2 > 1.6 && s4 > 2.3, "must beat Megatron-LM (1.6 / 2.3)");
@@ -343,11 +390,11 @@ mod tests {
         let m = TABLE1[0];
         let t1 = simulate_step(
             &c,
-            &Workload { model: m, way: 1, dp: 1, precision: Precision::Tf32, dataload: true },
+            &Workload { model: m, mesh: mesh(1), dp: 1, precision: Precision::Tf32, dataload: true },
         );
         let t4 = simulate_step(
             &c,
-            &Workload { model: m, way: 4, dp: 1, precision: Precision::Tf32, dataload: true },
+            &Workload { model: m, mesh: mesh(4), dp: 1, precision: Precision::Tf32, dataload: true },
         );
         assert!(t4.total < t1.total / 2.0, "superscalar I/O win: {t1:?} {t4:?}");
     }
@@ -358,7 +405,7 @@ mod tests {
         for (way, dp) in [(1usize, 1usize), (2, 8), (4, 16)] {
             let w = Workload {
                 model: TABLE1[6],
-                way,
+                mesh: mesh(way),
                 dp,
                 precision: Precision::Tf32,
                 dataload: false,
@@ -378,7 +425,7 @@ mod tests {
         // must be measurably slower
         let w = Workload {
             model: TABLE1[6],
-            way: 2,
+            mesh: mesh(2),
             dp: 1,
             precision: Precision::Tf32,
             dataload: false,
@@ -389,11 +436,54 @@ mod tests {
     }
 
     #[test]
+    fn mesh_sweep_prices_eight_and_sixteen_way() {
+        // the regimes the hand-written layouts could never reach: the
+        // model must price 2x4 and 4x4 meshes distinctly — compute keeps
+        // shrinking with the degree while per-rank MP comm pays the
+        // fabric-contention premium
+        let c = horeka();
+        let meshes: Vec<Mesh> = [1usize, 2, 4, 8, 16]
+            .iter()
+            .map(|&n| Mesh::from_degree(n).unwrap())
+            .collect();
+        let sweep = mesh_sweep(&c, TABLE1[8], Precision::Tf32, false, &meshes);
+        assert_eq!(sweep.len(), 5);
+        for w in sweep.windows(2) {
+            assert!(
+                w[1].1.compute < w[0].1.compute,
+                "compute must shrink with the mesh: {:?}",
+                (w[0].0, w[1].0)
+            );
+        }
+        let t8 = &sweep[3].1;
+        let t16 = &sweep[4].1;
+        assert!(t8.mp_comm > 0.0 && t16.mp_comm > 0.0);
+        // contention premium: 16-way per-rank comm is NOT half of 8-way
+        assert!(t16.mp_comm > t8.mp_comm / 2.0, "{t8:?} vs {t16:?}");
+        // ...and a 1x4 mesh prices differently from the 2x2 mesh of the
+        // same degree: it ships MORE messages per linear (3 partial
+        // shards vs data+partial = 2) but rides the fast pairwise
+        // channel-exchange links (mp_bw_2way vs mp_bw_4way), which wins
+        // while that bandwidth gap exceeds the 3:2 volume ratio
+        let flat4 = Workload {
+            model: TABLE1[8],
+            mesh: Mesh::flat(4).unwrap(),
+            dp: 1,
+            precision: Precision::Tf32,
+            dataload: false,
+        };
+        let square4 = Workload { mesh: mesh(4), ..flat4.clone() };
+        let tf = simulate_step(&c, &flat4);
+        let ts = simulate_step(&c, &square4);
+        assert!(tf.mp_comm < ts.mp_comm, "channel-only mesh ships less: {tf:?} {ts:?}");
+    }
+
+    #[test]
     fn dp_traffic_shrinks_with_way() {
         let c = horeka();
         let m = TABLE1[6];
-        let w1 = Workload { model: m, way: 1, dp: 64, precision: Precision::Tf32, dataload: true };
-        let w4 = Workload { model: m, way: 4, dp: 16, precision: Precision::Tf32, dataload: true };
+        let w1 = Workload { model: m, mesh: mesh(1), dp: 64, precision: Precision::Tf32, dataload: true };
+        let w4 = Workload { model: m, mesh: mesh(4), dp: 16, precision: Precision::Tf32, dataload: true };
         let t1 = simulate_step(&c, &w1);
         let t4 = simulate_step(&c, &w4);
         assert!(t4.dp_comm < t1.dp_comm, "MP shards the gradient volume");
@@ -406,15 +496,15 @@ mod tests {
         // communication costs start to dominate.
         let c = horeka();
         let eff_small =
-            weak_efficiency(&c, TABLE1[0], TABLE1[2], 4, Precision::Tf32, true);
+            weak_efficiency(&c, TABLE1[0], TABLE1[2], &mesh(4), Precision::Tf32, true);
         assert!(eff_small > 1.0, "superscalar expected, got {eff_small}");
         let eff_2way =
-            weak_efficiency(&c, TABLE1[2], TABLE1[3], 2, Precision::Tf32, true);
+            weak_efficiency(&c, TABLE1[2], TABLE1[3], &mesh(2), Precision::Tf32, true);
         assert!(eff_2way > 1.0, "2-way superscalar expected, got {eff_2way}");
         // the largest series is no longer superscalar (Fig 9: "in the
         // largest model communication overhead dominates")
         let eff_big =
-            weak_efficiency(&c, TABLE1[6], TABLE1[8], 4, Precision::Tf32, true);
+            weak_efficiency(&c, TABLE1[6], TABLE1[8], &mesh(4), Precision::Tf32, true);
         assert!(eff_big < 1.0, "largest series must not superscale: {eff_big}");
     }
 }

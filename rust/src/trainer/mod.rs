@@ -1,21 +1,21 @@
 //! Distributed training loop: intra-group jigsaw model parallelism +
 //! inter-group data parallelism (paper Sections 4.3 / 5 / 6.3.4).
 //!
-//! World layout: `world = dp * way` ranks; global rank = dp_idx * way +
-//! mp_rank. Ranks with equal `r % way` hold the same parameter shard and
-//! form a DP gradient-reduction group — the paper's rule. Each rank runs
-//! on its own thread over the simulated fabric; all heavy matmuls go
-//! through the shared runtime backend.
+//! World layout: `world = dp * mesh.n()` ranks; global rank =
+//! dp_idx * mesh.n() + mp_rank. Ranks with equal `r % mesh.n()` hold the
+//! same parameter shard and form a DP gradient-reduction group — the
+//! paper's rule, generalized to any `tok x ch` jigsaw mesh. Each rank
+//! runs on its own thread over the simulated fabric; all heavy matmuls
+//! go through the shared runtime backend.
 
 use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::comm::Network;
 use crate::config::ModelConfig;
 use crate::data::ShardedLoader;
-use crate::jigsaw::layouts::Way;
-use crate::jigsaw::Ctx;
+use crate::jigsaw::{Ctx, Mesh};
 use crate::model::dist::DistModel;
 use crate::model::params::{shard_params, PStore};
 use crate::model::init_global_params;
@@ -27,7 +27,8 @@ use crate::util::rng::Rng;
 /// Training-run specification.
 #[derive(Clone)]
 pub struct TrainSpec {
-    pub way: usize,
+    /// jigsaw mesh shape of each model-parallel group
+    pub mesh: Mesh,
     pub dp: usize,
     pub steps: usize,
     pub lr: f32,
@@ -48,9 +49,16 @@ pub struct TrainSpec {
 }
 
 impl TrainSpec {
+    /// Quick spec from a total parallel degree (legacy `way` shorthand):
+    /// the degree maps to its balanced mesh (2 -> 1x2, 4 -> 2x2, ...).
     pub fn quick(way: usize, dp: usize, steps: usize) -> Self {
+        Self::with_mesh(Mesh::from_degree(way).expect("nonzero way"), dp, steps)
+    }
+
+    /// Quick spec from an explicit mesh shape.
+    pub fn with_mesh(mesh: Mesh, dp: usize, steps: usize) -> Self {
         TrainSpec {
-            way,
+            mesh,
             dp,
             steps,
             lr: 1e-3,
@@ -63,6 +71,11 @@ impl TrainSpec {
             val_every: 0,
             val_times: vec![40, 41, 42, 43],
         }
+    }
+
+    /// Model-parallel group size (the legacy "way").
+    pub fn way(&self) -> usize {
+        self.mesh.n()
     }
 }
 
@@ -94,26 +107,29 @@ pub fn train(
     spec: &TrainSpec,
     backend: Arc<dyn Backend>,
 ) -> Result<TrainReport> {
-    let way = Way::from_n(spec.way);
-    let world = spec.way * spec.dp;
+    let mesh = spec.mesh;
+    mesh.validate_config(cfg)
+        .with_context(|| format!("mesh {mesh} does not fit model '{}'", cfg.name))?;
+    let mp = mesh.n();
+    let world = mp * spec.dp;
     // one fabric for jigsaw traffic per MP group + one global for DP
-    let mp_nets: Vec<Network> = (0..spec.dp).map(|_| Network::new(spec.way)).collect();
+    let mp_nets: Vec<Network> = (0..spec.dp).map(|_| Network::new(mp)).collect();
     let dp_net = Network::new(world);
 
     let global_params = init_global_params(cfg, spec.seed);
 
     let mut handles = Vec::new();
     for g in 0..spec.dp {
-        for mp in 0..spec.way {
+        for r in 0..mp {
             let cfg = cfg.clone();
             let spec = spec.clone();
             let backend = backend.clone();
-            let mut mp_comm = mp_nets[g].endpoint(mp);
-            let mut dp_comm = dp_net.endpoint(g * spec.way + mp);
-            let params = shard_params(&cfg, way, mp, &global_params);
+            let mut mp_comm = mp_nets[g].endpoint(r);
+            let mut dp_comm = dp_net.endpoint(g * mp + r);
+            let params = shard_params(&cfg, &mesh, r, &global_params)?;
             handles.push(std::thread::spawn(move || -> Result<RankOutput> {
                 rank_main(
-                    cfg, spec, way, g, mp, params, backend, &mut mp_comm, &mut dp_comm,
+                    cfg, spec, g, r, params, backend, &mut mp_comm, &mut dp_comm,
                 )
             }));
         }
@@ -126,7 +142,7 @@ pub fn train(
         mp_nets.iter().map(|n| n.total_bytes()).sum::<u64>() + dp_net.total_bytes();
 
     // reassemble final params from MP group 0
-    let group0: Vec<&PStore> = outs[..spec.way].iter().map(|o| &o.params).collect();
+    let group0: Vec<&PStore> = outs[..mp].iter().map(|o| &o.params).collect();
     let final_params = crate::model::params::assemble_params(cfg, &group0);
 
     let r0 = &outs[0];
@@ -150,7 +166,6 @@ struct RankOutput {
 fn rank_main(
     cfg: ModelConfig,
     spec: TrainSpec,
-    way: Way,
     dp_idx: usize,
     mp_rank: usize,
     params: PStore,
@@ -158,22 +173,23 @@ fn rank_main(
     mp_comm: &mut crate::comm::Comm,
     dp_comm: &mut crate::comm::Comm,
 ) -> Result<RankOutput> {
-    let mut model = DistModel::new(cfg.clone(), way, mp_rank, params);
+    let mesh = spec.mesh;
+    let mut model = DistModel::new(cfg.clone(), &mesh, mp_rank, params);
     let mut loader = ShardedLoader::new(
         &cfg,
-        spec.way,
+        &mesh,
         mp_rank,
         spec.n_times,
         spec.lead,
         spec.seed ^ (0xD1 + dp_idx as u64) << 8, // distinct per DP group
         spec.n_modes,
-    );
+    )?;
     let mut adam = Adam::new(&model.params, spec.lr);
     adam.encdec_lr_factor = spec.encdec_lr_factor;
     let sched = LrSchedule::paper(spec.lr, spec.n_times.max(1), 100);
 
-    let mp_group: Vec<usize> = (0..spec.way).collect();
-    let dp_group: Vec<usize> = (0..spec.dp).map(|g| g * spec.way + mp_rank).collect();
+    let mp_group = mesh.ranks();
+    let dp_group = mesh.dp_group(spec.dp, mp_rank);
 
     let mut steps = Vec::new();
     let mut val_loss = Vec::new();
@@ -188,7 +204,7 @@ fn rank_main(
             1
         };
         let item = loader.next_item();
-        let mut ctx = Ctx::new(mp_rank, mp_comm, backend.as_ref());
+        let mut ctx = Ctx::new(mesh, mp_rank, mp_comm, backend.as_ref());
         let (loss, mut grads) =
             model.loss_and_grad(&mut ctx, &item.x, &item.y, rollout)?;
 
@@ -240,7 +256,7 @@ fn validate(
     backend: &Arc<dyn Backend>,
 ) -> Result<(f32, Vec<f32>)> {
     let cfg = &model.cfg;
-    let group: Vec<usize> = (0..model.way.n()).collect();
+    let group = model.mesh.ranks();
     let mut loss_acc = 0.0f32;
     let mut sse = Tensor::zeros(&[cfg.channels_padded]);
     let wlat = crate::model::latitude_weights(cfg.lat);
@@ -248,7 +264,7 @@ fn validate(
     for &t in &spec.val_times {
         let (x, _) = loader.read_shard(t as f32);
         let (y, _) = loader.read_shard((t + spec.lead) as f32);
-        let mut ctx = Ctx::new(model.rank, mp_comm, backend.as_ref());
+        let mut ctx = Ctx::new(model.mesh, model.rank, mp_comm, backend.as_ref());
         let (pred, _) = model.forward(&mut ctx, &x, 1)?;
         loss_acc += model.local_loss(&pred, &y);
         let (lat_l, lon_l, c_l) = model.local_dims();
@@ -380,6 +396,26 @@ mod tests {
     }
 
     #[test]
+    fn eight_way_mesh_trains_end_to_end() {
+        // the generalized regime the hand-written layouts could not reach:
+        // a 2x4 mesh (8-way jigsaw) over the thread fabric
+        let spec = TrainSpec::with_mesh(Mesh::new(2, 4).unwrap(), 1, 10);
+        let report = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap();
+        let first = report.steps.first().unwrap().loss;
+        let last = report.steps.last().unwrap().loss;
+        assert!(last < first, "8-way loss {first} -> {last}");
+        assert!(report.comm_bytes > 0);
+    }
+
+    #[test]
+    fn incompatible_mesh_is_a_clean_error() {
+        // channels_padded = 8 cannot split 5 ways: typed error, no panic
+        let spec = TrainSpec::with_mesh(Mesh::flat(5).unwrap(), 1, 2);
+        let err = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap_err();
+        assert!(err.to_string().contains("mesh 1x5"), "{err}");
+    }
+
+    #[test]
     fn domain_parallel_reads_fraction_of_bytes() {
         let c = cfg();
         let r1 = train(&c, &TrainSpec::quick(1, 1, 2), Arc::new(NativeBackend)).unwrap();
@@ -403,10 +439,11 @@ mod tests {
                 let mut comm = net.endpoint(r);
                 let params = crate::model::params::shard_params(
                     &cfg,
-                    crate::jigsaw::layouts::Way::One,
+                    &crate::jigsaw::Mesh::unit(),
                     0,
                     &global,
-                );
+                )
+                .unwrap();
                 handles.push(std::thread::spawn(move || {
                     let mut grads = params.zeros_like();
                     for t in grads.grad_tensors_mut() {

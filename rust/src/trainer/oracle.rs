@@ -13,8 +13,7 @@ use anyhow::{anyhow, Result};
 
 use crate::comm::Network;
 use crate::config::{artifacts_dir, Manifest, ModelConfig};
-use crate::jigsaw::layouts::Way;
-use crate::jigsaw::Ctx;
+use crate::jigsaw::{Ctx, Mesh};
 use crate::model::dist::DistModel;
 use crate::model::params::{assemble_params, shard_params, PStore};
 use crate::model::{init_global_params, param_order};
@@ -26,7 +25,7 @@ use crate::util::rng::Rng;
 /// Comparison outcome.
 pub struct OracleReport {
     pub preset: String,
-    pub way: usize,
+    pub mesh: Mesh,
     pub loss_oracle: f32,
     pub loss_dist: f32,
     pub max_grad_err: f32,
@@ -38,9 +37,9 @@ impl std::fmt::Display for OracleReport {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         writeln!(
             f,
-            "oracle check: preset={} way={}\n  loss  oracle={:.6} dist={:.6} (diff {:.2e})\n  grads max err {:.3e} (worst: {})",
+            "oracle check: preset={} mesh={}\n  loss  oracle={:.6} dist={:.6} (diff {:.2e})\n  grads max err {:.3e} (worst: {})",
             self.preset,
-            self.way,
+            self.mesh,
             self.loss_oracle,
             self.loss_dist,
             (self.loss_oracle - self.loss_dist).abs(),
@@ -82,34 +81,35 @@ pub fn sample_shard(
     out
 }
 
-/// Run the n-way rust engine for one (x, y) and reassemble (loss, grads).
+/// Run the mesh-parallel rust engine for one (x, y) and reassemble
+/// (loss, grads) across the whole group.
 pub fn run_dist_loss_and_grad(
     cfg: &ModelConfig,
-    way: usize,
+    mesh: &Mesh,
     global_params: &[(String, Tensor)],
     x: &Tensor,
     y: &Tensor,
     backend: Arc<dyn Backend>,
     rollout: usize,
 ) -> Result<(f32, Vec<(String, Tensor)>)> {
-    let w = Way::from_n(way);
-    let net = Network::new(way);
+    let mesh = *mesh;
+    let net = Network::new(mesh.n());
     let mut handles = Vec::new();
-    for r in 0..way {
+    for r in 0..mesh.n() {
         let cfg = cfg.clone();
-        let params = shard_params(&cfg, w, r, global_params);
+        let params = shard_params(&cfg, &mesh, r, global_params)?;
         let mut comm = net.endpoint(r);
         let backend = backend.clone();
         let (x, y) = (x.clone(), y.clone());
         handles.push(std::thread::spawn(move || -> Result<(f32, PStore)> {
-            let model = DistModel::new(cfg, w, r, params);
+            let model = DistModel::new(cfg, &mesh, r, params);
             let (la, ll, lc) = model.local_dims();
             let lat0 = model.lat_offset();
             let ch0 = model.ch_offset();
             let _ = ll;
             let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
             let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
-            let mut ctx = Ctx::new(r, &mut comm, backend.as_ref());
+            let mut ctx = Ctx::new(mesh, r, &mut comm, backend.as_ref());
             let (loss, grads) = model.loss_and_grad(&mut ctx, &xl, &yl, rollout)?;
             Ok((loss, grads))
         }));
@@ -123,16 +123,26 @@ pub fn run_dist_loss_and_grad(
     Ok((loss, assemble_params(cfg, &stores)))
 }
 
-/// Execute the AOT oracle `loss_and_grad` (ln_groups matched to `way`).
+/// Execute the AOT oracle `loss_and_grad` (`ln_groups` must match the
+/// mesh's channel split — the exported programs cover splits 1 and 2).
 pub fn run_oracle_loss_and_grad(
     engine: &Engine,
     cfg: &ModelConfig,
-    way: usize,
+    ln_groups: usize,
     global_params: &[(String, Tensor)],
     x: &Tensor,
     y: &Tensor,
 ) -> Result<(f32, Vec<(String, Tensor)>)> {
-    let tag = if way == 1 { "loss_and_grad".to_string() } else { "loss_and_grad_g2".to_string() };
+    let tag = match ln_groups {
+        1 => "loss_and_grad".to_string(),
+        2 => "loss_and_grad_g2".to_string(),
+        n => {
+            return Err(anyhow!(
+                "no AOT oracle exported for ln_groups={n} (channel split); \
+                 available: 1, 2"
+            ))
+        }
+    };
     let mut inputs: Vec<Tensor> = global_params.iter().map(|(_, t)| t.clone()).collect();
     inputs.push(x.clone());
     inputs.push(y.clone());
@@ -153,8 +163,10 @@ pub fn run_oracle_loss_and_grad(
     Ok((loss, grads))
 }
 
-/// Full oracle comparison for a preset/way (the `jigsaw validate` command).
-pub fn validate_against_oracle(preset: &str, way: usize) -> Result<OracleReport> {
+/// Full oracle comparison for a preset/mesh (the `jigsaw validate`
+/// command). The mesh's channel split selects the matching grouped-LN
+/// oracle program.
+pub fn validate_against_oracle(preset: &str, mesh: &Mesh) -> Result<OracleReport> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir, preset)?;
     let manifest = Manifest::load(&dir, preset)?;
@@ -172,9 +184,9 @@ pub fn validate_against_oracle(preset: &str, way: usize) -> Result<OracleReport>
     let y = mk_sample();
 
     let (loss_o, grads_o) =
-        run_oracle_loss_and_grad(&engine, &cfg, way, &global_params, &x, &y)?;
+        run_oracle_loss_and_grad(&engine, &cfg, mesh.ch(), &global_params, &x, &y)?;
     let (loss_d, grads_d) =
-        run_dist_loss_and_grad(&cfg, way, &global_params, &x, &y, backend, 1)?;
+        run_dist_loss_and_grad(&cfg, mesh, &global_params, &x, &y, backend, 1)?;
 
     let mut per_param_err = Vec::new();
     let mut max_err = 0.0f32;
@@ -190,7 +202,7 @@ pub fn validate_against_oracle(preset: &str, way: usize) -> Result<OracleReport>
     }
     Ok(OracleReport {
         preset: preset.to_string(),
-        way,
+        mesh: *mesh,
         loss_oracle: loss_o,
         loss_dist: loss_d,
         max_grad_err: max_err,

@@ -9,8 +9,7 @@ use std::sync::Arc;
 
 use jigsaw::comm::Network;
 use jigsaw::config::ModelConfig;
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::init_global_params;
 use jigsaw::model::params::shard_params;
@@ -28,29 +27,29 @@ fn mk_sample(cfg: &ModelConfig, seed: u64) -> Tensor {
     Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
 }
 
-/// Run one n-way loss_and_grad over a fresh fabric; return total bytes.
-fn fabric_bytes(cfg: &ModelConfig, way: usize, seed: u64) -> u64 {
-    let w = Way::from_n(way);
-    let net = Network::new(way);
+/// Run one mesh-parallel loss_and_grad over a fresh fabric; return total
+/// fabric bytes.
+fn fabric_bytes(cfg: &ModelConfig, mesh: Mesh, seed: u64) -> u64 {
+    let net = Network::new(mesh.n());
     let global = init_global_params(cfg, seed);
     let x = mk_sample(cfg, seed + 1);
     let y = mk_sample(cfg, seed + 2);
     let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
     let mut handles = Vec::new();
-    for r in 0..way {
+    for r in 0..mesh.n() {
         let cfg = cfg.clone();
         let mut comm = net.endpoint(r);
         let backend = backend.clone();
         let global = global.clone();
         let (x, y) = (x.clone(), y.clone());
         handles.push(std::thread::spawn(move || {
-            let store = shard_params(&cfg, w, r, &global);
-            let model = DistModel::new(cfg, w, r, store);
+            let store = shard_params(&cfg, &mesh, r, &global).unwrap();
+            let model = DistModel::new(cfg, &mesh, r, store);
             let (la, _, lc) = model.local_dims();
             let (lat0, ch0) = (model.lat_offset(), model.ch_offset());
             let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
             let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
-            let mut ctx = Ctx::new(r, &mut comm, backend.as_ref());
+            let mut ctx = Ctx::new(mesh, r, &mut comm, backend.as_ref());
             model.loss_and_grad(&mut ctx, &xl, &yl, 1).unwrap();
         }));
     }
@@ -63,14 +62,18 @@ fn fabric_bytes(cfg: &ModelConfig, way: usize, seed: u64) -> u64 {
 #[test]
 fn one_way_has_zero_comm() {
     let cfg = common::config("tiny");
-    assert_eq!(fabric_bytes(&cfg, 1, 3), 0, "1-way must not communicate");
+    assert_eq!(
+        fabric_bytes(&cfg, Mesh::unit(), 3),
+        0,
+        "1-way must not communicate"
+    );
 }
 
 #[test]
 fn comm_grows_with_way_but_stays_bounded() {
     let cfg = common::config("tiny");
-    let b2 = fabric_bytes(&cfg, 2, 5);
-    let b4 = fabric_bytes(&cfg, 4, 5);
+    let b2 = fabric_bytes(&cfg, Mesh::from_degree(2).unwrap(), 5);
+    let b4 = fabric_bytes(&cfg, Mesh::from_degree(4).unwrap(), 5);
     assert!(b2 > 0 && b4 > b2, "b2={b2} b4={b4}");
     // communication must stay far below an allgather-everything scheme:
     // <= ~3 shard-sized messages per linear layer per pass
@@ -90,10 +93,13 @@ fn zero_memory_redundancy_across_ways() {
         .filter(|(_, t)| t.rank() == 2)
         .map(|(_, t)| t.numel())
         .sum();
-    for way in [2usize, 4] {
-        let w = Way::from_n(way);
+    for way in [2usize, 4, 8] {
+        let w = Mesh::from_degree(way).unwrap();
+        if w.validate_config(&cfg).is_err() {
+            continue;
+        }
         for r in 0..way {
-            let store = shard_params(&cfg, w, r, &global);
+            let store = shard_params(&cfg, &w, r, &global).unwrap();
             let local_mat: usize = store
                 .mats
                 .values()
@@ -119,14 +125,17 @@ fn property_loss_invariant_to_way() {
         let x = mk_sample(&cfg, seed + 10);
         let y = mk_sample(&cfg, seed + 20);
         let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
-        let run = |way: usize| -> f32 {
+        let run = |mesh: Mesh| -> f32 {
             jigsaw::trainer::oracle::run_dist_loss_and_grad(
-                &cfg, way, &global, &x, &y, backend.clone(), 1,
+                &cfg, &mesh, &global, &x, &y, backend.clone(), 1,
             )
             .unwrap()
             .0
         };
-        let (l2, l4) = (run(2), run(4));
+        let (l2, l4) = (
+            run(Mesh::from_degree(2).unwrap()),
+            run(Mesh::from_degree(4).unwrap()),
+        );
         if (l2 - l4).abs() < 1e-4 * l2.abs().max(1.0) {
             Ok(())
         } else {
@@ -140,11 +149,14 @@ fn domain_parallel_read_volume_partition() {
     // the paper's I/O claim on the real loader: the 4 ranks together read
     // (about) one sample's physical bytes — not 4 copies
     let cfg = common::config("tiny");
-    let mut l1 = jigsaw::data::ShardedLoader::new(&cfg, 1, 0, 8, 1, 3, 8);
+    let mut l1 =
+        jigsaw::data::ShardedLoader::new(&cfg, &Mesh::unit(), 0, 8, 1, 3, 8).unwrap();
     let full: u64 = l1.next_item().bytes_read;
+    let mesh4 = Mesh::from_degree(4).unwrap();
     let mut total4 = 0u64;
     for r in 0..4 {
-        let mut l = jigsaw::data::ShardedLoader::new(&cfg, 4, r, 8, 1, 3, 8);
+        let mut l =
+            jigsaw::data::ShardedLoader::new(&cfg, &mesh4, r, 8, 1, 3, 8).unwrap();
         total4 += l.next_item().bytes_read;
     }
     assert!(

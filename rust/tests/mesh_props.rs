@@ -1,0 +1,232 @@
+//! Mesh/Planner properties on the real engine, artifact-free:
+//!
+//!   * `dist_matmul` over planner-derived grids for 2x4 and 4x4 meshes
+//!     (the 8-/16-way regimes the hand-written layouts never covered)
+//!     must match the single-rank matmul oracle;
+//!   * the group-reduced loss and every reassembled parameter gradient
+//!     must be invariant to the token axis: for a fixed channel split,
+//!     meshes 1xc, 2xc, 4xc are the same math distributed differently
+//!     (layer-norm statistics depend only on the channel split), so they
+//!     agree to fp tolerance — the mesh generalization of the seed's
+//!     2-way-vs-4-way equivalence test.
+
+use std::sync::Arc;
+use std::thread;
+
+use jigsaw::jigsaw::{dist_matmul, Ctx, DistMat, Mesh, Planner, Site};
+use jigsaw::model::init_global_params;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::{Backend, MatmulOp};
+use jigsaw::tensor::{ops, Tensor};
+use jigsaw::trainer::oracle::run_dist_loss_and_grad;
+use jigsaw::util::rng::Rng;
+
+fn rand_t(rng: &mut Rng, r: usize, c: usize) -> Tensor {
+    let mut d = vec![0.0; r * c];
+    rng.fill_normal(&mut d, 1.0);
+    Tensor::new(vec![r, c], d)
+}
+
+fn cfg() -> jigsaw::config::ModelConfig {
+    jigsaw::config::ModelConfig {
+        name: "mesh-props".into(),
+        lat: 8,
+        lon: 16,
+        channels: 6,
+        channels_padded: 8,
+        patch: 2,
+        d_emb: 32,
+        d_tok: 48,
+        d_ch: 32,
+        blocks: 2,
+        tokens: 32,
+        patch_dim: 32,
+        param_count: 12904,
+        flops_forward: 0,
+        channel_weights: vec![1.0; 6],
+    }
+}
+
+fn mk_sample(cfg: &jigsaw::config::ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::seed_from(seed);
+    let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+    rng.fill_normal(&mut d, 1.0);
+    Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
+}
+
+/// Run one dist_matmul over `mesh.n()` rank threads on planner grids.
+#[allow(clippy::too_many_arguments)]
+fn run_planner_matmul(
+    mesh: Mesh,
+    op: MatmulOp,
+    xg: jigsaw::jigsaw::BlockGrid,
+    wg: jigsaw::jigsaw::BlockGrid,
+    yg: jigsaw::jigsaw::BlockGrid,
+    x: &Tensor,
+    w: &Tensor,
+    site: Site,
+) -> Tensor {
+    let net = jigsaw::comm::Network::new(mesh.n());
+    let mut handles = Vec::new();
+    for r in 0..mesh.n() {
+        let mut comm = net.endpoint(r);
+        let (xg, wg, yg) = (xg.clone(), wg.clone(), yg.clone());
+        let (x, w) = (x.clone(), w.clone());
+        handles.push(thread::spawn(move || {
+            let backend = NativeBackend;
+            let mut ctx = Ctx::new(mesh, r, &mut comm, &backend);
+            let xd = DistMat::from_global(&x, xg, r);
+            let wd = DistMat::from_global(&w, wg, r);
+            dist_matmul(&mut ctx, op, &xd, &wd, &yg, site).unwrap()
+        }));
+    }
+    let parts: Vec<DistMat> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let refs: Vec<&DistMat> = parts.iter().collect();
+    DistMat::assemble(&refs)
+}
+
+#[test]
+fn dist_matmul_on_planner_grids_matches_single_rank_oracle() {
+    let mut rng = Rng::seed_from(0xE5);
+    for (t, c) in [(1usize, 2usize), (2, 2), (2, 4), (4, 4)] {
+        let mesh = Mesh::new(t, c).unwrap();
+        let p = Planner::new(mesh);
+        // dims divisible by every split in play
+        let (tok, d, dch, dtok) = (8 * t.max(c), 8 * c, 12 * c, 4 * c);
+
+        // channel-MLP forward: act x W_nt^T -> act (the paper's Eq 1/3)
+        let x = rand_t(&mut rng, tok, d);
+        let wnt = rand_t(&mut rng, dch, d);
+        let got = run_planner_matmul(
+            mesh,
+            MatmulOp::NT,
+            p.act(),
+            p.weight_nt(),
+            p.act(),
+            &x,
+            &wnt,
+            Site::WOwner,
+        );
+        let want = ops::matmul_nt(&x, &wnt);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "{mesh} NT err {}",
+            got.max_abs_diff(&want)
+        );
+
+        // token-MLP forward: W1 x act -> tok_hidden (transposed-MLP form)
+        let w1 = rand_t(&mut rng, dtok, tok);
+        let u = rand_t(&mut rng, tok, d);
+        let got = run_planner_matmul(
+            mesh,
+            MatmulOp::NN,
+            p.weight_tok1(),
+            p.act(),
+            p.tok_hidden(),
+            &w1,
+            &u,
+            Site::XOwner,
+        );
+        let want = ops::matmul_nn(&w1, &u);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "{mesh} NN err {}",
+            got.max_abs_diff(&want)
+        );
+
+        // weight-gradient form: dY^T x X -> weight_nt grid
+        let dy = rand_t(&mut rng, tok, dch);
+        let got = run_planner_matmul(
+            mesh,
+            MatmulOp::TN,
+            p.act(),
+            p.act(),
+            p.weight_nt(),
+            &dy,
+            &x,
+            Site::WOwner,
+        );
+        let want = ops::matmul_tn(&dy, &x);
+        assert!(
+            got.max_abs_diff(&want) < 1e-4,
+            "{mesh} TN err {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn loss_and_grads_invariant_to_token_axis() {
+    // fixed channel split c: meshes 1xc, 2xc, (4xc) must produce the same
+    // loss and the same reassembled gradients to 1e-4 — the 8-way (2x4)
+    // and 16-way (4x4) acceptance gate against the flat-mesh oracle.
+    let cfg = cfg();
+    let global = init_global_params(&cfg, 21);
+    let x = mk_sample(&cfg, 31);
+    let y = mk_sample(&cfg, 32);
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    for c in [2usize, 4] {
+        let (oracle_loss, oracle_grads) = run_dist_loss_and_grad(
+            &cfg,
+            &Mesh::new(1, c).unwrap(),
+            &global,
+            &x,
+            &y,
+            backend.clone(),
+            1,
+        )
+        .unwrap();
+        for t in [2usize, 4] {
+            if t > c {
+                continue; // 4x2 is rejected by construction
+            }
+            let mesh = Mesh::new(t, c).unwrap();
+            let (loss, grads) =
+                run_dist_loss_and_grad(&cfg, &mesh, &global, &x, &y, backend.clone(), 1)
+                    .unwrap();
+            assert!(
+                (loss - oracle_loss).abs() <= 1e-4 * oracle_loss.abs().max(1.0),
+                "{mesh} loss {loss} vs 1x{c} oracle {oracle_loss}"
+            );
+            for ((n, go), (_, gd)) in oracle_grads.iter().zip(&grads) {
+                let err = go.max_abs_diff(gd);
+                assert!(err <= 1e-4, "{mesh} grad '{n}' err {err} vs 1x{c}");
+            }
+        }
+    }
+}
+
+#[test]
+fn rollout_is_mesh_invariant_too() {
+    // the randomized-rollout path reuses the processor on every mesh
+    let cfg = cfg();
+    let global = init_global_params(&cfg, 5);
+    let x = mk_sample(&cfg, 51);
+    let y = mk_sample(&cfg, 52);
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let (l_flat, g_flat) = run_dist_loss_and_grad(
+        &cfg,
+        &Mesh::new(1, 4).unwrap(),
+        &global,
+        &x,
+        &y,
+        backend.clone(),
+        2,
+    )
+    .unwrap();
+    let (l_8, g_8) = run_dist_loss_and_grad(
+        &cfg,
+        &Mesh::new(2, 4).unwrap(),
+        &global,
+        &x,
+        &y,
+        backend,
+        2,
+    )
+    .unwrap();
+    assert!((l_flat - l_8).abs() <= 1e-4 * l_flat.abs().max(1.0), "{l_flat} vs {l_8}");
+    for ((n, a), (_, b)) in g_flat.iter().zip(&g_8) {
+        let err = a.max_abs_diff(b);
+        assert!(err <= 2e-4, "rollout grad '{n}' err {err}");
+    }
+}

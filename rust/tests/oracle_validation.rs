@@ -7,6 +7,7 @@ mod common;
 
 use std::sync::Arc;
 
+use jigsaw::jigsaw::Mesh;
 use jigsaw::model::init_global_params;
 use jigsaw::runtime::engine::PjrtBackend;
 use jigsaw::runtime::Backend;
@@ -30,17 +31,18 @@ fn check_way(preset: &str, way: usize, tol: f32) {
     let params = init_global_params(&cfg, 42);
     let x = mk_sample(&cfg, 1);
     let y = mk_sample(&cfg, 2);
+    let mesh = Mesh::from_degree(way).unwrap();
     let (loss_o, grads_o) =
-        run_oracle_loss_and_grad(&engine, &cfg, way, &params, &x, &y).unwrap();
+        run_oracle_loss_and_grad(&engine, &cfg, mesh.ch(), &params, &x, &y).unwrap();
     let (loss_d, grads_d) =
-        run_dist_loss_and_grad(&cfg, way, &params, &x, &y, backend, 1).unwrap();
+        run_dist_loss_and_grad(&cfg, &mesh, &params, &x, &y, backend, 1).unwrap();
     assert!(
         (loss_o - loss_d).abs() <= tol * loss_o.abs().max(1.0),
-        "{preset}/{way}-way loss mismatch: {loss_o} vs {loss_d}"
+        "{preset}/{mesh} loss mismatch: {loss_o} vs {loss_d}"
     );
     for ((n, go), (_, gd)) in grads_o.iter().zip(&grads_d) {
         let err = go.max_abs_diff(gd);
-        assert!(err <= tol, "{preset}/{way}-way grad '{n}' err {err}");
+        assert!(err <= tol, "{preset}/{mesh} grad '{n}' err {err}");
     }
 }
 
@@ -84,19 +86,12 @@ fn forward_rollout_matches_oracle() {
     let backend: Arc<dyn Backend> = Arc::new(PjrtBackend { engine: engine.clone() });
     let net = jigsaw::comm::Network::new(1);
     let mut comm = net.endpoint(0);
-    let store = jigsaw::model::params::shard_params(
-        &cfg,
-        jigsaw::jigsaw::layouts::Way::One,
-        0,
-        &params,
-    );
-    let model = jigsaw::model::dist::DistModel::new(
-        cfg.clone(),
-        jigsaw::jigsaw::layouts::Way::One,
-        0,
-        store,
-    );
-    let mut ctx = jigsaw::jigsaw::Ctx::new(0, &mut comm, backend.as_ref());
+    let store =
+        jigsaw::model::params::shard_params(&cfg, &Mesh::unit(), 0, &params).unwrap();
+    let model =
+        jigsaw::model::dist::DistModel::new(cfg.clone(), &Mesh::unit(), 0, store);
+    let mut ctx =
+        jigsaw::jigsaw::Ctx::new(Mesh::unit(), 0, &mut comm, backend.as_ref());
     let (pred, _) = model.forward(&mut ctx, &x, 2).unwrap();
     let flat = pred.reshape(&[cfg.lat, cfg.lon, cfg.channels_padded]);
     let err = oracle[0].max_abs_diff(&flat);
@@ -112,9 +107,12 @@ fn dist_loss_identical_between_2way_and_4way() {
     let params = init_global_params(&cfg, 11);
     let x = mk_sample(&cfg, 5);
     let y = mk_sample(&cfg, 6);
+    let m2 = Mesh::from_degree(2).unwrap();
+    let m4 = Mesh::from_degree(4).unwrap();
     let (l2, _) =
-        run_dist_loss_and_grad(&cfg, 2, &params, &x, &y, backend.clone(), 1).unwrap();
-    let (l4, _) = run_dist_loss_and_grad(&cfg, 4, &params, &x, &y, backend, 1).unwrap();
+        run_dist_loss_and_grad(&cfg, &m2, &params, &x, &y, backend.clone(), 1).unwrap();
+    let (l4, _) =
+        run_dist_loss_and_grad(&cfg, &m4, &params, &x, &y, backend, 1).unwrap();
     assert!((l2 - l4).abs() < 1e-5, "2-way {l2} vs 4-way {l4}");
 }
 

@@ -10,6 +10,7 @@ mod common;
 
 use std::sync::Arc;
 
+use jigsaw::jigsaw::Mesh;
 use jigsaw::model::init_global_params;
 use jigsaw::runtime::engine::PjrtBackend;
 use jigsaw::runtime::Backend;
@@ -31,8 +32,9 @@ fn all_plan_shapes_have_pjrt_primitives() {
         let x = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d.clone());
         let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
         for way in [1usize, 2, 4] {
-            run_dist_loss_and_grad(&cfg, way, &params, &x, &y, backend.clone(), 1)
-                .unwrap_or_else(|e| panic!("{preset}/{way}-way missing primitive: {e}"));
+            let mesh = Mesh::from_degree(way).unwrap();
+            run_dist_loss_and_grad(&cfg, &mesh, &params, &x, &y, backend.clone(), 1)
+                .unwrap_or_else(|e| panic!("{preset}/{mesh} missing primitive: {e}"));
         }
         let stats = engine.stats();
         assert_eq!(

@@ -8,8 +8,7 @@ mod common;
 use std::sync::Arc;
 
 use jigsaw::comm::Network;
-use jigsaw::jigsaw::layouts::Way;
-use jigsaw::jigsaw::Ctx;
+use jigsaw::jigsaw::{Ctx, Mesh};
 use jigsaw::model::dist::DistModel;
 use jigsaw::model::params::{assemble_params, shard_params};
 use jigsaw::model::{init_global_params, param_order};
@@ -58,9 +57,9 @@ fn rust_adam_step_matches_aot_train_step() {
     let backend: Arc<dyn Backend> = Arc::new(PjrtBackend { engine: engine.clone() });
     let net = Network::new(1);
     let mut comm = net.endpoint(0);
-    let store = shard_params(&cfg, Way::One, 0, &params);
-    let mut model = DistModel::new(cfg.clone(), Way::One, 0, store);
-    let mut ctx = Ctx::new(0, &mut comm, backend.as_ref());
+    let store = shard_params(&cfg, &Mesh::unit(), 0, &params).unwrap();
+    let mut model = DistModel::new(cfg.clone(), &Mesh::unit(), 0, store);
+    let mut ctx = Ctx::new(Mesh::unit(), 0, &mut comm, backend.as_ref());
     let (loss, grads) = model.loss_and_grad(&mut ctx, &x, &y, 1).unwrap();
     assert!((loss - loss_oracle).abs() < 1e-5, "{loss} vs {loss_oracle}");
     let clip = Adam::clip_scale(&grads, &mut comm, &[0]);
@@ -88,7 +87,7 @@ fn n_way_update_consistent_with_1_way() {
     let lr = 1e-3f32;
 
     let run = |way: usize| -> Vec<(String, Tensor)> {
-        let w = Way::from_n(way);
+        let w = Mesh::from_degree(way).unwrap();
         let net = Network::new(way);
         let mut handles = Vec::new();
         for r in 0..way {
@@ -98,14 +97,14 @@ fn n_way_update_consistent_with_1_way() {
             let global = global.clone();
             let (x, y) = (x.clone(), y.clone());
             handles.push(std::thread::spawn(move || {
-                let store = shard_params(&cfg, w, r, &global);
-                let mut model = DistModel::new(cfg, w, r, store);
+                let store = shard_params(&cfg, &w, r, &global).unwrap();
+                let mut model = DistModel::new(cfg, &w, r, store);
                 let (la, _, lc) = model.local_dims();
                 let lat0 = model.lat_offset();
                 let ch0 = model.ch_offset();
                 let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
                 let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
-                let mut ctx = Ctx::new(r, &mut comm, backend.as_ref());
+                let mut ctx = Ctx::new(w, r, &mut comm, backend.as_ref());
                 let (_, grads) = model.loss_and_grad(&mut ctx, &xl, &yl, 1).unwrap();
                 let clip = Adam::clip_scale(&grads, &mut comm, &(0..way).collect::<Vec<_>>());
                 let mut adam = Adam::new(&model.params, lr);
