@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // phase 1: plain one-step training
-    let mut spec = TrainSpec::quick(1, 1, 120);
+    let mut spec = TrainSpec::quick(1, 1, 120).unwrap();
     spec.lr = 2e-3;
     spec.n_times = 48;
     spec.n_modes = 10;

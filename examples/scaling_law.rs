@@ -24,7 +24,7 @@ fn main() -> anyhow::Result<()> {
     let mut ordered = true;
     for (name, d_emb, d_tok, blocks) in sizes {
         let cfg = synth_config(name, d_emb, d_tok, blocks);
-        let mut spec = TrainSpec::quick(1, 1, 150);
+        let mut spec = TrainSpec::quick(1, 1, 150).unwrap();
         spec.lr = 2e-3;
         spec.n_times = 48;
         spec.n_modes = 14;

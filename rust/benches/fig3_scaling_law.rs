@@ -23,7 +23,7 @@ fn main() {
     let mut finals = Vec::new();
     for (name, d_emb, d_tok, blocks) in sizes {
         let cfg = synth_config(name, d_emb, d_tok, blocks);
-        let mut spec = TrainSpec::quick(1, 1, 120);
+        let mut spec = TrainSpec::quick(1, 1, 120).unwrap();
         spec.lr = 2e-3;
         spec.n_times = 40;
         spec.n_modes = 14;

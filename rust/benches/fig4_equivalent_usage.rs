@@ -28,7 +28,7 @@ fn main() {
     let mut vals = Vec::new();
     for (name, way, dp) in [("1-way x 8DP", 1usize, 8usize), ("2-way x 4DP", 2, 4), ("4-way x 2DP", 4, 2)] {
         let steps = sample_budget / dp;
-        let mut spec = TrainSpec::quick(way, dp, steps);
+        let mut spec = TrainSpec::quick(way, dp, steps).unwrap();
         spec.lr = 1.5e-3;
         spec.n_times = 32;
         spec.n_modes = 14;

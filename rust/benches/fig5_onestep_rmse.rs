@@ -23,7 +23,7 @@ fn main() {
     banner("Fig 5", "one-step RMSE vs persistence/climatology baselines");
     let cfg = synth_config("wm-best", 96, 64, 2);
     let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
-    let mut spec = TrainSpec::quick(2, 1, 220);
+    let mut spec = TrainSpec::quick(2, 1, 220).unwrap();
     spec.lr = 2e-3;
     spec.n_times = 48;
     spec.n_modes = 12;

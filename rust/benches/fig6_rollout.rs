@@ -33,7 +33,7 @@ fn main() {
 
     // pre-train with 2-way jigsaw (the paper: rollout fine-tuning is only
     // possible with MP)
-    let mut spec = TrainSpec::quick(2, 1, 160);
+    let mut spec = TrainSpec::quick(2, 1, 160).unwrap();
     spec.lr = 2e-3;
     spec.n_times = 48;
     spec.n_modes = 12;

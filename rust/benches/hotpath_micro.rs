@@ -288,7 +288,7 @@ fn main() {
     {
         let cfg = jigsaw::benchkit::synth_config("pool-bench", 96, 64, 2);
         let run = |steps: usize| -> (u64, u64) {
-            let spec = jigsaw::trainer::TrainSpec::quick(1, 1, steps);
+            let spec = jigsaw::trainer::TrainSpec::quick(1, 1, steps).unwrap();
             let before = pool::stats();
             jigsaw::trainer::train(&cfg, &spec, Arc::new(NativeBackend)).unwrap();
             let after = pool::stats();
@@ -562,6 +562,139 @@ fn main() {
                 ("bucketed_us", jnum(bucketed_secs * 1e6)),
                 ("speedup", jnum(speedup)),
             ]),
+        );
+    }
+
+    // ================= §DpOverlap: grad-ready reduce under backward =====
+    // The tentpole measurement: a dp=4 world (1x1 mesh, pure DP traffic)
+    // runs one full loss_and_grad + DP gradient reduce per step under
+    // injected fabric delays. The post-hoc baseline packs and rings every
+    // bucket only *after* the backward pass returns, paying the ring
+    // latency serially on the critical path; the grad-ready scheduler
+    // posts each bucket's ring as it fills during backward, so that
+    // latency elapses under compute. Writes BENCH_dp_overlap.json and
+    // asserts the overlapped step wall beats the post-hoc one.
+    {
+        use jigsaw::model::dist::DistModel;
+        use jigsaw::model::params::shard_params;
+        use jigsaw::trainer::oracle::sample_shard;
+        use jigsaw::trainer::{dp_allreduce_grads_bucketed, GradReduceScheduler};
+
+        let dp = 4usize;
+        let bucket_elems = 1usize << 16; // 256 KiB buckets -> ~10 rings
+        // compute-heavy enough that the backward pass offers a real
+        // window to hide ring latency under
+        let cfg = jigsaw::benchkit::synth_config("dp-overlap-bench", 256, 192, 3);
+        let global = jigsaw::model::init_global_params(&cfg, 3);
+        let mesh = Mesh::unit();
+        let spec = FabricSpec {
+            latency: Duration::from_micros(400),
+            jitter: Duration::from_micros(80),
+            bytes_per_sec: 1e9,
+        };
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        let x = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d.clone());
+        rng.fill_normal(&mut d, 1.0);
+        let y = Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d);
+
+        let run = |overlapped: bool| -> f64 {
+            let (cfg, global, x, y) = (&cfg, &global, &x, &y);
+            time_mean(5, || {
+                let dp_net = Network::new(dp);
+                dp_net.set_fabric(spec, 42);
+                let group: Vec<usize> = (0..dp).collect();
+                let mut handles = Vec::new();
+                for g in 0..dp {
+                    let cfg = cfg.clone();
+                    let params = shard_params(&cfg, &mesh, 0, global).unwrap();
+                    let mut dp_comm = dp_net.endpoint(g);
+                    let mp_net = Network::new(1);
+                    let mut mp_comm = mp_net.endpoint(0);
+                    let grp = group.clone();
+                    let (x, y) = (x.clone(), y.clone());
+                    handles.push(std::thread::spawn(move || {
+                        let b = NativeBackend;
+                        let model = DistModel::new(cfg, &mesh, 0, params);
+                        let (la, _, lc) = model.local_dims();
+                        let xl = sample_shard(&x, (0, la), (0, lc));
+                        let yl = sample_shard(&y, (0, la), (0, lc));
+                        let mut ctx = Ctx::new(mesh, 0, &mut mp_comm, &b);
+                        if overlapped {
+                            let mut sched = GradReduceScheduler::new(
+                                &mut dp_comm,
+                                &grp,
+                                bucket_elems,
+                            );
+                            let (_, mut grads) = model
+                                .loss_and_grad_with(&mut ctx, &xl, &yl, 1, &mut sched)
+                                .unwrap();
+                            sched.finish(&mut grads);
+                            grads
+                        } else {
+                            let (_, mut grads) =
+                                model.loss_and_grad(&mut ctx, &xl, &yl, 1).unwrap();
+                            dp_allreduce_grads_bucketed(
+                                &mut grads,
+                                &mut dp_comm,
+                                &grp,
+                                bucket_elems,
+                            );
+                            grads
+                        }
+                    }));
+                }
+                for h in handles {
+                    std::hint::black_box(h.join().unwrap());
+                }
+            })
+        };
+        // warm pools/caches once per mode, then measure
+        let _ = run(false);
+        let posthoc_secs = run(false);
+        let _ = run(true);
+        let overlapped_secs = run(true);
+        let speedup = posthoc_secs / overlapped_secs;
+        let grad_elems: usize = {
+            let mut s = shard_params(&cfg, &mesh, 0, &global).unwrap();
+            s.grad_tensors_mut().iter().map(|t| t.numel()).sum()
+        };
+        t.row(&[
+            "dp grad reduce grad-ready vs post-hoc (delayed fabric)".into(),
+            format!("{:.1}M grads / {dp} DP ranks", grad_elems as f64 / 1e6),
+            fmt(overlapped_secs * 1e6),
+            format!("{speedup:.2}x vs post-hoc {:.0} us", posthoc_secs * 1e6),
+        ]);
+        let dp_overlap_record = jobj(vec![
+            ("bench", Json::Str("dp_overlap".into())),
+            ("dp", jnum(dp as f64)),
+            ("bucket_elems", jnum(bucket_elems as f64)),
+            ("grad_elems", jnum(grad_elems as f64)),
+            ("fabric_latency_us", jnum(400.0)),
+            ("posthoc_step_us", jnum(posthoc_secs * 1e6)),
+            ("overlapped_step_us", jnum(overlapped_secs * 1e6)),
+            ("speedup", jnum(speedup)),
+        ]);
+        std::fs::write(
+            "BENCH_dp_overlap.json",
+            dp_overlap_record.to_string() + "\n",
+        )
+        .unwrap();
+        println!("BENCH_dp_overlap.json written");
+        overlap.insert(
+            "dp_grad_ready".into(),
+            jobj(vec![
+                ("posthoc_step_us", jnum(posthoc_secs * 1e6)),
+                ("overlapped_step_us", jnum(overlapped_secs * 1e6)),
+                ("speedup", jnum(speedup)),
+            ]),
+        );
+        assert!(
+            speedup > 1.0,
+            "grad-ready DP reduce must beat the post-hoc reduce under \
+             injected delays: {:.0} us vs {:.0} us",
+            overlapped_secs * 1e6,
+            posthoc_secs * 1e6
         );
     }
 

@@ -329,6 +329,19 @@ mod tests {
     }
 
     #[test]
+    fn zero_way_is_a_clean_cli_error() {
+        // `--way 0` used to reach TrainSpec::quick's `expect("nonzero
+        // way")` panic path; it must surface as a typed degree error
+        let err = cli_main(&[
+            "simulate".to_string(),
+            "--way".into(),
+            "0".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("degree 0"), "{err}");
+    }
+
+    #[test]
     fn invalid_mesh_is_a_clean_cli_error() {
         // a 4x2 mesh cannot keep zero weight redundancy: typed MeshError,
         // surfaced through the CLI instead of a panic

@@ -20,7 +20,20 @@
 //! (bandwidth-optimal, 2(n-1)/n of the payload per link — the schedule
 //! `perfmodel` prices) for payloads worth chunking, and falls back to
 //! gather-to-root for latency-bound scalars. Both variants are public so
-//! benches and tests can compare them.
+//! benches and tests can compare them. `allreduce_start` is the
+//! *in-flight* form: it returns a [`PackedAllreduce`] state machine
+//! (same dispatch, same tags, same addition order — bit-identical
+//! results) that callers `poll` between slabs of compute, so several
+//! collectives can be outstanding at once; `wait_any_ready` parks a
+//! thread until any of their next messages lands without consuming it.
+//! This is the multi-bucket bookkeeping under the trainer's grad-ready
+//! DP reduce.
+//!
+//! Failure containment: `Network::abort` flips the fabric into an
+//! aborted state in which every blocking receive panics with
+//! [`FABRIC_ABORTED`] instead of waiting forever — the trainer uses it
+//! to unwind surviving ranks when a peer thread dies, and all comm
+//! locks are poison-tolerant so the original failure stays readable.
 //!
 //! Byte counters feed the perf model validation and the comm-volume
 //! benches. Wall-clock timing at paper scale comes from `perfmodel`; the
@@ -37,13 +50,26 @@
 //! copy (`Arc::try_unwrap`).
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::tensor::Tensor;
 
 type Key = (usize, usize, u64); // (src, dst, tag)
+
+/// Panic message raised by blocking receives after [`Network::abort`]:
+/// the trainer uses it to tell secondary (abort-induced) rank failures
+/// apart from the rank that actually failed.
+pub const FABRIC_ABORTED: &str = "comm: fabric aborted (a peer rank failed)";
+
+/// Poison-tolerant lock: a rank thread that panics while holding a comm
+/// lock must not turn every peer's diagnosis into an opaque
+/// `PoisonError` — the fabric's queue state is a plain map of messages
+/// and stays valid across an unwind.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// One in-flight message. `ready_at` is `None` on the instantaneous
 /// fabric; under a `FabricSpec` it is the simulated delivery time and the
@@ -92,6 +118,9 @@ struct Shared {
     /// deepest any per-key queue has grown (receive-side backlog stat)
     max_depth: AtomicU64,
     fabric: Mutex<Option<FabricState>>,
+    /// set by [`Network::abort`]: blocking receives panic instead of
+    /// waiting forever for a peer that died
+    aborted: AtomicBool,
     n: usize,
 }
 
@@ -110,6 +139,7 @@ impl Network {
                 bytes: Mutex::new(vec![0; n * n]),
                 max_depth: AtomicU64::new(0),
                 fabric: Mutex::new(None),
+                aborted: AtomicBool::new(false),
                 n,
             }),
         }
@@ -129,7 +159,7 @@ impl Network {
     /// delivery times. `seed` drives the per-message jitter draw.
     pub fn set_fabric(&self, spec: FabricSpec, seed: u64) {
         let now = Instant::now();
-        *self.inner.fabric.lock().unwrap() = Some(FabricState {
+        *plock(&self.inner.fabric) = Some(FabricState {
             spec,
             egress_free: vec![now; self.inner.n],
             ingress_free: vec![now; self.inner.n],
@@ -139,17 +169,36 @@ impl Network {
 
     /// Remove the delay injector (messages deliver instantly again).
     pub fn clear_fabric(&self) {
-        *self.inner.fabric.lock().unwrap() = None;
+        *plock(&self.inner.fabric) = None;
+    }
+
+    /// Abort the fabric: every rank currently (or subsequently) blocked
+    /// in a receive panics with [`FABRIC_ABORTED`] instead of waiting
+    /// forever for a peer that died. Called by the trainer when a rank
+    /// thread fails, so the surviving ranks unwind and `train()` can
+    /// report *which* rank failed rather than deadlocking in its join
+    /// loop.
+    pub fn abort(&self) {
+        // take the queue lock so the flag flip and the wake-up are
+        // ordered against sleeping receivers
+        let _q = plock(&self.inner.queues);
+        self.inner.aborted.store(true, Ordering::SeqCst);
+        self.inner.cv.notify_all();
+    }
+
+    /// Whether [`abort`](Network::abort) has been called.
+    pub fn is_aborted(&self) -> bool {
+        self.inner.aborted.load(Ordering::SeqCst)
     }
 
     /// Total bytes sent over every link.
     pub fn total_bytes(&self) -> u64 {
-        self.inner.bytes.lock().unwrap().iter().sum()
+        plock(&self.inner.bytes).iter().sum()
     }
 
     /// Bytes sent src -> dst.
     pub fn link_bytes(&self, src: usize, dst: usize) -> u64 {
-        self.inner.bytes.lock().unwrap()[src * self.inner.n + dst]
+        plock(&self.inner.bytes)[src * self.inner.n + dst]
     }
 
     /// Deepest backlog any (src, dst, tag) queue reached — how far sends
@@ -159,7 +208,7 @@ impl Network {
     }
 
     pub fn reset_bytes(&self) {
-        for b in self.inner.bytes.lock().unwrap().iter_mut() {
+        for b in plock(&self.inner.bytes).iter_mut() {
             *b = 0;
         }
         self.inner.max_depth.store(0, Ordering::Relaxed);
@@ -181,6 +230,9 @@ pub struct Comm {
 /// Tag namespaces so user tags, collectives, and engine-internal messages
 /// never collide.
 const COLLECTIVE_BIT: u64 = 1 << 63;
+/// Reply / second-phase leg of a collective (root broadcast, ring
+/// allgather): keeps both directions of one collective on distinct keys.
+const REPLY_BIT: u64 = 1 << 62;
 
 impl Comm {
     pub fn n_ranks(&self) -> usize {
@@ -199,12 +251,12 @@ impl Comm {
         assert!(dst != self.rank, "self-send rank {dst}");
         let bytes = (t.numel() * 4) as u64;
         {
-            let mut b = self.net.bytes.lock().unwrap();
+            let mut b = plock(&self.net.bytes);
             b[self.rank * self.net.n + dst] += bytes;
         }
         // simulated delivery time, when the injector is installed
         let ready_at = {
-            let mut fab = self.net.fabric.lock().unwrap();
+            let mut fab = plock(&self.net.fabric);
             fab.as_mut().map(|f| {
                 let now = Instant::now();
                 let start = now.max(f.egress_free[self.rank]).max(f.ingress_free[dst]);
@@ -220,7 +272,7 @@ impl Comm {
                 busy + f.spec.latency + f.spec.jitter.mul_f64(frac)
             })
         };
-        let mut q = self.net.queues.lock().unwrap();
+        let mut q = plock(&self.net.queues);
         let list = q.entry((self.rank, dst, tag)).or_default();
         list.push_back(Msg { t, ready_at });
         self.net
@@ -242,8 +294,12 @@ impl Comm {
     /// shipped stationary-operand blocks).
     pub fn recv_shared(&self, src: usize, tag: u64) -> Arc<Tensor> {
         let key = (src, self.rank, tag);
-        let mut q = self.net.queues.lock().unwrap();
+        let mut q = plock(&self.net.queues);
         loop {
+            if self.net.aborted.load(Ordering::SeqCst) {
+                drop(q);
+                panic!("{FABRIC_ABORTED}");
+            }
             let now = Instant::now();
             let mut wait_for: Option<Duration> = None;
             if let Some(list) = q.get_mut(&key) {
@@ -261,17 +317,38 @@ impl Comm {
                 }
             }
             q = match wait_for {
-                Some(d) => self.net.cv.wait_timeout(q, d).unwrap().0,
-                None => self.net.cv.wait(q).unwrap(),
+                Some(d) => self.cv_wait_timeout(q, d),
+                None => self.cv_wait(q),
             };
         }
+    }
+
+    /// Poison-tolerant condvar wait (see [`plock`]).
+    fn cv_wait<'a>(
+        &self,
+        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
+    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
+        self.net.cv.wait(q).unwrap_or_else(PoisonError::into_inner)
+    }
+
+    /// Poison-tolerant condvar timed wait (see [`plock`]).
+    fn cv_wait_timeout<'a>(
+        &self,
+        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
+        d: Duration,
+    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
+        self.net
+            .cv
+            .wait_timeout(q, d)
+            .unwrap_or_else(PoisonError::into_inner)
+            .0
     }
 
     /// Non-blocking receive (irecv + test): `None` until the message from
     /// (src, tag) has arrived. Delivery stays in send order per key.
     pub fn try_recv_shared(&self, src: usize, tag: u64) -> Option<Arc<Tensor>> {
         let key = (src, self.rank, tag);
-        let mut q = self.net.queues.lock().unwrap();
+        let mut q = plock(&self.net.queues);
         let now = Instant::now();
         if let Some(list) = q.get_mut(&key) {
             if list.front().map_or(false, |m| m.deliverable(now)) {
@@ -297,7 +374,7 @@ impl Comm {
     /// deliverable message wins. One lock acquisition for the whole set —
     /// the ready-queue scheduler's per-term probe.
     pub fn try_recv_any(&self, keys: &[(usize, u64)]) -> Option<(usize, Arc<Tensor>)> {
-        let mut q = self.net.queues.lock().unwrap();
+        let mut q = plock(&self.net.queues);
         let now = Instant::now();
         for (i, &(src, tag)) in keys.iter().enumerate() {
             let key = (src, self.rank, tag);
@@ -320,8 +397,12 @@ impl Comm {
     /// order once local compute runs dry.
     pub fn recv_any(&self, keys: &[(usize, u64)]) -> (usize, Arc<Tensor>) {
         assert!(!keys.is_empty(), "recv_any over an empty key set");
-        let mut q = self.net.queues.lock().unwrap();
+        let mut q = plock(&self.net.queues);
         loop {
+            if self.net.aborted.load(Ordering::SeqCst) {
+                drop(q);
+                panic!("{FABRIC_ABORTED}");
+            }
             let now = Instant::now();
             let mut next_ready: Option<Duration> = None;
             for (i, &(src, tag)) in keys.iter().enumerate() {
@@ -341,8 +422,41 @@ impl Comm {
                 }
             }
             q = match next_ready {
-                Some(d) => self.net.cv.wait_timeout(q, d).unwrap().0,
-                None => self.net.cv.wait(q).unwrap(),
+                Some(d) => self.cv_wait_timeout(q, d),
+                None => self.cv_wait(q),
+            };
+        }
+    }
+
+    /// Block until one of `keys` = [(src, tag), ..] has a deliverable
+    /// message, *without* consuming it (MPI `Probe` over a key set).
+    /// The in-flight collective drain loops use this to sleep
+    /// efficiently between polls: the message stays queued so the
+    /// owning state machine's next `poll` pops it itself.
+    pub fn wait_any_ready(&self, keys: &[(usize, u64)]) {
+        assert!(!keys.is_empty(), "wait_any_ready over an empty key set");
+        let mut q = plock(&self.net.queues);
+        loop {
+            if self.net.aborted.load(Ordering::SeqCst) {
+                drop(q);
+                panic!("{FABRIC_ABORTED}");
+            }
+            let now = Instant::now();
+            let mut next_ready: Option<Duration> = None;
+            for &(src, tag) in keys {
+                if let Some(list) = q.get(&(src, self.rank, tag)) {
+                    if let Some(head) = list.front() {
+                        if head.deliverable(now) {
+                            return;
+                        }
+                        let d = head.ready_at.unwrap().saturating_duration_since(now);
+                        next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
+                    }
+                }
+            }
+            q = match next_ready {
+                Some(d) => self.cv_wait_timeout(q, d),
+                None => self.cv_wait(q),
             };
         }
     }
@@ -404,7 +518,7 @@ impl Comm {
             // broadcast one shared copy instead of cloning per peer
             let acc = Arc::new(acc);
             for &r in group.iter().filter(|&&r| r != root) {
-                self.send_shared(r, tag | 1 << 62, acc.clone());
+                self.send_shared(r, tag | REPLY_BIT, acc.clone());
             }
             match Arc::try_unwrap(acc) {
                 Ok(t) => t,
@@ -412,7 +526,7 @@ impl Comm {
             }
         } else {
             self.send(root, tag, t.clone());
-            self.recv(root, tag | 1 << 62)
+            self.recv(root, tag | REPLY_BIT)
         }
     }
 
@@ -431,20 +545,9 @@ impl Comm {
         let p = group.iter().position(|&r| r == self.rank).unwrap();
         let right = group[(p + 1) % n];
         let left = group[(p + n - 1) % n];
-        let numel = t.numel();
-        // balanced chunk bounds, identical on every rank
-        let bounds: Vec<(usize, usize)> = (0..n)
-            .map(|i| {
-                let (q, r) = (numel / n, numel % n);
-                let lo = i * q + i.min(r);
-                (lo, lo + q + usize::from(i < r))
-            })
-            .collect();
+        let bounds = ring_bounds(t.numel(), n);
         let send_chunk = |me: &Comm, idx: usize, data: &[f32], tag: u64| {
-            let (lo, hi) = bounds[idx];
-            let mut buf = crate::tensor::pool::take(hi - lo);
-            buf.copy_from_slice(&data[lo..hi]);
-            me.send(right, tag, Tensor::new(vec![hi - lo], buf));
+            ring_send_chunk(me, right, &bounds, idx, data, tag);
         };
         let mut out = t.clone();
         // reduce-scatter: after n-1 steps this rank holds the fully
@@ -465,8 +568,8 @@ impl Comm {
         for step in 0..n - 1 {
             let sc = (p + 1 + n - step) % n;
             let rc = (p + n - step) % n;
-            send_chunk(self, sc, &out.data, tag | 1 << 62);
-            let got = self.recv(left, tag | 1 << 62);
+            send_chunk(self, sc, &out.data, tag | REPLY_BIT);
+            let got = self.recv(left, tag | REPLY_BIT);
             let (lo, hi) = bounds[rc];
             debug_assert_eq!(got.numel(), hi - lo);
             out.data[lo..hi].copy_from_slice(&got.data);
@@ -511,6 +614,272 @@ impl Comm {
     /// Barrier across a group.
     pub fn barrier(&mut self, group: &[usize]) {
         let _ = self.allreduce_scalar(group, 0.0);
+    }
+
+    /// Begin a non-blocking allreduce of an owned payload over `group`:
+    /// the in-flight form of [`allreduce_packed`], returned as a
+    /// [`PackedAllreduce`] state machine that is driven forward by
+    /// `poll` and finished by `wait`/`take`.
+    ///
+    /// Dispatch (ring vs gather-to-root), tag sequencing, chunk bounds,
+    /// and — crucially — the order of floating-point additions are
+    /// *identical* to the blocking [`allreduce_sum`], so a payload
+    /// reduced through a handle is bit-for-bit what the blocking
+    /// collective would produce regardless of delivery timing. That is
+    /// the property the grad-ready DP reduce's oracle tests pin.
+    ///
+    /// Several handles may be in flight at once (multi-bucket
+    /// bookkeeping rides the per-group tag/seq machinery); all group
+    /// members must start them in the same order.
+    pub fn allreduce_start(&mut self, group: &[usize], t: Tensor) -> PackedAllreduce {
+        assert!(group.contains(&self.rank), "allreduce group excludes self");
+        if group.len() <= 1 {
+            return PackedAllreduce { state: CollState::Done(t) };
+        }
+        let tag = self.next_coll_tag(group);
+        let n = group.len();
+        if t.numel() < n * 4 {
+            // latency-bound payloads: two-hop gather-to-root
+            let root = *group.iter().min().unwrap();
+            if self.rank == root {
+                let peers: Vec<usize> =
+                    group.iter().copied().filter(|&r| r != root).collect();
+                PackedAllreduce {
+                    state: CollState::GatherRoot { out: t, peers, idx: 0, tag },
+                }
+            } else {
+                self.send(root, tag, t);
+                PackedAllreduce { state: CollState::GatherLeaf { root, tag } }
+            }
+        } else {
+            let p = group.iter().position(|&r| r == self.rank).unwrap();
+            let right = group[(p + 1) % n];
+            let left = group[(p + n - 1) % n];
+            let bounds = ring_bounds(t.numel(), n);
+            // reduce-scatter step 0 ships this rank's own chunk
+            ring_send_chunk(self, right, &bounds, p, &t.data, tag);
+            PackedAllreduce {
+                state: CollState::Ring {
+                    out: t,
+                    bounds,
+                    left,
+                    right,
+                    p,
+                    n,
+                    tag,
+                    allgather: false,
+                    step: 0,
+                },
+            }
+        }
+    }
+}
+
+/// Balanced ring chunk bounds, identical on every rank (shared by the
+/// blocking ring and the in-flight state machine so the two can never
+/// disagree on the schedule).
+fn ring_bounds(numel: usize, n: usize) -> Vec<(usize, usize)> {
+    (0..n)
+        .map(|i| {
+            let (q, r) = (numel / n, numel % n);
+            let lo = i * q + i.min(r);
+            (lo, lo + q + usize::from(i < r))
+        })
+        .collect()
+}
+
+/// Ship ring chunk `idx` of `data` to `dst` on a pooled buffer.
+fn ring_send_chunk(
+    comm: &Comm,
+    dst: usize,
+    bounds: &[(usize, usize)],
+    idx: usize,
+    data: &[f32],
+    tag: u64,
+) {
+    let (lo, hi) = bounds[idx];
+    let mut buf = crate::tensor::pool::take(hi - lo);
+    buf.copy_from_slice(&data[lo..hi]);
+    comm.send(dst, tag, Tensor::new(vec![hi - lo], buf));
+}
+
+/// One in-flight packed allreduce (see [`Comm::allreduce_start`]).
+/// `poll` consumes whatever messages have arrived and immediately posts
+/// the sends they unlock; it never blocks, so a caller can keep many
+/// collectives in flight and make progress on each between slabs of
+/// compute — the shape the grad-ready DP gradient scheduler needs.
+pub struct PackedAllreduce {
+    state: CollState,
+}
+
+enum CollState {
+    /// ring reduce-scatter (+ allgather once `allgather` flips)
+    Ring {
+        out: Tensor,
+        bounds: Vec<(usize, usize)>,
+        left: usize,
+        right: usize,
+        p: usize,
+        n: usize,
+        tag: u64,
+        allgather: bool,
+        step: usize,
+    },
+    /// gather root: receive peers *in group order* (the blocking
+    /// collective's addition order), then broadcast
+    GatherRoot { out: Tensor, peers: Vec<usize>, idx: usize, tag: u64 },
+    /// gather leaf: payload sent at start, waiting for the root's reply
+    GatherLeaf { root: usize, tag: u64 },
+    Done(Tensor),
+}
+
+impl PackedAllreduce {
+    /// Whether the reduced payload is ready to `take`.
+    pub fn is_done(&self) -> bool {
+        matches!(self.state, CollState::Done(_))
+    }
+
+    /// The (src, tag) key this machine is currently waiting on (`None`
+    /// once done) — feed the keys of all in-flight collectives to
+    /// [`Comm::wait_any_ready`] to sleep between polls.
+    pub fn awaited(&self) -> Option<(usize, u64)> {
+        match &self.state {
+            CollState::Ring { left, tag, allgather, .. } => {
+                Some((*left, if *allgather { *tag | REPLY_BIT } else { *tag }))
+            }
+            CollState::GatherRoot { peers, idx, tag, .. } => {
+                peers.get(*idx).map(|&r| (r, *tag))
+            }
+            CollState::GatherLeaf { root, tag } => Some((*root, *tag | REPLY_BIT)),
+            CollState::Done(_) => None,
+        }
+    }
+
+    /// Drive the machine as far as already-arrived messages allow.
+    /// Returns `true` if any message was consumed. Never blocks.
+    pub fn poll(&mut self, comm: &Comm) -> bool {
+        let mut progress = false;
+        let mut finished: Option<Tensor> = None;
+        match &mut self.state {
+            CollState::Done(_) => {}
+            CollState::Ring {
+                out, bounds, left, right, p, n, tag, allgather, step,
+            } => {
+                loop {
+                    let rtag = if *allgather { *tag | REPLY_BIT } else { *tag };
+                    let Some(got) = comm.try_recv(*left, rtag) else { break };
+                    progress = true;
+                    if !*allgather {
+                        // reduce-scatter: add the arriving chunk, then
+                        // forward the freshly reduced one
+                        let rc = (*p + *n - *step - 1) % *n;
+                        let (lo, hi) = bounds[rc];
+                        debug_assert_eq!(got.numel(), hi - lo);
+                        for (o, g) in out.data[lo..hi].iter_mut().zip(got.data.iter())
+                        {
+                            *o += *g;
+                        }
+                        got.recycle();
+                        *step += 1;
+                        if *step < *n - 1 {
+                            let sc = (*p + *n - *step) % *n;
+                            ring_send_chunk(comm, *right, bounds, sc, &out.data, *tag);
+                        } else {
+                            *allgather = true;
+                            *step = 0;
+                            let sc = (*p + 1) % *n;
+                            ring_send_chunk(
+                                comm,
+                                *right,
+                                bounds,
+                                sc,
+                                &out.data,
+                                *tag | REPLY_BIT,
+                            );
+                        }
+                    } else {
+                        // allgather: install the cascaded chunk, forward it
+                        let rc = (*p + *n - *step) % *n;
+                        let (lo, hi) = bounds[rc];
+                        debug_assert_eq!(got.numel(), hi - lo);
+                        out.data[lo..hi].copy_from_slice(&got.data);
+                        got.recycle();
+                        *step += 1;
+                        if *step < *n - 1 {
+                            let sc = (*p + 1 + *n - *step) % *n;
+                            ring_send_chunk(
+                                comm,
+                                *right,
+                                bounds,
+                                sc,
+                                &out.data,
+                                *tag | REPLY_BIT,
+                            );
+                        } else {
+                            finished =
+                                Some(std::mem::replace(out, Tensor::scalar(0.0)));
+                            break;
+                        }
+                    }
+                }
+            }
+            CollState::GatherRoot { out, peers, idx, tag } => {
+                // strictly in-order receives preserve the blocking
+                // collective's addition order (bit-identity)
+                while *idx < peers.len() {
+                    let Some(part) = comm.try_recv_shared(peers[*idx], *tag) else {
+                        break;
+                    };
+                    crate::tensor::ops::add_assign(out, &part);
+                    *idx += 1;
+                    progress = true;
+                }
+                if *idx == peers.len() {
+                    let acc =
+                        Arc::new(std::mem::replace(out, Tensor::scalar(0.0)));
+                    for &r in peers.iter() {
+                        comm.send_shared(r, *tag | REPLY_BIT, acc.clone());
+                    }
+                    finished = Some(match Arc::try_unwrap(acc) {
+                        Ok(t) => t,
+                        Err(shared) => (*shared).clone(),
+                    });
+                }
+            }
+            CollState::GatherLeaf { root, tag } => {
+                if let Some(t) = comm.try_recv(*root, *tag | REPLY_BIT) {
+                    progress = true;
+                    finished = Some(t);
+                }
+            }
+        }
+        if let Some(t) = finished {
+            self.state = CollState::Done(t);
+        }
+        progress
+    }
+
+    /// Block until the collective completes and return the reduced
+    /// payload. (Per-handle convenience; multi-bucket callers poll and
+    /// sleep on `wait_any_ready` across all handles instead.)
+    pub fn wait(mut self, comm: &Comm) -> Tensor {
+        loop {
+            self.poll(comm);
+            if self.is_done() {
+                return self.take();
+            }
+            if let Some(key) = self.awaited() {
+                comm.wait_any_ready(&[key]);
+            }
+        }
+    }
+
+    /// Take the reduced payload out of a completed collective.
+    pub fn take(self) -> Tensor {
+        match self.state {
+            CollState::Done(t) => t,
+            _ => panic!("PackedAllreduce::take before completion"),
+        }
     }
 }
 
@@ -685,6 +1054,119 @@ mod tests {
         }
         let sums: Vec<f32> = handles.into_iter().map(|h| h.join().unwrap()).collect();
         assert_eq!(sums, vec![4.0, 6.0, 4.0, 6.0]); // {1+3}, {2+4}
+    }
+
+    #[test]
+    fn packed_allreduce_matches_blocking_bit_for_bit() {
+        // the in-flight state machine must reproduce the blocking
+        // collective exactly — both dispatch branches (tiny payloads
+        // gather, larger ones ring). Fractional values make any change
+        // in addition order visible in the bits.
+        check("allreduce_start == allreduce_sum", 25, |g: &mut Gen| {
+            let n = g.int(2, 6);
+            let numel = g.int(1, 120); // < 4n exercises the gather branch
+            let net = Network::new(n);
+            let group: Vec<usize> = (0..n).collect();
+            let mut handles = Vec::new();
+            for r in 0..n {
+                let mut c = net.endpoint(r);
+                let grp = group.clone();
+                let data: Vec<f32> = (0..numel)
+                    .map(|i| 0.1 + ((i * 31 + r * 17) % 97) as f32 / 7.0)
+                    .collect();
+                handles.push(thread::spawn(move || {
+                    let t = Tensor::new(vec![numel], data);
+                    let blocking = c.allreduce_sum(&grp, &t);
+                    let machine = c.allreduce_start(&grp, t).wait(&c);
+                    (blocking.data, machine.data)
+                }));
+            }
+            for h in handles {
+                let (blocking, machine) = h.join().unwrap();
+                let same = blocking
+                    .iter()
+                    .zip(&machine)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!("n={n} numel={numel}: bits diverge"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn multiple_packed_allreduces_in_flight() {
+        // three collectives started back to back per rank, then polled to
+        // completion in whatever order messages land — the multi-bucket
+        // bookkeeping the grad-ready DP scheduler relies on
+        let n = 4usize;
+        let net = Network::new(n);
+        let group: Vec<usize> = (0..n).collect();
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let mut c = net.endpoint(r);
+            let grp = group.clone();
+            handles.push(thread::spawn(move || {
+                let mut colls: Vec<PackedAllreduce> = (0..3)
+                    .map(|b| {
+                        let t = Tensor::new(vec![32], vec![(r + b) as f32; 32]);
+                        c.allreduce_start(&grp, t)
+                    })
+                    .collect();
+                loop {
+                    let mut waiting = Vec::new();
+                    for coll in colls.iter_mut() {
+                        if !coll.is_done() {
+                            coll.poll(&c);
+                        }
+                        if let Some(k) = coll.awaited() {
+                            waiting.push(k);
+                        }
+                    }
+                    if waiting.is_empty() {
+                        break;
+                    }
+                    c.wait_any_ready(&waiting);
+                }
+                colls.into_iter().map(|pa| pa.take().data).collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            let outs = h.join().unwrap();
+            for (b, data) in outs.iter().enumerate() {
+                // sum over r of (r + b) = 6 + 4b
+                assert_eq!(data, &vec![(6 + 4 * b) as f32; 32], "bucket {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn abort_unblocks_a_blocked_receiver() {
+        let net = Network::new(2);
+        let b = net.endpoint(1);
+        let h = thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b.recv(0, 1) // never sent
+            }))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        net.abort();
+        let err = h.join().unwrap().unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains(FABRIC_ABORTED), "{msg}");
+        assert!(net.is_aborted());
+    }
+
+    #[test]
+    fn wait_any_ready_does_not_consume() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        a.send(1, 3, Tensor::scalar(9.0));
+        b.wait_any_ready(&[(0, 2), (0, 3)]);
+        // the message is still there for the real receive
+        assert_eq!(b.try_recv(0, 3).unwrap().data, vec![9.0]);
     }
 
     #[test]

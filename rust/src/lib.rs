@@ -47,9 +47,17 @@
 //! runs a ready-queue schedule (poll `try_recv`, compute whichever
 //! term's operands arrived, post each partial sum as its accumulator
 //! completes), collectives ride a ring reduce-scatter + allgather, and
-//! the DP gradient reduction packs parameter grads into flat buckets —
-//! the paper's isend/irecv overlap, measurable under the fabric's
-//! injected-delay model (`BENCH_overlap.json`).
+//! the DP gradient reduction runs *under* the backward pass: a
+//! grad-ready hook through `DistModel::loss_and_grad_with` streams each
+//! finished gradient (reverse-layer order) into the trainer's
+//! `GradReduceScheduler`, which packs flat buckets and posts each
+//! bucket's in-flight ring (`comm::PackedAllreduce`) while earlier
+//! layers still differentiate, draining per-bucket before Adam — the
+//! paper's isend/irecv overlap, measurable under the fabric's
+//! injected-delay model (`BENCH_overlap.json`, `BENCH_dp_overlap.json`)
+//! and bit-identical to the retained post-hoc `dp_allreduce_grads`
+//! oracle. A failing rank aborts the fabric so peers unwind instead of
+//! deadlocking, and `train` reports which rank failed.
 //!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind

@@ -11,12 +11,20 @@
 //! oracle reproduces with `ln_groups = 2`; their replicated affine grads
 //! are reconciled by the bucketed per-sync-group reduce in
 //! `PStore::sync_replicated_grads`.
+//!
+//! The backward pass is *grad-ready instrumented*: `loss_and_grad_with`
+//! hands each finished gradient tensor to a [`GradSink`] while earlier
+//! layers are still differentiating (matrices in reverse-layer order,
+//! vectors after the replicated sync — the sequence pinned by
+//! `PStore::grad_reduce_order`). The trainer's `GradReduceScheduler`
+//! rides this hook to launch DP bucket ring-allreduces under backward
+//! compute, the overlap the paper's Section 6.3.4 scaling relies on.
 
 use std::collections::BTreeMap;
 
 use anyhow::{ensure, Result};
 
-use super::params::PStore;
+use super::params::{GradSink, NullSink, PStore};
 use super::{latitude_weights, patchify, unpatchify};
 use crate::config::ModelConfig;
 use crate::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Mesh, Planner, Site};
@@ -420,6 +428,13 @@ impl DistModel {
         out
     }
 
+    /// Backward of one mixer block. When `emit` is set (the final
+    /// rollout iteration — the last pass that touches these weights),
+    /// each weight gradient is handed to `sink` the moment its
+    /// accumulation completes, in the order the math finishes them:
+    /// `ch_w2, ch_w1, tok_w2, tok_w1` — the per-block slice of
+    /// `PStore::grad_reduce_order`.
+    #[allow(clippy::too_many_arguments)]
     fn mixer_block_bwd(
         &self,
         ctx: &mut Ctx,
@@ -427,10 +442,17 @@ impl DistModel {
         cache: &MixCache,
         dz3: &DistMat,
         grads: &mut PStore,
+        sink: &mut dyn GradSink,
+        emit: bool,
     ) -> Result<DistMat> {
         let p = &self.params;
         let l = self.planner();
         let name = |s: &str| format!("blk{i}_{s}");
+        let ready = |grads: &PStore, sink: &mut dyn GradSink, n: &str| {
+            if emit {
+                sink.mat_ready(n, &grads.mats[n]);
+            }
+        };
 
         // -- channel mixing backward --
         let dchout = dz3;
@@ -452,6 +474,7 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("ch_w2"), d_ch_w2);
+        ready(grads, sink, &name("ch_w2"));
         let mut dh2_pre = dh2;
         dh2_pre.zip_assign(&cache.h2_pre, |d, x| ops::gelu_bwd_assign(x, d));
         add_vec_grad(grads, &name("ch_b1"), &self.bias_cols_grad(&dh2_pre));
@@ -472,6 +495,7 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("ch_w1"), d_ch_w1);
+        ready(grads, sink, &name("ch_w1"));
         let (mut dz2, dg2, db2) =
             self.ln_bwd(&cache.z2, &p.vecs[&name("ln2_g")], &cache.ln2, &dv);
         add_vec_grad(grads, &name("ln2_g"), &dg2);
@@ -498,6 +522,7 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(grads, &name("tok_w2"), d_tok_w2);
+        ready(grads, sink, &name("tok_w2"));
         let mut dh1_pre = dh1;
         dh1_pre.zip_assign(&cache.h1_pre, |d, x| ops::gelu_bwd_assign(x, d));
         add_vec_grad(grads, &name("tok_b1"), &self.bias_rows_grad(&dh1_pre));
@@ -518,6 +543,7 @@ impl DistModel {
             Site::XOwner,
         )?;
         add_mat_grad(grads, &name("tok_w1"), d_tok_w1);
+        ready(grads, sink, &name("tok_w1"));
         let (mut dz, dg1, db1) =
             self.ln_bwd(&cache.z_in, &p.vecs[&name("ln1_g")], &cache.ln1, &du);
         add_vec_grad(grads, &name("ln1_g"), &dg1);
@@ -535,6 +561,27 @@ impl DistModel {
         x_local: &Tensor,
         y_local: &Tensor,
         rollout: usize,
+    ) -> Result<(f32, PStore)> {
+        self.loss_and_grad_with(ctx, x_local, y_local, rollout, &mut NullSink)
+    }
+
+    /// [`loss_and_grad`](DistModel::loss_and_grad) with a grad-ready
+    /// hook: `sink` is notified the moment each gradient tensor is
+    /// final, while earlier layers are still differentiating — matrix
+    /// grads stream out in reverse-layer order (decoder, blocks from
+    /// last to first, encoder); vector grads flush after the replicated
+    /// sync, in key order. The emission sequence is exactly
+    /// `PStore::grad_reduce_order`, which is what lets the trainer's DP
+    /// scheduler start bucket ring-allreduces *under* the backward pass
+    /// (paper Section 6.3.4) and still reduce bit-identically to the
+    /// post-hoc oracle.
+    pub fn loss_and_grad_with(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        y_local: &Tensor,
+        rollout: usize,
+        sink: &mut dyn GradSink,
     ) -> Result<(f32, PStore)> {
         let cfg = &self.cfg;
         let (pred, cache) = self.forward(ctx, x_local, rollout)?;
@@ -592,11 +639,16 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(&mut grads, "dec_w", d_dec_w);
+        sink.mat_ready("dec_w", &grads.mats["dec_w"]);
 
-        // processor backward (reverse rollout, reverse blocks)
-        for iter_cache in cache.iters.iter().rev() {
+        // processor backward (reverse rollout, reverse blocks). Weight
+        // grads accumulate across every rollout iteration, so they are
+        // only emitted on the final (first-rollout) pass.
+        let iters = cache.iters.len();
+        for (rev, iter_cache) in cache.iters.iter().rev().enumerate() {
+            let emit = rev + 1 == iters;
             for (i, c) in iter_cache.iter().enumerate().rev() {
-                dz = self.mixer_block_bwd(ctx, i, c, &dz, &mut grads)?;
+                dz = self.mixer_block_bwd(ctx, i, c, &dz, &mut grads, sink, emit)?;
             }
         }
 
@@ -611,9 +663,14 @@ impl DistModel {
             Site::WOwner,
         )?;
         add_mat_grad(&mut grads, "enc_w", d_enc_w);
+        sink.mat_ready("enc_w", &grads.mats["enc_w"]);
 
-        // the paper's pairwise reduce for replicated parameters
+        // the paper's pairwise reduce for replicated parameters; only
+        // now are the (replicated) vector grads final
         grads.sync_replicated_grads(ctx.comm);
+        for (name, v) in &grads.vecs {
+            sink.vec_ready(name, &v.local);
+        }
 
         Ok((loss, grads))
     }

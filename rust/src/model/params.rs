@@ -134,9 +134,11 @@ impl PStore {
         }
     }
 
-    /// Every local gradient tensor, in a deterministic order shared by
-    /// all ranks of a DP group (same preset => same keys): the flat view
-    /// the bucketed DP gradient reduction packs from.
+    /// Every local gradient tensor, in key (alphabetical) order — a
+    /// convenience view for tests and benches that just need to visit
+    /// each tensor once. The DP gradient reduction does NOT use this
+    /// order; it packs in the stable backward-emission order of
+    /// [`grad_tensors_reduce_order_mut`](PStore::grad_tensors_reduce_order_mut).
     pub fn grad_tensors_mut(&mut self) -> Vec<&mut Tensor> {
         let mut out: Vec<&mut Tensor> = Vec::new();
         for m in self.mats.values_mut() {
@@ -148,6 +150,55 @@ impl PStore {
             out.push(&mut v.local);
         }
         out
+    }
+
+    /// The stable DP-reduce registry: every local gradient tensor's id
+    /// in the order the backward pass finishes them (matrices in
+    /// reverse-layer emission order — decoder, then blocks from last to
+    /// first, each `ch_w2, ch_w1, tok_w2, tok_w1`, then the encoder —
+    /// followed by all vectors, which only finish after the replicated
+    /// sync, in key order). All ranks of a DP group hold identically
+    /// shaped shards, so this order makes every rank cut bucket
+    /// boundaries at the same elements — the invariant both the
+    /// grad-ready scheduler and the post-hoc oracle bucketing rely on.
+    pub fn grad_reduce_order(&self) -> Vec<GradId> {
+        // element: ((bwd key, name, block), id) — sorted by the first
+        let mut mats: Vec<_> = self
+            .mats
+            .iter()
+            .flat_map(|(name, m)| {
+                let key = bwd_mat_key(name);
+                m.blocks.keys().map(move |&bk| {
+                    ((key, name.clone(), bk), GradId::Mat(name.clone(), bk))
+                })
+            })
+            .collect();
+        mats.sort_by(|a, b| a.0.cmp(&b.0));
+        mats.into_iter()
+            .map(|(_, id)| id)
+            .chain(self.vecs.keys().map(|n| GradId::Vec(n.clone())))
+            .collect()
+    }
+
+    /// Mutable gradient tensors in [`grad_reduce_order`](PStore::grad_reduce_order):
+    /// the flat view the bucketed DP reduction packs from.
+    pub fn grad_tensors_reduce_order_mut(&mut self) -> Vec<&mut Tensor> {
+        // element: ((bwd key, name, block), tensor) — sorted by the first
+        let mut mats: Vec<_> = self
+            .mats
+            .iter_mut()
+            .flat_map(|(name, m)| {
+                let key = bwd_mat_key(name);
+                m.blocks
+                    .iter_mut()
+                    .map(move |(&bk, t)| ((key, name.as_str(), bk), t))
+            })
+            .collect();
+        mats.sort_by(|a, b| a.0.cmp(&b.0));
+        mats.into_iter()
+            .map(|(_, t)| t)
+            .chain(self.vecs.values_mut().map(|v| &mut v.local))
+            .collect()
     }
 
     pub fn scale_all(&mut self, s: f32) {
@@ -176,6 +227,72 @@ impl PStore {
             ops::add_assign(&mut v.local, &other.vecs[k].local);
         }
     }
+}
+
+/// Identity of one local gradient tensor inside a [`PStore`]: either a
+/// block of a sharded matrix or a (possibly replicated) vector slice.
+/// The unit of the DP-reduce registry and of bucket unpacking.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum GradId {
+    /// block `(bi, bj)` of matrix gradient `name`
+    Mat(String, (usize, usize)),
+    Vec(String),
+}
+
+/// Backward-emission sort key of a matrix gradient: (class, reversed
+/// block index, intra-block position). Mirrors the order
+/// `DistModel::loss_and_grad` finishes matrix gradients — decoder
+/// first, mixer blocks from last to first (within a block: `ch_w2,
+/// ch_w1, tok_w2, tok_w1`, the channel-then-token backward), encoder
+/// last. Unknown names sort after everything (alphabetically, via the
+/// caller's secondary key).
+type BwdKey = (u8, u32, u8);
+
+fn bwd_mat_key(name: &str) -> BwdKey {
+    if name == "dec_w" {
+        return (0, 0, 0);
+    }
+    if let Some(rest) = name.strip_prefix("blk") {
+        if let Some((i, suffix)) = rest.split_once('_') {
+            if let Ok(i) = i.parse::<u32>() {
+                let s = match suffix {
+                    "ch_w2" => 0,
+                    "ch_w1" => 1,
+                    "tok_w2" => 2,
+                    "tok_w1" => 3,
+                    _ => 4,
+                };
+                return (1, u32::MAX - i, s);
+            }
+        }
+    }
+    if name == "enc_w" {
+        (2, 0, 0)
+    } else {
+        (3, 0, 0)
+    }
+}
+
+/// Receiver of grad-ready events from the backward pass: each call
+/// means the named gradient is *fully accumulated* (all rollout
+/// iterations folded in; vectors additionally synced across their
+/// replication group) and will not change again this step. The
+/// trainer's `GradReduceScheduler` implements this to start DP bucket
+/// rings while later (earlier-layer) gradients are still being
+/// differentiated.
+pub trait GradSink {
+    /// All local blocks of matrix gradient `name` are final.
+    fn mat_ready(&mut self, name: &str, mat: &DistMat);
+    /// Vector gradient `name` is final (post replicated-group sync).
+    fn vec_ready(&mut self, name: &str, v: &Tensor);
+}
+
+/// No-op sink: the plain (post-hoc reduce) training path.
+pub struct NullSink;
+
+impl GradSink for NullSink {
+    fn mat_ready(&mut self, _name: &str, _mat: &DistMat) {}
+    fn vec_ready(&mut self, _name: &str, _v: &Tensor) {}
 }
 
 /// Vector-parameter axis kinds (decides slicing + sync groups).
@@ -418,6 +535,83 @@ mod tests {
                 (total - global_sq).abs() / global_sq < 1e-5,
                 "{mesh}: {total} vs {global_sq}"
             );
+        }
+    }
+
+    #[test]
+    fn grad_reduce_order_is_backward_emission_order() {
+        let cfg = tiny_cfg(); // blocks = 2
+        let global = init_global_params(&cfg, 0);
+        let mut s = shard_params(&cfg, &Mesh::unit(), 0, &global).unwrap();
+        let order = s.grad_reduce_order();
+        let mat_names: Vec<&str> = order
+            .iter()
+            .filter_map(|id| match id {
+                GradId::Mat(n, _) => Some(n.as_str()),
+                GradId::Vec(_) => None,
+            })
+            .collect();
+        assert_eq!(
+            mat_names,
+            vec![
+                "dec_w", "blk1_ch_w2", "blk1_ch_w1", "blk1_tok_w2", "blk1_tok_w1",
+                "blk0_ch_w2", "blk0_ch_w1", "blk0_tok_w2", "blk0_tok_w1", "enc_w",
+            ],
+            "matrix grads must follow the reverse-layer emission order"
+        );
+        // every matrix id precedes every vector id, vectors in key order
+        let first_vec = order
+            .iter()
+            .position(|id| matches!(id, GradId::Vec(_)))
+            .unwrap();
+        assert!(order[first_vec..]
+            .iter()
+            .all(|id| matches!(id, GradId::Vec(_))));
+        let vec_names: Vec<&str> = order[first_vec..]
+            .iter()
+            .map(|id| match id {
+                GradId::Vec(n) => n.as_str(),
+                GradId::Mat(..) => unreachable!(),
+            })
+            .collect();
+        let mut sorted = vec_names.clone();
+        sorted.sort();
+        assert_eq!(vec_names, sorted, "vectors flush in key order");
+        // the mutable view walks the same tensors in the same order
+        let numels: Vec<usize> = order
+            .iter()
+            .map(|id| match id {
+                GradId::Mat(n, k) => s.mats[n].blocks[k].numel(),
+                GradId::Vec(n) => s.vecs[n].local.numel(),
+            })
+            .collect();
+        let view_numels: Vec<usize> = s
+            .grad_tensors_reduce_order_mut()
+            .iter()
+            .map(|t| t.numel())
+            .collect();
+        assert_eq!(numels, view_numels);
+        assert_eq!(order.len(), s.grad_tensors_mut().len());
+    }
+
+    #[test]
+    fn grad_reduce_order_identical_shapes_across_dp_peers() {
+        // DP peers share an mp_rank, hence identical shard structure: the
+        // registry (and so every bucket boundary) must agree entry for
+        // entry. Sharded meshes exercise the multi-block mats.
+        let cfg = tiny_cfg();
+        for mesh in meshes() {
+            for r in 0..mesh.n() {
+                let a = shard_params(&cfg, &mesh, r, &init_global_params(&cfg, 1))
+                    .unwrap();
+                let b = shard_params(&cfg, &mesh, r, &init_global_params(&cfg, 2))
+                    .unwrap();
+                assert_eq!(
+                    a.grad_reduce_order(),
+                    b.grad_reduce_order(),
+                    "{mesh} rank {r}"
+                );
+            }
         }
     }
 

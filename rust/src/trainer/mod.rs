@@ -7,17 +7,36 @@
 //! paper's rule, generalized to any `tok x ch` jigsaw mesh. Each rank
 //! runs on its own thread over the simulated fabric; all heavy matmuls
 //! go through the shared runtime backend.
+//!
+//! The DP gradient reduction runs *under* the backward pass: a
+//! [`GradReduceScheduler`] receives each gradient tensor the moment the
+//! backward pass finishes it (the `GradSink` hook through
+//! `DistModel::loss_and_grad_with`), packs buckets in reverse-layer
+//! order, and posts each bucket's non-blocking ring allreduce while
+//! earlier layers are still differentiating. Before the optimizer step
+//! the scheduler drains: it polls every in-flight bucket concurrently
+//! and unpacks each one the moment *it* completes — no global barrier
+//! across buckets. The post-hoc path ([`dp_allreduce_grads`]) is
+//! retained as the oracle/baseline; both paths bucket in
+//! `PStore::grad_reduce_order` and reduce through the same collective
+//! arithmetic, so their results are bit-identical (pinned by
+//! `rust/tests/dp_overlap_props.rs`).
+//!
+//! A failing rank thread no longer deadlocks the run: its closure
+//! aborts both fabrics (waking any peer blocked in a receive), `train`
+//! collects every rank's outcome, and the error names the rank that
+//! actually failed rather than a secondary abort casualty.
 
 use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::Network;
+use crate::comm::{Comm, Network, PackedAllreduce, FABRIC_ABORTED};
 use crate::config::ModelConfig;
 use crate::data::ShardedLoader;
-use crate::jigsaw::{Ctx, Mesh};
+use crate::jigsaw::{Ctx, DistMat, Mesh, MeshError};
 use crate::model::dist::DistModel;
-use crate::model::params::{shard_params, PStore};
+use crate::model::params::{shard_params, GradId, GradSink, PStore};
 use crate::model::init_global_params;
 use crate::optim::{Adam, LrSchedule};
 use crate::runtime::Backend;
@@ -46,13 +65,20 @@ pub struct TrainSpec {
     /// validate every k steps (0 = never)
     pub val_every: usize,
     pub val_times: Vec<usize>,
+    /// run the DP gradient reduce under the backward pass via the
+    /// grad-ready scheduler (default); `false` falls back to the
+    /// post-hoc [`dp_allreduce_grads`] oracle. Both produce bit-identical
+    /// gradients — the switch exists for baselines and differential
+    /// tests.
+    pub overlap_dp: bool,
 }
 
 impl TrainSpec {
     /// Quick spec from a total parallel degree (legacy `way` shorthand):
     /// the degree maps to its balanced mesh (2 -> 1x2, 4 -> 2x2, ...).
-    pub fn quick(way: usize, dp: usize, steps: usize) -> Self {
-        Self::with_mesh(Mesh::from_degree(way).expect("nonzero way"), dp, steps)
+    /// An invalid degree (e.g. 0) is a typed [`MeshError`], not a panic.
+    pub fn quick(way: usize, dp: usize, steps: usize) -> Result<Self, MeshError> {
+        Ok(Self::with_mesh(Mesh::from_degree(way)?, dp, steps))
     }
 
     /// Quick spec from an explicit mesh shape.
@@ -70,6 +96,7 @@ impl TrainSpec {
             n_modes: 12,
             val_every: 0,
             val_times: vec![40, 41, 42, 43],
+            overlap_dp: true,
         }
     }
 
@@ -127,16 +154,56 @@ pub fn train(
             let mut mp_comm = mp_nets[g].endpoint(r);
             let mut dp_comm = dp_net.endpoint(g * mp + r);
             let params = shard_params(&cfg, &mesh, r, &global_params)?;
+            let mp_net = mp_nets[g].clone();
+            let dp_net = dp_net.clone();
             handles.push(std::thread::spawn(move || -> Result<RankOutput> {
-                rank_main(
-                    cfg, spec, g, r, params, backend, &mut mp_comm, &mut dp_comm,
-                )
+                // catch panics so a dying rank can abort both fabrics —
+                // otherwise peers block forever in `recv` and the join
+                // loop below deadlocks
+                let out =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        rank_main(
+                            cfg, spec, g, r, params, backend, &mut mp_comm,
+                            &mut dp_comm,
+                        )
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow!("rank thread panicked: {}", panic_message(&p)))
+                    });
+                if out.is_err() {
+                    mp_net.abort();
+                    dp_net.abort();
+                }
+                out
             }));
         }
     }
     let mut outs: Vec<RankOutput> = Vec::new();
-    for h in handles {
-        outs.push(h.join().expect("rank thread panicked")?);
+    let mut failures: Vec<(usize, usize, String)> = Vec::new();
+    for (i, h) in handles.into_iter().enumerate() {
+        let (g, r) = (i / mp, i % mp);
+        match h.join() {
+            Ok(Ok(out)) => outs.push(out),
+            Ok(Err(e)) => failures.push((g, r, format!("{e:#}"))),
+            // unreachable in practice (the closure catches), but a panic
+            // between catch_unwind and return must not poison the report
+            Err(p) => failures.push((g, r, panic_message(&p))),
+        }
+    }
+    if !failures.is_empty() {
+        // secondary casualties died on the abort we raised; report the
+        // rank that actually failed
+        let primary = failures
+            .iter()
+            .find(|(_, _, why)| !why.contains(FABRIC_ABORTED))
+            .unwrap_or(&failures[0]);
+        bail!(
+            "rank (dp {}, mp {}) failed: {} ({}/{world} rank threads failed)",
+            primary.0,
+            primary.1,
+            primary.2,
+            failures.len()
+        );
     }
     let comm_bytes: u64 =
         mp_nets.iter().map(|n| n.total_bytes()).sum::<u64>() + dp_net.total_bytes();
@@ -205,14 +272,31 @@ fn rank_main(
         };
         let item = loader.next_item();
         let mut ctx = Ctx::new(mesh, mp_rank, mp_comm, backend.as_ref());
-        let (loss, mut grads) =
-            model.loss_and_grad(&mut ctx, &item.x, &item.y, rollout)?;
-
-        // DP gradient reduction across same-shard ranks (paper 4.3)
-        if spec.dp > 1 {
-            dp_allreduce_grads(&mut grads, dp_comm, &dp_group);
+        let (loss, grads) = if spec.dp > 1 && spec.overlap_dp {
+            // grad-ready DP reduction (paper 4.3 / 6.3.4): bucket rings
+            // launch while the backward pass still differentiates; the
+            // drain below waits on outstanding buckets before Adam
+            let mut sched = GradReduceScheduler::new(
+                &mut *dp_comm,
+                &dp_group,
+                DP_BUCKET_ELEMS,
+            );
+            let (loss, mut grads) = model.loss_and_grad_with(
+                &mut ctx, &item.x, &item.y, rollout, &mut sched,
+            )?;
+            sched.finish(&mut grads);
             grads.scale_all(1.0 / spec.dp as f32);
-        }
+            (loss, grads)
+        } else {
+            let (loss, mut grads) =
+                model.loss_and_grad(&mut ctx, &item.x, &item.y, rollout)?;
+            // post-hoc DP gradient reduction (the oracle/baseline path)
+            if spec.dp > 1 {
+                dp_allreduce_grads(&mut grads, dp_comm, &dp_group);
+                grads.scale_all(1.0 / spec.dp as f32);
+            }
+            (loss, grads)
+        };
 
         // global-norm clip (identical on every rank)
         let clip = Adam::clip_scale(&grads, ctx.comm, &mp_group);
@@ -308,8 +392,11 @@ pub fn dp_allreduce_grads(
 
 /// Bucketed DP gradient allreduce with an explicit bucket size (elements).
 /// All ranks of `group` must use the same size; every bucket holds at
-/// least one tensor, so oversized tensors still reduce (in their own
-/// bucket).
+/// least one tensor, so a tensor larger than `bucket_elems` still
+/// reduces, alone in its own bucket. Tensors are packed in the stable
+/// `PStore::grad_reduce_order` — the same order (and therefore the same
+/// bucket boundaries) the grad-ready scheduler emits, which is what
+/// makes this the bit-exact oracle for the overlapped path.
 pub fn dp_allreduce_grads_bucketed(
     grads: &mut PStore,
     dp_comm: &mut crate::comm::Comm,
@@ -320,7 +407,7 @@ pub fn dp_allreduce_grads_bucketed(
         return;
     }
     let bucket_elems = bucket_elems.max(1);
-    let mut entries = grads.grad_tensors_mut();
+    let mut entries = grads.grad_tensors_reduce_order_mut();
     let mut start = 0usize;
     while start < entries.len() {
         let mut end = start;
@@ -333,6 +420,200 @@ pub fn dp_allreduce_grads_bucketed(
         }
         dp_comm.allreduce_packed(group, &mut entries[start..end]);
         start = end;
+    }
+}
+
+/// Grad-ready DP reduce scheduler: the [`GradSink`] the trainer hands to
+/// `DistModel::loss_and_grad_with`. As the backward pass emits finished
+/// gradient tensors (reverse-layer order), they are packed into flat
+/// buckets; the moment a bucket fills, its non-blocking ring allreduce
+/// ([`Comm::allreduce_start`]) is posted on the DP fabric and *later*
+/// emissions keep polling it forward — so bucket 0's ring traffic is in
+/// flight while earlier layers are still differentiating, the overlap
+/// behind the paper's Section 6.3.4 scaling efficiency.
+///
+/// Bucket boundaries use the same greedy rule, over the same stable
+/// tensor order, as the post-hoc [`dp_allreduce_grads_bucketed`]
+/// oracle, and the in-flight collectives share the blocking
+/// collectives' arithmetic exactly — the reduced gradients are
+/// bit-identical to the oracle's, independent of fabric timing.
+///
+/// `finish` drains before the optimizer step: every outstanding bucket
+/// is polled concurrently and unpacked into the gradient store the
+/// moment *it* completes (no barrier across buckets), with
+/// [`Comm::wait_any_ready`] parking the thread only when no bucket can
+/// advance.
+pub struct GradReduceScheduler<'a> {
+    comm: &'a mut Comm,
+    group: Vec<usize>,
+    bucket_elems: usize,
+    cur_ids: Vec<(GradId, usize)>,
+    cur_data: Vec<f32>,
+    inflight: Vec<InflightBucket>,
+}
+
+struct InflightBucket {
+    ids: Vec<(GradId, usize)>,
+    /// `None` once the reduced payload has been unpacked into the store
+    coll: Option<PackedAllreduce>,
+}
+
+impl<'a> GradReduceScheduler<'a> {
+    pub fn new(comm: &'a mut Comm, group: &[usize], bucket_elems: usize) -> Self {
+        GradReduceScheduler {
+            comm,
+            group: group.to_vec(),
+            bucket_elems: bucket_elems.max(1),
+            cur_ids: Vec::new(),
+            cur_data: pack_buf(bucket_elems),
+            inflight: Vec::new(),
+        }
+    }
+
+    /// Number of bucket collectives posted so far (benches/tests).
+    pub fn buckets_started(&self) -> usize {
+        self.inflight.len()
+    }
+
+    fn push(&mut self, id: GradId, t: &Tensor) {
+        if self.group.len() <= 1 {
+            return;
+        }
+        // same greedy boundary rule as the post-hoc oracle: never split a
+        // tensor; an oversized tensor rides alone in its own bucket
+        if !self.cur_ids.is_empty()
+            && self.cur_data.len() + t.numel() > self.bucket_elems
+        {
+            self.seal();
+        }
+        self.cur_ids.push((id, t.numel()));
+        self.cur_data.extend_from_slice(&t.data);
+        if self.cur_data.len() >= self.bucket_elems {
+            self.seal();
+        }
+        // opportunistic progress on everything already in flight
+        for b in &mut self.inflight {
+            if let Some(coll) = b.coll.as_mut() {
+                if !coll.is_done() {
+                    coll.poll(self.comm);
+                }
+            }
+        }
+    }
+
+    /// Post the current bucket's collective and start a fresh bucket.
+    /// Pack buffers come from the tensor pool (and flow back via the
+    /// drain's `recycle`), so steady-state steps reallocate nothing.
+    fn seal(&mut self) {
+        if self.cur_ids.is_empty() {
+            return;
+        }
+        let data =
+            std::mem::replace(&mut self.cur_data, pack_buf(self.bucket_elems));
+        let ids = std::mem::take(&mut self.cur_ids);
+        let payload = Tensor::new(vec![data.len()], data);
+        let coll = self.comm.allreduce_start(&self.group, payload);
+        self.inflight.push(InflightBucket { ids, coll: Some(coll) });
+    }
+
+    /// Drain every outstanding bucket and write the reduced gradients
+    /// back into `grads` — the wait-before-Adam step. Buckets unpack
+    /// individually as they complete; the thread sleeps only when no
+    /// in-flight collective can make progress.
+    pub fn finish(mut self, grads: &mut PStore) {
+        if self.group.len() <= 1 {
+            return;
+        }
+        self.seal();
+        // the post-seal pack buffer is unused from here on
+        crate::tensor::pool::put(std::mem::take(&mut self.cur_data));
+        debug_assert_eq!(
+            self.inflight
+                .iter()
+                .flat_map(|b| b.ids.iter().map(|(id, _)| id.clone()))
+                .collect::<Vec<_>>(),
+            grads.grad_reduce_order(),
+            "grad emission diverged from the stable reduce order"
+        );
+        loop {
+            let mut progress = false;
+            let mut waiting: Vec<(usize, u64)> = Vec::new();
+            for b in &mut self.inflight {
+                let Some(coll) = b.coll.as_mut() else { continue };
+                if !coll.is_done() {
+                    progress |= coll.poll(self.comm);
+                }
+                if coll.is_done() {
+                    let reduced = b.coll.take().unwrap().take();
+                    unpack_bucket(&b.ids, &reduced, grads);
+                    reduced.recycle();
+                    progress = true;
+                } else if let Some(key) = coll.awaited() {
+                    waiting.push(key);
+                }
+            }
+            if waiting.is_empty() {
+                break;
+            }
+            if !progress {
+                self.comm.wait_any_ready(&waiting);
+            }
+        }
+    }
+}
+
+impl GradSink for GradReduceScheduler<'_> {
+    fn mat_ready(&mut self, name: &str, mat: &DistMat) {
+        for (k, b) in &mat.blocks {
+            self.push(GradId::Mat(name.to_string(), *k), b);
+        }
+    }
+
+    fn vec_ready(&mut self, name: &str, v: &Tensor) {
+        self.push(GradId::Vec(name.to_string()), v);
+    }
+}
+
+/// Pooled, emptied pack buffer with capacity for one full bucket, so
+/// per-bucket packing never pays doubling reallocations. Capped at the
+/// default bucket size: callers may pass huge `bucket_elems` sentinels
+/// (e.g. usize::MAX in tests) that must not translate into allocations.
+fn pack_buf(bucket_elems: usize) -> Vec<f32> {
+    let mut buf = crate::tensor::pool::take(bucket_elems.max(1).min(DP_BUCKET_ELEMS));
+    buf.clear();
+    buf
+}
+
+/// Scatter one reduced bucket payload back into the gradient store.
+fn unpack_bucket(ids: &[(GradId, usize)], reduced: &Tensor, grads: &mut PStore) {
+    let mut off = 0usize;
+    for (id, numel) in ids {
+        let dst = match id {
+            GradId::Mat(name, key) => grads
+                .mats
+                .get_mut(name)
+                .and_then(|m| m.blocks.get_mut(key))
+                .expect("bucket id names a matrix block absent from the store"),
+            GradId::Vec(name) => grads
+                .vecs
+                .get_mut(name)
+                .map(|v| &mut v.local)
+                .expect("bucket id names a vector absent from the store"),
+        };
+        dst.data.copy_from_slice(&reduced.data[off..off + numel]);
+        off += numel;
+    }
+    debug_assert_eq!(off, reduced.numel(), "bucket payload size mismatch");
+}
+
+/// Best-effort panic payload text (rank threads report through this).
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
     }
 }
 
@@ -363,7 +644,7 @@ mod tests {
 
     #[test]
     fn one_way_training_reduces_loss() {
-        let spec = TrainSpec::quick(1, 1, 30);
+        let spec = TrainSpec::quick(1, 1, 30).unwrap();
         let report = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap();
         let first = report.steps.first().unwrap().loss;
         let last = report.steps.last().unwrap().loss;
@@ -375,8 +656,8 @@ mod tests {
         // identical params + same sample order -> identical first-step loss
         // (LN stats differ between ways, so compare within tolerance)
         let c = cfg();
-        let s1 = TrainSpec::quick(1, 1, 2);
-        let s2 = TrainSpec::quick(2, 1, 2);
+        let s1 = TrainSpec::quick(1, 1, 2).unwrap();
+        let s2 = TrainSpec::quick(2, 1, 2).unwrap();
         let r1 = train(&c, &s1, Arc::new(NativeBackend)).unwrap();
         let r2 = train(&c, &s2, Arc::new(NativeBackend)).unwrap();
         let a = r1.steps[0].loss;
@@ -389,7 +670,7 @@ mod tests {
 
     #[test]
     fn dp_training_runs_and_reduces() {
-        let spec = TrainSpec::quick(2, 2, 6);
+        let spec = TrainSpec::quick(2, 2, 6).unwrap();
         let report = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap();
         assert_eq!(report.steps.len(), 6);
         assert!(report.comm_bytes > 0);
@@ -418,8 +699,8 @@ mod tests {
     #[test]
     fn domain_parallel_reads_fraction_of_bytes() {
         let c = cfg();
-        let r1 = train(&c, &TrainSpec::quick(1, 1, 2), Arc::new(NativeBackend)).unwrap();
-        let r2 = train(&c, &TrainSpec::quick(2, 1, 2), Arc::new(NativeBackend)).unwrap();
+        let r1 = train(&c, &TrainSpec::quick(1, 1, 2).unwrap(), Arc::new(NativeBackend)).unwrap();
+        let r2 = train(&c, &TrainSpec::quick(2, 1, 2).unwrap(), Arc::new(NativeBackend)).unwrap();
         let b1 = r1.steps[0].bytes_read;
         let b2 = r2.steps[0].bytes_read;
         assert!(b2 < b1, "jigsaw rank reads less: {b2} !< {b1}");
@@ -479,8 +760,160 @@ mod tests {
     }
 
     #[test]
+    fn quick_zero_way_is_a_typed_error() {
+        // the old path hit `expect("nonzero way")`; now it's a MeshError
+        let err = TrainSpec::quick(0, 1, 1).unwrap_err();
+        assert!(matches!(err, MeshError::Degree(0)), "{err}");
+    }
+
+    /// Backend that fails one matmul call partway through the run: the
+    /// rank that draws it errors mid-step while its peers are blocked in
+    /// `recv` waiting for its partials — the shape that used to deadlock
+    /// `train()`'s join loop forever.
+    struct FailingBackend {
+        inner: NativeBackend,
+        calls: std::sync::atomic::AtomicUsize,
+        fail_at: usize,
+    }
+
+    impl crate::runtime::Backend for FailingBackend {
+        fn matmul(
+            &self,
+            op: crate::runtime::MatmulOp,
+            x: &Tensor,
+            w: &Tensor,
+        ) -> Result<Tensor> {
+            use std::sync::atomic::Ordering;
+            if self.calls.fetch_add(1, Ordering::SeqCst) == self.fail_at {
+                anyhow::bail!("injected backend fault");
+            }
+            self.inner.matmul(op, x, w)
+        }
+
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+    }
+
+    #[test]
+    fn failing_rank_aborts_fabric_and_names_itself() {
+        let backend = Arc::new(FailingBackend {
+            inner: NativeBackend,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            fail_at: 9,
+        });
+        let spec = TrainSpec::quick(2, 2, 4).unwrap();
+        let err = train(&cfg(), &spec, backend).unwrap_err().to_string();
+        assert!(err.contains("failed"), "{err}");
+        assert!(err.contains("injected backend fault"), "{err}");
+        assert!(
+            !err.contains(crate::comm::FABRIC_ABORTED),
+            "must report the original failure, not an abort casualty: {err}"
+        );
+    }
+
+    #[test]
+    fn bucketed_reduce_boundary_cases() {
+        // bucket_elems = 1 (every tensor its own bucket), an oversized
+        // bucket limit, and a limit smaller than the largest tensor
+        // (which must then ride alone): all reduce to the exact same
+        // sums, and ranks can never disagree on boundaries because the
+        // pack order is the stable registry order.
+        let cfg = crate::benchkit::synth_config("bucket-edge", 32, 48, 2);
+        let global = crate::model::init_global_params(&cfg, 0);
+        let template = crate::model::params::shard_params(
+            &cfg,
+            &crate::jigsaw::Mesh::unit(),
+            0,
+            &global,
+        )
+        .unwrap();
+        let largest = {
+            let mut t = template.clone();
+            t.grad_tensors_mut().iter().map(|x| x.numel()).max().unwrap()
+        };
+        for bucket_elems in [1usize, largest / 2, usize::MAX] {
+            let net = crate::comm::Network::new(2);
+            let mut handles = Vec::new();
+            for r in 0..2usize {
+                let mut comm = net.endpoint(r);
+                let params = template.clone();
+                handles.push(std::thread::spawn(move || {
+                    let mut grads = params.zeros_like();
+                    for t in grads.grad_tensors_mut() {
+                        for (i, x) in t.data.iter_mut().enumerate() {
+                            *x = ((i % 13) + r) as f32;
+                        }
+                    }
+                    dp_allreduce_grads_bucketed(
+                        &mut grads,
+                        &mut comm,
+                        &[0, 1],
+                        bucket_elems,
+                    );
+                    grads
+                }));
+            }
+            for h in handles {
+                let mut out = h.join().unwrap();
+                for t in out.grad_tensors_mut() {
+                    for (i, x) in t.data.iter().enumerate() {
+                        let want = (2 * (i % 13) + 1) as f32;
+                        assert_eq!(*x, want, "bucket_elems={bucket_elems}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_store_bucketed_reduce_is_a_noop() {
+        let net = crate::comm::Network::new(2);
+        let mut handles = Vec::new();
+        for r in 0..2usize {
+            let mut comm = net.endpoint(r);
+            handles.push(std::thread::spawn(move || {
+                let mut grads = PStore::default();
+                dp_allreduce_grads_bucketed(&mut grads, &mut comm, &[0, 1], 64);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(net.total_bytes(), 0, "no tensors, no collectives");
+    }
+
+    #[test]
+    fn overlapped_training_matches_posthoc_bit_for_bit() {
+        // same seed, same data: the grad-ready scheduler and the post-hoc
+        // oracle must produce identical parameters after several steps
+        // (both reduce through the same bucket boundaries and collective
+        // arithmetic). 2-way mesh x 2 DP exercises MP + DP interleaving.
+        let c = cfg();
+        let mut s_overlap = TrainSpec::quick(2, 2, 4).unwrap();
+        s_overlap.overlap_dp = true;
+        let mut s_posthoc = s_overlap.clone();
+        s_posthoc.overlap_dp = false;
+        let a = train(&c, &s_overlap, Arc::new(NativeBackend)).unwrap();
+        let b = train(&c, &s_posthoc, Arc::new(NativeBackend)).unwrap();
+        for ((na, ta), (nb, tb)) in a.final_params.iter().zip(&b.final_params) {
+            assert_eq!(na, nb);
+            for (va, vb) in ta.data.iter().zip(&tb.data) {
+                assert_eq!(
+                    va.to_bits(),
+                    vb.to_bits(),
+                    "param {na} diverged between overlapped and post-hoc"
+                );
+            }
+        }
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "step {}", sa.step);
+        }
+    }
+
+    #[test]
     fn randomized_rollout_varies_lengths() {
-        let mut spec = TrainSpec::quick(1, 1, 8);
+        let mut spec = TrainSpec::quick(1, 1, 8).unwrap();
         spec.max_rollout = 3;
         let report = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap();
         let lens: std::collections::BTreeSet<usize> =

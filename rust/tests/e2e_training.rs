@@ -17,7 +17,7 @@ fn backend(preset: &str) -> Arc<dyn Backend> {
 #[test]
 fn tiny_one_way_pjrt_loss_decreases() {
     let cfg = common::config("tiny");
-    let mut spec = TrainSpec::quick(1, 1, 25);
+    let mut spec = TrainSpec::quick(1, 1, 25).unwrap();
     spec.val_every = 25;
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     let first = r.steps.first().unwrap().loss;
@@ -30,7 +30,7 @@ fn tiny_one_way_pjrt_loss_decreases() {
 #[test]
 fn tiny_two_way_pjrt_trains() {
     let cfg = common::config("tiny");
-    let spec = TrainSpec::quick(2, 1, 20);
+    let spec = TrainSpec::quick(2, 1, 20).unwrap();
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     let first = r.steps.first().unwrap().loss;
     let last = r.steps.last().unwrap().loss;
@@ -41,7 +41,7 @@ fn tiny_two_way_pjrt_trains() {
 #[test]
 fn tiny_two_way_with_dp_trains() {
     let cfg = common::config("tiny");
-    let spec = TrainSpec::quick(2, 2, 12);
+    let spec = TrainSpec::quick(2, 2, 12).unwrap();
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     assert_eq!(r.steps.len(), 12);
     let first = r.steps.first().unwrap().loss;
@@ -52,7 +52,7 @@ fn tiny_two_way_with_dp_trains() {
 #[test]
 fn four_way_pjrt_trains() {
     let cfg = common::config("tiny");
-    let spec = TrainSpec::quick(4, 1, 12);
+    let spec = TrainSpec::quick(4, 1, 12).unwrap();
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     let first = r.steps.first().unwrap().loss;
     let last = r.steps.last().unwrap().loss;
@@ -62,7 +62,7 @@ fn four_way_pjrt_trains() {
 #[test]
 fn rollout_finetune_runs_multi_length() {
     let cfg = common::config("tiny");
-    let mut spec = TrainSpec::quick(1, 1, 10);
+    let mut spec = TrainSpec::quick(1, 1, 10).unwrap();
     spec.max_rollout = 3;
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     let lens: std::collections::BTreeSet<usize> =
@@ -76,7 +76,7 @@ fn final_params_equal_across_mp_ranks_of_dp_groups() {
     // after DP-synchronized training, group-0 reassembled params must be
     // finite and non-trivially updated from init
     let cfg = common::config("tiny");
-    let spec = TrainSpec::quick(2, 2, 5);
+    let spec = TrainSpec::quick(2, 2, 5).unwrap();
     let r = train(&cfg, &spec, backend("tiny")).unwrap();
     let init = jigsaw::model::init_global_params(&cfg, spec.seed);
     let mut moved = 0usize;
