@@ -29,6 +29,25 @@
 //! This is the multi-bucket bookkeeping under the trainer's grad-ready
 //! DP reduce.
 //!
+//! The [`ProgressEngine`] closes the gap between those poll points: it
+//! is a per-rank registry of in-flight `PackedAllreduce` machines that
+//! *any* code running on the owning rank thread can drive forward.
+//! Installing an engine ([`ProgressEngine::install`]) points the kernel
+//! driver's callback (`tensor::ops::set_driver_hook`) at it, after which
+//! registered collectives advance while the rank waits at a blocked-
+//! kernel row-band barrier, between register-tile row groups of the
+//! serial kernels, and inside every blocking fabric wait (`recv`,
+//! `recv_any`, `wait_any_ready`) — including the `dist_matmul`
+//! ready-queue's dry-wait on a *different* fabric. Rings posted early in
+//! the backward pass therefore make progress during every subsequent
+//! matmul instead of only at the next gradient emission, and the
+//! trainer's drain becomes a short tail. Hook-mode waits never park
+//! unbounded: after running the hook (with the net lock released) they
+//! re-probe under the lock before sleeping, and sleep at most one
+//! `PROGRESS_TICK` — the hook's collectives may ride fabrics whose
+//! deliveries do not signal this fabric's condvar, and a message that
+//! lands while the hook runs has already spent its `notify_all`.
+//!
 //! Failure containment: `Network::abort` flips the fabric into an
 //! aborted state in which every blocking receive panics with
 //! [`FABRIC_ABORTED`] instead of waiting forever — the trainer uses it
@@ -49,7 +68,9 @@
 //! and a uniquely-owned message is recovered by the receiver without a
 //! copy (`Arc::try_unwrap`).
 
+use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
@@ -57,6 +78,12 @@ use std::time::{Duration, Instant};
 use crate::tensor::Tensor;
 
 type Key = (usize, usize, u64); // (src, dst, tag)
+
+/// Upper bound on a blocking wait's sleep while a kernel-driver hook is
+/// installed: the hook's collectives may ride other fabrics whose
+/// deliveries do not signal this fabric's condvar, so hook-mode waits
+/// wake on their own cadence to keep polling.
+const PROGRESS_TICK: Duration = Duration::from_micros(100);
 
 /// Panic message raised by blocking receives after [`Network::abort`]:
 /// the trainer uses it to tell secondary (abort-induced) rank failures
@@ -293,7 +320,32 @@ impl Comm {
     /// Blocking receive returning the shared handle (read-only use, e.g.
     /// shipped stationary-operand blocks).
     pub fn recv_shared(&self, src: usize, tag: u64) -> Arc<Tensor> {
-        let key = (src, self.rank, tag);
+        self.await_any(&[(src, tag)], true).unwrap().1
+    }
+
+    /// The shared blocking-wait core behind [`recv`](Comm::recv),
+    /// [`recv_any`](Comm::recv_any), and
+    /// [`wait_any_ready`](Comm::wait_any_ready): park until one of
+    /// `keys` = [(src, tag), ..] has a deliverable message. With `take`
+    /// the winning message is consumed and returned; without, it stays
+    /// queued (MPI `Probe`) and the return is `None`.
+    ///
+    /// When a kernel-driver hook is installed
+    /// (`tensor::ops::set_driver_hook` — the [`ProgressEngine`]'s poll
+    /// path), the wait drives it instead of parking cold: probe, run the
+    /// hook with the net lock *released* (its collectives may ride this
+    /// very fabric), then **re-probe under the lock before any sleep**.
+    /// The re-probe is load-bearing: a message delivered while the hook
+    /// ran has already fired its `notify_all` at a moment nobody was on
+    /// the condvar, so parking without re-probing would strand this
+    /// thread until an unrelated notification — the missed-wakeup window
+    /// `wait_does_not_strand_when_delivery_lands_during_hook` pins.
+    /// Hook-mode sleeps are additionally bounded by [`PROGRESS_TICK`].
+    fn await_any(&self, keys: &[(usize, u64)], take: bool) -> Option<(usize, Arc<Tensor>)> {
+        assert!(!keys.is_empty(), "blocking wait over an empty key set");
+        // set when the hook already ran since the last probe: the next
+        // pass may sleep instead of ticking again
+        let mut just_ticked = false;
         let mut q = plock(&self.net.queues);
         loop {
             if self.net.aborted.load(Ordering::SeqCst) {
@@ -301,25 +353,58 @@ impl Comm {
                 panic!("{FABRIC_ABORTED}");
             }
             let now = Instant::now();
-            let mut wait_for: Option<Duration> = None;
-            if let Some(list) = q.get_mut(&key) {
-                if let Some(head) = list.front() {
-                    if head.deliverable(now) {
-                        let msg = list.pop_front().unwrap();
-                        if list.is_empty() {
-                            q.remove(&key);
+            let mut next_ready: Option<Duration> = None;
+            for (i, &(src, tag)) in keys.iter().enumerate() {
+                let key = (src, self.rank, tag);
+                if let Some(list) = q.get_mut(&key) {
+                    if let Some(head) = list.front() {
+                        if head.deliverable(now) {
+                            if !take {
+                                return None;
+                            }
+                            let msg = list.pop_front().unwrap();
+                            if list.is_empty() {
+                                q.remove(&key);
+                            }
+                            return Some((i, msg.t));
                         }
-                        return msg.t;
+                        let d = head.ready_at.unwrap().saturating_duration_since(now);
+                        next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
                     }
-                    // head still in flight: sleep until its delivery time
-                    wait_for =
-                        Some(head.ready_at.unwrap().saturating_duration_since(now));
                 }
             }
-            q = match wait_for {
-                Some(d) => self.cv_wait_timeout(q, d),
-                None => self.cv_wait(q),
-            };
+            if crate::tensor::ops::driver_hook_installed() {
+                if !just_ticked {
+                    drop(q);
+                    let progressed = crate::tensor::ops::driver_tick();
+                    q = plock(&self.net.queues);
+                    if progressed && !take {
+                        // the hook may have CONSUMED a message for one of
+                        // `keys` (a drain waits on exactly the keys the
+                        // installed engine polls, on this very fabric) and
+                        // advanced or completed that machine — the
+                        // caller's key snapshot is stale, and parking on
+                        // it would hang forever once no more traffic
+                        // targets those keys. A probe-style wait treats
+                        // hook progress as a wake: return so the caller
+                        // re-derives its key set.
+                        return None;
+                    }
+                    // while the hook advances its collectives, stay hot
+                    // (probe -> tick -> probe); once it runs dry, the
+                    // next pass probes and then sleeps one tick
+                    just_ticked = !progressed;
+                    continue;
+                }
+                let d = next_ready.map_or(PROGRESS_TICK, |d| d.min(PROGRESS_TICK));
+                q = self.cv_wait_timeout(q, d);
+                just_ticked = false;
+            } else {
+                q = match next_ready {
+                    Some(d) => self.cv_wait_timeout(q, d),
+                    None => self.cv_wait(q),
+                };
+            }
         }
     }
 
@@ -394,38 +479,11 @@ impl Comm {
     /// Blocking receive of *whichever* of `keys` = [(src, tag), ..]
     /// arrives first (MPI waitany). Returns the index into `keys` and the
     /// message. Ready-queue schedules use this to take work in arrival
-    /// order once local compute runs dry.
+    /// order once local compute runs dry — and, with a [`ProgressEngine`]
+    /// installed, the wait doubles as a poll point for in-flight
+    /// collectives on other fabrics (the `dist_matmul` dry-wait hook).
     pub fn recv_any(&self, keys: &[(usize, u64)]) -> (usize, Arc<Tensor>) {
-        assert!(!keys.is_empty(), "recv_any over an empty key set");
-        let mut q = plock(&self.net.queues);
-        loop {
-            if self.net.aborted.load(Ordering::SeqCst) {
-                drop(q);
-                panic!("{FABRIC_ABORTED}");
-            }
-            let now = Instant::now();
-            let mut next_ready: Option<Duration> = None;
-            for (i, &(src, tag)) in keys.iter().enumerate() {
-                let key = (src, self.rank, tag);
-                if let Some(list) = q.get_mut(&key) {
-                    if let Some(head) = list.front() {
-                        if head.deliverable(now) {
-                            let msg = list.pop_front().unwrap();
-                            if list.is_empty() {
-                                q.remove(&key);
-                            }
-                            return (i, msg.t);
-                        }
-                        let d = head.ready_at.unwrap().saturating_duration_since(now);
-                        next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
-                    }
-                }
-            }
-            q = match next_ready {
-                Some(d) => self.cv_wait_timeout(q, d),
-                None => self.cv_wait(q),
-            };
-        }
+        self.await_any(keys, true).unwrap()
     }
 
     /// Block until one of `keys` = [(src, tag), ..] has a deliverable
@@ -433,50 +491,32 @@ impl Comm {
     /// The in-flight collective drain loops use this to sleep
     /// efficiently between polls: the message stays queued so the
     /// owning state machine's next `poll` pops it itself.
+    ///
+    /// With a driver hook installed this may also return because the
+    /// hook made progress (it can consume the awaited messages itself —
+    /// the drain's keys are exactly what the installed engine polls), so
+    /// callers must re-derive their key set and re-poll after every
+    /// return rather than assume a `keys` message is queued.
     pub fn wait_any_ready(&self, keys: &[(usize, u64)]) {
-        assert!(!keys.is_empty(), "wait_any_ready over an empty key set");
-        let mut q = plock(&self.net.queues);
-        loop {
-            if self.net.aborted.load(Ordering::SeqCst) {
-                drop(q);
-                panic!("{FABRIC_ABORTED}");
-            }
-            let now = Instant::now();
-            let mut next_ready: Option<Duration> = None;
-            for &(src, tag) in keys {
-                if let Some(list) = q.get(&(src, self.rank, tag)) {
-                    if let Some(head) = list.front() {
-                        if head.deliverable(now) {
-                            return;
-                        }
-                        let d = head.ready_at.unwrap().saturating_duration_since(now);
-                        next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
-                    }
-                }
-            }
-            q = match next_ready {
-                Some(d) => self.cv_wait_timeout(q, d),
-                None => self.cv_wait(q),
-            };
-        }
+        let _ = self.await_any(keys, false);
     }
 
     fn next_coll_tag(&mut self, group: &[usize]) -> u64 {
         // group identity folded into the tag so disjoint groups (e.g. the
         // paper's r%n DP groups) never cross-talk.
-        let mut gh: u64 = 0xcbf29ce484222325;
-        for &r in group {
-            gh = (gh ^ r as u64).wrapping_mul(0x100000001b3);
-        }
-        // layout: [63]=collective  [62]=reply  [61:32]=group hash  [31:0]=
-        // seq XOR the hash's high bits — the XOR keeps per-group tags
-        // unique (bijective in seq) while giving colliding 30-bit hashes
-        // another 32 bits of discrimination.
+        let gh = group_hash(group);
+        // layout: [63]=collective  [62]=reply  [61:44]=18-bit group hash
+        // [43:0]=seq XOR the hash's high bits. The counter is u64 and the
+        // tag keeps 44 bits of it: the old 32-bit field silently collided
+        // with a still-in-flight tag after ~4.3e9 collectives per group
+        // (hours on a long run); 2^44 is centuries at the same rate. The
+        // XOR keeps per-group tags unique (bijective in seq) while giving
+        // colliding 18-bit hashes extra discrimination.
         let seq = self.coll_seq.entry(gh).or_insert(0);
         let tag = COLLECTIVE_BIT
-            | ((gh & 0x3FFF_FFFF) << 32)
-            | ((*seq ^ (gh >> 30)) & 0xFFFF_FFFF);
-        *seq += 1;
+            | ((gh & 0x3_FFFF) << 44)
+            | ((*seq ^ (gh >> 18)) & 0xFFF_FFFF_FFFF);
+        *seq = seq.wrapping_add(1);
         tag
     }
 
@@ -675,6 +715,18 @@ impl Comm {
     }
 }
 
+/// FNV-1a fold of a collective group's membership: the per-group key of
+/// the tag-sequence counters (full 64 bits) and the tag's group field
+/// (truncated). Identical on every member because groups are passed in
+/// identical order.
+fn group_hash(group: &[usize]) -> u64 {
+    let mut gh: u64 = 0xcbf29ce484222325;
+    for &r in group {
+        gh = (gh ^ r as u64).wrapping_mul(0x100000001b3);
+    }
+    gh
+}
+
 /// Balanced ring chunk bounds, identical on every rank (shared by the
 /// blocking ring and the in-flight state machine so the two can never
 /// disagree on the schedule).
@@ -731,6 +783,9 @@ enum CollState {
     /// gather leaf: payload sent at start, waiting for the root's reply
     GatherLeaf { root: usize, tag: u64 },
     Done(Tensor),
+    /// payload moved out by `take` — also what `Drop` leaves behind
+    /// after recycling whatever the machine still held
+    Taken,
 }
 
 impl PackedAllreduce {
@@ -751,7 +806,7 @@ impl PackedAllreduce {
                 peers.get(*idx).map(|&r| (r, *tag))
             }
             CollState::GatherLeaf { root, tag } => Some((*root, *tag | REPLY_BIT)),
-            CollState::Done(_) => None,
+            CollState::Done(_) | CollState::Taken => None,
         }
     }
 
@@ -761,7 +816,7 @@ impl PackedAllreduce {
         let mut progress = false;
         let mut finished: Option<Tensor> = None;
         match &mut self.state {
-            CollState::Done(_) => {}
+            CollState::Done(_) | CollState::Taken => {}
             CollState::Ring {
                 out, bounds, left, right, p, n, tag, allgather, step,
             } => {
@@ -875,11 +930,217 @@ impl PackedAllreduce {
     }
 
     /// Take the reduced payload out of a completed collective.
-    pub fn take(self) -> Tensor {
-        match self.state {
+    pub fn take(mut self) -> Tensor {
+        match std::mem::replace(&mut self.state, CollState::Taken) {
             CollState::Done(t) => t,
             _ => panic!("PackedAllreduce::take before completion"),
         }
+    }
+}
+
+impl Drop for PackedAllreduce {
+    /// A machine dropped mid-flight (a rank aborting on `FABRIC_ABORTED`
+    /// unwinds its scheduler with buckets still ringing) returns its
+    /// working payload to the tensor pool instead of freeing it, so an
+    /// injected rank failure does not degrade the survivor's (or a
+    /// restarted step's) steady-state pool behaviour.
+    fn drop(&mut self) {
+        match std::mem::replace(&mut self.state, CollState::Taken) {
+            CollState::Ring { out, .. } => out.recycle(),
+            CollState::GatherRoot { out, .. } => out.recycle(),
+            CollState::Done(t) => t.recycle(),
+            CollState::GatherLeaf { .. } | CollState::Taken => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Progress engine: drive in-flight collectives from anywhere on the rank
+// ---------------------------------------------------------------------------
+
+thread_local! {
+    /// The engine (if any) installed on this thread — what the kernel
+    /// driver's callback polls. Band worker threads never inherit it, so
+    /// only the rank thread that installed the engine drives it.
+    static CURRENT_ENGINE: RefCell<Option<Rc<RefCell<EngineInner>>>> =
+        const { RefCell::new(None) };
+}
+
+/// Per-rank registry of in-flight [`PackedAllreduce`] state machines that
+/// any code running on the owning rank thread can drive forward.
+///
+/// The grad-ready DP scheduler `register`s each bucket's collective the
+/// moment it is posted and `try_take`s the reduced payload when it needs
+/// it back; in between, *whoever is burning the rank's wall-clock* makes
+/// the rings progress: [`install`](ProgressEngine::install) points the
+/// kernel driver's callback at this engine, so polls fire at the blocked-
+/// kernel row-band barrier, between register-tile row groups of the
+/// serial kernels, and inside every blocking fabric wait (the
+/// `dist_matmul` ready-queue's dry-wait included). `Rc`-internal by
+/// design — an engine lives and is driven on exactly one rank thread.
+pub struct ProgressEngine {
+    inner: Rc<RefCell<EngineInner>>,
+}
+
+struct EngineInner {
+    /// poll-only endpoint on the collectives' fabric: consumes arrivals
+    /// and forwards ring chunks, but never issues a collective itself,
+    /// so the registering endpoint's tag sequencing stays untouched
+    poll_comm: Comm,
+    /// registered machines, indexed by ticket; `None` once taken
+    slots: Vec<Option<PackedAllreduce>>,
+    /// machines not yet done — lets the hot poll path bail in O(1) when
+    /// nothing is in flight (every kernel row-group ticks through here)
+    live: usize,
+}
+
+/// Handle to one registered collective (index into the engine's slots).
+#[derive(Clone, Copy, Debug)]
+pub struct ProgressTicket(usize);
+
+/// Restores the previously installed engine/driver hook on drop, so a
+/// scheduler unwinding on a rank failure cannot leave a dangling hook
+/// pointing at a dead engine.
+pub struct ProgressGuard {
+    prev_engine: Option<Rc<RefCell<EngineInner>>>,
+    prev_hook: Option<fn() -> bool>,
+}
+
+/// Poll the engine behind `inner` once: drive every in-flight machine as
+/// far as arrived messages allow. Returns whether anything progressed.
+/// `try_borrow_mut` guards re-entrancy (a hook firing inside an engine
+/// poll is a no-op rather than a RefCell panic).
+///
+/// Cost note: each in-flight machine's `poll` takes the fabric's queue
+/// lock for its own `try_recv`, so one tick costs `live` short lock
+/// round-trips (~25ns uncontended each). At the kernel's ~tens-of-
+/// microseconds tick cadence and single-digit bucket counts that is
+/// well under 1% of a rank's time; if bucket counts grow an order of
+/// magnitude, batch the probes under one lock (a `poll_locked` variant)
+/// before reaching for a coarser tick.
+fn poll_engine_inner(inner: &RefCell<EngineInner>) -> bool {
+    let Ok(mut guard) = inner.try_borrow_mut() else {
+        return false;
+    };
+    let inner = &mut *guard;
+    if inner.live == 0 {
+        return false;
+    }
+    let mut progress = false;
+    let mut live = 0usize;
+    let comm = &inner.poll_comm;
+    for slot in inner.slots.iter_mut() {
+        if let Some(coll) = slot {
+            if !coll.is_done() {
+                progress |= coll.poll(comm);
+                if !coll.is_done() {
+                    live += 1;
+                }
+            }
+        }
+    }
+    inner.live = live;
+    progress
+}
+
+/// The kernel driver's callback body: poll whatever engine is installed
+/// on the current thread. No-op (`false`) when none is.
+fn poll_current_engine() -> bool {
+    let engine = CURRENT_ENGINE.with(|cur| match cur.try_borrow() {
+        Ok(b) => b.clone(),
+        Err(_) => None,
+    });
+    match engine {
+        Some(inner) => poll_engine_inner(&inner),
+        None => false,
+    }
+}
+
+impl ProgressEngine {
+    /// New engine polling the same fabric endpoint as `comm`.
+    pub fn new(comm: &Comm) -> Self {
+        ProgressEngine {
+            inner: Rc::new(RefCell::new(EngineInner {
+                poll_comm: Comm {
+                    rank: comm.rank,
+                    net: comm.net.clone(),
+                    coll_seq: HashMap::new(),
+                },
+                slots: Vec::new(),
+                live: 0,
+            })),
+        }
+    }
+
+    /// Register an in-flight collective; the engine owns it until
+    /// [`try_take`](ProgressEngine::try_take).
+    pub fn register(&self, coll: PackedAllreduce) -> ProgressTicket {
+        let mut inner = self.inner.borrow_mut();
+        if !coll.is_done() {
+            inner.live += 1;
+        }
+        inner.slots.push(Some(coll));
+        ProgressTicket(inner.slots.len() - 1)
+    }
+
+    /// Drive every registered machine as far as already-arrived messages
+    /// allow. Never blocks; returns whether anything progressed.
+    pub fn poll(&self) -> bool {
+        poll_engine_inner(&self.inner)
+    }
+
+    /// Whether the ticket's collective has completed (or been taken).
+    pub fn is_done(&self, t: &ProgressTicket) -> bool {
+        self.inner.borrow().slots[t.0]
+            .as_ref()
+            .map_or(true, |c| c.is_done())
+    }
+
+    /// Take the reduced payload of a completed collective; `None` while
+    /// it is still in flight (or if already taken).
+    pub fn try_take(&self, t: &ProgressTicket) -> Option<Tensor> {
+        let mut inner = self.inner.borrow_mut();
+        if inner.slots[t.0].as_ref().map_or(false, |c| c.is_done()) {
+            inner.slots[t.0].take().map(PackedAllreduce::take)
+        } else {
+            None
+        }
+    }
+
+    /// Number of registered collectives still in flight.
+    pub fn in_flight(&self) -> usize {
+        self.inner.borrow().live
+    }
+
+    /// The (src, tag) keys the in-flight machines are waiting on — feed
+    /// to [`Comm::wait_any_ready`] to park until any can advance.
+    pub fn awaited(&self) -> Vec<(usize, u64)> {
+        self.inner
+            .borrow()
+            .slots
+            .iter()
+            .flatten()
+            .filter_map(PackedAllreduce::awaited)
+            .collect()
+    }
+
+    /// Install this engine as the current thread's driven registry and
+    /// point the kernel driver's callback at it. The returned guard
+    /// restores the previous hook (drop it when the collectives' owner —
+    /// the grad scheduler — is done).
+    pub fn install(&self) -> ProgressGuard {
+        let prev_engine = CURRENT_ENGINE.with(|c| c.replace(Some(self.inner.clone())));
+        let prev_hook = crate::tensor::ops::set_driver_hook(Some(poll_current_engine));
+        ProgressGuard { prev_engine, prev_hook }
+    }
+}
+
+impl Drop for ProgressGuard {
+    fn drop(&mut self) {
+        crate::tensor::ops::set_driver_hook(self.prev_hook.take());
+        CURRENT_ENGINE.with(|c| {
+            *c.borrow_mut() = self.prev_engine.take();
+        });
     }
 }
 
@@ -1198,6 +1459,200 @@ mod tests {
         assert_eq!(net.max_queue_depth(), 3);
         net.reset_bytes();
         assert_eq!(net.max_queue_depth(), 0);
+    }
+
+    #[test]
+    fn collective_tag_seq_survives_32bit_wrap() {
+        // the old layout masked the per-group sequence to 32 tag bits, so
+        // tags at seq k and k + 2^32 collided bit for bit on long runs;
+        // the widened 44-bit field must keep them distinct
+        let net = Network::new(2);
+        let mut c = net.endpoint(0);
+        let group = vec![0usize, 1];
+        let gh = group_hash(&group);
+        // near-wrap start value: straddle the old field's boundary
+        c.coll_seq.insert(gh, (1u64 << 32) - 2);
+        let mut tags = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            assert!(
+                tags.insert(c.next_coll_tag(&group)),
+                "tag collided crossing the 32-bit seq boundary"
+            );
+        }
+        // the direct collision of the old layout
+        c.coll_seq.insert(gh, 5);
+        let a = c.next_coll_tag(&group);
+        c.coll_seq.insert(gh, 5 + (1u64 << 32));
+        let b = c.next_coll_tag(&group);
+        assert_ne!(a, b, "seq tag field must be wider than 32 bits");
+        // and the tags still live in the collective namespace
+        assert!(a & COLLECTIVE_BIT != 0 && a & REPLY_BIT == 0);
+    }
+
+    #[test]
+    fn dropped_inflight_collective_recycles_its_buffers() {
+        // rank 0 posts a ring and dies before the peer answers (the
+        // FABRIC_ABORTED unwind shape): dropping the machine must hand
+        // its working payload back to this thread's pool
+        let net = Network::new(2);
+        let mut c = net.endpoint(0);
+        // distinctive capacity marks the payload buffer, so finding it in
+        // this thread's (otherwise untouched) pool is unambiguous — no
+        // reliance on the process-global hit/miss counters other test
+        // threads also bump
+        let numel = 4099usize;
+        let mut data = Vec::with_capacity(5000);
+        data.resize(numel, 1.0);
+        let payload = Tensor::new(vec![numel], data);
+        let coll = c.allreduce_start(&[0, 1], payload);
+        assert!(!coll.is_done(), "peerless ring must still be in flight");
+        drop(coll);
+        let got = crate::tensor::pool::take(100);
+        assert_eq!(
+            got.capacity(),
+            5000,
+            "dropped machine's working payload was freed, not pooled"
+        );
+        crate::tensor::pool::put(got);
+    }
+
+    /// Dawdling driver hook for the missed-wakeup regression: long enough
+    /// that a fabric-delayed message becomes deliverable while it runs.
+    fn slow_hook() -> bool {
+        std::thread::sleep(Duration::from_millis(12));
+        false
+    }
+
+    #[test]
+    fn wait_does_not_strand_when_delivery_lands_during_hook() {
+        // the missed-wakeup window: wait_any_ready probes (nothing), runs
+        // the driver hook with the lock released, and while the hook runs
+        // the seeded-delay fabric delivers the message — its notify_all
+        // fires with nobody on the condvar. Parking without re-probing
+        // under the lock would strand this thread forever (no further
+        // sends). The fixed wait re-probes and returns promptly.
+        let net = Network::new(2);
+        net.set_fabric(
+            FabricSpec {
+                latency: Duration::from_millis(3),
+                jitter: Duration::ZERO,
+                bytes_per_sec: 1e12,
+            },
+            9,
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let sender = thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(4));
+            a.send(1, 5, Tensor::scalar(1.0));
+        });
+        let prev = crate::tensor::ops::set_driver_hook(Some(slow_hook));
+        let t0 = Instant::now();
+        b.wait_any_ready(&[(0, 5)]);
+        let waited = t0.elapsed();
+        crate::tensor::ops::set_driver_hook(prev);
+        sender.join().unwrap();
+        assert_eq!(b.try_recv(0, 5).unwrap().data, vec![1.0]);
+        assert!(
+            waited < Duration::from_millis(500),
+            "wait stranded past the hook window: {waited:?}"
+        );
+    }
+
+    /// Endpoint the consuming hook drains through (same rank as the
+    /// waiter, second endpoint on the same fabric — the shape of a
+    /// progress engine's poll_comm).
+    static HOOK_COMM: Mutex<Option<Comm>> = Mutex::new(None);
+
+    fn consuming_hook() -> bool {
+        // dawdle past the fabric delay so the message becomes deliverable
+        // mid-hook, then consume it — what an installed engine does to a
+        // drain's awaited ring hop
+        std::thread::sleep(Duration::from_millis(60));
+        plock(&HOOK_COMM)
+            .as_ref()
+            .map_or(false, |c| c.try_recv(0, 9).is_some())
+    }
+
+    #[test]
+    fn hooked_probe_wait_returns_when_hook_consumes_the_awaited_key() {
+        // the stale-snapshot hang: wait_any_ready parks on key (0, 9);
+        // the driver hook itself consumes that message (an engine polls
+        // exactly the keys the drain waits on, on this very fabric), so
+        // no future traffic ever targets the key. The wait must treat
+        // hook progress as a wake and return — the old structure spun on
+        // its tick forever.
+        let net = Network::new(2);
+        // 50ms latency: generous margin for the waiter to be parked
+        // before the message becomes deliverable (the hook's 60ms nap
+        // then strictly covers the delivery instant)
+        net.set_fabric(
+            FabricSpec {
+                latency: Duration::from_millis(50),
+                jitter: Duration::ZERO,
+                bytes_per_sec: 1e12,
+            },
+            5,
+        );
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        *plock(&HOOK_COMM) = Some(net.endpoint(1));
+        a.send(1, 9, Tensor::scalar(4.0));
+        let prev = crate::tensor::ops::set_driver_hook(Some(consuming_hook));
+        let t0 = Instant::now();
+        b.wait_any_ready(&[(0, 9)]);
+        let waited = t0.elapsed();
+        crate::tensor::ops::set_driver_hook(prev);
+        *plock(&HOOK_COMM) = None;
+        assert!(
+            b.try_recv(0, 9).is_none(),
+            "the hook should have consumed the awaited message"
+        );
+        assert!(
+            waited < Duration::from_secs(2),
+            "stranded on a stale key snapshot: {waited:?}"
+        );
+    }
+
+    #[test]
+    fn progress_engine_drives_registered_collectives() {
+        // three collectives per rank, driven only through engine polls
+        // (never the per-handle wait): the registry must complete them
+        // all and hand back the same sums the blocking path produces
+        let n = 4usize;
+        let net = Network::new(n);
+        let group: Vec<usize> = (0..n).collect();
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let mut c = net.endpoint(r);
+            let grp = group.clone();
+            handles.push(thread::spawn(move || {
+                let engine = ProgressEngine::new(&c);
+                let tickets: Vec<ProgressTicket> = (0..3)
+                    .map(|b| {
+                        let t = Tensor::new(vec![32], vec![(r + b) as f32; 32]);
+                        engine.register(c.allreduce_start(&grp, t))
+                    })
+                    .collect();
+                while engine.in_flight() > 0 {
+                    engine.poll();
+                    let waiting = engine.awaited();
+                    if !waiting.is_empty() {
+                        c.wait_any_ready(&waiting);
+                    }
+                }
+                tickets
+                    .iter()
+                    .map(|t| engine.try_take(t).unwrap().data)
+                    .collect::<Vec<_>>()
+            }));
+        }
+        for h in handles {
+            let outs = h.join().unwrap();
+            for (b, data) in outs.iter().enumerate() {
+                assert_eq!(data, &vec![(6 + 4 * b) as f32; 32], "bucket {b}");
+            }
+        }
     }
 
     #[test]

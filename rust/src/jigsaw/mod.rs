@@ -23,7 +23,13 @@
 //!     partials in arrival order and reduce them in a fixed order. The
 //!     pre-ready-queue fixed-order pipeline survives as
 //!     `dist_matmul_blocking` — the overlap benches' baseline and a
-//!     second oracle for the scheduler.
+//!     second oracle for the scheduler. When a `comm::ProgressEngine` is
+//!     installed on the rank (the trainer's grad-ready DP scheduler does
+//!     this for the whole backward pass), the schedule's dry-waits —
+//!     `recv_any` with no computable term, and the phase-4 partial-sum
+//!     collection — double as poll points: in-flight DP bucket rings on
+//!     the *other* fabric advance while this rank waits for jigsaw
+//!     traffic, instead of stalling until the next gradient emission.
 //!
 //! For the paper's layouts this reproduces the published schedules term
 //! for term: in 2-way each rank computes X_r W_{r,j}^T locally and
@@ -554,7 +560,9 @@ pub fn dist_matmul(
             local_terms[next_local - 1]
         } else {
             // local work exhausted: block on whichever in-flight mobile
-            // block arrives first
+            // block arrives first. This dry-wait is hook-aware — with a
+            // progress engine installed, registered DP collectives keep
+            // advancing while this rank waits for jigsaw traffic.
             let polled: Vec<(usize, usize)> = waiting.keys().copied().collect();
             let keys: Vec<(usize, u64)> = polled
                 .iter()
@@ -617,6 +625,8 @@ pub fn dist_matmul(
     // receive in arrival order (overlapping senders' tails), but apply
     // the adds in (block, sender) order so the reduction itself stays
     // deterministic run to run — the adds are noise next to the matmuls.
+    // (These recv_any waits are hook-aware too: the tail of a backward
+    // matmul chain keeps driving in-flight DP rings.)
     let mut arrived: BTreeMap<((usize, usize), usize), Arc<Tensor>> = BTreeMap::new();
     while arrived.len() < pending.len() {
         let outstanding: Vec<((usize, usize), usize)> = pending

@@ -52,12 +52,19 @@
 //! finished gradient (reverse-layer order) into the trainer's
 //! `GradReduceScheduler`, which packs flat buckets and posts each
 //! bucket's in-flight ring (`comm::PackedAllreduce`) while earlier
-//! layers still differentiate, draining per-bucket before Adam — the
-//! paper's isend/irecv overlap, measurable under the fabric's
+//! layers still differentiate. Posted rings are registered with a
+//! `comm::ProgressEngine` — a per-rank registry the kernel driver's
+//! callback polls between register-tile row groups, at row-band
+//! barriers, and inside every blocking fabric wait (the `dist_matmul`
+//! dry-wait included) — so collectives advance during every matmul
+//! between emissions and the pre-Adam drain is a short tail
+//! (`BENCH_progress.json` pins it against emission-only polling). The
+//! paper's isend/irecv overlap is measurable under the fabric's
 //! injected-delay model (`BENCH_overlap.json`, `BENCH_dp_overlap.json`)
 //! and bit-identical to the retained post-hoc `dp_allreduce_grads`
 //! oracle. A failing rank aborts the fabric so peers unwind instead of
-//! deadlocking, and `train` reports which rank failed.
+//! deadlocking (in-flight collective buffers recycle on the unwind),
+//! and `train` reports which rank failed.
 //!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind

@@ -236,6 +236,16 @@ pub struct OverlapReport {
     /// backward share of the step's FLOPs (2 of the fwd+2x-bwd 3) is the
     /// ceiling on hideable DP seconds
     pub dp_backward_window: f64,
+    /// seconds of the DP reduce left on the critical path after the
+    /// backward pass retires — the drain tail
+    /// `trainer::GradReduceScheduler::finish` pays before Adam: the
+    /// calibrated exposed fraction plus any nominally-hidden seconds the
+    /// backward window could not actually cover. The progress engine
+    /// exists to keep this term at its model floor (rings advance
+    /// throughout backward); emission-point-only polling inflates it,
+    /// which is what `hotpath_micro` §Progress measures on the thread
+    /// fabric (BENCH_progress.json)
+    pub dp_drain_tail: f64,
     /// step time if no comm overlapped compute
     pub blocking_total: f64,
     /// step time with the modeled overlap: `simulate_step`'s total plus
@@ -263,21 +273,24 @@ pub fn overlap_report(cluster: &ClusterSpec, w: &Workload) -> OverlapReport {
     // (blocking - overlapped <= mp_hidden + dp_hidden) even when the
     // window binds
     let window_excess = raw_hidden - dp_hidden;
+    // everything of the DP reduce that surfaces after backward retires:
+    // the calibrated exposure plus the window excess. Algebraically
+    // max(dp_comm, dp_comm_exposed) - dp_hidden — the identity the
+    // consistency test pins.
+    let dp_drain_tail = t.dp_comm_exposed + window_excess;
     let blocking_path = t.compute
         + t.mp_comm
         + t.dp_comm.max(t.dp_comm_exposed)
         + cluster.step_overhead;
     let blocking_total = t.io.max(blocking_path);
-    let overlapped_path = t.compute
-        + t.mp_comm_exposed
-        + t.dp_comm_exposed
-        + window_excess
-        + cluster.step_overhead;
+    let overlapped_path =
+        t.compute + t.mp_comm_exposed + dp_drain_tail + cluster.step_overhead;
     let overlapped_total = t.io.max(overlapped_path);
     OverlapReport {
         mp_hidden,
         dp_hidden,
         dp_backward_window,
+        dp_drain_tail,
         blocking_total,
         overlapped_total,
         predicted_speedup: blocking_total / overlapped_total,
@@ -442,6 +455,17 @@ mod tests {
             assert!(
                 r.predicted_speedup >= 1.0 - 1e-12,
                 "overlap can only help: {r:?}"
+            );
+            // drain-tail identity: what surfaces after backward is the
+            // full DP cost minus what the backward window truly hid
+            let t = simulate_step(&c, &w);
+            assert!(r.dp_drain_tail >= -1e-12, "negative drain tail: {r:?}");
+            assert!(
+                (r.dp_drain_tail
+                    - (t.dp_comm.max(t.dp_comm_exposed) - r.dp_hidden))
+                    .abs()
+                    < 1e-9,
+                "drain tail must account for every unhidden DP second: {r:?}"
             );
             // accounting identity: the overlapped step can only be
             // faster than blocking by the seconds actually hidden —

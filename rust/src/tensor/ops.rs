@@ -22,9 +22,20 @@
 //!   runs one thread per rank). Bands split the *output*, so no reduction
 //!   or synchronization is needed.
 //!
+//! The driver also hosts the crate's **progress callback**
+//! ([`set_driver_hook`]): a thread-local hook the kernels tick between
+//! register-tile row groups and while the calling thread waits at the
+//! row-band barrier. `comm::ProgressEngine` installs itself here so
+//! in-flight collectives (the trainer's DP bucket rings) advance during
+//! long matmuls instead of only at gradient-emission points — the hook
+//! is a bare `fn` pointer read from a `Cell`, one predictable branch per
+//! ~hundred-KFLOP row group when disengaged, and band worker threads
+//! never inherit it.
+//!
 //! The seed's naive triple loops live on in [`super::ref_kernels`] as the
 //! property-test oracle (`rust/tests/kernel_props.rs`).
 
+use std::cell::Cell;
 use std::sync::OnceLock;
 
 use super::pool;
@@ -63,6 +74,49 @@ pub fn kernel_threads() -> usize {
             .filter(|&t| t >= 1)
             .unwrap_or(1)
     })
+}
+
+thread_local! {
+    /// Kernel-driver progress callback (see the module docs). `None` on
+    /// every thread until an installer (`comm::ProgressEngine::install`)
+    /// sets it; the hook returns whether it made progress.
+    static DRIVER_HOOK: Cell<Option<fn() -> bool>> = const { Cell::new(None) };
+}
+
+/// Install (or clear, with `None`) this thread's kernel-driver progress
+/// hook, returning the previous one so scoped installers can restore it.
+pub fn set_driver_hook(hook: Option<fn() -> bool>) -> Option<fn() -> bool> {
+    DRIVER_HOOK.with(|h| h.replace(hook))
+}
+
+/// Whether a driver hook is installed on the current thread. Blocking
+/// fabric waits use this to pick the hook-driven (bounded-sleep) path.
+pub fn driver_hook_installed() -> bool {
+    DRIVER_HOOK.with(|h| h.get().is_some())
+}
+
+/// Run the installed hook once (no-op without one); returns whether the
+/// hook reported progress. Called by the kernels between row groups, by
+/// the band-barrier wait loop, and by hook-aware comm waits.
+pub fn driver_tick() -> bool {
+    match DRIVER_HOOK.with(|h| h.get()) {
+        Some(hook) => hook(),
+        None => false,
+    }
+}
+
+/// Drive the band barrier: while any band thread is still computing,
+/// keep ticking the installed hook instead of parking in `join`. Without
+/// a hook this is skipped entirely and `join` blocks as before. When the
+/// hook reports no progress (e.g. nothing is in flight), the caller naps
+/// briefly rather than spinning — a hot `yield_now` loop would
+/// oversubscribe the cores the band workers need.
+fn drive_band_barrier<T>(handles: &[std::thread::ScopedJoinHandle<'_, T>]) {
+    while driver_hook_installed() && handles.iter().any(|h| !h.is_finished()) {
+        if !driver_tick() {
+            std::thread::sleep(std::time::Duration::from_micros(20));
+        }
+    }
 }
 
 fn effective_threads(requested: usize, rows: usize, flops: usize) -> usize {
@@ -138,6 +192,11 @@ fn kernel_block<'b, FA, FB>(
     }
     let mut i0 = 0;
     while i0 + MR <= m {
+        // progress tick between register-tile row groups: with an engine
+        // installed, in-flight collectives advance mid-matmul (~tens of
+        // microseconds of FLOPs per group at training shapes); a bare
+        // thread-local read otherwise
+        driver_tick();
         let [r0, r1, r2, r3] = quad_rows(out, os, i0, j0, j1);
         let mut jj = 0;
         while jj + NR <= width {
@@ -411,6 +470,9 @@ pub fn matmul_nt_into_with(
                 panel
             }));
         }
+        // band barrier: the calling thread drives the progress hook (if
+        // installed) while the bands finish, instead of parking in join
+        drive_band_barrier(&handles);
         for h in handles {
             pool::put(h.join().expect("nt kernel band thread panicked"));
         }
@@ -434,11 +496,16 @@ pub fn matmul_nn_into_with(
     }
     std::thread::scope(|s| {
         let mut rest = out;
+        let mut handles = Vec::with_capacity(t);
         for (lo, hi) in band_ranges(m, t) {
             let (band, r) = rest.split_at_rows(hi - lo);
             rest = r;
             let xb = x.slice_rows(lo, hi);
-            s.spawn(move || nn_serial(band, xb, w, acc));
+            handles.push(s.spawn(move || nn_serial(band, xb, w, acc)));
+        }
+        drive_band_barrier(&handles);
+        for h in handles {
+            h.join().expect("nn kernel band thread panicked");
         }
     });
 }
@@ -460,11 +527,16 @@ pub fn matmul_tn_into_with(
     }
     std::thread::scope(|s| {
         let mut rest = out;
+        let mut handles = Vec::with_capacity(t);
         for (lo, hi) in band_ranges(m, t) {
             let (band, r) = rest.split_at_rows(hi - lo);
             rest = r;
             let xb = x.slice_cols(lo, hi);
-            s.spawn(move || tn_serial(band, xb, w, acc));
+            handles.push(s.spawn(move || tn_serial(band, xb, w, acc)));
+        }
+        drive_band_barrier(&handles);
+        for h in handles {
+            h.join().expect("tn kernel band thread panicked");
         }
     });
 }
@@ -834,6 +906,43 @@ mod tests {
             matmul_nt_into_with(par.view2_mut(), x.view2(), w.view2(), false, threads);
             assert!(par.max_abs_diff(&serial) < 1e-6, "threads={threads}");
         }
+    }
+
+    static TICKS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+    fn counting_hook() -> bool {
+        TICKS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        false
+    }
+
+    #[test]
+    fn driver_hook_ticks_during_kernels_and_results_are_unchanged() {
+        let (m, k, n) = (131usize, 120usize, 97usize);
+        assert!(2 * m * k * n >= PAR_MIN_FLOPS, "must clear the band gate");
+        let mut rng = Rng::seed_from(21);
+        let x = rand_t(&mut rng, m, k);
+        let w = rand_t(&mut rng, n, k);
+        let mut base = Tensor::zeros(&[m, n]);
+        matmul_nt_into_with(base.view2_mut(), x.view2(), w.view2(), false, 1);
+
+        assert!(!driver_hook_installed());
+        let prev = set_driver_hook(Some(counting_hook));
+        assert!(driver_hook_installed());
+        let before = TICKS.load(std::sync::atomic::Ordering::Relaxed);
+        // serial driver: ticks fire between register-tile row groups
+        let mut serial = Tensor::zeros(&[m, n]);
+        matmul_nt_into_with(serial.view2_mut(), x.view2(), w.view2(), false, 1);
+        // banded driver: the caller ticks at the band barrier; the band
+        // threads themselves never inherit the hook
+        let mut banded = Tensor::zeros(&[m, n]);
+        matmul_nt_into_with(banded.view2_mut(), x.view2(), w.view2(), false, 3);
+        let after = TICKS.load(std::sync::atomic::Ordering::Relaxed);
+        set_driver_hook(prev);
+        assert!(!driver_hook_installed());
+
+        assert!(after > before, "hook never ticked during the kernels");
+        assert!(serial.max_abs_diff(&base) == 0.0, "hook changed serial result");
+        assert!(banded.max_abs_diff(&base) < 1e-6, "hook changed banded result");
     }
 
     #[test]

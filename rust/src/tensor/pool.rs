@@ -61,7 +61,10 @@ pub fn put(v: Vec<f32>) {
     if v.capacity() == 0 {
         return;
     }
-    FREE.with(|f| {
+    // try_with: a buffer surfacing during thread teardown (e.g. an
+    // in-flight collective dropped out of a thread-local registry) is
+    // simply freed instead of aborting on the destroyed pool
+    let _ = FREE.try_with(|f| {
         let mut f = f.borrow_mut();
         if f.len() < MAX_FREE {
             f.push(v);

@@ -13,14 +13,23 @@
 //! backward pass finishes it (the `GradSink` hook through
 //! `DistModel::loss_and_grad_with`), packs buckets in reverse-layer
 //! order, and posts each bucket's non-blocking ring allreduce while
-//! earlier layers are still differentiating. Before the optimizer step
-//! the scheduler drains: it polls every in-flight bucket concurrently
-//! and unpacks each one the moment *it* completes — no global barrier
-//! across buckets. The post-hoc path ([`dp_allreduce_grads`]) is
-//! retained as the oracle/baseline; both paths bucket in
-//! `PStore::grad_reduce_order` and reduce through the same collective
-//! arithmetic, so their results are bit-identical (pinned by
-//! `rust/tests/dp_overlap_props.rs`).
+//! earlier layers are still differentiating. Each posted collective is
+//! registered with a `comm::ProgressEngine` that the scheduler installs
+//! as the rank's kernel-driver hook, so in-flight rings advance
+//! *continuously* — between register-tile row groups of every matmul, at
+//! the row-band barrier, and inside the `dist_matmul` dry-waits of the
+//! remaining backward pass — not only when the next gradient happens to
+//! be emitted. Before the optimizer step the scheduler drains: with most
+//! ring hops already retired under compute, `finish` is a short tail
+//! that polls the engine and unpacks each bucket the moment *it*
+//! completes — no global barrier across buckets. The PR-4
+//! emission-point-only behaviour survives as
+//! [`GradReduceScheduler::new_emission_only`] (the §Progress bench
+//! baseline), and the post-hoc path ([`dp_allreduce_grads`]) is retained
+//! as the oracle; all three bucket in `PStore::grad_reduce_order` and
+//! reduce through the same collective arithmetic, so their results are
+//! bit-identical (pinned by `rust/tests/dp_overlap_props.rs` and
+//! `rust/tests/progress_props.rs`).
 //!
 //! A failing rank thread no longer deadlocks the run: its closure
 //! aborts both fabrics (waking any peer blocked in a receive), `train`
@@ -31,7 +40,9 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::comm::{Comm, Network, PackedAllreduce, FABRIC_ABORTED};
+use crate::comm::{
+    Comm, Network, ProgressEngine, ProgressGuard, ProgressTicket, FABRIC_ABORTED,
+};
 use crate::config::ModelConfig;
 use crate::data::ShardedLoader;
 use crate::jigsaw::{Ctx, DistMat, Mesh, MeshError};
@@ -44,7 +55,7 @@ use crate::tensor::Tensor;
 use crate::util::rng::Rng;
 
 /// Training-run specification.
-#[derive(Clone)]
+#[derive(Clone, Debug)]
 pub struct TrainSpec {
     /// jigsaw mesh shape of each model-parallel group
     pub mesh: Mesh,
@@ -116,7 +127,10 @@ pub struct StepRecord {
     pub bytes_read: u64,
 }
 
-/// Result of a training run.
+/// Result of a training run (`Debug` so `Result<TrainReport>` supports
+/// `unwrap_err` in tests; the tensor payloads make full formatting
+/// verbose — don't print one casually).
+#[derive(Debug)]
 pub struct TrainReport {
     pub steps: Vec<StepRecord>,
     pub val_loss: Vec<(usize, f32)>,
@@ -427,52 +441,96 @@ pub fn dp_allreduce_grads_bucketed(
 /// `DistModel::loss_and_grad_with`. As the backward pass emits finished
 /// gradient tensors (reverse-layer order), they are packed into flat
 /// buckets; the moment a bucket fills, its non-blocking ring allreduce
-/// ([`Comm::allreduce_start`]) is posted on the DP fabric and *later*
-/// emissions keep polling it forward — so bucket 0's ring traffic is in
-/// flight while earlier layers are still differentiating, the overlap
-/// behind the paper's Section 6.3.4 scaling efficiency.
+/// ([`Comm::allreduce_start`]) is posted on the DP fabric and registered
+/// with a [`ProgressEngine`] — so bucket 0's ring traffic is in flight
+/// while earlier layers are still differentiating, the overlap behind
+/// the paper's Section 6.3.4 scaling efficiency.
+///
+/// [`new`](GradReduceScheduler::new) installs the engine as the rank's
+/// kernel-driver hook for the scheduler's lifetime: posted rings advance
+/// during every subsequent matmul (between register-tile row groups and
+/// at the row-band barrier) and inside every blocking fabric wait of the
+/// remaining backward pass, not only when the next gradient is emitted.
+/// [`new_emission_only`](GradReduceScheduler::new_emission_only) skips
+/// the hook — the PR-4 baseline that polls at emission points and in the
+/// drain only, retained for the §Progress bench and differential tests.
 ///
 /// Bucket boundaries use the same greedy rule, over the same stable
 /// tensor order, as the post-hoc [`dp_allreduce_grads_bucketed`]
 /// oracle, and the in-flight collectives share the blocking
 /// collectives' arithmetic exactly — the reduced gradients are
-/// bit-identical to the oracle's, independent of fabric timing.
+/// bit-identical to the oracle's (and across both polling modes),
+/// independent of fabric timing.
 ///
 /// `finish` drains before the optimizer step: every outstanding bucket
 /// is polled concurrently and unpacked into the gradient store the
 /// moment *it* completes (no barrier across buckets), with
 /// [`Comm::wait_any_ready`] parking the thread only when no bucket can
-/// advance.
+/// advance. With the engine hook the drain is a short tail — most hops
+/// already retired under backward compute.
 pub struct GradReduceScheduler<'a> {
     comm: &'a mut Comm,
     group: Vec<usize>,
     bucket_elems: usize,
     cur_ids: Vec<(GradId, usize)>,
     cur_data: Vec<f32>,
-    inflight: Vec<InflightBucket>,
+    buckets: Vec<Bucket>,
+    engine: ProgressEngine,
+    /// present in engine-driven mode: keeps the kernel-driver hook
+    /// pointed at `engine` until the scheduler goes away (restored even
+    /// on an abort unwind)
+    _hook: Option<ProgressGuard>,
 }
 
-struct InflightBucket {
+struct Bucket {
     ids: Vec<(GradId, usize)>,
-    /// `None` once the reduced payload has been unpacked into the store
-    coll: Option<PackedAllreduce>,
+    ticket: ProgressTicket,
+    /// reduced payload already unpacked into the store
+    done: bool,
 }
 
 impl<'a> GradReduceScheduler<'a> {
+    /// Engine-driven scheduler (the trainer default): in-flight bucket
+    /// rings advance from inside the kernel driver and every blocking
+    /// wait, for the scheduler's whole lifetime.
     pub fn new(comm: &'a mut Comm, group: &[usize], bucket_elems: usize) -> Self {
+        Self::with_engine_hook(comm, group, bucket_elems, true)
+    }
+
+    /// Emission-only scheduler: rings advance only when the backward
+    /// pass emits a tensor (and in the drain) — the PR-4 behaviour, kept
+    /// as the §Progress drain-tail baseline.
+    pub fn new_emission_only(
+        comm: &'a mut Comm,
+        group: &[usize],
+        bucket_elems: usize,
+    ) -> Self {
+        Self::with_engine_hook(comm, group, bucket_elems, false)
+    }
+
+    fn with_engine_hook(
+        comm: &'a mut Comm,
+        group: &[usize],
+        bucket_elems: usize,
+        hook: bool,
+    ) -> Self {
+        let engine = ProgressEngine::new(comm);
+        let _hook = hook.then(|| engine.install());
         GradReduceScheduler {
             comm,
             group: group.to_vec(),
             bucket_elems: bucket_elems.max(1),
             cur_ids: Vec::new(),
             cur_data: pack_buf(bucket_elems),
-            inflight: Vec::new(),
+            buckets: Vec::new(),
+            engine,
+            _hook,
         }
     }
 
     /// Number of bucket collectives posted so far (benches/tests).
     pub fn buckets_started(&self) -> usize {
-        self.inflight.len()
+        self.buckets.len()
     }
 
     fn push(&mut self, id: GradId, t: &Tensor) {
@@ -491,19 +549,16 @@ impl<'a> GradReduceScheduler<'a> {
         if self.cur_data.len() >= self.bucket_elems {
             self.seal();
         }
-        // opportunistic progress on everything already in flight
-        for b in &mut self.inflight {
-            if let Some(coll) = b.coll.as_mut() {
-                if !coll.is_done() {
-                    coll.poll(self.comm);
-                }
-            }
-        }
+        // emission-point progress on everything already in flight (the
+        // engine-driven mode additionally polls throughout the compute
+        // between emissions, via the installed hook)
+        self.engine.poll();
     }
 
-    /// Post the current bucket's collective and start a fresh bucket.
-    /// Pack buffers come from the tensor pool (and flow back via the
-    /// drain's `recycle`), so steady-state steps reallocate nothing.
+    /// Post the current bucket's collective, register it with the
+    /// progress engine, and start a fresh bucket. Pack buffers come from
+    /// the tensor pool (and flow back via the drain's `recycle`), so
+    /// steady-state steps reallocate nothing.
     fn seal(&mut self) {
         if self.cur_ids.is_empty() {
             return;
@@ -513,22 +568,31 @@ impl<'a> GradReduceScheduler<'a> {
         let ids = std::mem::take(&mut self.cur_ids);
         let payload = Tensor::new(vec![data.len()], data);
         let coll = self.comm.allreduce_start(&self.group, payload);
-        self.inflight.push(InflightBucket { ids, coll: Some(coll) });
+        let ticket = self.engine.register(coll);
+        self.buckets.push(Bucket { ids, ticket, done: false });
     }
 
     /// Drain every outstanding bucket and write the reduced gradients
-    /// back into `grads` — the wait-before-Adam step. Buckets unpack
+    /// back into `grads` — the wait-before-Adam step.
+    pub fn finish(self, grads: &mut PStore) {
+        let _ = self.finish_timed(grads);
+    }
+
+    /// [`finish`](GradReduceScheduler::finish), returning the wall-clock
+    /// the drain actually took — the exposed tail the §Progress bench
+    /// sizes against the emission-only baseline. Buckets unpack
     /// individually as they complete; the thread sleeps only when no
     /// in-flight collective can make progress.
-    pub fn finish(mut self, grads: &mut PStore) {
+    pub fn finish_timed(mut self, grads: &mut PStore) -> std::time::Duration {
+        let t0 = std::time::Instant::now();
         if self.group.len() <= 1 {
-            return;
+            return t0.elapsed();
         }
         self.seal();
         // the post-seal pack buffer is unused from here on
         crate::tensor::pool::put(std::mem::take(&mut self.cur_data));
         debug_assert_eq!(
-            self.inflight
+            self.buckets
                 .iter()
                 .flat_map(|b| b.ids.iter().map(|(id, _)| id.clone()))
                 .collect::<Vec<_>>(),
@@ -536,29 +600,38 @@ impl<'a> GradReduceScheduler<'a> {
             "grad emission diverged from the stable reduce order"
         );
         loop {
-            let mut progress = false;
-            let mut waiting: Vec<(usize, u64)> = Vec::new();
-            for b in &mut self.inflight {
-                let Some(coll) = b.coll.as_mut() else { continue };
-                if !coll.is_done() {
-                    progress |= coll.poll(self.comm);
-                }
-                if coll.is_done() {
-                    let reduced = b.coll.take().unwrap().take();
+            self.engine.poll();
+            let mut open = false;
+            for b in self.buckets.iter_mut().filter(|b| !b.done) {
+                if let Some(reduced) = self.engine.try_take(&b.ticket) {
                     unpack_bucket(&b.ids, &reduced, grads);
                     reduced.recycle();
-                    progress = true;
-                } else if let Some(key) = coll.awaited() {
-                    waiting.push(key);
+                    b.done = true;
+                } else {
+                    open = true;
                 }
             }
-            if waiting.is_empty() {
+            if !open {
                 break;
             }
-            if !progress {
+            let waiting = self.engine.awaited();
+            if !waiting.is_empty() {
+                // hook-aware wait: in engine mode this keeps polling the
+                // engine between bounded sleeps (see Comm::await_any)
                 self.comm.wait_any_ready(&waiting);
             }
         }
+        t0.elapsed()
+    }
+}
+
+impl Drop for GradReduceScheduler<'_> {
+    /// Abort-unwind hygiene: the pack buffer returns to the pool (the
+    /// engine's in-flight bucket payloads recycle via
+    /// `PackedAllreduce`'s own drop, and the installed hook is restored
+    /// by the guard), so a failed rank leaks nothing it took.
+    fn drop(&mut self) {
+        crate::tensor::pool::put(std::mem::take(&mut self.cur_data));
     }
 }
 

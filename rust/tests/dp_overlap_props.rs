@@ -22,6 +22,17 @@ use jigsaw::trainer::oracle::sample_shard;
 use jigsaw::trainer::{dp_allreduce_grads_bucketed, GradReduceScheduler};
 use jigsaw::util::rng::Rng;
 
+/// Which reduction path a world runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Sched {
+    /// post-hoc `dp_allreduce_grads_bucketed` — the oracle
+    PostHoc,
+    /// grad-ready scheduler, emission-point polling only (PR-4 baseline)
+    Emission,
+    /// grad-ready scheduler with the progress-engine hook installed
+    Engine,
+}
+
 /// One full loss_and_grad + DP reduce on a `mesh x dp` world; returns
 /// every rank's reduced gradient store, in world-rank order.
 fn run_world(
@@ -31,7 +42,7 @@ fn run_world(
     rollout: usize,
     bucket_elems: usize,
     fabric: Option<(FabricSpec, u64)>,
-    overlapped: bool,
+    sched: Sched,
 ) -> Vec<PStore> {
     let mp = mesh.n();
     let mp_nets: Vec<Network> = (0..dp).map(|_| Network::new(mp)).collect();
@@ -64,27 +75,38 @@ fn run_world(
                 let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
                 let dp_group = mesh.dp_group(dp, r);
                 let mut ctx = Ctx::new(mesh, r, &mut mp_comm, &backend);
-                if overlapped {
-                    let mut sched = GradReduceScheduler::new(
-                        &mut dp_comm,
-                        &dp_group,
-                        bucket_elems,
-                    );
-                    let (_, mut grads) = model
-                        .loss_and_grad_with(&mut ctx, &xl, &yl, rollout, &mut sched)
-                        .unwrap();
-                    sched.finish(&mut grads);
-                    grads
-                } else {
-                    let (_, mut grads) =
-                        model.loss_and_grad(&mut ctx, &xl, &yl, rollout).unwrap();
-                    dp_allreduce_grads_bucketed(
-                        &mut grads,
-                        &mut dp_comm,
-                        &dp_group,
-                        bucket_elems,
-                    );
-                    grads
+                match sched {
+                    Sched::PostHoc => {
+                        let (_, mut grads) =
+                            model.loss_and_grad(&mut ctx, &xl, &yl, rollout).unwrap();
+                        dp_allreduce_grads_bucketed(
+                            &mut grads,
+                            &mut dp_comm,
+                            &dp_group,
+                            bucket_elems,
+                        );
+                        grads
+                    }
+                    Sched::Emission | Sched::Engine => {
+                        let mut s = if sched == Sched::Engine {
+                            GradReduceScheduler::new(
+                                &mut dp_comm,
+                                &dp_group,
+                                bucket_elems,
+                            )
+                        } else {
+                            GradReduceScheduler::new_emission_only(
+                                &mut dp_comm,
+                                &dp_group,
+                                bucket_elems,
+                            )
+                        };
+                        let (_, mut grads) = model
+                            .loss_and_grad_with(&mut ctx, &xl, &yl, rollout, &mut s)
+                            .unwrap();
+                        s.finish(&mut grads);
+                        grads
+                    }
                 }
             }));
         }
@@ -122,11 +144,16 @@ fn assert_stores_bit_equal(a: &PStore, b: &PStore, ctx: &str) {
 #[test]
 fn overlapped_reduce_bit_identical_across_meshes_and_dp() {
     let cfg = synth_config("dp-props", 32, 48, 2);
+    // through 16-way (4x4): every mesh shape the planner trains must
+    // reduce identically on all three paths — including the
+    // progress-engine hook path, which covers the kernel-driver and
+    // dist_matmul dry-wait polling at every shape
     let meshes = [
         Mesh::new(1, 1).unwrap(),
         Mesh::new(1, 2).unwrap(),
         Mesh::new(2, 2).unwrap(),
         Mesh::new(2, 4).unwrap(),
+        Mesh::new(4, 4).unwrap(),
     ];
     for mesh in meshes {
         for dp in [2usize, 4] {
@@ -136,11 +163,13 @@ fn overlapped_reduce_bit_identical_across_meshes_and_dp() {
             for bucket_elems in [1usize, 4096] {
                 let ctx = format!("mesh {mesh} dp {dp} bucket {bucket_elems}");
                 let oracle =
-                    run_world(&cfg, mesh, dp, 1, bucket_elems, None, false);
-                let overlapped =
-                    run_world(&cfg, mesh, dp, 1, bucket_elems, None, true);
-                for (a, b) in oracle.iter().zip(&overlapped) {
-                    assert_stores_bit_equal(a, b, &ctx);
+                    run_world(&cfg, mesh, dp, 1, bucket_elems, None, Sched::PostHoc);
+                for sched in [Sched::Emission, Sched::Engine] {
+                    let overlapped =
+                        run_world(&cfg, mesh, dp, 1, bucket_elems, None, sched);
+                    for (a, b) in oracle.iter().zip(&overlapped) {
+                        assert_stores_bit_equal(a, b, &format!("{ctx} {sched:?}"));
+                    }
                 }
             }
         }
@@ -153,10 +182,12 @@ fn overlapped_reduce_bit_identical_with_rollout() {
     // only be emitted on the final backward pass
     let cfg = synth_config("dp-props-roll", 32, 48, 2);
     let mesh = Mesh::new(1, 2).unwrap();
-    let oracle = run_world(&cfg, mesh, 2, 3, 512, None, false);
-    let overlapped = run_world(&cfg, mesh, 2, 3, 512, None, true);
-    for (a, b) in oracle.iter().zip(&overlapped) {
-        assert_stores_bit_equal(a, b, "rollout 3");
+    let oracle = run_world(&cfg, mesh, 2, 3, 512, None, Sched::PostHoc);
+    for sched in [Sched::Emission, Sched::Engine] {
+        let overlapped = run_world(&cfg, mesh, 2, 3, 512, None, sched);
+        for (a, b) in oracle.iter().zip(&overlapped) {
+            assert_stores_bit_equal(a, b, &format!("rollout 3 {sched:?}"));
+        }
     }
 }
 
@@ -165,7 +196,8 @@ fn overlapped_reduce_bit_identical_under_fabric_delays() {
     // the oracle runs on an instantaneous fabric; the overlapped path
     // under injected latency + jitter (scrambled delivery timing) must
     // still match bit for bit — the reduction order is fixed by the
-    // schedule, not by arrival order
+    // schedule, not by arrival order (nor by when the engine hook
+    // happens to poll)
     let cfg = synth_config("dp-props-fab", 32, 48, 2);
     let spec = FabricSpec {
         latency: Duration::from_micros(150),
@@ -173,12 +205,18 @@ fn overlapped_reduce_bit_identical_under_fabric_delays() {
         bytes_per_sec: 5e8,
     };
     for mesh in [Mesh::new(1, 2).unwrap(), Mesh::new(2, 2).unwrap()] {
-        let oracle = run_world(&cfg, mesh, 2, 1, 512, None, false);
+        let oracle = run_world(&cfg, mesh, 2, 1, 512, None, Sched::PostHoc);
         for seed in [1u64, 99] {
-            let overlapped =
-                run_world(&cfg, mesh, 2, 1, 512, Some((spec, seed)), true);
-            for (a, b) in oracle.iter().zip(&overlapped) {
-                assert_stores_bit_equal(a, b, &format!("mesh {mesh} seed {seed}"));
+            for sched in [Sched::Emission, Sched::Engine] {
+                let overlapped =
+                    run_world(&cfg, mesh, 2, 1, 512, Some((spec, seed)), sched);
+                for (a, b) in oracle.iter().zip(&overlapped) {
+                    assert_stores_bit_equal(
+                        a,
+                        b,
+                        &format!("mesh {mesh} seed {seed} {sched:?}"),
+                    );
+                }
             }
         }
     }
@@ -195,9 +233,10 @@ fn overlapped_scheduling_deterministic_across_runs() {
         jitter: Duration::from_micros(300),
         bytes_per_sec: 1e9,
     };
-    let base = run_world(&cfg, mesh, 2, 1, 2048, Some((spec, 5)), true);
+    let base = run_world(&cfg, mesh, 2, 1, 2048, Some((spec, 5)), Sched::Engine);
     for seed in [5u64, 6, 1234] {
-        let again = run_world(&cfg, mesh, 2, 1, 2048, Some((spec, seed)), true);
+        let again =
+            run_world(&cfg, mesh, 2, 1, 2048, Some((spec, seed)), Sched::Engine);
         for (a, b) in base.iter().zip(&again) {
             assert_stores_bit_equal(a, b, &format!("repeat seed {seed}"));
         }
