@@ -1,0 +1,25 @@
+# Build-time artifact export + rust test drivers.
+#
+# `make artifacts` runs the python AOT export (python/compile/aot.py) and
+# writes HLO programs + matmul primitives under artifacts/<preset>/. The
+# tiny and small oracle bundles are small (~6 MiB total) and checked in,
+# so the artifact-dependent integration tests (oracle_validation,
+# plan_coverage, e2e_training) run everywhere without a python toolchain.
+# Re-run this target after changing python/compile/ and commit the diff.
+
+PRESETS ?= tiny,small
+
+.PHONY: artifacts artifacts-all test bench
+
+artifacts:
+	cd python && python3 -m compile.aot --out ../artifacts --presets $(PRESETS)
+
+# full export including the large presets (not checked in)
+artifacts-all:
+	cd python && python3 -m compile.aot --out ../artifacts
+
+test:
+	cargo test -q
+
+bench:
+	cargo bench --bench hotpath_micro

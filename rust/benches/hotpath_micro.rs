@@ -134,6 +134,66 @@ fn main() {
         }
     }
 
+    // SIMD register tile vs the forced-scalar tile (simd builds only):
+    // same blocked driver, same packing, only the innermost 4x8 tile
+    // differs. The acceptance gate is >= 1.5x on large shapes; the
+    // property suite separately proves the paths bit-identical.
+    #[cfg(feature = "simd")]
+    {
+        let mut min_simd_speedup_256plus = f64::INFINITY;
+        for n in [64usize, 256, 384] {
+            let x = rand_t(&mut rng, n, n);
+            let w = rand_t(&mut rng, n, n);
+            let mut out = Tensor::zeros(&[n, n]);
+            let reps = if n >= 384 { 5 } else { 8 };
+            let prev = ops::set_force_scalar_tile(true);
+            let scalar_secs = time_best(reps, || {
+                ops::matmul_nt_into(out.view2_mut(), x.view2(), w.view2(), false);
+                std::hint::black_box(&out);
+            });
+            ops::set_force_scalar_tile(false);
+            let simd_secs = time_best(reps, || {
+                ops::matmul_nt_into(out.view2_mut(), x.view2(), w.view2(), false);
+                std::hint::black_box(&out);
+            });
+            ops::set_force_scalar_tile(prev);
+            let flops = 2.0 * (n as f64).powi(3);
+            let speedup = scalar_secs / simd_secs;
+            if n >= 256 {
+                min_simd_speedup_256plus = min_simd_speedup_256plus.min(speedup);
+            }
+            t.row(&[
+                "matmul_nt simd vs scalar tile".into(),
+                format!("{n}x{n}x{n}"),
+                fmt(simd_secs * 1e6),
+                format!(
+                    "{:.2} GF/s ({:.1}x scalar {:.2} GF/s)",
+                    flops / simd_secs / 1e9,
+                    speedup,
+                    flops / scalar_secs / 1e9
+                ),
+            ]);
+            matmul_records.push(jobj(vec![
+                ("op", Json::Str("nt_simd".into())),
+                ("n", jnum(n as f64)),
+                ("scalar_tile_us", jnum(scalar_secs * 1e6)),
+                ("simd_us", jnum(simd_secs * 1e6)),
+                ("simd_gflops", jnum(flops / simd_secs / 1e9)),
+                ("simd_speedup", jnum(speedup)),
+                ("threads", jnum(1.0)),
+            ]));
+        }
+        record.insert(
+            "min_simd_speedup_256plus".into(),
+            jnum(min_simd_speedup_256plus),
+        );
+        assert!(
+            min_simd_speedup_256plus >= 1.5,
+            "SIMD tile must be >= 1.5x the scalar tile on large shapes, \
+             got {min_simd_speedup_256plus:.2}x"
+        );
+    }
+
     // PJRT matmul (with artifacts)
     if let Ok(manifest) =
         jigsaw::config::Manifest::load(&jigsaw::config::artifacts_dir(), "tiny")
@@ -1101,6 +1161,75 @@ fn main() {
         ]);
         std::fs::write("BENCH_mesh.json", mesh_record.to_string() + "\n").unwrap();
         println!("BENCH_mesh.json written");
+    }
+
+    // ================= §Precision: bf16 storage-and-fabric path ==========
+    // The same 2x2-mesh x dp=2 training spec at both precisions: the byte
+    // counters read the actual element size of every shipped payload, so
+    // bf16 must land near half the f32 fabric volume with no special-
+    // casing — only scalar reductions and tiny gather-to-root tensors
+    // stay 4-byte. Steady-state pool behaviour must hold for the u16
+    // buffers too: quantize-at-send / widen-at-receive recycles every
+    // bf16 payload, so warm steps allocate nothing.
+    {
+        use jigsaw::tensor::Precision;
+
+        let cfg = jigsaw::benchkit::synth_config("precision-bench", 96, 64, 2);
+        let run = |prec: Precision, steps: usize| -> (u64, f64, u64) {
+            let mut spec =
+                jigsaw::trainer::TrainSpec::with_mesh(Mesh::new(2, 2).unwrap(), 2, steps);
+            spec.precision = prec;
+            let before = pool::stats();
+            let t0 = std::time::Instant::now();
+            let r = jigsaw::trainer::train(&cfg, &spec, Arc::new(NativeBackend)).unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            let after = pool::stats();
+            (r.comm_bytes, wall, after.1 - before.1)
+        };
+        // warm pools per mode, then measure
+        let _ = run(Precision::F32, 1);
+        let (f32_bytes, f32_wall, _) = run(Precision::F32, 6);
+        let (_, _, bf_cold_misses) = run(Precision::Bf16, 1);
+        let (bf_bytes, bf_wall, bf_m9) = run(Precision::Bf16, 9);
+        let bf_steady_misses = bf_m9.saturating_sub(bf_cold_misses) as f64 / 8.0;
+        let ratio = bf_bytes as f64 / (f32_bytes as f64 / 6.0 * 9.0);
+        t.row(&[
+            "train fabric bytes bf16 vs f32".into(),
+            "2x2 mesh x dp 2".into(),
+            format!("{}", bf_bytes / 1024),
+            format!("KiB ({ratio:.2}x of f32 volume)"),
+        ]);
+        t.row(&[
+            "bf16 pool steady-state".into(),
+            "2x2 mesh x dp 2".into(),
+            format!("{bf_steady_misses:.1}"),
+            format!("misses/step (cold step: {bf_cold_misses})"),
+        ]);
+        assert!(
+            ratio > 0.45 && ratio < 0.65,
+            "bf16 must ship about half the f32 fabric bytes, got {ratio:.3} \
+             (bf16 {bf_bytes} B/9 steps vs f32 {f32_bytes} B/6 steps)"
+        );
+        assert!(
+            bf_steady_misses < 1.0,
+            "bf16 u16 payload buffers must recycle to a steady state, got \
+             {bf_steady_misses:.1} misses/step"
+        );
+        let precision_record = jobj(vec![
+            ("bench", Json::Str("precision".into())),
+            ("mesh", Json::Str("2x2".into())),
+            ("dp", jnum(2.0)),
+            ("f32_bytes_per_step", jnum(f32_bytes as f64 / 6.0)),
+            ("bf16_bytes_per_step", jnum(bf_bytes as f64 / 9.0)),
+            ("byte_ratio", jnum(ratio)),
+            ("f32_step_wall_us", jnum(f32_wall / 6.0 * 1e6)),
+            ("bf16_step_wall_us", jnum(bf_wall / 9.0 * 1e6)),
+            ("bf16_steady_misses_per_step", jnum(bf_steady_misses)),
+            ("bf16_cold_step_misses", jnum(bf_cold_misses as f64)),
+        ]);
+        std::fs::write("BENCH_precision.json", precision_record.to_string() + "\n")
+            .unwrap();
+        println!("BENCH_precision.json written");
     }
 
     println!("{}", t.render());

@@ -113,9 +113,11 @@ fn print_usage() {
          COMMANDS\n\
            train     --preset tiny --mesh 2x4 --dp 2 --steps 50 --lr 1e-3\n\
                      [--way N: legacy degree, N -> balanced mesh]\n\
+                     [--precision f32|bf16: bf16 stores/ships 16-bit,\n\
+                      f32 master weights + dynamic loss scaling]\n\
                      [--backend auto|pjrt|native] [--rollout 1] [--log path]\n\
            validate  --preset tiny --mesh 1x2  check mesh numerics vs the AOT oracle\n\
-           simulate  --model 7 --mesh 2x2 --dp 8 --precision tf32 [--no-dataload]\n\
+           simulate  --model 7 --mesh 2x2 --dp 8 --precision tf32|bf16 [--no-dataload]\n\
            roofline  [--precision fp32]      print the Fig-7 series\n\
            energy-report                     print the Table-3 accounting\n\
          \n\
@@ -139,10 +141,11 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     spec.n_times = flag(flags, "ntimes", 32usize);
     spec.val_every = flag(flags, "val-every", 0usize);
     spec.seed = flag(flags, "seed", 0u64);
+    spec.precision = flag(flags, "precision", crate::tensor::Precision::F32);
     println!(
-        "training {} ({} params) mesh={} ({}-way) dp={} steps={} backend={}",
+        "training {} ({} params) mesh={} ({}-way) dp={} steps={} precision={} backend={}",
         cfg.name, cfg.param_count, spec.mesh, spec.way(), spec.dp, spec.steps,
-        backend.name()
+        spec.precision, backend.name()
     );
     let report = train(&cfg, &spec, backend)?;
     for s in report.steps.iter().step_by((spec.steps / 10).max(1)) {
@@ -176,6 +179,7 @@ fn cmd_validate(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> 
 fn parse_precision(flags: &HashMap<String, String>) -> Precision {
     match flags.get("precision").map(|s| s.as_str()) {
         Some("fp32") => Precision::Fp32,
+        Some("bf16") => Precision::Bf16,
         _ => Precision::Tf32,
     }
 }
@@ -323,6 +327,14 @@ mod tests {
             "3".into(),
             "--mesh".into(),
             "2x4".into(),
+        ])
+        .unwrap();
+        cli_main(&[
+            "simulate".to_string(),
+            "--model".into(),
+            "3".into(),
+            "--precision".into(),
+            "bf16".into(),
         ])
         .unwrap();
         cli_main(&["energy-report".to_string()]).unwrap();

@@ -67,6 +67,22 @@
 //! exchange path ships borrowed blocks without per-destination clones),
 //! and a uniquely-owned message is recovered by the receiver without a
 //! copy (`Arc::try_unwrap`).
+//!
+//! The fabric is **precision-aware**: a message is a [`Payload`] — an
+//! f32 tensor or a bf16 tensor ([`crate::tensor::Bf16Tensor`], u16
+//! storage) — and the per-link byte counters charge the payload's
+//! *actual* element size (4 or 2 bytes/elem), so a bf16 run's halved
+//! fabric volume shows up in every byte stat without special-casing.
+//! The collectives take a [`Precision`] policy (`allreduce_sum_prec`,
+//! `allreduce_packed_prec`, `allreduce_start_prec`; the plain names
+//! delegate with `F32` and stay bit-identical to the pre-precision
+//! engine): under `Bf16` the ring's chunks are quantized
+//! (round-to-nearest-even) onto the wire and accumulated in f32 on
+//! arrival — and when a rank feeds its fully-reduced chunk into the
+//! allgather it quantizes its *local* copy too, so every rank finishes
+//! with bit-identical values (DP replicas must not drift). The
+//! gather-to-root path stays f32: it only carries latency-bound scalar
+//! payloads where halving bytes buys nothing.
 
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
@@ -75,7 +91,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
-use crate::tensor::Tensor;
+use crate::tensor::{Bf16Tensor, Precision, Tensor};
 
 type Key = (usize, usize, u64); // (src, dst, tag)
 
@@ -98,11 +114,68 @@ fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
 }
 
+/// What a fabric message carries: an f32 tensor or a bf16 tensor. The
+/// payload's element kind decides the wire bytes charged to the link —
+/// f32 messages cost 4 bytes/elem, bf16 messages 2.
+#[derive(Clone)]
+pub enum Payload {
+    F32(Arc<Tensor>),
+    Bf16(Arc<Bf16Tensor>),
+}
+
+impl Payload {
+    pub fn numel(&self) -> usize {
+        match self {
+            Payload::F32(t) => t.numel(),
+            Payload::Bf16(t) => t.numel(),
+        }
+    }
+
+    /// Bytes this payload occupies on the wire.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            Payload::F32(t) => (t.numel() * 4) as u64,
+            Payload::Bf16(t) => (t.numel() * 2) as u64,
+        }
+    }
+
+    /// Widen to a shared f32 tensor: f32 payloads pass through untouched,
+    /// bf16 payloads expand into a pooled f32 buffer (the receive-side
+    /// unpack of the mixed-precision fabric), returning the u16 buffer to
+    /// the pool when this was the last reference.
+    pub fn widen(self) -> Arc<Tensor> {
+        match self {
+            Payload::F32(t) => t,
+            Payload::Bf16(b) => {
+                let t = b.to_tensor();
+                if let Ok(bt) = Arc::try_unwrap(b) {
+                    bt.recycle();
+                }
+                Arc::new(t)
+            }
+        }
+    }
+
+    fn expect_f32(self) -> Arc<Tensor> {
+        match self {
+            Payload::F32(t) => t,
+            Payload::Bf16(_) => panic!("comm: bf16 payload on an f32 receive"),
+        }
+    }
+
+    fn expect_bf16(self) -> Arc<Bf16Tensor> {
+        match self {
+            Payload::Bf16(t) => t,
+            Payload::F32(_) => panic!("comm: f32 payload on a bf16 receive"),
+        }
+    }
+}
+
 /// One in-flight message. `ready_at` is `None` on the instantaneous
 /// fabric; under a `FabricSpec` it is the simulated delivery time and the
 /// receive side withholds the message until then.
 struct Msg {
-    t: Arc<Tensor>,
+    p: Payload,
     ready_at: Option<Instant>,
 }
 
@@ -274,9 +347,26 @@ impl Comm {
     /// Non-blocking send of a reference-shared tensor: fanning one block
     /// out to several destinations enqueues Arc clones, not data copies.
     pub fn send_shared(&self, dst: usize, tag: u64, t: Arc<Tensor>) {
+        self.send_payload(dst, tag, Payload::F32(t));
+    }
+
+    /// Non-blocking send of an owned bf16 tensor (2 bytes/elem on the
+    /// wire and in the link byte stats).
+    pub fn send_bf16(&self, dst: usize, tag: u64, t: Bf16Tensor) {
+        self.send_payload(dst, tag, Payload::Bf16(Arc::new(t)));
+    }
+
+    /// Non-blocking send of a reference-shared bf16 tensor.
+    pub fn send_bf16_shared(&self, dst: usize, tag: u64, t: Arc<Bf16Tensor>) {
+        self.send_payload(dst, tag, Payload::Bf16(t));
+    }
+
+    /// Payload-generic send core: link byte accounting (at the payload's
+    /// actual element size), fabric delivery-time modelling, enqueue.
+    pub fn send_payload(&self, dst: usize, tag: u64, p: Payload) {
         assert!(dst < self.net.n, "bad dst {dst}");
         assert!(dst != self.rank, "self-send rank {dst}");
-        let bytes = (t.numel() * 4) as u64;
+        let bytes = p.wire_bytes();
         {
             let mut b = plock(&self.net.bytes);
             b[self.rank * self.net.n + dst] += bytes;
@@ -301,7 +391,7 @@ impl Comm {
         };
         let mut q = plock(&self.net.queues);
         let list = q.entry((self.rank, dst, tag)).or_default();
-        list.push_back(Msg { t, ready_at });
+        list.push_back(Msg { p, ready_at });
         self.net
             .max_depth
             .fetch_max(list.len() as u64, Ordering::Relaxed);
@@ -320,7 +410,16 @@ impl Comm {
     /// Blocking receive returning the shared handle (read-only use, e.g.
     /// shipped stationary-operand blocks).
     pub fn recv_shared(&self, src: usize, tag: u64) -> Arc<Tensor> {
-        self.await_any(&[(src, tag)], true).unwrap().1
+        self.await_any(&[(src, tag)], true).unwrap().1.expect_f32()
+    }
+
+    /// Blocking receive of a bf16 message from (src, tag).
+    pub fn recv_bf16(&self, src: usize, tag: u64) -> Bf16Tensor {
+        let shared = self.await_any(&[(src, tag)], true).unwrap().1.expect_bf16();
+        match Arc::try_unwrap(shared) {
+            Ok(t) => t,
+            Err(shared) => (*shared).clone(),
+        }
     }
 
     /// The shared blocking-wait core behind [`recv`](Comm::recv),
@@ -341,7 +440,7 @@ impl Comm {
     /// thread until an unrelated notification — the missed-wakeup window
     /// `wait_does_not_strand_when_delivery_lands_during_hook` pins.
     /// Hook-mode sleeps are additionally bounded by [`PROGRESS_TICK`].
-    fn await_any(&self, keys: &[(usize, u64)], take: bool) -> Option<(usize, Arc<Tensor>)> {
+    fn await_any(&self, keys: &[(usize, u64)], take: bool) -> Option<(usize, Payload)> {
         assert!(!keys.is_empty(), "blocking wait over an empty key set");
         // set when the hook already ran since the last probe: the next
         // pass may sleep instead of ticking again
@@ -366,7 +465,7 @@ impl Comm {
                             if list.is_empty() {
                                 q.remove(&key);
                             }
-                            return Some((i, msg.t));
+                            return Some((i, msg.p));
                         }
                         let d = head.ready_at.unwrap().saturating_duration_since(now);
                         next_ready = Some(next_ready.map_or(d, |c| c.min(d)));
@@ -429,9 +528,10 @@ impl Comm {
             .0
     }
 
-    /// Non-blocking receive (irecv + test): `None` until the message from
-    /// (src, tag) has arrived. Delivery stays in send order per key.
-    pub fn try_recv_shared(&self, src: usize, tag: u64) -> Option<Arc<Tensor>> {
+    /// Non-blocking payload receive (irecv + test): `None` until the
+    /// message from (src, tag) has arrived. Delivery stays in send order
+    /// per key.
+    pub fn try_recv_payload(&self, src: usize, tag: u64) -> Option<Payload> {
         let key = (src, self.rank, tag);
         let mut q = plock(&self.net.queues);
         let now = Instant::now();
@@ -441,10 +541,25 @@ impl Comm {
                 if list.is_empty() {
                     q.remove(&key);
                 }
-                return Some(msg.t);
+                return Some(msg.p);
             }
         }
         None
+    }
+
+    /// Non-blocking f32 receive returning the shared handle.
+    pub fn try_recv_shared(&self, src: usize, tag: u64) -> Option<Arc<Tensor>> {
+        self.try_recv_payload(src, tag).map(Payload::expect_f32)
+    }
+
+    /// Non-blocking owned bf16 receive.
+    pub fn try_recv_bf16(&self, src: usize, tag: u64) -> Option<Bf16Tensor> {
+        self.try_recv_payload(src, tag).map(|p| {
+            match Arc::try_unwrap(p.expect_bf16()) {
+                Ok(t) => t,
+                Err(shared) => (*shared).clone(),
+            }
+        })
     }
 
     /// Non-blocking owned receive.
@@ -458,7 +573,7 @@ impl Comm {
     /// Non-blocking poll over a key set (testany): the first key with a
     /// deliverable message wins. One lock acquisition for the whole set —
     /// the ready-queue scheduler's per-term probe.
-    pub fn try_recv_any(&self, keys: &[(usize, u64)]) -> Option<(usize, Arc<Tensor>)> {
+    pub fn try_recv_any_payload(&self, keys: &[(usize, u64)]) -> Option<(usize, Payload)> {
         let mut q = plock(&self.net.queues);
         let now = Instant::now();
         for (i, &(src, tag)) in keys.iter().enumerate() {
@@ -469,11 +584,17 @@ impl Comm {
                     if list.is_empty() {
                         q.remove(&key);
                     }
-                    return Some((i, msg.t));
+                    return Some((i, msg.p));
                 }
             }
         }
         None
+    }
+
+    /// [`try_recv_any_payload`](Comm::try_recv_any_payload) for f32-only
+    /// protocols.
+    pub fn try_recv_any(&self, keys: &[(usize, u64)]) -> Option<(usize, Arc<Tensor>)> {
+        self.try_recv_any_payload(keys).map(|(i, p)| (i, p.expect_f32()))
     }
 
     /// Blocking receive of *whichever* of `keys` = [(src, tag), ..]
@@ -482,8 +603,15 @@ impl Comm {
     /// order once local compute runs dry — and, with a [`ProgressEngine`]
     /// installed, the wait doubles as a poll point for in-flight
     /// collectives on other fabrics (the `dist_matmul` dry-wait hook).
-    pub fn recv_any(&self, keys: &[(usize, u64)]) -> (usize, Arc<Tensor>) {
+    pub fn recv_any_payload(&self, keys: &[(usize, u64)]) -> (usize, Payload) {
         self.await_any(keys, true).unwrap()
+    }
+
+    /// [`recv_any_payload`](Comm::recv_any_payload) for f32-only
+    /// protocols.
+    pub fn recv_any(&self, keys: &[(usize, u64)]) -> (usize, Arc<Tensor>) {
+        let (i, p) = self.await_any(keys, true).unwrap();
+        (i, p.expect_f32())
     }
 
     /// Block until one of `keys` = [(src, tag), ..] has a deliverable
@@ -528,6 +656,20 @@ impl Comm {
     /// take the two-hop gather-to-root path (`allreduce_sum_gather`) —
     /// the same small-message switch real collective libraries make.
     pub fn allreduce_sum(&mut self, group: &[usize], t: &Tensor) -> Tensor {
+        self.allreduce_sum_prec(group, t, Precision::F32)
+    }
+
+    /// [`allreduce_sum`](Comm::allreduce_sum) under a wire-precision
+    /// policy. `Bf16` applies to the ring path only (chunks quantized on
+    /// the wire, f32 accumulation on arrival); the gather path carries
+    /// latency-bound scalars where halving bytes buys nothing, so it
+    /// stays f32 under either policy.
+    pub fn allreduce_sum_prec(
+        &mut self,
+        group: &[usize],
+        t: &Tensor,
+        prec: Precision,
+    ) -> Tensor {
         assert!(group.contains(&self.rank), "allreduce group excludes self");
         if group.len() == 1 {
             return t.clone();
@@ -535,7 +677,7 @@ impl Comm {
         if t.numel() < group.len() * 4 {
             self.allreduce_sum_gather(group, t)
         } else {
-            self.allreduce_sum_ring(group, t)
+            self.allreduce_sum_ring_prec(group, t, prec)
         }
     }
 
@@ -576,6 +718,22 @@ impl Comm {
     /// Chunk messages ride pooled buffers; the reduction is in place over
     /// slices of one working copy.
     pub fn allreduce_sum_ring(&mut self, group: &[usize], t: &Tensor) -> Tensor {
+        self.allreduce_sum_ring_prec(group, t, Precision::F32)
+    }
+
+    /// Ring allreduce under a wire-precision policy. Under `Bf16` every
+    /// chunk crosses the fabric as u16 (half the bytes), arrivals
+    /// accumulate in f32, and a rank entering the allgather quantizes its
+    /// own fully-reduced chunk *in place* before shipping it — a peer
+    /// installs the quantized values, so without the local quantize the
+    /// owner would end the collective holding different bits than
+    /// everyone else (fatal for DP replicas that must stay in lockstep).
+    pub fn allreduce_sum_ring_prec(
+        &mut self,
+        group: &[usize],
+        t: &Tensor,
+        prec: Precision,
+    ) -> Tensor {
         assert!(group.contains(&self.rank));
         let n = group.len();
         if n == 1 {
@@ -587,7 +745,7 @@ impl Comm {
         let left = group[(p + n - 1) % n];
         let bounds = ring_bounds(t.numel(), n);
         let send_chunk = |me: &Comm, idx: usize, data: &[f32], tag: u64| {
-            ring_send_chunk(me, right, &bounds, idx, data, tag);
+            ring_send_chunk_prec(me, right, &bounds, idx, data, tag, prec);
         };
         let mut out = t.clone();
         // reduce-scatter: after n-1 steps this rank holds the fully
@@ -596,24 +754,50 @@ impl Comm {
             let sc = (p + n - step) % n;
             let rc = (p + n - step - 1) % n;
             send_chunk(self, sc, &out.data, tag);
-            let got = self.recv(left, tag);
             let (lo, hi) = bounds[rc];
-            debug_assert_eq!(got.numel(), hi - lo);
-            for (o, g) in out.data[lo..hi].iter_mut().zip(got.data.iter()) {
-                *o += *g;
+            match prec {
+                Precision::F32 => {
+                    let got = self.recv(left, tag);
+                    debug_assert_eq!(got.numel(), hi - lo);
+                    for (o, g) in out.data[lo..hi].iter_mut().zip(got.data.iter()) {
+                        *o += *g;
+                    }
+                    got.recycle();
+                }
+                Precision::Bf16 => {
+                    let got = self.recv_bf16(left, tag);
+                    debug_assert_eq!(got.numel(), hi - lo);
+                    got.add_into(&mut out.data[lo..hi]);
+                    got.recycle();
+                }
             }
-            got.recycle();
+        }
+        // the owner's reduced chunk enters the allgather exactly as the
+        // peers will see it (see the doc comment)
+        if prec == Precision::Bf16 {
+            let (lo, hi) = bounds[(p + 1) % n];
+            crate::tensor::bf16::quantize_slice(&mut out.data[lo..hi]);
         }
         // allgather: cascade the reduced chunks around the ring
         for step in 0..n - 1 {
             let sc = (p + 1 + n - step) % n;
             let rc = (p + n - step) % n;
             send_chunk(self, sc, &out.data, tag | REPLY_BIT);
-            let got = self.recv(left, tag | REPLY_BIT);
             let (lo, hi) = bounds[rc];
-            debug_assert_eq!(got.numel(), hi - lo);
-            out.data[lo..hi].copy_from_slice(&got.data);
-            got.recycle();
+            match prec {
+                Precision::F32 => {
+                    let got = self.recv(left, tag | REPLY_BIT);
+                    debug_assert_eq!(got.numel(), hi - lo);
+                    out.data[lo..hi].copy_from_slice(&got.data);
+                    got.recycle();
+                }
+                Precision::Bf16 => {
+                    let got = self.recv_bf16(left, tag | REPLY_BIT);
+                    debug_assert_eq!(got.numel(), hi - lo);
+                    got.copy_into(&mut out.data[lo..hi]);
+                    got.recycle();
+                }
+            }
         }
         out
     }
@@ -624,6 +808,18 @@ impl Comm {
     /// replicated-vector grad sync; all group members must pass tensors
     /// of identical shapes in identical order.
     pub fn allreduce_packed(&mut self, group: &[usize], tensors: &mut [&mut Tensor]) {
+        self.allreduce_packed_prec(group, tensors, Precision::F32);
+    }
+
+    /// [`allreduce_packed`](Comm::allreduce_packed) under a
+    /// wire-precision policy (the pack buffer stays f32; quantization
+    /// happens at ring-chunk granularity inside the collective).
+    pub fn allreduce_packed_prec(
+        &mut self,
+        group: &[usize],
+        tensors: &mut [&mut Tensor],
+        prec: Precision,
+    ) {
         if group.len() <= 1 || tensors.is_empty() {
             return;
         }
@@ -635,7 +831,7 @@ impl Comm {
             off += t.numel();
         }
         let packed = Tensor::new(vec![total], flat);
-        let reduced = self.allreduce_sum(group, &packed);
+        let reduced = self.allreduce_sum_prec(group, &packed, prec);
         packed.recycle();
         let mut off = 0usize;
         for t in tensors.iter_mut() {
@@ -672,6 +868,20 @@ impl Comm {
     /// bookkeeping rides the per-group tag/seq machinery); all group
     /// members must start them in the same order.
     pub fn allreduce_start(&mut self, group: &[usize], t: Tensor) -> PackedAllreduce {
+        self.allreduce_start_prec(group, t, Precision::F32)
+    }
+
+    /// [`allreduce_start`](Comm::allreduce_start) under a wire-precision
+    /// policy: the in-flight ring ships and receives chunks at `prec`
+    /// with exactly the quantization points of
+    /// [`allreduce_sum_ring_prec`](Comm::allreduce_sum_ring_prec), so
+    /// the two stay bit-identical at either precision.
+    pub fn allreduce_start_prec(
+        &mut self,
+        group: &[usize],
+        t: Tensor,
+        prec: Precision,
+    ) -> PackedAllreduce {
         assert!(group.contains(&self.rank), "allreduce group excludes self");
         if group.len() <= 1 {
             return PackedAllreduce { state: CollState::Done(t) };
@@ -697,7 +907,7 @@ impl Comm {
             let left = group[(p + n - 1) % n];
             let bounds = ring_bounds(t.numel(), n);
             // reduce-scatter step 0 ships this rank's own chunk
-            ring_send_chunk(self, right, &bounds, p, &t.data, tag);
+            ring_send_chunk_prec(self, right, &bounds, p, &t.data, tag, prec);
             PackedAllreduce {
                 state: CollState::Ring {
                     out: t,
@@ -707,6 +917,7 @@ impl Comm {
                     p,
                     n,
                     tag,
+                    prec,
                     allgather: false,
                     step: 0,
                 },
@@ -740,19 +951,73 @@ fn ring_bounds(numel: usize, n: usize) -> Vec<(usize, usize)> {
         .collect()
 }
 
-/// Ship ring chunk `idx` of `data` to `dst` on a pooled buffer.
-fn ring_send_chunk(
+/// Ship ring chunk `idx` of `data` to `dst` on a pooled buffer, packed
+/// at the wire precision (f32 copy, or bf16 quantize into a u16 buffer).
+fn ring_send_chunk_prec(
     comm: &Comm,
     dst: usize,
     bounds: &[(usize, usize)],
     idx: usize,
     data: &[f32],
     tag: u64,
+    prec: Precision,
 ) {
     let (lo, hi) = bounds[idx];
-    let mut buf = crate::tensor::pool::take(hi - lo);
-    buf.copy_from_slice(&data[lo..hi]);
-    comm.send(dst, tag, Tensor::new(vec![hi - lo], buf));
+    match prec {
+        Precision::F32 => {
+            let mut buf = crate::tensor::pool::take(hi - lo);
+            buf.copy_from_slice(&data[lo..hi]);
+            comm.send(dst, tag, Tensor::new(vec![hi - lo], buf));
+        }
+        Precision::Bf16 => {
+            comm.send_bf16(dst, tag, Bf16Tensor::from_f32(&[hi - lo], &data[lo..hi]));
+        }
+    }
+}
+
+/// Accumulate a payload into `dst` in f32 — the shared reduce-scatter
+/// arrival step of the blocking and in-flight rings, and the partial-sum
+/// reduction step of the jigsaw schedules — recycling the source buffer.
+pub fn payload_add_into(dst: &mut [f32], p: Payload) {
+    match p {
+        Payload::F32(g) => {
+            debug_assert_eq!(g.numel(), dst.len());
+            for (o, v) in dst.iter_mut().zip(g.data.iter()) {
+                *o += *v;
+            }
+            if let Ok(t) = Arc::try_unwrap(g) {
+                t.recycle();
+            }
+        }
+        Payload::Bf16(g) => {
+            debug_assert_eq!(g.numel(), dst.len());
+            g.add_into(dst);
+            if let Ok(t) = Arc::try_unwrap(g) {
+                t.recycle();
+            }
+        }
+    }
+}
+
+/// Install a ring-chunk payload into `dst` (the allgather arrival step),
+/// recycling the chunk's buffer.
+fn payload_copy_into(dst: &mut [f32], p: Payload) {
+    match p {
+        Payload::F32(g) => {
+            debug_assert_eq!(g.numel(), dst.len());
+            dst.copy_from_slice(&g.data);
+            if let Ok(t) = Arc::try_unwrap(g) {
+                t.recycle();
+            }
+        }
+        Payload::Bf16(g) => {
+            debug_assert_eq!(g.numel(), dst.len());
+            g.copy_into(dst);
+            if let Ok(t) = Arc::try_unwrap(g) {
+                t.recycle();
+            }
+        }
+    }
 }
 
 /// One in-flight packed allreduce (see [`Comm::allreduce_start`]).
@@ -774,6 +1039,7 @@ enum CollState {
         p: usize,
         n: usize,
         tag: u64,
+        prec: Precision,
         allgather: bool,
         step: usize,
     },
@@ -818,57 +1084,63 @@ impl PackedAllreduce {
         match &mut self.state {
             CollState::Done(_) | CollState::Taken => {}
             CollState::Ring {
-                out, bounds, left, right, p, n, tag, allgather, step,
+                out, bounds, left, right, p, n, tag, prec, allgather, step,
             } => {
                 loop {
                     let rtag = if *allgather { *tag | REPLY_BIT } else { *tag };
-                    let Some(got) = comm.try_recv(*left, rtag) else { break };
+                    let Some(got) = comm.try_recv_payload(*left, rtag) else { break };
                     progress = true;
                     if !*allgather {
                         // reduce-scatter: add the arriving chunk, then
                         // forward the freshly reduced one
                         let rc = (*p + *n - *step - 1) % *n;
                         let (lo, hi) = bounds[rc];
-                        debug_assert_eq!(got.numel(), hi - lo);
-                        for (o, g) in out.data[lo..hi].iter_mut().zip(got.data.iter())
-                        {
-                            *o += *g;
-                        }
-                        got.recycle();
+                        payload_add_into(&mut out.data[lo..hi], got);
                         *step += 1;
                         if *step < *n - 1 {
                             let sc = (*p + *n - *step) % *n;
-                            ring_send_chunk(comm, *right, bounds, sc, &out.data, *tag);
+                            ring_send_chunk_prec(
+                                comm, *right, bounds, sc, &out.data, *tag, *prec,
+                            );
                         } else {
                             *allgather = true;
                             *step = 0;
                             let sc = (*p + 1) % *n;
-                            ring_send_chunk(
+                            // same local quantize as the blocking ring:
+                            // the owner must hold its reduced chunk
+                            // exactly as the peers will install it
+                            if *prec == Precision::Bf16 {
+                                let (lo, hi) = bounds[sc];
+                                crate::tensor::bf16::quantize_slice(
+                                    &mut out.data[lo..hi],
+                                );
+                            }
+                            ring_send_chunk_prec(
                                 comm,
                                 *right,
                                 bounds,
                                 sc,
                                 &out.data,
                                 *tag | REPLY_BIT,
+                                *prec,
                             );
                         }
                     } else {
                         // allgather: install the cascaded chunk, forward it
                         let rc = (*p + *n - *step) % *n;
                         let (lo, hi) = bounds[rc];
-                        debug_assert_eq!(got.numel(), hi - lo);
-                        out.data[lo..hi].copy_from_slice(&got.data);
-                        got.recycle();
+                        payload_copy_into(&mut out.data[lo..hi], got);
                         *step += 1;
                         if *step < *n - 1 {
                             let sc = (*p + 1 + *n - *step) % *n;
-                            ring_send_chunk(
+                            ring_send_chunk_prec(
                                 comm,
                                 *right,
                                 bounds,
                                 sc,
                                 &out.data,
                                 *tag | REPLY_BIT,
+                                *prec,
                             );
                         } else {
                             finished =
@@ -1679,5 +1951,134 @@ mod tests {
         assert_eq!(net.link_bytes(2, 3), 96);
         assert_eq!(net.link_bytes(3, 0), 96);
         assert_eq!(net.link_bytes(0, 2), 0);
+    }
+
+    #[test]
+    fn bf16_point_to_point_roundtrip_and_bytes() {
+        let net = Network::new(2);
+        let a = net.endpoint(0);
+        let b = net.endpoint(1);
+        let t = Tensor::new(vec![10, 10], (0..100).map(|i| i as f32 / 3.0).collect());
+        a.send_bf16(1, 4, Bf16Tensor::from_tensor(&t));
+        // 2 bytes/elem on the link stats, not 4
+        assert_eq!(net.link_bytes(0, 1), 200);
+        assert!(b.try_recv_bf16(0, 5).is_none());
+        let got = b.recv_bf16(0, 4);
+        assert_eq!(got.shape, vec![10, 10]);
+        let wide = got.to_tensor();
+        for (w, v) in wide.data.iter().zip(t.data.iter()) {
+            assert_eq!(*w, crate::tensor::bf16::quantize(*v));
+        }
+        got.recycle();
+        wide.recycle();
+    }
+
+    #[test]
+    fn bf16_ring_bytes_are_half_of_f32() {
+        // same collective as ring_bytes_are_2_nm1_over_n, bf16 wire:
+        // 6 chunks * 4 elems * 2 bytes = 48 per right-neighbour link
+        let net = Network::new(4);
+        let group = vec![0, 1, 2, 3];
+        let mut handles = Vec::new();
+        for r in 0..4 {
+            let mut c = net.endpoint(r);
+            let g = group.clone();
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![16], vec![r as f32; 16]);
+                c.allreduce_sum_ring_prec(&g, &t, Precision::Bf16)
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(net.link_bytes(0, 1), 48);
+        assert_eq!(net.link_bytes(1, 2), 48);
+        assert_eq!(net.link_bytes(2, 3), 48);
+        assert_eq!(net.link_bytes(3, 0), 48);
+    }
+
+    #[test]
+    fn bf16_ring_blocking_matches_inflight_and_replicas_agree() {
+        // two properties at once: (a) the in-flight bf16 ring reproduces
+        // the blocking bf16 ring bit for bit (same quantization points,
+        // same addition order), and (b) after the collective *every rank
+        // holds identical bits* — the owner-quantize at the allgather
+        // handoff is what makes DP replicas stay in lockstep, and this
+        // is the test that fails without it. Fractional values make any
+        // rounding divergence visible.
+        check("bf16 ring: blocking == in-flight, ranks agree", 20, |g: &mut Gen| {
+            let n = g.int(2, 6);
+            let numel = g.int(4 * n, 150); // always the ring branch
+            let net = Network::new(n);
+            let group: Vec<usize> = (0..n).collect();
+            let mut handles = Vec::new();
+            for r in 0..n {
+                let mut c = net.endpoint(r);
+                let grp = group.clone();
+                let data: Vec<f32> = (0..numel)
+                    .map(|i| 0.1 + ((i * 31 + r * 17) % 97) as f32 / 7.0)
+                    .collect();
+                handles.push(thread::spawn(move || {
+                    let t = Tensor::new(vec![numel], data);
+                    let blocking = c.allreduce_sum_prec(&grp, &t, Precision::Bf16);
+                    let machine =
+                        c.allreduce_start_prec(&grp, t, Precision::Bf16).wait(&c);
+                    (blocking.data, machine.data)
+                }));
+            }
+            let per_rank: Vec<(Vec<f32>, Vec<f32>)> =
+                handles.into_iter().map(|h| h.join().unwrap()).collect();
+            for (r, (blocking, machine)) in per_rank.iter().enumerate() {
+                let same = blocking
+                    .iter()
+                    .zip(machine)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !same {
+                    return Err(format!(
+                        "n={n} numel={numel} rank {r}: blocking != in-flight"
+                    ));
+                }
+                let agree = blocking
+                    .iter()
+                    .zip(&per_rank[0].0)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                if !agree {
+                    return Err(format!(
+                        "n={n} numel={numel}: rank {r} bits differ from rank 0"
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bf16_ring_is_close_to_f32_ring() {
+        // the quantized collective is a tolerance oracle, not a bit
+        // oracle: against the f32 ring the error is bounded by bf16's
+        // half-ulp (2^-8 relative) per hop, n hops
+        let n = 4usize;
+        let numel = 64usize;
+        let net = Network::new(n);
+        let group: Vec<usize> = (0..n).collect();
+        let mut handles = Vec::new();
+        for r in 0..n {
+            let mut c = net.endpoint(r);
+            let grp = group.clone();
+            let data: Vec<f32> =
+                (0..numel).map(|i| ((i * 13 + r * 7) % 23) as f32 / 11.0).collect();
+            handles.push(thread::spawn(move || {
+                let t = Tensor::new(vec![numel], data);
+                let f32_out = c.allreduce_sum_ring(&grp, &t);
+                let bf16_out = c.allreduce_sum_ring_prec(&grp, &t, Precision::Bf16);
+                (f32_out, bf16_out)
+            }));
+        }
+        for h in handles {
+            let (want, got) = h.join().unwrap();
+            let scale = 1.0 + want.data.iter().map(|v| v.abs()).fold(0.0f32, f32::max);
+            let err = got.max_abs_diff(&want) / scale;
+            assert!(err <= (n as f32) / 256.0, "bf16 ring err {err}");
+        }
     }
 }

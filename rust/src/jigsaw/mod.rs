@@ -55,9 +55,9 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::comm::Comm;
+use crate::comm::{Comm, Payload};
 use crate::runtime::{Backend, MatmulOp};
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Bf16Tensor, Precision, Tensor};
 
 /// Block partition of a [rows, cols] matrix over ranks: `owner[bi][bj]`
 /// names the rank holding block (bi, bj). Several blocks may share an
@@ -256,6 +256,11 @@ pub struct Ctx<'a> {
     /// per-group call sequence number (identical across ranks by SPMD
     /// construction); namespaces message tags per dist_matmul call.
     pub seq: u64,
+    /// Fabric precision for shipped mobile blocks and partial sums:
+    /// `F32` moves tensors verbatim; `Bf16` quantizes (round to nearest
+    /// even) at the send side and widens back into pooled f32 buffers on
+    /// arrival, halving jigsaw traffic. Accumulation is f32 either way.
+    pub precision: Precision,
 }
 
 impl<'a> Ctx<'a> {
@@ -265,7 +270,7 @@ impl<'a> Ctx<'a> {
         comm: &'a mut Comm,
         backend: &'a dyn Backend,
     ) -> Self {
-        Ctx { mesh, rank, comm, backend, seq: 0 }
+        Ctx { mesh, rank, comm, backend, seq: 0, precision: Precision::F32 }
     }
 }
 
@@ -361,8 +366,9 @@ fn term_mobile_key(site: Site, t: &Term) -> (usize, usize) {
 }
 
 /// Phase 1 of both schedules: post every mobile-operand block this rank
-/// must ship (isend). One Arc per block: fanning a block out to several
-/// sites enqueues reference clones, never data copies.
+/// must ship (isend). One payload per block — fanning a block out to
+/// several sites enqueues reference clones, never data copies — and one
+/// quantization per block in bf16 mode, shared by every destination.
 fn ship_mobile_blocks(
     comm: &Comm,
     me: usize,
@@ -371,25 +377,44 @@ fn ship_mobile_blocks(
     x: &DistMat,
     w: &DistMat,
     all_terms: &[Term],
+    prec: Precision,
 ) {
     let mut shipped: BTreeSet<((usize, usize), usize)> = Default::default();
-    let mut outbox: BTreeMap<(usize, usize), Arc<Tensor>> = BTreeMap::new();
+    let mut outbox: BTreeMap<(usize, usize), Payload> = BTreeMap::new();
     for t in all_terms {
         let s = term_site(site, x, w, t);
         let mo = term_mobile_owner(site, x, w, t);
         let key = term_mobile_key(site, t);
         if mo == me && s != me && shipped.insert((key, s)) {
-            let arc = outbox
+            let p = outbox
                 .entry(key)
                 .or_insert_with(|| {
                     let blk = match site {
                         Site::XOwner => &w.blocks[&key],
                         Site::WOwner => &x.blocks[&key],
                     };
-                    Arc::new(blk.clone())
+                    match prec {
+                        Precision::F32 => Payload::F32(Arc::new(blk.clone())),
+                        Precision::Bf16 => {
+                            Payload::Bf16(Arc::new(Bf16Tensor::from_tensor(blk)))
+                        }
+                    }
                 })
                 .clone();
-            comm.send_shared(s, tag_ship(seq, key.0, key.1), arc);
+            comm.send_payload(s, tag_ship(seq, key.0, key.1), p);
+        }
+    }
+}
+
+/// Post a completed partial sum at the fabric precision: f32 moves the
+/// accumulator itself into the fabric (zero copies); bf16 ships a
+/// quantized copy and returns the f32 accumulator to the pool.
+fn send_partial(comm: &Comm, dst: usize, tag: u64, p: Tensor, prec: Precision) {
+    match prec {
+        Precision::F32 => comm.send(dst, tag, p),
+        Precision::Bf16 => {
+            comm.send_bf16(dst, tag, Bf16Tensor::from_tensor(&p));
+            p.recycle();
         }
     }
 }
@@ -495,12 +520,13 @@ pub fn dist_matmul(
     let seq = ctx.seq;
     ctx.seq += 1;
     let backend = ctx.backend;
+    let prec = ctx.precision;
     let use_into = backend.supports_into();
     let comm = &mut *ctx.comm;
     let all_terms = terms(op, x, w, y_grid);
 
     // -- phase 1: ship mobile blocks I own to sites that need them --------
-    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms);
+    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms, prec);
 
     // -- phases 2+3: ready-queue term loop --------------------------------
     let my_terms: Vec<&Term> = all_terms
@@ -544,9 +570,9 @@ pub fn dist_matmul(
                 .iter()
                 .map(|k| (waiting[k].0, tag_ship(seq, k.0, k.1)))
                 .collect();
-            if let Some((idx, blk)) = comm.try_recv_any(&keys) {
+            if let Some((idx, blk)) = comm.try_recv_any_payload(&keys) {
                 let mkey = polled[idx];
-                received.insert(mkey, blk);
+                received.insert(mkey, blk.widen());
                 let (_, ts) = waiting.remove(&mkey).unwrap();
                 ready.extend(ts);
             }
@@ -568,9 +594,9 @@ pub fn dist_matmul(
                 .iter()
                 .map(|k| (waiting[k].0, tag_ship(seq, k.0, k.1)))
                 .collect();
-            let (idx, blk) = comm.recv_any(&keys);
+            let (idx, blk) = comm.recv_any_payload(&keys);
             let mkey = polled[idx];
-            received.insert(mkey, blk);
+            received.insert(mkey, blk.widen());
             let (_, ts) = waiting.remove(&mkey).unwrap();
             ready.extend(ts);
             ready.pop_front().unwrap()
@@ -588,7 +614,7 @@ pub fn dist_matmul(
             if owner == me {
                 mine.insert(t.y, p);
             } else {
-                comm.send(owner, tag_partial(seq, t.y.0, t.y.1, me), p);
+                send_partial(comm, owner, tag_partial(seq, t.y.0, t.y.1, me), p, prec);
             }
         }
     }
@@ -627,7 +653,7 @@ pub fn dist_matmul(
     // deterministic run to run — the adds are noise next to the matmuls.
     // (These recv_any waits are hook-aware too: the tail of a backward
     // matmul chain keeps driving in-flight DP rings.)
-    let mut arrived: BTreeMap<((usize, usize), usize), Arc<Tensor>> = BTreeMap::new();
+    let mut arrived: BTreeMap<((usize, usize), usize), Payload> = BTreeMap::new();
     while arrived.len() < pending.len() {
         let outstanding: Vec<((usize, usize), usize)> = pending
             .iter()
@@ -638,16 +664,14 @@ pub fn dist_matmul(
             .iter()
             .map(|&(yk, s)| (s, tag_partial(seq, yk.0, yk.1, s)))
             .collect();
-        let (idx, p) = comm.recv_any(&keys);
+        let (idx, p) = comm.recv_any_payload(&keys);
         arrived.insert(outstanding[idx], p);
     }
     for ((yk, _s), p) in arrived {
         // partial sums were moved into the fabric, so the buffer is
-        // uniquely owned; the drained copy goes back to the pool
-        ops::add_assign(y.blocks.get_mut(&yk).unwrap(), &p);
-        if let Ok(t) = Arc::try_unwrap(p) {
-            t.recycle();
-        }
+        // uniquely owned; the drained copy goes back to the pool.
+        // accumulation is f32 at either fabric precision.
+        crate::comm::payload_add_into(&mut y.blocks.get_mut(&yk).unwrap().data, p);
     }
     Ok(y)
 }
@@ -670,11 +694,12 @@ pub fn dist_matmul_blocking(
     let seq = ctx.seq;
     ctx.seq += 1;
     let backend = ctx.backend;
+    let prec = ctx.precision;
     let use_into = backend.supports_into();
     let comm = &mut *ctx.comm;
     let all_terms = terms(op, x, w, y_grid);
 
-    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms);
+    ship_mobile_blocks(comm, me, seq, site, x, w, &all_terms, prec);
 
     let my_terms: Vec<&Term> = all_terms
         .iter()
@@ -697,8 +722,9 @@ pub fn dist_matmul_blocking(
         let mkey = term_mobile_key(site, t);
         if term_mobile_owner(site, x, w, t) != me && !received.contains_key(&mkey) {
             let src = term_mobile_owner(site, x, w, t);
-            let blk = comm.recv_shared(src, tag_ship(seq, mkey.0, mkey.1));
-            received.insert(mkey, blk);
+            let (_, blk) =
+                comm.recv_any_payload(&[(src, tag_ship(seq, mkey.0, mkey.1))]);
+            received.insert(mkey, blk.widen());
         }
         compute_term(
             backend, op, site, me, x, w, &received, &mut partials, use_into, t,
@@ -717,7 +743,7 @@ pub fn dist_matmul_blocking(
         if owner == me {
             mine.insert(yk, p);
         } else {
-            comm.send(owner, tag_partial(seq, yk.0, yk.1, me), p);
+            send_partial(comm, owner, tag_partial(seq, yk.0, yk.1, me), p, prec);
         }
     }
 
@@ -739,9 +765,10 @@ pub fn dist_matmul_blocking(
             .remove(&yk)
             .unwrap_or_else(|| Tensor::pooled_zeros(&[ybr, ybc]));
         for s in senders.into_iter().filter(|&s| s != me) {
-            let p = ctx.comm.recv(s, tag_partial(seq, yk.0, yk.1, s));
-            ops::add_assign(&mut acc, &p);
-            p.recycle();
+            let (_, p) = ctx
+                .comm
+                .recv_any_payload(&[(s, tag_partial(seq, yk.0, yk.1, s))]);
+            crate::comm::payload_add_into(&mut acc.data, p);
         }
         y.blocks.insert(yk, acc);
     }

@@ -1,3 +1,5 @@
+#![cfg_attr(feature = "simd", feature(portable_simd))]
+
 //! # Jigsaw — training multi-billion-parameter AI weather models with
 //! optimized model parallelism
 //!
@@ -65,6 +67,21 @@
 //! oracle. A failing rank aborts the fabric so peers unwind instead of
 //! deadlocking (in-flight collective buffers recycle on the unwind),
 //! and `train` reports which rank failed.
+//!
+//! Compute density and fabric volume have first-class knobs. The `simd`
+//! cargo feature (nightly) rewrites the kernels' 4x8 register tile on
+//! explicit `std::simd` f32x8 lanes — bit-identical to the scalar tile
+//! (separate multiply and add in the same element order), which stays
+//! the stable-toolchain default and the oracle. A [`tensor::Precision`]
+//! policy (`--precision bf16`) switches storage and fabric to software
+//! bfloat16: activations quantize at layer boundaries, shipped jigsaw
+//! blocks, partial sums, and DP ring chunks travel as u16 payloads
+//! (half the bytes, counted exactly by the fabric's per-link stats and
+//! priced by `perfmodel`'s bf16 column), while master weights, kernel
+//! accumulation, and every reduction stay f32. A `trainer::GradScaler`
+//! (dynamic loss scaling, power-of-two scales, overflow backoff) keeps
+//! bf16 gradients finite; `BENCH_precision.json` pins the byte halving
+//! and the bf16-vs-f32 loss tolerance the way `mesh_props` pins 1e-4.
 //!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind

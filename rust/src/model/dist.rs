@@ -29,7 +29,7 @@ use super::{latitude_weights, patchify, unpatchify};
 use crate::config::ModelConfig;
 use crate::jigsaw::{dist_matmul, BlockGrid, Ctx, DistMat, Mesh, Planner, Site};
 use crate::runtime::MatmulOp;
-use crate::tensor::{ops, Tensor};
+use crate::tensor::{ops, Precision, Tensor};
 
 /// Saved layer-norm statistics per local block.
 type LnSavedMap = BTreeMap<(usize, usize), ops::LnSaved>;
@@ -206,6 +206,17 @@ impl DistModel {
         self.planner().act()
     }
 
+    /// bf16 activation storage: round the residual stream to bf16
+    /// (round to nearest even) at layer boundaries — a no-op in f32
+    /// mode. Master weights and every accumulation stay f32; this
+    /// models the memory half of the mixed-precision policy the way
+    /// the fabric payloads model the communication half.
+    fn store_act(&self, ctx: &Ctx, m: &mut DistMat) {
+        if ctx.precision == Precision::Bf16 {
+            m.map_assign(|t| crate::tensor::bf16::quantize_slice(&mut t.data));
+        }
+    }
+
     // -- forward ------------------------------------------------------------
 
     fn mixer_block_fwd(
@@ -267,6 +278,7 @@ impl DistModel {
         )?;
         self.add_vec_cols_assign(&mut z3, &p.vecs[&name("ch_b2")]);
         z3.zip_assign(&z2, |a, b| ops::add_assign(a, b));
+        self.store_act(ctx, &mut z3);
 
         let cache = MixCache {
             z_in: z,
@@ -323,6 +335,7 @@ impl DistModel {
             Site::WOwner,
         )?;
         self.add_vec_cols_assign(&mut z0, &p.vecs["enc_b"]);
+        self.store_act(ctx, &mut z0);
 
         // processor (rollout repeats)
         let mut z = z0.clone();

@@ -201,6 +201,21 @@ impl PStore {
             .collect()
     }
 
+    /// True if any local tensor holds a non-finite value (inf/NaN). The
+    /// overflow probe of the trainer's dynamic loss scaler: each rank
+    /// checks its shard, then the group agrees via a scalar allreduce so
+    /// every replica skips (or takes) the step together.
+    pub fn has_non_finite(&self) -> bool {
+        self.mats
+            .values()
+            .flat_map(|m| m.blocks.values())
+            .any(|b| b.data.iter().any(|x| !x.is_finite()))
+            || self
+                .vecs
+                .values()
+                .any(|v| v.local.data.iter().any(|x| !x.is_finite()))
+    }
+
     pub fn scale_all(&mut self, s: f32) {
         for m in self.mats.values_mut() {
             for b in m.blocks.values_mut() {

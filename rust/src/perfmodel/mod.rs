@@ -21,13 +21,17 @@
 use crate::config::zoo::{ZooModel, PAPER_SAMPLE_BYTES};
 use crate::jigsaw::Mesh;
 
-/// Numeric precision regimes of the paper's experiments.
+/// Numeric precision regimes: the paper's two measured columns plus the
+/// engine's bf16 storage-and-fabric mode (`--precision bf16`).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Precision {
     /// uniform single precision: 19.5 TFLOP/s peak on A100
     Fp32,
     /// TensorFloat-32 mixed precision: 156 TFLOP/s peak
     Tf32,
+    /// bfloat16 tensor cores: 312 TFLOP/s peak on A100; unlike TF32 the
+    /// *storage and fabric* are 16-bit too, so every shipped byte halves
+    Bf16,
 }
 
 impl Precision {
@@ -35,16 +39,32 @@ impl Precision {
         match self {
             Precision::Fp32 => 19.5e12,
             Precision::Tf32 => 156e12,
+            Precision::Bf16 => 312e12,
         }
     }
 
     /// Achievable GEMM fraction of peak. Together with the fixed per-step
     /// overhead this calibrates to the paper's measured non-MP baselines
     /// (Section 6.3.1: 81% fp32, 43% TF32 of peak at the 16-TFLOP model).
+    /// bf16 sits near TF32's fraction: double the peak, the same
+    /// memory-system limits on these layer shapes.
     pub fn gemm_efficiency(&self) -> f64 {
         match self {
             Precision::Fp32 => 0.83,
             Precision::Tf32 => 0.46,
+            Precision::Bf16 => 0.42,
+        }
+    }
+
+    /// Bytes per element the engine actually ships (activations, partial
+    /// sums, gradient ring chunks) under this regime. TF32 is a compute
+    /// format — its fabric traffic stays f32 — while bf16 stores and
+    /// ships in 16 bits, which is exactly what the real engine's
+    /// per-link byte counters report under `--precision bf16`.
+    pub fn wire_bytes(&self) -> f64 {
+        match self {
+            Precision::Fp32 | Precision::Tf32 => 4.0,
+            Precision::Bf16 => 2.0,
         }
     }
 }
@@ -175,7 +195,7 @@ pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
     //    beyond the calibrated 2-/4-rank anchors pay a per-doubling
     //    fabric-contention premium on top. -------------------------------
     if w.way() > 1 {
-        let prec_bytes = 4.0; // activations stay f32 even under TF32
+        let prec_bytes = w.precision.wire_bytes(); // f32/TF32 ship 4B, bf16 ships 2B
         let act_bytes = PAPER_TOKENS * w.model.d_emb as f64 * prec_bytes;
         let channel_only = w.mesh.tok() == 1;
         let msgs_per_linear = ((w.mesh.tok() - 1) + (w.mesh.ch() - 1)) as f64;
@@ -197,7 +217,8 @@ pub fn simulate_step(cluster: &ClusterSpec, w: &Workload) -> StepTime {
     //    volume is the *shard* size (the paper's Fig-10 insight: MP
     //    shrinks DP traffic by 1/way). The node's IB port is shared. ----
     if w.dp > 1 {
-        let grad_bytes = w.model.param_bytes() / way;
+        let grad_bytes =
+            w.model.param_bytes() / way * (w.precision.wire_bytes() / 4.0);
         let n = w.dp as f64;
         let ring = 2.0 * (n - 1.0) / n * grad_bytes;
         let ib_share = cluster.ib_bw / cluster.gpus_per_node as f64;
@@ -548,6 +569,35 @@ mod tests {
         let t1 = simulate_step(&c, &w1);
         let t4 = simulate_step(&c, &w4);
         assert!(t4.dp_comm < t1.dp_comm, "MP shards the gradient volume");
+    }
+
+    #[test]
+    fn bf16_halves_fabric_bytes_and_prices_faster_steps() {
+        // the --precision bf16 storage-and-fabric path: same schedule,
+        // half the shipped bytes on both the NVLink MP exchanges and the
+        // IB DP rings, and a higher effective GEMM roofline.
+        let c = horeka();
+        let m = TABLE1[6];
+        let tf32 = Workload {
+            model: m,
+            mesh: mesh(4),
+            dp: 16,
+            precision: Precision::Tf32,
+            dataload: false,
+        };
+        let bf16 = Workload { precision: Precision::Bf16, ..tf32.clone() };
+        let t_tf = simulate_step(&c, &tf32);
+        let t_bf = simulate_step(&c, &bf16);
+        let mp_ratio = t_bf.mp_comm / t_tf.mp_comm;
+        assert!((mp_ratio - 0.5).abs() < 1e-9, "MP bytes must halve: {mp_ratio}");
+        let dp_ratio = t_bf.dp_comm / t_tf.dp_comm;
+        assert!((dp_ratio - 0.5).abs() < 1e-9, "DP ring bytes must halve: {dp_ratio}");
+        assert!(t_bf.compute < t_tf.compute, "bf16 roofline beats TF32");
+        assert!(t_bf.total < t_tf.total, "bf16 step must price faster");
+        // wire-bytes contract the engine's byte counters rely on
+        assert_eq!(Precision::Fp32.wire_bytes(), 4.0);
+        assert_eq!(Precision::Tf32.wire_bytes(), 4.0);
+        assert_eq!(Precision::Bf16.wire_bytes(), 2.0);
     }
 
     #[test]

@@ -1,0 +1,249 @@
+//! Software bfloat16: u16 storage with round-to-nearest-even conversion,
+//! and the crate-wide [`Precision`] policy.
+//!
+//! bf16 keeps f32's 8-bit exponent and truncates the mantissa to 7 bits,
+//! so conversion is a pure bit operation on the high half of the f32
+//! word — no libm, no lookup tables. Everything numeric stays f32: the
+//! mixed-precision recipe here is *storage and fabric* in bf16 (shipped
+//! activation blocks, partial sums, DP gradient ring chunks, cached
+//! activations) with f32 master weights and f32 accumulation everywhere
+//! values are combined. [`Bf16Tensor`] is the carrier: a shaped `Vec<u16>`
+//! backed by the (elem-kind-keyed) thread-local buffer pool, shippable
+//! through `comm` as a first-class payload so per-link byte accounting
+//! sees the real 2-bytes-per-element wire size.
+//!
+//! Rounding is round-to-nearest-even (the IEEE default, and what every
+//! hardware bf16 cast implements): add `0x7fff + lsb` to the f32 bits and
+//! truncate. NaNs are quieted with their sign preserved instead of being
+//! rounded (rounding a NaN's mantissa can carry into the exponent and
+//! produce infinity); infinities and subnormals fall out of the bit
+//! arithmetic correctly.
+
+use std::str::FromStr;
+
+use super::{pool, Tensor};
+
+/// Numeric storage/fabric policy, threaded through `Ctx`/`DistModel`/
+/// `Comm`/`TrainSpec`. `F32` is the default and keeps every code path
+/// bit-identical to the pre-precision engine; `Bf16` stores activations
+/// and ships every fabric payload in 16 bits (f32 master weights, f32
+/// accumulation, loss scaling in the trainer).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    #[default]
+    F32,
+    Bf16,
+}
+
+impl Precision {
+    /// Bytes per element actually moved on the wire for payloads under
+    /// this policy (collective chunks, shipped blocks, partial sums).
+    pub fn wire_bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Bf16 => 2,
+        }
+    }
+}
+
+impl FromStr for Precision {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "f32" | "fp32" => Ok(Precision::F32),
+            "bf16" => Ok(Precision::Bf16),
+            other => Err(format!("unknown precision '{other}' (f32|bf16)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::Bf16 => "bf16",
+        })
+    }
+}
+
+/// f32 -> bf16 with round-to-nearest-even. NaN payloads are quieted (top
+/// mantissa bit forced) rather than rounded.
+#[inline(always)]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let round = 0x7fff + ((bits >> 16) & 1);
+    ((bits + round) >> 16) as u16
+}
+
+/// bf16 -> f32 (exact: bf16 values are a subset of f32).
+#[inline(always)]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Round an f32 to the nearest representable bf16 value (RNE), staying
+/// in f32. The activation-storage primitive: a value stored in bf16 and
+/// read back is exactly `quantize` of the original.
+#[inline(always)]
+pub fn quantize(x: f32) -> f32 {
+    bf16_to_f32(f32_to_bf16(x))
+}
+
+/// Quantize a buffer in place (activation blocks at layer boundaries).
+pub fn quantize_slice(xs: &mut [f32]) {
+    for x in xs.iter_mut() {
+        *x = quantize(*x);
+    }
+}
+
+/// Shaped bf16 tensor: the 16-bit twin of [`Tensor`], used for fabric
+/// payloads and cached activations. Buffers come from the u16 side of
+/// the thread-local pool (`pool::take_u16`), so steady-state bf16
+/// training recycles them exactly like the f32 hot-path buffers — and
+/// never contends with the f32 free list (the pool keys by elem kind).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Bf16Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<u16>,
+}
+
+impl Bf16Tensor {
+    /// Quantize an f32 slice into a pooled bf16 buffer.
+    pub fn from_f32(shape: &[usize], src: &[f32]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), src.len());
+        let mut data = pool::take_u16(src.len());
+        for (d, &s) in data.iter_mut().zip(src.iter()) {
+            *d = f32_to_bf16(s);
+        }
+        Bf16Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_tensor(t: &Tensor) -> Self {
+        Self::from_f32(&t.shape, &t.data)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Widen into a pooled f32 tensor.
+    pub fn to_tensor(&self) -> Tensor {
+        let mut t = Tensor::pooled_zeros(&self.shape);
+        self.copy_into(&mut t.data);
+        t
+    }
+
+    /// dst[i] = f32(self[i]) — the allgather install step.
+    pub fn copy_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.data.len());
+        for (d, &h) in dst.iter_mut().zip(self.data.iter()) {
+            *d = bf16_to_f32(h);
+        }
+    }
+
+    /// dst[i] += f32(self[i]) — f32 accumulation of a bf16 payload
+    /// (reduce-scatter hop, partial-sum reduction) with no temporary.
+    pub fn add_into(&self, dst: &mut [f32]) {
+        assert_eq!(dst.len(), self.data.len());
+        for (d, &h) in dst.iter_mut().zip(self.data.iter()) {
+            *d += bf16_to_f32(h);
+        }
+    }
+
+    /// Return the u16 buffer to this thread's pool.
+    pub fn recycle(self) {
+        pool::put_u16(self.data);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_golden_vectors() {
+        // (input bits, expected bf16) — RNE including ties, subnormals,
+        // overflow-to-inf, infinities, and signed zero. Cross-checked
+        // against an independent arbitrary-precision model of RNE.
+        let cases: [(u32, u16); 14] = [
+            (0x0000_0000, 0x0000), // +0
+            (0x8000_0000, 0x8000), // -0
+            (0x3f80_0000, 0x3f80), // 1.0
+            (0x3f80_8000, 0x3f80), // 1.0 + half-ulp tie -> even (down)
+            (0x3f81_8000, 0x3f82), // 1.0 + 3*half-ulp tie -> even (up)
+            (0x3f80_8001, 0x3f81), // just above the tie -> up
+            (0x3f80_7fff, 0x3f80), // just below the tie -> down
+            (0x4049_0fdb, 0x4049), // pi rounds down
+            (0x7f7f_ffff, 0x7f80), // max finite f32 -> +inf in bf16
+            (0x7f80_0000, 0x7f80), // +inf stays inf
+            (0xff80_0000, 0xff80), // -inf stays inf
+            (0x0000_0001, 0x0000), // smallest subnormal underflows to +0
+            (0x0001_8000, 0x0002), // subnormal tie -> even (up)
+            (0x3380_0000, 0x3380), // 2^-24 is exactly representable
+        ];
+        for (bits, want) in cases {
+            let got = f32_to_bf16(f32::from_bits(bits));
+            assert_eq!(got, want, "bits {bits:#010x}: got {got:#06x} want {want:#06x}");
+        }
+    }
+
+    #[test]
+    fn nan_is_quieted_not_rounded() {
+        for bits in [0x7fc0_0000u32, 0x7f80_0001, 0xffc0_1234, 0x7fbf_ffff] {
+            let h = f32_to_bf16(f32::from_bits(bits));
+            let back = bf16_to_f32(h);
+            assert!(back.is_nan(), "bits {bits:#010x} -> {h:#06x} not NaN");
+            assert_eq!(
+                (h >> 15) as u32,
+                bits >> 31,
+                "NaN sign not preserved for {bits:#010x}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantize_is_idempotent() {
+        let mut x = -1.0f32;
+        while x < 1.0 {
+            let q = quantize(x);
+            assert_eq!(quantize(q).to_bits(), q.to_bits(), "x={x}");
+            // error bounded by half an ulp: 2^-8 relative for normals
+            if x != 0.0 {
+                assert!((q - x).abs() / x.abs() <= 1.0 / 256.0, "x={x} q={q}");
+            }
+            x += 0.001;
+        }
+    }
+
+    #[test]
+    fn tensor_round_trip_and_accumulate() {
+        let t = Tensor::new(vec![2, 3], vec![1.5, -2.25, 0.1, 1e30, -1e-30, 0.0]);
+        let b = Bf16Tensor::from_tensor(&t);
+        assert_eq!(b.numel(), 6);
+        let back = b.to_tensor();
+        assert_eq!(back.shape, t.shape);
+        for (a, w) in back.data.iter().zip(t.data.iter()) {
+            assert_eq!(*a, quantize(*w));
+        }
+        // exactly-representable values survive and accumulate in f32
+        let mut acc = vec![1.0f32; 6];
+        b.add_into(&mut acc);
+        assert_eq!(acc[0], 2.5);
+        back.recycle();
+        b.recycle();
+    }
+
+    #[test]
+    fn precision_parses_and_prices() {
+        assert_eq!("bf16".parse::<Precision>().unwrap(), Precision::Bf16);
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert!("fp8".parse::<Precision>().is_err());
+        assert_eq!(Precision::F32.wire_bytes_per_elem(), 4);
+        assert_eq!(Precision::Bf16.wire_bytes_per_elem(), 2);
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+}

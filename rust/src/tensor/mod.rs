@@ -10,18 +10,25 @@
 //! * [`view`] — zero-copy strided views (`TensorView`/`TensorViewMut`);
 //!   row/column/block slicing without allocation, the substrate of the
 //!   blocked kernels;
-//! * [`ops`] — the optimized kernel layer (blocked `_into` matmuls,
-//!   pointwise stages);
+//! * [`ops`] — the optimized kernel layer (blocked `_into` matmuls with an
+//!   optional `std::simd` inner tile behind the `simd` feature, pointwise
+//!   stages);
 //! * [`ref_kernels`] — the retained naive matmuls, the property-test
 //!   oracle for `ops`;
-//! * [`pool`] — per-thread buffer recycling so steady-state training does
-//!   no matmul-sized heap allocations.
+//! * [`pool`] — per-thread buffer recycling, keyed by (capacity, elem
+//!   kind), so steady-state training does no matmul-sized heap
+//!   allocations in either f32 or bf16 mode;
+//! * [`bf16`] — software bfloat16 (round-to-nearest-even u16 storage),
+//!   [`bf16::Bf16Tensor`] fabric payloads, and the [`bf16::Precision`]
+//!   policy the mixed-precision path threads through the engine.
 
+pub mod bf16;
 pub mod ops;
 pub mod pool;
 pub mod ref_kernels;
 pub mod view;
 
+pub use bf16::{Bf16Tensor, Precision};
 pub use view::{TensorView, TensorViewMut};
 
 /// Row-major f32 tensor.

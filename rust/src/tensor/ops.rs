@@ -22,6 +22,16 @@
 //!   runs one thread per rank). Bands split the *output*, so no reduction
 //!   or synchronization is needed.
 //!
+//! With the `simd` feature (nightly, `std::simd`), the register tile's
+//! contraction loop runs on explicit `f32x8` lanes instead of relying on
+//! autovectorization. The SIMD tile uses separate multiply and add (no
+//! `mul_add`) in the same per-element order as the scalar loop, so the
+//! two paths are **bit-identical** — the scalar tile remains both the
+//! stable-toolchain default and the oracle the SIMD build is tested
+//! against ([`set_force_scalar_tile`] routes a `simd` binary through the
+//! scalar tile so benches can measure the speedup in-process; it is a
+//! process-global switch because band worker threads must see it too).
+//!
 //! The driver also hosts the crate's **progress callback**
 //! ([`set_driver_hook`]): a thread-local hook the kernels tick between
 //! register-tile row groups and while the calling thread waits at the
@@ -62,6 +72,44 @@ const KC: usize = 256;
 const PAR_MIN_FLOPS: usize = 1 << 21;
 
 static THREADS: OnceLock<usize> = OnceLock::new();
+
+/// With the `simd` feature, routes the register tile through the scalar
+/// path when set. Process-global (not thread-local): the banded driver's
+/// scoped worker threads never inherit thread-locals, and the whole
+/// point of the switch is that one flip covers every band.
+#[cfg(feature = "simd")]
+static FORCE_SCALAR_TILE: std::sync::atomic::AtomicBool =
+    std::sync::atomic::AtomicBool::new(false);
+
+/// Force (or release, with `false`) the scalar register tile in a
+/// `simd`-featured binary, returning the previous setting. Benches use
+/// this to measure the SIMD microkernel against the scalar blocked
+/// kernel inside one process; tests use it to check bit-identity. No-op
+/// (returns `false`) without the feature.
+pub fn set_force_scalar_tile(force: bool) -> bool {
+    #[cfg(feature = "simd")]
+    {
+        FORCE_SCALAR_TILE.swap(force, std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        let _ = force;
+        false
+    }
+}
+
+/// Whether the explicit-SIMD register tile is compiled in and currently
+/// active (i.e. not forced scalar).
+pub fn simd_tile_active() -> bool {
+    #[cfg(feature = "simd")]
+    {
+        !FORCE_SCALAR_TILE.load(std::sync::atomic::Ordering::Relaxed)
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        false
+    }
+}
 
 /// Kernel thread count: `JIGSAW_KERNEL_THREADS` (>= 1), default 1. Read
 /// once; tests that need specific counts use the `*_into_with` entry
@@ -165,6 +213,119 @@ fn row_slice<'o>(out: &'o mut [f32], os: usize, i: usize, j0: usize, j1: usize) 
     &mut out[start + j0..start + j1]
 }
 
+/// Contraction loop of one MR x NR register tile, scalar form: the
+/// bit-exact reference schedule. Each accumulator element sees, in kk
+/// order, one multiply then one add (no fused op) — the SIMD tile below
+/// replays exactly this sequence per lane.
+#[inline(always)]
+fn tile_kloop_scalar<'b, FA, FB>(
+    acc: &mut [[f32; NR]; MR],
+    i0: usize,
+    jj: usize,
+    k0: usize,
+    k1: usize,
+    a: &FA,
+    brow: &FB,
+) where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize) -> &'b [f32],
+{
+    for kk in k0..k1 {
+        let b = &brow(kk)[jj..jj + NR];
+        let av = [a(i0, kk), a(i0 + 1, kk), a(i0 + 2, kk), a(i0 + 3, kk)];
+        for (accr, &ar) in acc.iter_mut().zip(av.iter()) {
+            for t in 0..NR {
+                accr[t] += ar * b[t];
+            }
+        }
+    }
+}
+
+/// Contraction loop of one MR x NR register tile on `f32x8` lanes. Uses
+/// separate `*` and `+=` (NOT `mul_add`): per output element this is the
+/// same multiply-round-add-round sequence in the same kk order as
+/// [`tile_kloop_scalar`], so the two are bit-identical and the property
+/// suite can compare them with `to_bits`.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn tile_kloop_simd<'b, FA, FB>(
+    acc: &mut [[f32; NR]; MR],
+    i0: usize,
+    jj: usize,
+    k0: usize,
+    k1: usize,
+    a: &FA,
+    brow: &FB,
+) where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize) -> &'b [f32],
+{
+    use std::simd::f32x8;
+    let mut v0 = f32x8::from_array(acc[0]);
+    let mut v1 = f32x8::from_array(acc[1]);
+    let mut v2 = f32x8::from_array(acc[2]);
+    let mut v3 = f32x8::from_array(acc[3]);
+    for kk in k0..k1 {
+        let b = f32x8::from_slice(&brow(kk)[jj..jj + NR]);
+        v0 += f32x8::splat(a(i0, kk)) * b;
+        v1 += f32x8::splat(a(i0 + 1, kk)) * b;
+        v2 += f32x8::splat(a(i0 + 2, kk)) * b;
+        v3 += f32x8::splat(a(i0 + 3, kk)) * b;
+    }
+    acc[0] = v0.to_array();
+    acc[1] = v1.to_array();
+    acc[2] = v2.to_array();
+    acc[3] = v3.to_array();
+}
+
+/// Contraction loop of a single-row NR tile (tail rows), scalar form.
+#[inline(always)]
+fn row_kloop_scalar<'b, FA, FB>(
+    acc: &mut [f32; NR],
+    i0: usize,
+    jj: usize,
+    k0: usize,
+    k1: usize,
+    a: &FA,
+    brow: &FB,
+) where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize) -> &'b [f32],
+{
+    for kk in k0..k1 {
+        let b = &brow(kk)[jj..jj + NR];
+        let av = a(i0, kk);
+        for t in 0..NR {
+            acc[t] += av * b[t];
+        }
+    }
+}
+
+/// Single-row NR tile on `f32x8` lanes; bit-identical to
+/// [`row_kloop_scalar`] by the same separate-mul-add argument.
+#[cfg(feature = "simd")]
+#[inline(always)]
+fn row_kloop_simd<'b, FA, FB>(
+    acc: &mut [f32; NR],
+    i0: usize,
+    jj: usize,
+    k0: usize,
+    k1: usize,
+    a: &FA,
+    brow: &FB,
+) where
+    FA: Fn(usize, usize) -> f32,
+    FB: Fn(usize) -> &'b [f32],
+{
+    use std::simd::f32x8;
+    let mut v = f32x8::from_array(*acc);
+    for kk in k0..k1 {
+        let b = f32x8::from_slice(&brow(kk)[jj..jj + NR]);
+        v += f32x8::splat(a(i0, kk)) * b;
+    }
+    *acc = v.to_array();
+}
+
 /// Core blocked GEMM block: out[0..m, j0..j1] (+)= sum_{k0..k1} a(i,k)*b(k,j).
 ///
 /// `a(i, k)` loads the left operand; `brow(k)` yields the right operand's
@@ -209,15 +370,14 @@ fn kernel_block<'b, FA, FB>(
                     acc[3][t] = r3[jj + t];
                 }
             }
-            for kk in k0..k1 {
-                let b = &brow(kk)[jj..jj + NR];
-                let av = [a(i0, kk), a(i0 + 1, kk), a(i0 + 2, kk), a(i0 + 3, kk)];
-                for (accr, &ar) in acc.iter_mut().zip(av.iter()) {
-                    for t in 0..NR {
-                        accr[t] += ar * b[t];
-                    }
-                }
+            #[cfg(feature = "simd")]
+            if simd_tile_active() {
+                tile_kloop_simd(&mut acc, i0, jj, k0, k1, &a, &brow);
+            } else {
+                tile_kloop_scalar(&mut acc, i0, jj, k0, k1, &a, &brow);
             }
+            #[cfg(not(feature = "simd"))]
+            tile_kloop_scalar(&mut acc, i0, jj, k0, k1, &a, &brow);
             for t in 0..NR {
                 r0[jj + t] = acc[0][t];
                 r1[jj + t] = acc[1][t];
@@ -255,13 +415,14 @@ fn kernel_block<'b, FA, FB>(
             if !init {
                 acc.copy_from_slice(&row[jj..jj + NR]);
             }
-            for kk in k0..k1 {
-                let b = &brow(kk)[jj..jj + NR];
-                let av = a(i0, kk);
-                for t in 0..NR {
-                    acc[t] += av * b[t];
-                }
+            #[cfg(feature = "simd")]
+            if simd_tile_active() {
+                row_kloop_simd(&mut acc, i0, jj, k0, k1, &a, &brow);
+            } else {
+                row_kloop_scalar(&mut acc, i0, jj, k0, k1, &a, &brow);
             }
+            #[cfg(not(feature = "simd"))]
+            row_kloop_scalar(&mut acc, i0, jj, k0, k1, &a, &brow);
             row[jj..jj + NR].copy_from_slice(&acc);
             jj += NR;
         }

@@ -1,4 +1,5 @@
-//! Reusable f32 buffer pool for matmul-sized temporaries.
+//! Reusable buffer pool for matmul-sized temporaries, keyed by element
+//! kind.
 //!
 //! The jigsaw hot path allocates the same handful of buffer shapes every
 //! step (matmul outputs, partial-sum accumulators, packed kernel panels,
@@ -7,11 +8,18 @@
 //! rank thread's free list converges after the first step and every
 //! subsequent `take` is a hit.
 //!
+//! Free lists are segregated by element kind — f32 work buffers and u16
+//! bf16 pack buffers live on separate lists (`take`/`put` vs
+//! `take_u16`/`put_u16`), so a bf16 training run's half-size wire
+//! buffers never poison the f32 list's best-fit search or evict the
+//! expensive f32 panels under the MAX_FREE bound. Effectively the pool
+//! key is (capacity, elem kind).
+//!
 //! Buffers are zero-filled on `take` (a memset is noise next to the
 //! matmul that follows, and it keeps callers honest). Hit/miss counters
-//! are process-global atomics so benches can report allocation behaviour
-//! across rank threads (`hotpath_micro` records them in
-//! BENCH_kernels.json).
+//! are process-global atomics shared by both kinds so benches can report
+//! allocation behaviour across rank threads (`hotpath_micro` records
+//! them in BENCH_kernels.json).
 
 use std::cell::RefCell;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,36 +35,59 @@ const MAX_FREE: usize = 32;
 
 thread_local! {
     static FREE: RefCell<Vec<Vec<f32>>> = const { RefCell::new(Vec::new()) };
+    static FREE_U16: RefCell<Vec<Vec<u16>>> = const { RefCell::new(Vec::new()) };
 }
 
-/// Take a zero-filled buffer of exactly `len` elements (best fit: the
-/// smallest free buffer that holds `len`, so small requests don't steal
-/// the large panels/accumulators and force them to reallocate).
-pub fn take(len: usize) -> Vec<f32> {
-    let reused = FREE.with(|f| {
-        let mut f = f.borrow_mut();
+/// Best fit: the smallest free buffer that holds `len`, so small requests
+/// don't steal the large panels/accumulators and force them to
+/// reallocate. Zero-fills on both hit and miss.
+fn take_from<T: Copy + Default>(free: &RefCell<Vec<Vec<T>>>, len: usize) -> Vec<T> {
+    let reused = {
+        let mut f = free.borrow_mut();
         f.iter()
             .enumerate()
             .filter(|(_, v)| v.capacity() >= len)
             .min_by_key(|(_, v)| v.capacity())
             .map(|(pos, _)| pos)
             .map(|pos| f.swap_remove(pos))
-    });
+    };
     match reused {
         Some(mut v) => {
             HITS.fetch_add(1, Ordering::Relaxed);
             v.clear();
-            v.resize(len, 0.0);
+            v.resize(len, T::default());
             v
         }
         None => {
             MISSES.fetch_add(1, Ordering::Relaxed);
-            vec![0.0; len]
+            vec![T::default(); len]
         }
     }
 }
 
-/// Return a buffer to this thread's free list.
+fn put_into<T>(free: &RefCell<Vec<Vec<T>>>, v: Vec<T>) {
+    let mut f = free.borrow_mut();
+    if f.len() < MAX_FREE {
+        f.push(v);
+    } else if let Some(smallest) = f
+        .iter()
+        .enumerate()
+        .min_by_key(|(_, b)| b.capacity())
+        .map(|(i, _)| i)
+    {
+        // keep the largest buffers: they are the expensive ones
+        if f[smallest].capacity() < v.capacity() {
+            f[smallest] = v;
+        }
+    }
+}
+
+/// Take a zero-filled f32 buffer of exactly `len` elements.
+pub fn take(len: usize) -> Vec<f32> {
+    FREE.with(|f| take_from(f, len))
+}
+
+/// Return an f32 buffer to this thread's free list.
 pub fn put(v: Vec<f32>) {
     if v.capacity() == 0 {
         return;
@@ -64,22 +95,21 @@ pub fn put(v: Vec<f32>) {
     // try_with: a buffer surfacing during thread teardown (e.g. an
     // in-flight collective dropped out of a thread-local registry) is
     // simply freed instead of aborting on the destroyed pool
-    let _ = FREE.try_with(|f| {
-        let mut f = f.borrow_mut();
-        if f.len() < MAX_FREE {
-            f.push(v);
-        } else if let Some(smallest) = f
-            .iter()
-            .enumerate()
-            .min_by_key(|(_, b)| b.capacity())
-            .map(|(i, _)| i)
-        {
-            // keep the largest buffers: they are the expensive ones
-            if f[smallest].capacity() < v.capacity() {
-                f[smallest] = v;
-            }
-        }
-    });
+    let _ = FREE.try_with(|f| put_into(f, v));
+}
+
+/// Take a zero-filled u16 buffer (bf16 wire/pack payloads) of exactly
+/// `len` elements, from the u16 free list.
+pub fn take_u16(len: usize) -> Vec<u16> {
+    FREE_U16.with(|f| take_from(f, len))
+}
+
+/// Return a u16 buffer to this thread's u16 free list.
+pub fn put_u16(v: Vec<u16>) {
+    if v.capacity() == 0 {
+        return;
+    }
+    let _ = FREE_U16.try_with(|f| put_into(f, v));
 }
 
 /// (hits, misses) since process start or the last `reset_stats`.
@@ -127,6 +157,23 @@ mod tests {
         t.recycle();
         let t2 = Tensor::pooled_zeros(&[2, 2]);
         assert_eq!(t2.numel(), 4);
+    }
+
+    #[test]
+    fn u16_list_is_separate_from_f32() {
+        // a u16 put must not satisfy (or evict) f32 takes, and vice versa
+        let mut h = take_u16(64);
+        h.iter_mut().for_each(|x| *x = 0x3f80);
+        put_u16(h);
+        let h2 = take_u16(32);
+        assert!(h2.iter().all(|&x| x == 0));
+        assert_eq!(h2.len(), 32);
+        put_u16(h2);
+        // an f32 take of the same footprint cannot be a reuse of the u16
+        // buffer — if the lists were shared this would type-confuse
+        let v = take(64);
+        assert_eq!(v.len(), 64);
+        put(v);
     }
 
     #[test]

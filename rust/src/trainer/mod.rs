@@ -35,6 +35,20 @@
 //! aborts both fabrics (waking any peer blocked in a receive), `train`
 //! collects every rank's outcome, and the error names the rank that
 //! actually failed rather than a secondary abort casualty.
+//!
+//! Mixed precision (`TrainSpec::precision = Bf16`, CLI `--precision
+//! bf16`): master weights, Adam state, and every accumulation stay f32;
+//! activations quantize to bf16 at layer boundaries and every bulk
+//! fabric payload (jigsaw mobile blocks, partial sums, DP ring chunks)
+//! ships as 16-bit — half the bytes end to end. A [`GradScaler`]
+//! applies dynamic loss scaling: gradients are packed pre-scaled into
+//! the reduce buckets, unscaled together with the 1/dp mean, and a
+//! per-step non-finite probe (agreed across the MP group — DP peers
+//! hold bit-identical post-reduce shards, so group agreement is global
+//! agreement) skips the optimizer step and halves the scale on
+//! overflow, doubling it back after a run of good steps. Under the
+//! default `F32` the scaler is inert (scale 1.0, no fabric probe) and
+//! training is bit-identical to the pre-precision engine.
 
 use std::sync::Arc;
 
@@ -51,7 +65,7 @@ use crate::model::params::{shard_params, GradId, GradSink, PStore};
 use crate::model::init_global_params;
 use crate::optim::{Adam, LrSchedule};
 use crate::runtime::Backend;
-use crate::tensor::Tensor;
+use crate::tensor::{Precision, Tensor};
 use crate::util::rng::Rng;
 
 /// Training-run specification.
@@ -82,6 +96,12 @@ pub struct TrainSpec {
     /// gradients — the switch exists for baselines and differential
     /// tests.
     pub overlap_dp: bool,
+    /// storage/fabric precision (`--precision bf16`): bf16 activations at
+    /// layer boundaries and 16-bit fabric payloads everywhere the mixed
+    /// path ships data (jigsaw blocks, partial sums, DP ring chunks),
+    /// with f32 master weights and f32 accumulation. `F32` (default)
+    /// keeps training bit-identical to the pre-precision engine.
+    pub precision: Precision,
 }
 
 impl TrainSpec {
@@ -108,6 +128,7 @@ impl TrainSpec {
             val_every: 0,
             val_times: vec![40, 41, 42, 43],
             overlap_dp: true,
+            precision: Precision::F32,
         }
     }
 
@@ -275,6 +296,7 @@ fn rank_main(
     let mut steps = Vec::new();
     let mut val_loss = Vec::new();
     let mut final_val_rmse = Vec::new();
+    let mut scaler = GradScaler::new(spec.precision);
 
     for step in 0..spec.steps {
         // randomized rollout length, shared across *all* ranks by seed
@@ -286,38 +308,62 @@ fn rank_main(
         };
         let item = loader.next_item();
         let mut ctx = Ctx::new(mesh, mp_rank, mp_comm, backend.as_ref());
+        ctx.precision = spec.precision;
+        let scale = scaler.scale();
         let (loss, grads) = if spec.dp > 1 && spec.overlap_dp {
             // grad-ready DP reduction (paper 4.3 / 6.3.4): bucket rings
             // launch while the backward pass still differentiates; the
             // drain below waits on outstanding buckets before Adam
-            let mut sched = GradReduceScheduler::new(
+            let mut sched = GradReduceScheduler::new_scaled(
                 &mut *dp_comm,
                 &dp_group,
                 DP_BUCKET_ELEMS,
+                scale,
+                spec.precision,
             );
             let (loss, mut grads) = model.loss_and_grad_with(
                 &mut ctx, &item.x, &item.y, rollout, &mut sched,
             )?;
             sched.finish(&mut grads);
-            grads.scale_all(1.0 / spec.dp as f32);
+            grads.scale_all(1.0 / (scale * spec.dp as f32));
             (loss, grads)
         } else {
             let (loss, mut grads) =
                 model.loss_and_grad(&mut ctx, &item.x, &item.y, rollout)?;
             // post-hoc DP gradient reduction (the oracle/baseline path)
             if spec.dp > 1 {
-                dp_allreduce_grads(&mut grads, dp_comm, &dp_group);
-                grads.scale_all(1.0 / spec.dp as f32);
+                if scale != 1.0 {
+                    grads.scale_all(scale);
+                }
+                dp_allreduce_grads_prec(
+                    &mut grads,
+                    dp_comm,
+                    &dp_group,
+                    spec.precision,
+                );
+                grads.scale_all(1.0 / (scale * spec.dp as f32));
             }
             (loss, grads)
         };
 
-        // global-norm clip (identical on every rank)
-        let clip = Adam::clip_scale(&grads, ctx.comm, &mp_group);
+        // dynamic loss scaling (bf16): the group agrees on overflow, so
+        // every rank skips (or takes) the step together. f32 mode keeps
+        // the probe off the fabric entirely.
+        let take_step = if scaler.active() {
+            let flag = if grads.has_non_finite() { 1.0 } else { 0.0 };
+            let nf = ctx.comm.allreduce_scalar(&mp_group, flag);
+            scaler.update(nf > 0.0)
+        } else {
+            true
+        };
 
         let lr = sched.at(step);
-        adam.lr = lr;
-        adam.update(&mut model.params, &grads, clip);
+        if take_step {
+            // global-norm clip (identical on every rank)
+            let clip = Adam::clip_scale(&grads, ctx.comm, &mp_group);
+            adam.lr = lr;
+            adam.update(&mut model.params, &grads, clip);
+        }
 
         if dp_idx == 0 && mp_rank == 0 {
             steps.push(StepRecord {
@@ -363,6 +409,7 @@ fn validate(
         let (x, _) = loader.read_shard(t as f32);
         let (y, _) = loader.read_shard((t + spec.lead) as f32);
         let mut ctx = Ctx::new(model.mesh, model.rank, mp_comm, backend.as_ref());
+        ctx.precision = spec.precision;
         let (pred, _) = model.forward(&mut ctx, &x, 1)?;
         loss_acc += model.local_loss(&pred, &y);
         let (lat_l, lon_l, c_l) = model.local_dims();
@@ -382,6 +429,79 @@ fn validate(
     let denom = (cfg.lat * cfg.lon * spec.val_times.len()) as f32;
     let rmse = sse.data.iter().map(|s| (s / denom).sqrt()).collect();
     Ok((loss, rmse))
+}
+
+/// Dynamic loss scaling for the bf16 path. Gradients are multiplied by
+/// `scale` before they cross the DP fabric in 16 bits (lifting small
+/// values out of bf16's underflow range) and divided back out — together
+/// with the DP mean — after the reduce. Scales are powers of two, so in
+/// f32 the multiply/divide pair is exact and only the wire quantization
+/// differs from an unscaled run.
+///
+/// Backoff protocol (the standard AMP loop): if any rank sees a
+/// non-finite gradient after the reduce, every rank halves the scale and
+/// skips the optimizer step; after `growth_interval` consecutive good
+/// steps the scale doubles, up to `max_scale`. In `F32` mode the scaler
+/// is inert: `scale()` is 1, [`active`](GradScaler::active) is false,
+/// and the trainer never probes for overflow — the f32 step stays
+/// bit-identical to the pre-precision engine.
+#[derive(Clone, Debug)]
+pub struct GradScaler {
+    scale: f32,
+    enabled: bool,
+    good_steps: usize,
+    pub growth_interval: usize,
+    pub min_scale: f32,
+    pub max_scale: f32,
+}
+
+impl GradScaler {
+    /// Scaler for a precision policy: active (scale 2^14) under `Bf16`,
+    /// inert under `F32`.
+    pub fn new(prec: Precision) -> Self {
+        let enabled = prec == Precision::Bf16;
+        GradScaler {
+            scale: if enabled { 16384.0 } else { 1.0 },
+            enabled,
+            good_steps: 0,
+            growth_interval: 200,
+            min_scale: 1.0,
+            max_scale: 65536.0,
+        }
+    }
+
+    /// Current loss scale (1.0 when inert).
+    pub fn scale(&self) -> f32 {
+        self.scale
+    }
+
+    /// Whether the trainer should probe for overflow and call
+    /// [`update`](GradScaler::update) each step.
+    pub fn active(&self) -> bool {
+        self.enabled
+    }
+
+    /// Fold in one step's (group-agreed) overflow verdict. Returns
+    /// whether the optimizer step should be taken: `false` means the
+    /// gradients are non-finite, the scale has been halved, and the step
+    /// must be skipped so training resumes cleanly at the smaller scale.
+    pub fn update(&mut self, found_overflow: bool) -> bool {
+        if !self.enabled {
+            return !found_overflow;
+        }
+        if found_overflow {
+            self.scale = (self.scale * 0.5).max(self.min_scale);
+            self.good_steps = 0;
+            false
+        } else {
+            self.good_steps += 1;
+            if self.good_steps >= self.growth_interval {
+                self.good_steps = 0;
+                self.scale = (self.scale * 2.0).min(self.max_scale);
+            }
+            true
+        }
+    }
 }
 
 /// Default DP gradient bucket size, in f32 elements (1 MiB). Large enough
@@ -404,6 +524,17 @@ pub fn dp_allreduce_grads(
     dp_allreduce_grads_bucketed(grads, dp_comm, group, DP_BUCKET_ELEMS)
 }
 
+/// [`dp_allreduce_grads`] under a wire-precision policy: bf16 ships the
+/// bucket rings' chunks in 16 bits (f32 accumulation at each hop).
+pub fn dp_allreduce_grads_prec(
+    grads: &mut PStore,
+    dp_comm: &mut crate::comm::Comm,
+    group: &[usize],
+    prec: Precision,
+) {
+    dp_allreduce_grads_bucketed_prec(grads, dp_comm, group, DP_BUCKET_ELEMS, prec)
+}
+
 /// Bucketed DP gradient allreduce with an explicit bucket size (elements).
 /// All ranks of `group` must use the same size; every bucket holds at
 /// least one tensor, so a tensor larger than `bucket_elems` still
@@ -416,6 +547,17 @@ pub fn dp_allreduce_grads_bucketed(
     dp_comm: &mut crate::comm::Comm,
     group: &[usize],
     bucket_elems: usize,
+) {
+    dp_allreduce_grads_bucketed_prec(grads, dp_comm, group, bucket_elems, Precision::F32)
+}
+
+/// [`dp_allreduce_grads_bucketed`] under a wire-precision policy.
+pub fn dp_allreduce_grads_bucketed_prec(
+    grads: &mut PStore,
+    dp_comm: &mut crate::comm::Comm,
+    group: &[usize],
+    bucket_elems: usize,
+    prec: Precision,
 ) {
     if group.len() <= 1 {
         return;
@@ -432,7 +574,7 @@ pub fn dp_allreduce_grads_bucketed(
             elems += entries[end].numel();
             end += 1;
         }
-        dp_comm.allreduce_packed(group, &mut entries[start..end]);
+        dp_comm.allreduce_packed_prec(group, &mut entries[start..end], prec);
         start = end;
     }
 }
@@ -472,6 +614,11 @@ pub struct GradReduceScheduler<'a> {
     comm: &'a mut Comm,
     group: Vec<usize>,
     bucket_elems: usize,
+    /// loss scale applied while packing (exact in f32 for powers of two);
+    /// 1.0 packs by memcpy, keeping the f32 path bit-identical
+    scale: f32,
+    /// wire precision of the posted bucket rings
+    prec: Precision,
     cur_ids: Vec<(GradId, usize)>,
     cur_data: Vec<f32>,
     buckets: Vec<Bucket>,
@@ -494,7 +641,21 @@ impl<'a> GradReduceScheduler<'a> {
     /// rings advance from inside the kernel driver and every blocking
     /// wait, for the scheduler's whole lifetime.
     pub fn new(comm: &'a mut Comm, group: &[usize], bucket_elems: usize) -> Self {
-        Self::with_engine_hook(comm, group, bucket_elems, true)
+        Self::with_engine_hook(comm, group, bucket_elems, true, 1.0, Precision::F32)
+    }
+
+    /// Engine-driven scheduler with a loss scale and wire precision —
+    /// the bf16 trainer path: packed gradients are multiplied by `scale`
+    /// (the caller divides it back out after `finish`) and the bucket
+    /// rings ship their chunks at `prec`.
+    pub fn new_scaled(
+        comm: &'a mut Comm,
+        group: &[usize],
+        bucket_elems: usize,
+        scale: f32,
+        prec: Precision,
+    ) -> Self {
+        Self::with_engine_hook(comm, group, bucket_elems, true, scale, prec)
     }
 
     /// Emission-only scheduler: rings advance only when the backward
@@ -505,7 +666,7 @@ impl<'a> GradReduceScheduler<'a> {
         group: &[usize],
         bucket_elems: usize,
     ) -> Self {
-        Self::with_engine_hook(comm, group, bucket_elems, false)
+        Self::with_engine_hook(comm, group, bucket_elems, false, 1.0, Precision::F32)
     }
 
     fn with_engine_hook(
@@ -513,6 +674,8 @@ impl<'a> GradReduceScheduler<'a> {
         group: &[usize],
         bucket_elems: usize,
         hook: bool,
+        scale: f32,
+        prec: Precision,
     ) -> Self {
         let engine = ProgressEngine::new(comm);
         let _hook = hook.then(|| engine.install());
@@ -520,6 +683,8 @@ impl<'a> GradReduceScheduler<'a> {
             comm,
             group: group.to_vec(),
             bucket_elems: bucket_elems.max(1),
+            scale,
+            prec,
             cur_ids: Vec::new(),
             cur_data: pack_buf(bucket_elems),
             buckets: Vec::new(),
@@ -545,7 +710,11 @@ impl<'a> GradReduceScheduler<'a> {
             self.seal();
         }
         self.cur_ids.push((id, t.numel()));
-        self.cur_data.extend_from_slice(&t.data);
+        if self.scale != 1.0 {
+            self.cur_data.extend(t.data.iter().map(|x| x * self.scale));
+        } else {
+            self.cur_data.extend_from_slice(&t.data);
+        }
         if self.cur_data.len() >= self.bucket_elems {
             self.seal();
         }
@@ -567,7 +736,7 @@ impl<'a> GradReduceScheduler<'a> {
             std::mem::replace(&mut self.cur_data, pack_buf(self.bucket_elems));
         let ids = std::mem::take(&mut self.cur_ids);
         let payload = Tensor::new(vec![data.len()], data);
-        let coll = self.comm.allreduce_start(&self.group, payload);
+        let coll = self.comm.allreduce_start_prec(&self.group, payload, self.prec);
         let ticket = self.engine.register(coll);
         self.buckets.push(Bucket { ids, ticket, done: false });
     }
@@ -982,6 +1151,33 @@ mod tests {
         for (sa, sb) in a.steps.iter().zip(&b.steps) {
             assert_eq!(sa.loss.to_bits(), sb.loss.to_bits(), "step {}", sa.step);
         }
+    }
+
+    #[test]
+    fn grad_scaler_overflow_backoff_and_regrowth() {
+        let mut s = GradScaler::new(Precision::Bf16);
+        assert!(s.active());
+        assert_eq!(s.scale(), 16384.0);
+        // overflow: the scale halves and the step is skipped
+        assert!(!s.update(true));
+        assert_eq!(s.scale(), 8192.0);
+        // training resumes; after growth_interval good steps it doubles
+        s.growth_interval = 3;
+        assert!(s.update(false));
+        assert!(s.update(false));
+        assert_eq!(s.scale(), 8192.0);
+        assert!(s.update(false));
+        assert_eq!(s.scale(), 16384.0);
+        // repeated overflow floors at min_scale instead of reaching zero
+        for _ in 0..64 {
+            assert!(!s.update(true));
+        }
+        assert_eq!(s.scale(), 1.0);
+        // inert in f32 mode: scale pinned to 1, steps always taken
+        let mut f = GradScaler::new(Precision::F32);
+        assert!(!f.active());
+        assert!(f.update(false));
+        assert_eq!(f.scale(), 1.0);
     }
 
     #[test]

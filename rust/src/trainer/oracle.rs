@@ -92,6 +92,32 @@ pub fn run_dist_loss_and_grad(
     backend: Arc<dyn Backend>,
     rollout: usize,
 ) -> Result<(f32, Vec<(String, Tensor)>)> {
+    run_dist_loss_and_grad_prec(
+        cfg,
+        mesh,
+        global_params,
+        x,
+        y,
+        backend,
+        rollout,
+        crate::tensor::Precision::F32,
+    )
+}
+
+/// [`run_dist_loss_and_grad`] with an explicit storage/fabric precision —
+/// the bf16-vs-f32 tolerance oracles in `precision_props` run through
+/// this entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn run_dist_loss_and_grad_prec(
+    cfg: &ModelConfig,
+    mesh: &Mesh,
+    global_params: &[(String, Tensor)],
+    x: &Tensor,
+    y: &Tensor,
+    backend: Arc<dyn Backend>,
+    rollout: usize,
+    precision: crate::tensor::Precision,
+) -> Result<(f32, Vec<(String, Tensor)>)> {
     let mesh = *mesh;
     let net = Network::new(mesh.n());
     let mut handles = Vec::new();
@@ -110,6 +136,7 @@ pub fn run_dist_loss_and_grad(
             let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
             let yl = sample_shard(&y, (lat0, lat0 + la), (ch0, ch0 + lc));
             let mut ctx = Ctx::new(mesh, r, &mut comm, backend.as_ref());
+            ctx.precision = precision;
             let (loss, grads) = model.loss_and_grad(&mut ctx, &xl, &yl, rollout)?;
             Ok((loss, grads))
         }));

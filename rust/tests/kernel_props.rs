@@ -235,3 +235,58 @@ fn allocating_wrappers_match_oracle() {
         Ok(())
     });
 }
+
+/// The SIMD register tile keeps the scalar tile's per-element operation
+/// order (separate multiply then add, same kk sequence), so a `simd`
+/// build must be *bit-identical* to the scalar path — the scalar tile is
+/// the oracle, not a tolerance reference. Exercised across the same
+/// shape/stride/thread/accumulate grid as the blocked-kernel property
+/// test, flipping [`ops::set_force_scalar_tile`] between runs.
+#[cfg(feature = "simd")]
+#[test]
+fn simd_tile_is_bit_identical_to_scalar() {
+    check("simd tile == scalar tile (to_bits)", 80, |g: &mut Gen| {
+        let m = g.int(1, 40);
+        let k = g.int(1, 40);
+        let n = g.int(1, 40);
+        let threads = g.int(1, 4);
+        let acc = g.bool();
+        let which = g.int(0, 2);
+        let (x, w) = match which {
+            0 => (rand_t(g, m, k), rand_t(g, n, k)),
+            1 => (rand_t(g, m, k), rand_t(g, k, n)),
+            _ => (rand_t(g, k, m), rand_t(g, k, n)),
+        };
+        let base = rand_t(g, m, n);
+
+        let mut run = |force_scalar: bool| -> Tensor {
+            let prev = ops::set_force_scalar_tile(force_scalar);
+            let mut out = base.clone();
+            match which {
+                0 => ops::matmul_nt_into_with(
+                    out.view2_mut(), x.view2(), w.view2(), acc, threads,
+                ),
+                1 => ops::matmul_nn_into_with(
+                    out.view2_mut(), x.view2(), w.view2(), acc, threads,
+                ),
+                _ => ops::matmul_tn_into_with(
+                    out.view2_mut(), x.view2(), w.view2(), acc, threads,
+                ),
+            }
+            ops::set_force_scalar_tile(prev);
+            out
+        };
+
+        let scalar = run(true);
+        let simd = run(false);
+        for (i, (a, b)) in scalar.data.iter().zip(&simd.data).enumerate() {
+            if a.to_bits() != b.to_bits() {
+                return Err(format!(
+                    "op {which} m={m} k={k} n={n} threads={threads} acc={acc}: \
+                     bit mismatch at {i}: {a:?} vs {b:?}"
+                ));
+            }
+        }
+        Ok(())
+    });
+}

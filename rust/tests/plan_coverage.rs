@@ -36,14 +36,22 @@ fn all_plan_shapes_have_pjrt_primitives() {
             run_dist_loss_and_grad(&cfg, &mesh, &params, &x, &y, backend.clone(), 1)
                 .unwrap_or_else(|e| panic!("{preset}/{mesh} missing primitive: {e}"));
         }
-        let stats = engine.stats();
-        assert_eq!(
-            stats
-                .native_fallbacks
-                .load(std::sync::atomic::Ordering::Relaxed),
-            0,
-            "{preset}: native fallbacks occurred"
-        );
+        // Without the 'pjrt' feature the engine executes manifest-covered
+        // primitives on the native kernels (counted as fallbacks), so the
+        // zero-fallback assert only holds when PJRT actually serves them.
+        #[cfg(feature = "pjrt")]
+        {
+            let stats = engine.stats();
+            assert_eq!(
+                stats
+                    .native_fallbacks
+                    .load(std::sync::atomic::Ordering::Relaxed),
+                0,
+                "{preset}: native fallbacks occurred"
+            );
+        }
+        #[cfg(not(feature = "pjrt"))]
+        let _ = &engine;
     }
     std::env::remove_var("JIGSAW_STRICT_PJRT");
 }
