@@ -1,0 +1,153 @@
+//! Elastic-checkpoint bench: prices the robustness machinery the same
+//! way BENCH_progress.json prices the comm engine. Four rows:
+//!
+//!   * **save** — per-checkpoint overhead of the sharded save (codec
+//!     encode + atomic writes + world barrier + manifest), measured as
+//!     the train-step delta between checkpoint-every-step and
+//!     checkpoint-never runs;
+//!   * **restore** — `latest()` + `load_state` (manifest scan, digest
+//!     verify, shard decode, mesh-free assemble);
+//!   * **reshard** — sharding the assembled globals onto a *different*
+//!     mesh (the restore planner's extra work on a shrunken world);
+//!   * **recovery** — end-to-end `train_elastic` wall clock through an
+//!     injected rank fault: fail, tear down, shrink 2x2 -> smaller,
+//!     reload, finish.
+//!
+//! Writes BENCH_elastic.json.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use jigsaw::benchkit::{banner, synth_config, time_best, FlakyBackend};
+use jigsaw::checkpoint::{self, CheckpointSpec};
+use jigsaw::jigsaw::Mesh;
+use jigsaw::model::params::shard_params;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::trainer::{train, train_elastic, TrainSpec};
+use jigsaw::util::json::Json;
+use jigsaw::util::table::{fmt, Table};
+
+fn spec(mesh: Mesh, steps: usize) -> TrainSpec {
+    let mut s = TrainSpec::with_mesh(mesh, 1, steps);
+    s.seed = 11;
+    s
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("jigsaw-bench-elastic-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn main() {
+    banner("elastic", "sharded checkpoint save/restore/reshard + recovery");
+    let cfg = synth_config("elastic-bench", 64, 48, 2);
+    let mesh = Mesh::new(2, 2).unwrap();
+    let steps = 4usize;
+    let mut t = Table::new(&["path", "time (ms)", "note"]);
+    let mut record: BTreeMap<String, Json> = BTreeMap::new();
+    record.insert("config".into(), Json::Str(cfg.name.clone()));
+    record.insert("mesh".into(), Json::Str(mesh.to_string()));
+    record.insert("params".into(), Json::Num(cfg.param_count as f64));
+
+    // --- save: checkpoint-every-step vs checkpoint-never step delta ---
+    let dir = tmp("save");
+    let base_secs = time_best(3, || {
+        std::hint::black_box(train(&cfg, &spec(mesh, steps), Arc::new(NativeBackend)).unwrap());
+    });
+    let mut s_ck = spec(mesh, steps);
+    s_ck.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 1, keep_last: 2 });
+    let ck_secs = time_best(3, || {
+        let _ = std::fs::remove_dir_all(&dir);
+        std::hint::black_box(train(&cfg, &s_ck, Arc::new(NativeBackend)).unwrap());
+    });
+    let save_ms = (ck_secs - base_secs).max(0.0) * 1e3 / steps as f64;
+    t.row(&[
+        "save".into(),
+        fmt(save_ms),
+        format!("per checkpoint, {} ranks", mesh.n()),
+    ]);
+    record.insert("save_ms_per_checkpoint".into(), Json::Num(save_ms));
+
+    // leave a final checkpoint in place for the restore/reshard rows
+    let _ = std::fs::remove_dir_all(&dir);
+    train(&cfg, &s_ck, Arc::new(NativeBackend)).unwrap();
+    let meta = checkpoint::latest(&dir).unwrap().expect("checkpoint written");
+    let shard_bytes: u64 = meta.shards.iter().map(|(f, _)| {
+        std::fs::metadata(dir.join(format!("step-{:08}", meta.step)).join(f))
+            .map(|m| m.len())
+            .unwrap_or(0)
+    }).sum();
+    record.insert("shard_bytes_total".into(), Json::Num(shard_bytes as f64));
+
+    // --- restore: latest() + load_state ---
+    let restore_secs = time_best(5, || {
+        let m = checkpoint::latest(&dir).unwrap().unwrap();
+        std::hint::black_box(checkpoint::load_state(&cfg, &m).unwrap());
+    });
+    t.row(&[
+        "restore".into(),
+        fmt(restore_secs * 1e3),
+        format!("{} shard files, {} KiB", meta.shards.len(), shard_bytes / 1024),
+    ]);
+    record.insert("restore_ms".into(), Json::Num(restore_secs * 1e3));
+
+    // --- reshard: assembled globals -> every rank of a smaller mesh ---
+    let st = checkpoint::load_state(&cfg, &meta).unwrap();
+    let target = Mesh::new(1, 2).unwrap();
+    let reshard_secs = time_best(5, || {
+        for r in 0..target.n() {
+            std::hint::black_box(shard_params(&cfg, &target, r, &st.params).unwrap());
+        }
+    });
+    t.row(&[
+        "reshard".into(),
+        fmt(reshard_secs * 1e3),
+        format!("{mesh} -> {target}, all ranks"),
+    ]);
+    record.insert("reshard_ms".into(), Json::Num(reshard_secs * 1e3));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // --- recovery: end-to-end train_elastic through an injected fault ---
+    // probe run (trigger never fires) to learn the total matmul count,
+    // then fail at 3/4 of it: past the mid-run checkpoint, before the end
+    let dir = tmp("recover");
+    let mut s_el = spec(mesh, 6);
+    s_el.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 2, keep_last: 2 });
+    let probe = Arc::new(FlakyBackend::new(usize::MAX));
+    train(&cfg, &s_el, probe.clone()).unwrap();
+    let total = probe.calls();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let flaky = Arc::new(FlakyBackend::new(total * 3 / 4));
+    let t0 = Instant::now();
+    let rep = train_elastic(&cfg, &s_el, flaky, 3).unwrap();
+    let recover_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(rep.recoveries.len(), 1, "exactly one injected fault");
+    let rec = &rep.recoveries[0];
+    assert!(rec.to_mesh.n() < rec.from_mesh.n() || rec.to_dp < rec.from_dp);
+    assert!(rec.resumed_step.is_some(), "must resume from a checkpoint");
+    assert_eq!(rep.report.steps.last().unwrap().step, 5, "run must finish");
+    t.row(&[
+        "recovery".into(),
+        fmt(recover_secs * 1e3),
+        format!(
+            "{} dp{} -> {} dp{}, resumed step {}",
+            rec.from_mesh, rec.from_dp, rec.to_mesh, rec.to_dp,
+            rec.resumed_step.unwrap()
+        ),
+    ]);
+    record.insert("recovery_ms_end_to_end".into(), Json::Num(recover_secs * 1e3));
+    record.insert("recovery_from_mesh".into(), Json::Str(rec.from_mesh.to_string()));
+    record.insert("recovery_to_mesh".into(), Json::Str(rec.to_mesh.to_string()));
+    record.insert(
+        "recovery_resumed_step".into(),
+        Json::Num(rec.resumed_step.unwrap() as f64),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+
+    println!("{}", t.render());
+    std::fs::write("BENCH_elastic.json", Json::Obj(record).to_string() + "\n").unwrap();
+    println!("BENCH_elastic.json written");
+}

@@ -3,9 +3,13 @@
 //! (criterion is unavailable offline; benches are `harness = false`
 //! binaries built on this module).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 use crate::config::ModelConfig;
+use crate::runtime::native::NativeBackend;
+use crate::runtime::{Backend, MatmulOp};
+use crate::tensor::Tensor;
 
 /// Where bench CSVs land.
 pub const RESULTS_DIR: &str = "bench_results";
@@ -57,6 +61,42 @@ pub fn synth_config(name: &str, d_emb: usize, d_tok: usize, blocks: usize) -> Mo
     };
     cfg.param_count = cfg.derived_param_count();
     cfg
+}
+
+/// Fault-injection backend for the elastic-recovery tests and bench:
+/// delegates to [`NativeBackend`] but fails exactly one matmul — the
+/// `fail_at`-th call across all rank threads. Because the call counter
+/// keeps monotonically increasing, retried runs against the *same*
+/// instance sail past the trigger and complete, which is precisely the
+/// "node died once, fleet recovered" shape `train_elastic` handles.
+pub struct FlakyBackend {
+    inner: NativeBackend,
+    calls: AtomicUsize,
+    fail_at: usize,
+}
+
+impl FlakyBackend {
+    pub fn new(fail_at: usize) -> Self {
+        FlakyBackend { inner: NativeBackend, calls: AtomicUsize::new(0), fail_at }
+    }
+
+    /// Total matmul calls observed so far (fired or not).
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::SeqCst)
+    }
+}
+
+impl Backend for FlakyBackend {
+    fn matmul(&self, op: MatmulOp, x: &Tensor, w: &Tensor) -> anyhow::Result<Tensor> {
+        if self.calls.fetch_add(1, Ordering::SeqCst) == self.fail_at {
+            anyhow::bail!("injected rank fault (flaky backend, call {})", self.fail_at);
+        }
+        self.inner.matmul(op, x, w)
+    }
+
+    fn name(&self) -> &'static str {
+        "flaky"
+    }
 }
 
 #[cfg(test)]

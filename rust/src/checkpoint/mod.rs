@@ -1,0 +1,457 @@
+//! Sharded checkpointing + elastic mesh resharding (ROADMAP item;
+//! motivated by paper Section 7's multi-day runs — at multi-hundred-GPU
+//! scale rank failure is a when, not an if).
+//!
+//! Layout on disk, one directory per checkpointed step:
+//!
+//! ```text
+//! <dir>/step-00000040/
+//!   shard-mp0.bin      one per model-parallel rank (codec format);
+//!   shard-mp1.bin      written by the dp-group-0 replica only, since
+//!   ...                DP replicas are bit-identical after grad reduce
+//!   loader-dp0.json    one per data-parallel group (sample cursor +
+//!   ...                shuffle-RNG state), written by its mp-rank 0
+//!   manifest.json      written LAST by global rank 0, via tmp file +
+//!                      atomic rename, after a world barrier
+//! ```
+//!
+//! The ordering is the crash-safety argument: shard and loader files
+//! are fully written and fsync-visible before any rank passes the
+//! barrier, and the manifest only appears (atomically, via `rename`)
+//! after the barrier. A kill at *any* point therefore leaves either a
+//! complete checkpoint or a manifest-less directory that
+//! [`latest`] skips — never a corrupt "latest". Manifests also record
+//! an FNV-64 digest per file, so torn writes from crashed *earlier*
+//! attempts are detected and that checkpoint is skipped in favor of an
+//! older valid one.
+//!
+//! Restore is mesh-agnostic: shard files are self-describing (they
+//! embed the saving mesh's block-owner tables), so [`load_state`]
+//! assembles the global tensors and the trainer reshards them onto
+//! whatever mesh the resumed run uses — train on 2x2, resume on 4x4 or
+//! 1x2. The reshard oracle (tests/checkpoint_props.rs) pins that a
+//! resharded resume is bit-identical to an uninterrupted run on the
+//! target mesh.
+
+pub mod codec;
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::comm::Comm;
+use crate::config::ModelConfig;
+use crate::data::LoaderState;
+use crate::jigsaw::Mesh;
+use crate::model::params::{assemble_params, PStore};
+use crate::tensor::Precision;
+use crate::util::json::Json;
+
+/// Where and how often to checkpoint. Carried on `TrainSpec`.
+#[derive(Clone, Debug)]
+pub struct CheckpointSpec {
+    pub dir: PathBuf,
+    /// save every N steps (a save fires when `(step+1) % every == 0`)
+    pub every: usize,
+    /// retain at most this many step directories (min 1)
+    pub keep_last: usize,
+}
+
+impl CheckpointSpec {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointSpec { dir: dir.into(), every: 25, keep_last: 3 }
+    }
+}
+
+/// Parsed, checksum-verified manifest of one checkpoint directory.
+#[derive(Clone, Debug)]
+pub struct CheckpointMeta {
+    /// the `step-XXXXXXXX` directory this manifest describes
+    pub dir: PathBuf,
+    pub step: usize,
+    pub adam_step: u64,
+    pub mesh: Mesh,
+    pub dp: usize,
+    pub precision: Precision,
+    pub config_name: String,
+    pub config_hash: u64,
+    pub lr: f32,
+    pub encdec_lr_factor: f32,
+    pub scaler_scale: f32,
+    pub scaler_good_steps: usize,
+    /// (file name, fnv64) per model-parallel shard
+    pub shards: Vec<(String, u64)>,
+    /// (file name, fnv64) per data-parallel loader state
+    pub loaders: Vec<(String, u64)>,
+}
+
+/// Everything one rank contributes to a checkpoint. All ranks call
+/// [`save_rank`] (it contains a world barrier); which files a rank
+/// actually writes depends on its coordinates.
+pub struct RankSave<'a> {
+    pub mesh: &'a Mesh,
+    pub dp: usize,
+    pub dp_idx: usize,
+    pub mp_rank: usize,
+    pub precision: Precision,
+    /// steps completed — the resumed run starts at this step
+    pub step: usize,
+    pub adam_step: u64,
+    pub lr: f32,
+    pub encdec_lr_factor: f32,
+    pub scaler: (f32, usize),
+    pub config_name: &'a str,
+    pub config_hash: u64,
+    pub params: &'a PStore,
+    pub m: &'a PStore,
+    pub v: &'a PStore,
+    pub loader: LoaderState,
+}
+
+/// Global (assembled, mesh-free) training state reloaded from a
+/// checkpoint — ready to be resharded onto any viable mesh.
+pub struct GlobalState {
+    pub meta: CheckpointMeta,
+    pub params: Vec<(String, crate::tensor::Tensor)>,
+    pub m: Vec<(String, crate::tensor::Tensor)>,
+    pub v: Vec<(String, crate::tensor::Tensor)>,
+    /// loader state per saved data-parallel group (index = dp_idx)
+    pub loaders: Vec<LoaderState>,
+}
+
+fn step_dir_name(step: usize) -> String {
+    format!("step-{step:08}")
+}
+
+fn parse_step_dir(name: &str) -> Option<usize> {
+    let digits = name.strip_prefix("step-")?;
+    if digits.len() != 8 || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse().ok()
+}
+
+fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+    fs::rename(&tmp, path).with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+fn hex64(v: u64) -> String {
+    format!("0x{v:016x}")
+}
+
+fn parse_hex64(s: &str) -> Result<u64> {
+    let digits = s.strip_prefix("0x").unwrap_or(s);
+    u64::from_str_radix(digits, 16).map_err(|e| anyhow!("bad hex u64 {s:?}: {e}"))
+}
+
+fn loader_to_json(s: &LoaderState) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert(
+        "order".to_string(),
+        Json::Arr(s.order.iter().map(|&i| Json::Num(i as f64)).collect()),
+    );
+    o.insert("cursor".to_string(), Json::Num(s.cursor as f64));
+    // rng words are full-width u64 — they don't fit f64, so hex strings
+    o.insert(
+        "rng".to_string(),
+        Json::Arr(s.rng.iter().map(|&w| Json::Str(hex64(w))).collect()),
+    );
+    Json::Obj(o)
+}
+
+fn loader_from_json(j: &Json) -> Result<LoaderState> {
+    let order = j
+        .get("order")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("loader state: missing order"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("loader state: bad order entry")))
+        .collect::<Result<Vec<_>>>()?;
+    let cursor = j
+        .get("cursor")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("loader state: missing cursor"))?;
+    let rng_arr = j
+        .get("rng")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("loader state: missing rng"))?;
+    if rng_arr.len() != 4 {
+        bail!("loader state: rng has {} words, want 4", rng_arr.len());
+    }
+    let mut rng = [0u64; 4];
+    for (i, w) in rng_arr.iter().enumerate() {
+        rng[i] = parse_hex64(w.as_str().ok_or_else(|| anyhow!("loader state: rng word not a string"))?)?;
+    }
+    Ok(LoaderState { order, cursor, rng })
+}
+
+/// Write this rank's contribution to the checkpoint at `s.step`, then
+/// barrier on the world group; global rank 0 finishes by checksumming
+/// all files, atomically publishing `manifest.json`, and pruning old
+/// step directories. Must be called by every rank at the same step (the
+/// barrier deadlocks otherwise — same contract as any collective).
+pub fn save_rank(
+    ck: &CheckpointSpec,
+    s: &RankSave,
+    comm: &mut Comm,
+    world: &[usize],
+) -> Result<()> {
+    let dir = ck.dir.join(step_dir_name(s.step));
+    fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+
+    if s.dp_idx == 0 {
+        let bytes = codec::encode_shard(s.params, s.m, s.v);
+        write_atomic(&dir.join(format!("shard-mp{}.bin", s.mp_rank)), &bytes)?;
+    }
+    if s.mp_rank == 0 {
+        let j = loader_to_json(&s.loader).to_string();
+        write_atomic(&dir.join(format!("loader-dp{}.json", s.dp_idx)), j.as_bytes())?;
+    }
+
+    // Every rank's files are complete before anyone proceeds; only then
+    // may rank 0 publish the manifest that makes this checkpoint "real".
+    comm.allreduce_scalar(world, 0.0);
+
+    if s.dp_idx == 0 && s.mp_rank == 0 {
+        let mut shards = Vec::new();
+        for r in 0..s.mesh.n() {
+            let f = format!("shard-mp{r}.bin");
+            let bytes = fs::read(dir.join(&f)).with_context(|| format!("read back {f}"))?;
+            shards.push((f, codec::fnv64(&bytes)));
+        }
+        let mut loaders = Vec::new();
+        for g in 0..s.dp {
+            let f = format!("loader-dp{g}.json");
+            let bytes = fs::read(dir.join(&f)).with_context(|| format!("read back {f}"))?;
+            loaders.push((f, codec::fnv64(&bytes)));
+        }
+
+        let mut o = BTreeMap::new();
+        o.insert("version".into(), Json::Num(1.0));
+        o.insert("config".into(), Json::Str(s.config_name.to_string()));
+        o.insert("config_hash".into(), Json::Str(hex64(s.config_hash)));
+        o.insert("mesh".into(), Json::Str(s.mesh.to_string()));
+        o.insert("dp".into(), Json::Num(s.dp as f64));
+        o.insert("precision".into(), Json::Str(s.precision.to_string()));
+        o.insert("step".into(), Json::Num(s.step as f64));
+        o.insert("adam_step".into(), Json::Num(s.adam_step as f64));
+        o.insert("lr".into(), Json::Num(s.lr as f64));
+        o.insert("encdec_lr_factor".into(), Json::Num(s.encdec_lr_factor as f64));
+        let mut sc = BTreeMap::new();
+        sc.insert("scale".into(), Json::Num(s.scaler.0 as f64));
+        sc.insert("good_steps".into(), Json::Num(s.scaler.1 as f64));
+        o.insert("scaler".into(), Json::Obj(sc));
+        let file_list = |v: &[(String, u64)]| {
+            Json::Arr(
+                v.iter()
+                    .map(|(f, h)| {
+                        let mut e = BTreeMap::new();
+                        e.insert("file".into(), Json::Str(f.clone()));
+                        e.insert("fnv".into(), Json::Str(hex64(*h)));
+                        Json::Obj(e)
+                    })
+                    .collect(),
+            )
+        };
+        o.insert("shards".into(), file_list(&shards));
+        o.insert("loaders".into(), file_list(&loaders));
+
+        write_atomic(&dir.join("manifest.json"), Json::Obj(o).to_string().as_bytes())?;
+        prune(ck, s.step)?;
+    }
+    Ok(())
+}
+
+/// Delete step directories beyond `keep_last`, never touching the one
+/// just written. Best-effort: a failed delete is not a training error.
+fn prune(ck: &CheckpointSpec, just_wrote: usize) -> Result<()> {
+    let keep = ck.keep_last.max(1);
+    let mut steps: Vec<usize> = match fs::read_dir(&ck.dir) {
+        Ok(rd) => rd
+            .filter_map(|e| e.ok())
+            .filter_map(|e| parse_step_dir(&e.file_name().to_string_lossy()))
+            .collect(),
+        Err(_) => return Ok(()),
+    };
+    steps.sort_unstable_by(|a, b| b.cmp(a));
+    for &st in steps.iter().skip(keep) {
+        if st != just_wrote {
+            let _ = fs::remove_dir_all(ck.dir.join(step_dir_name(st)));
+        }
+    }
+    Ok(())
+}
+
+fn read_meta(dir: &Path) -> Result<CheckpointMeta> {
+    let raw = fs::read_to_string(dir.join("manifest.json"))
+        .with_context(|| format!("read {}/manifest.json", dir.display()))?;
+    let j = Json::parse(&raw).map_err(|e| anyhow!("manifest parse: {e}"))?;
+    let get_str = |k: &str| -> Result<&str> {
+        j.get(k).and_then(|v| v.as_str()).ok_or_else(|| anyhow!("manifest: missing {k}"))
+    };
+    let get_num = |k: &str| -> Result<f64> {
+        j.get(k).and_then(|v| v.as_f64()).ok_or_else(|| anyhow!("manifest: missing {k}"))
+    };
+    let version = get_num("version")? as u32;
+    if version != 1 {
+        bail!("manifest: unsupported version {version}");
+    }
+    let mesh = Mesh::parse(get_str("mesh")?).map_err(|e| anyhow!("manifest mesh: {e}"))?;
+    let precision: Precision = get_str("precision")?
+        .parse()
+        .map_err(|e| anyhow!("manifest precision: {e}"))?;
+    let scaler = j.get("scaler").ok_or_else(|| anyhow!("manifest: missing scaler"))?;
+    let file_list = |k: &str| -> Result<Vec<(String, u64)>> {
+        j.get(k)
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest: missing {k}"))?
+            .iter()
+            .map(|e| {
+                let f = e
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| anyhow!("manifest {k}: missing file"))?;
+                let h = parse_hex64(
+                    e.get("fnv")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow!("manifest {k}: missing fnv"))?,
+                )?;
+                Ok((f.to_string(), h))
+            })
+            .collect()
+    };
+    let meta = CheckpointMeta {
+        dir: dir.to_path_buf(),
+        step: get_num("step")? as usize,
+        adam_step: get_num("adam_step")? as u64,
+        dp: get_num("dp")? as usize,
+        mesh,
+        precision,
+        config_name: get_str("config")?.to_string(),
+        config_hash: parse_hex64(get_str("config_hash")?)?,
+        lr: get_num("lr")? as f32,
+        encdec_lr_factor: get_num("encdec_lr_factor")? as f32,
+        scaler_scale: scaler
+            .get("scale")
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| anyhow!("manifest: missing scaler.scale"))? as f32,
+        scaler_good_steps: scaler
+            .get("good_steps")
+            .and_then(|v| v.as_usize())
+            .ok_or_else(|| anyhow!("manifest: missing scaler.good_steps"))?,
+        shards: file_list("shards")?,
+        loaders: file_list("loaders")?,
+    };
+    if meta.shards.len() != meta.mesh.n() {
+        bail!("manifest: {} shards for a {} mesh", meta.shards.len(), meta.mesh);
+    }
+    if meta.loaders.len() != meta.dp {
+        bail!("manifest: {} loader states for dp {}", meta.loaders.len(), meta.dp);
+    }
+    // verify every listed file's digest — a torn write from a crashed
+    // attempt fails here and latest() falls back to an older step
+    for (f, want) in meta.shards.iter().chain(meta.loaders.iter()) {
+        let bytes = fs::read(dir.join(f)).with_context(|| format!("checkpoint file {f}"))?;
+        let got = codec::fnv64(&bytes);
+        if got != *want {
+            bail!("checkpoint file {f}: digest {} != manifest {}", hex64(got), hex64(*want));
+        }
+    }
+    Ok(meta)
+}
+
+/// Newest valid checkpoint under `dir`, or `None`. "Valid" means the
+/// manifest parses and every listed file passes its digest; invalid or
+/// manifest-less step directories are skipped in favor of older ones.
+pub fn latest(dir: &Path) -> Result<Option<CheckpointMeta>> {
+    let rd = match fs::read_dir(dir) {
+        Ok(rd) => rd,
+        Err(_) => return Ok(None),
+    };
+    let mut steps: Vec<usize> = rd
+        .filter_map(|e| e.ok())
+        .filter_map(|e| parse_step_dir(&e.file_name().to_string_lossy()))
+        .collect();
+    steps.sort_unstable_by(|a, b| b.cmp(a));
+    for st in steps {
+        if let Ok(meta) = read_meta(&dir.join(step_dir_name(st))) {
+            if meta.step == st {
+                return Ok(Some(meta));
+            }
+        }
+    }
+    Ok(None)
+}
+
+/// Load and assemble the full global state of a verified checkpoint.
+/// `cfg` must hash-match the saving run; the result is mesh-free and is
+/// resharded by the trainer onto the resumed run's mesh.
+pub fn load_state(cfg: &ModelConfig, meta: &CheckpointMeta) -> Result<GlobalState> {
+    if meta.config_hash != cfg.content_hash() {
+        bail!(
+            "checkpoint was saved for config {:?} (hash {}), refusing to resume config {:?} (hash {})",
+            meta.config_name,
+            hex64(meta.config_hash),
+            cfg.name,
+            hex64(cfg.content_hash()),
+        );
+    }
+    let mut pstores = Vec::new();
+    let mut mstores = Vec::new();
+    let mut vstores = Vec::new();
+    for (f, _) in &meta.shards {
+        let bytes = fs::read(meta.dir.join(f)).with_context(|| format!("shard {f}"))?;
+        let (p, m, v) = codec::decode_shard(&bytes).with_context(|| format!("shard {f}"))?;
+        pstores.push(p);
+        mstores.push(m);
+        vstores.push(v);
+    }
+    let params = assemble_params(cfg, &pstores.iter().collect::<Vec<_>>());
+    let m = assemble_params(cfg, &mstores.iter().collect::<Vec<_>>());
+    let v = assemble_params(cfg, &vstores.iter().collect::<Vec<_>>());
+    let mut loaders = Vec::new();
+    for (f, _) in &meta.loaders {
+        let raw = fs::read_to_string(meta.dir.join(f)).with_context(|| format!("loader {f}"))?;
+        let j = Json::parse(&raw).map_err(|e| anyhow!("loader {f}: {e}"))?;
+        loaders.push(loader_from_json(&j).with_context(|| format!("loader {f}"))?);
+    }
+    Ok(GlobalState { meta: meta.clone(), params, m, v, loaders })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loader_state_json_roundtrip() {
+        let s = LoaderState {
+            order: vec![3, 0, 2, 1],
+            cursor: 2,
+            rng: [u64::MAX, 0, 0xDEADBEEFCAFEBABE, 1],
+        };
+        let j = loader_to_json(&s).to_string();
+        let back = loader_from_json(&Json::parse(&j).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn step_dir_names_parse_and_sort() {
+        assert_eq!(parse_step_dir("step-00000040"), Some(40));
+        assert_eq!(parse_step_dir("step-0040"), None);
+        assert_eq!(parse_step_dir("manifest.json"), None);
+        assert_eq!(parse_step_dir("step-abcdefgh"), None);
+        assert_eq!(step_dir_name(40), "step-00000040");
+    }
+
+    #[test]
+    fn hex64_roundtrip() {
+        for v in [0u64, 1, u64::MAX, 0xcbf29ce484222325] {
+            assert_eq!(parse_hex64(&hex64(v)).unwrap(), v);
+        }
+    }
+}

@@ -15,7 +15,8 @@ use crate::perfmodel::{
 use crate::runtime::engine::{Engine, PjrtBackend};
 use crate::runtime::native::NativeBackend;
 use crate::runtime::Backend;
-use crate::trainer::{train, TrainSpec};
+use crate::checkpoint::CheckpointSpec;
+use crate::trainer::{train, train_elastic, TrainSpec};
 use crate::util::table::{fmt, Table};
 
 fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -116,6 +117,11 @@ fn print_usage() {
                      [--precision f32|bf16: bf16 stores/ships 16-bit,\n\
                       f32 master weights + dynamic loss scaling]\n\
                      [--backend auto|pjrt|native] [--rollout 1] [--log path]\n\
+                     [--checkpoint-dir d --checkpoint-every 25 --keep-last 3:\n\
+                      sharded checkpoints + elastic recovery (shrink the\n\
+                      mesh on rank failure, --max-recoveries 3)]\n\
+                     [--resume: continue from the newest valid checkpoint,\n\
+                      resharding onto the current mesh if it differs]\n\
            validate  --preset tiny --mesh 1x2  check mesh numerics vs the AOT oracle\n\
            simulate  --model 7 --mesh 2x2 --dp 8 --precision tf32|bf16 [--no-dataload]\n\
            roofline  [--precision fp32]      print the Fig-7 series\n\
@@ -142,12 +148,39 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     spec.val_every = flag(flags, "val-every", 0usize);
     spec.seed = flag(flags, "seed", 0u64);
     spec.precision = flag(flags, "precision", crate::tensor::Precision::F32);
+    if let Some(dir) = flags.get("checkpoint-dir") {
+        let mut ck = CheckpointSpec::new(dir);
+        ck.every = flag(flags, "checkpoint-every", ck.every);
+        ck.keep_last = flag(flags, "keep-last", ck.keep_last);
+        spec.checkpoint = Some(ck);
+    }
+    spec.resume = flag(flags, "resume", false);
     println!(
         "training {} ({} params) mesh={} ({}-way) dp={} steps={} precision={} backend={}",
         cfg.name, cfg.param_count, spec.mesh, spec.way(), spec.dp, spec.steps,
         spec.precision, backend.name()
     );
-    let report = train(&cfg, &spec, backend)?;
+    let report = if spec.checkpoint.is_some() {
+        let out = train_elastic(
+            &cfg,
+            &spec,
+            backend,
+            flag(flags, "max-recoveries", 3usize),
+        )?;
+        for ev in &out.recoveries {
+            println!(
+                "recovered: mesh {} dp {} -> mesh {} dp {} (resume step {:?}) after: {}",
+                ev.from_mesh, ev.from_dp, ev.to_mesh, ev.to_dp, ev.resumed_step,
+                ev.failure
+            );
+        }
+        out.report
+    } else {
+        train(&cfg, &spec, backend)?
+    };
+    if let Some(from) = report.resumed_from {
+        println!("resumed from step {from}");
+    }
     for s in report.steps.iter().step_by((spec.steps / 10).max(1)) {
         println!(
             "  step {:>4}  loss {:.5}  lr {:.2e}  rollout {}  read {} KiB",

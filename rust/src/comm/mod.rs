@@ -48,11 +48,13 @@
 //! deliveries do not signal this fabric's condvar, and a message that
 //! lands while the hook runs has already spent its `notify_all`.
 //!
-//! Failure containment: `Network::abort` flips the fabric into an
-//! aborted state in which every blocking receive panics with
-//! [`FABRIC_ABORTED`] instead of waiting forever — the trainer uses it
-//! to unwind surviving ranks when a peer thread dies, and all comm
-//! locks are poison-tolerant so the original failure stays readable.
+//! Failure containment: `Network::abort` (or `abort_from`, which also
+//! records the originating rank) flips the fabric into an aborted state
+//! in which every blocking receive panics with a typed
+//! [`CommError::Aborted`] payload instead of waiting forever — the
+//! trainer downcasts that payload to tell peer-death casualties apart
+//! from genuine bugs, and all comm locks are poison-tolerant so the
+//! original failure stays readable.
 //!
 //! Byte counters feed the perf model validation and the comm-volume
 //! benches. Wall-clock timing at paper scale comes from `perfmodel`; the
@@ -87,7 +89,7 @@
 use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -101,10 +103,45 @@ type Key = (usize, usize, u64); // (src, dst, tag)
 /// wake on their own cadence to keep polling.
 const PROGRESS_TICK: Duration = Duration::from_micros(100);
 
-/// Panic message raised by blocking receives after [`Network::abort`]:
-/// the trainer uses it to tell secondary (abort-induced) rank failures
-/// apart from the rank that actually failed.
+/// Display text of [`CommError::Aborted`] (kept as a constant so log
+/// scrapers and older tests keep matching). Classification no longer
+/// goes through this string: blocking receives raise a typed
+/// [`CommError`] panic payload, and the trainer downcasts it.
 pub const FABRIC_ABORTED: &str = "comm: fabric aborted (a peer rank failed)";
+
+/// Typed failure raised by fabric operations. Blocking receives unwound
+/// by [`Network::abort`] carry this as their panic payload
+/// (`panic_any`), so the recovery loop can tell a peer-death casualty
+/// apart from a genuine bug by downcast instead of panic-string
+/// matching.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommError {
+    /// The fabric was aborted because a peer rank died. `rank` names the
+    /// rank that originated the abort when the aborter recorded it via
+    /// [`Network::abort_from`]; `None` for an anonymous abort.
+    Aborted { rank: Option<usize> },
+}
+
+impl std::fmt::Display for CommError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CommError::Aborted { rank: Some(r) } => {
+                write!(f, "{FABRIC_ABORTED} (origin rank {r})")
+            }
+            CommError::Aborted { rank: None } => write!(f, "{FABRIC_ABORTED}"),
+        }
+    }
+}
+
+impl std::error::Error for CommError {}
+
+impl CommError {
+    /// Recover the typed error from a caught panic payload (the shape
+    /// `catch_unwind` hands back). `None` for any other panic.
+    pub fn from_panic(p: &(dyn std::any::Any + Send)) -> Option<CommError> {
+        p.downcast_ref::<CommError>().cloned()
+    }
+}
 
 /// Poison-tolerant lock: a rank thread that panics while holding a comm
 /// lock must not turn every peer's diagnosis into an opaque
@@ -221,6 +258,10 @@ struct Shared {
     /// set by [`Network::abort`]: blocking receives panic instead of
     /// waiting forever for a peer that died
     aborted: AtomicBool,
+    /// rank that originated the abort (`usize::MAX` = none recorded);
+    /// first writer wins, so casualties that re-abort after unwinding
+    /// never overwrite the true failer
+    abort_rank: AtomicUsize,
     n: usize,
 }
 
@@ -240,6 +281,7 @@ impl Network {
                 max_depth: AtomicU64::new(0),
                 fabric: Mutex::new(None),
                 aborted: AtomicBool::new(false),
+                abort_rank: AtomicUsize::new(usize::MAX),
                 n,
             }),
         }
@@ -273,12 +315,33 @@ impl Network {
     }
 
     /// Abort the fabric: every rank currently (or subsequently) blocked
-    /// in a receive panics with [`FABRIC_ABORTED`] instead of waiting
-    /// forever for a peer that died. Called by the trainer when a rank
-    /// thread fails, so the surviving ranks unwind and `train()` can
-    /// report *which* rank failed rather than deadlocking in its join
-    /// loop.
+    /// in a receive panics with a [`CommError::Aborted`] payload instead
+    /// of waiting forever for a peer that died. Called by the trainer
+    /// when a rank thread fails, so the surviving ranks unwind and
+    /// `train()` can report *which* rank failed rather than deadlocking
+    /// in its join loop.
     pub fn abort(&self) {
+        self.abort_impl(None);
+    }
+
+    /// Like [`abort`](Network::abort), but records `rank` as the origin
+    /// of the failure. The first recorded origin sticks (casualties that
+    /// re-abort while unwinding don't overwrite the true failer), and
+    /// subsequent aborted receives carry it in their
+    /// [`CommError::Aborted`] payload.
+    pub fn abort_from(&self, rank: usize) {
+        self.abort_impl(Some(rank));
+    }
+
+    fn abort_impl(&self, rank: Option<usize>) {
+        if let Some(r) = rank {
+            let _ = self.inner.abort_rank.compare_exchange(
+                usize::MAX,
+                r,
+                Ordering::SeqCst,
+                Ordering::SeqCst,
+            );
+        }
         // take the queue lock so the flag flip and the wake-up are
         // ordered against sleeping receivers
         let _q = plock(&self.inner.queues);
@@ -289,6 +352,12 @@ impl Network {
     /// Whether [`abort`](Network::abort) has been called.
     pub fn is_aborted(&self) -> bool {
         self.inner.aborted.load(Ordering::SeqCst)
+    }
+
+    /// The rank recorded as the abort's origin, if any.
+    pub fn abort_origin(&self) -> Option<usize> {
+        let r = self.inner.abort_rank.load(Ordering::SeqCst);
+        if r == usize::MAX { None } else { Some(r) }
     }
 
     /// Total bytes sent over every link.
@@ -448,8 +517,12 @@ impl Comm {
         let mut q = plock(&self.net.queues);
         loop {
             if self.net.aborted.load(Ordering::SeqCst) {
+                let origin = {
+                    let r = self.net.abort_rank.load(Ordering::SeqCst);
+                    if r == usize::MAX { None } else { Some(r) }
+                };
                 drop(q);
-                panic!("{FABRIC_ABORTED}");
+                std::panic::panic_any(CommError::Aborted { rank: origin });
             }
             let now = Instant::now();
             let mut next_ready: Option<Duration> = None;
@@ -1211,8 +1284,9 @@ impl PackedAllreduce {
 }
 
 impl Drop for PackedAllreduce {
-    /// A machine dropped mid-flight (a rank aborting on `FABRIC_ABORTED`
-    /// unwinds its scheduler with buckets still ringing) returns its
+    /// A machine dropped mid-flight (a rank aborting on
+    /// [`CommError::Aborted`] unwinds its scheduler with buckets still
+    /// ringing) returns its
     /// working payload to the tensor pool instead of freeing it, so an
     /// injected rank failure does not degrade the survivor's (or a
     /// restarted step's) steady-state pool behaviour.
@@ -1686,9 +1760,32 @@ mod tests {
         std::thread::sleep(Duration::from_millis(20));
         net.abort();
         let err = h.join().unwrap().unwrap_err();
-        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
-        assert!(msg.contains(FABRIC_ABORTED), "{msg}");
+        let ce = CommError::from_panic(&*err).expect("typed CommError payload");
+        assert_eq!(ce, CommError::Aborted { rank: None });
+        // display keeps the legacy sentinel for log scrapers
+        assert!(ce.to_string().contains(FABRIC_ABORTED), "{ce}");
         assert!(net.is_aborted());
+        assert_eq!(net.abort_origin(), None);
+    }
+
+    #[test]
+    fn abort_from_records_first_origin_and_payload_carries_it() {
+        let net = Network::new(4);
+        let b = net.endpoint(1);
+        let h = thread::spawn(move || {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                b.recv(0, 1) // never sent
+            }))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        net.abort_from(3);
+        // a casualty re-aborting must not overwrite the true failer
+        net.abort_from(1);
+        let err = h.join().unwrap().unwrap_err();
+        let ce = CommError::from_panic(&*err).expect("typed CommError payload");
+        assert_eq!(ce, CommError::Aborted { rank: Some(3) });
+        assert!(ce.to_string().contains("origin rank 3"), "{ce}");
+        assert_eq!(net.abort_origin(), Some(3));
     }
 
     #[test]
@@ -1784,6 +1881,30 @@ mod tests {
             got.capacity(),
             5000,
             "dropped machine's working payload was freed, not pooled"
+        );
+        crate::tensor::pool::put(got);
+    }
+
+    #[test]
+    fn dropped_inflight_bf16_collective_recycles_its_buffers() {
+        // same unwind shape as above, but with a bf16 ring in flight —
+        // the bf16 path wires extra quantize buffers through the machine
+        // and the abort-recovery loop re-enters bf16 training on the same
+        // thread pool, so pool recycling must hold for this precision too
+        let net = Network::new(2);
+        let mut c = net.endpoint(0);
+        let numel = 4099usize;
+        let mut data = Vec::with_capacity(6000);
+        data.resize(numel, 1.0);
+        let payload = Tensor::new(vec![numel], data);
+        let coll = c.allreduce_start_prec(&[0, 1], payload, Precision::Bf16);
+        assert!(!coll.is_done(), "peerless bf16 ring must still be in flight");
+        drop(coll);
+        let got = crate::tensor::pool::take(100);
+        assert_eq!(
+            got.capacity(),
+            6000,
+            "dropped bf16 machine's working payload was freed, not pooled"
         );
         crate::tensor::pool::put(got);
     }

@@ -79,6 +79,40 @@ impl ModelConfig {
         w
     }
 
+    /// FNV-1a digest over every architecture field (including the
+    /// channel-weight bits). Checkpoint manifests record it so a resume
+    /// against a different model configuration is rejected up front
+    /// instead of mis-assembling shards.
+    pub fn content_hash(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        let mut eat = |bytes: &[u8]| {
+            for &b in bytes {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+        };
+        eat(self.name.as_bytes());
+        for d in [
+            self.lat,
+            self.lon,
+            self.channels,
+            self.channels_padded,
+            self.patch,
+            self.d_emb,
+            self.d_tok,
+            self.d_ch,
+            self.blocks,
+            self.tokens,
+            self.patch_dim,
+        ] {
+            eat(&(d as u64).to_le_bytes());
+        }
+        for &w in &self.channel_weights {
+            eat(&w.to_bits().to_le_bytes());
+        }
+        h
+    }
+
     /// sample size in bytes (f32) — the domain-parallel I/O unit.
     pub fn sample_bytes(&self) -> u64 {
         (self.lat * self.lon * self.channels_padded * 4) as u64

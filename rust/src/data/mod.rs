@@ -186,6 +186,19 @@ pub struct Item {
     pub bytes_read: u64,
 }
 
+/// Resumable cursor state of a [`ShardedLoader`]: the shuffled epoch
+/// order, the position within it, and the raw shuffle-RNG state. The
+/// checkpoint subsystem persists one per data-parallel group (all MP
+/// partners of a group hold identical state by construction), so a
+/// resumed run continues the exact sample stream an uninterrupted run
+/// would have seen.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LoaderState {
+    pub order: Vec<usize>,
+    pub cursor: usize,
+    pub rng: [u64; 4],
+}
+
 /// Jigsaw-partitioned data loader for one rank.
 ///
 /// `mp_seed` must be identical across the rank's model-parallel group and
@@ -261,6 +274,26 @@ impl ShardedLoader {
 
     pub fn epoch_len(&self) -> usize {
         self.order.len()
+    }
+
+    /// Capture the resumable cursor state (see [`LoaderState`]).
+    pub fn state(&self) -> LoaderState {
+        LoaderState {
+            order: self.order.clone(),
+            cursor: self.cursor,
+            rng: self.rng.state(),
+        }
+    }
+
+    /// Restore a captured cursor state: subsequent [`next_item`]
+    /// (ShardedLoader::next_item) calls continue the exact stream the
+    /// saving loader would have produced. The shard geometry (mesh,
+    /// rank) is not part of the state — it is reconstructed by
+    /// [`ShardedLoader::new`] for whatever mesh the resumed run uses.
+    pub fn restore_state(&mut self, s: &LoaderState) {
+        self.order = s.order.clone();
+        self.cursor = s.cursor;
+        self.rng = Rng::from_state(s.rng);
     }
 
     /// Read this rank's shard of sample `t` (physical channels only are

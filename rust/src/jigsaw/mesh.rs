@@ -123,6 +123,23 @@ impl Mesh {
         best.ok_or(MeshError::Degree(n))
     }
 
+    /// Largest viable mesh strictly smaller than `below` ranks that both
+    /// factors ([`from_degree`](Mesh::from_degree)) and divides `cfg`'s
+    /// dimensions. This is the elastic-recovery shrink policy: after a
+    /// rank dies on an `n`-rank mesh, training resumes on
+    /// `shrink_for(cfg, n)`. `Err(Degree(0))` means no smaller mesh fits
+    /// the model (already at 1x1).
+    pub fn shrink_for(cfg: &ModelConfig, below: usize) -> Result<Mesh, MeshError> {
+        for d in (1..below).rev() {
+            if let Ok(m) = Mesh::from_degree(d) {
+                if m.validate_config(cfg).is_ok() {
+                    return Ok(m);
+                }
+            }
+        }
+        Err(MeshError::Degree(0))
+    }
+
     /// Parse a `TOKxCH` spec like `2x4` (also accepts a bare degree).
     pub fn parse(s: &str) -> Result<Mesh, MeshError> {
         let err = || MeshError::Parse(s.to_string());
@@ -655,5 +672,34 @@ mod tests {
         big.d_ch = 64;
         big.patch_dim = 256;
         assert!(Mesh::new(8, 8).unwrap().validate_config(&big).is_err());
+    }
+
+    #[test]
+    fn shrink_for_picks_largest_smaller_viable_mesh() {
+        let cfg = ModelConfig {
+            name: "t".into(),
+            lat: 8,
+            lon: 16,
+            channels: 6,
+            channels_padded: 8,
+            patch: 2,
+            d_emb: 32,
+            d_tok: 48,
+            d_ch: 32,
+            blocks: 2,
+            tokens: 32,
+            patch_dim: 32,
+            param_count: 0,
+            flops_forward: 0,
+            channel_weights: vec![1.0; 6],
+        };
+        // losing a rank from 2x2 lands on 1x3? no — 3 doesn't divide
+        // channels_padded 8 — so the next viable degree is 2 -> 1x2.
+        let m = Mesh::shrink_for(&cfg, 4).unwrap();
+        assert_eq!((m.tok(), m.ch()), (1, 2));
+        let m = Mesh::shrink_for(&cfg, 8).unwrap();
+        assert_eq!((m.tok(), m.ch()), (2, 2), "degree 7,6,5 don't fit; 4 does");
+        // already at a single rank: nothing smaller exists
+        assert!(Mesh::shrink_for(&cfg, 1).is_err());
     }
 }

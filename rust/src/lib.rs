@@ -65,8 +65,26 @@
 //! injected-delay model (`BENCH_overlap.json`, `BENCH_dp_overlap.json`)
 //! and bit-identical to the retained post-hoc `dp_allreduce_grads`
 //! oracle. A failing rank aborts the fabric so peers unwind instead of
-//! deadlocking (in-flight collective buffers recycle on the unwind),
-//! and `train` reports which rank failed.
+//! deadlocking (in-flight collective buffers recycle on the unwind);
+//! the abort travels as a typed [`comm::CommError::Aborted`] panic
+//! payload carrying the origin rank, so the trainer can tell peer-death
+//! apart from genuine bugs and `train` names the rank that actually
+//! failed.
+//!
+//! Failure is survivable, not just contained ([`checkpoint`]): every
+//! `--checkpoint-every` steps each rank writes its parameter + Adam
+//! shards (self-describing block-owner tables), each DP group persists
+//! its loader cursor/RNG, and — only after a world barrier — rank 0
+//! atomically publishes a checksummed manifest, so a kill at any
+//! instant leaves a valid "latest". Restore assembles the saved shards
+//! mesh-free and reshards them onto *any* viable mesh (train on 2x2,
+//! resume on 1x2 or 4x4); `tests/checkpoint_props.rs` pins the oracle
+//! that a resharded resume is bit-identical to an uninterrupted run on
+//! the target mesh. `trainer::train_elastic` closes the loop: on a
+//! typed rank failure it tears down both fabrics, shrinks the mesh
+//! (drop a DP replica first, else `Mesh::shrink_for`), reloads the last
+//! checkpoint, and keeps training — `BENCH_elastic.json` prices the
+//! save/restore/reshard path.
 //!
 //! Compute density and fabric volume have first-class knobs. The `simd`
 //! cargo feature (nightly) rewrites the kernels' 4x8 register tile on
@@ -91,6 +109,7 @@
 
 pub mod baselines;
 pub mod benchkit;
+pub mod checkpoint;
 pub mod cli;
 pub mod comm;
 pub mod config;

@@ -38,6 +38,13 @@ impl Adam {
         }
     }
 
+    /// Rebuild an optimizer mid-run from checkpointed moment shards and
+    /// step counter. The moment stores must be sharded for the *current*
+    /// mesh (the checkpoint loader reshards them before calling this).
+    pub fn from_state(m: PStore, v: PStore, step: u64, lr: f32) -> Self {
+        Adam { m, v, step, lr, encdec_lr_factor: 1.0 }
+    }
+
     /// Compute the global-clip scale factor. Replicated vectors are
     /// counted once (see `global_norm_sq_contrib`); the squared norm is
     /// group-reduced so every rank clips identically.

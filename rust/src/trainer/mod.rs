@@ -34,7 +34,25 @@
 //! A failing rank thread no longer deadlocks the run: its closure
 //! aborts both fabrics (waking any peer blocked in a receive), `train`
 //! collects every rank's outcome, and the error names the rank that
-//! actually failed rather than a secondary abort casualty.
+//! actually failed rather than a secondary abort casualty. Abort
+//! casualties are recognized *typed* — peers unwind with a
+//! [`CommError::Aborted`] panic payload, not a string — so the
+//! classification can't be fooled by error text, and the final error
+//! carries a [`RankFailure`] marker that [`train_elastic`] downcasts to
+//! drive recovery: tear both fabrics down, shrink the world (drop a DP
+//! replica first, else [`Mesh::shrink_for`]), reload the newest valid
+//! checkpoint, and keep training.
+//!
+//! Checkpointing (`TrainSpec::checkpoint`) rides the training loop:
+//! every `every` steps each rank calls [`checkpoint::save_rank`] at the
+//! same point in the step, which ends in a world barrier and an atomic
+//! manifest publish — see the [`checkpoint`] module docs for the
+//! crash-safety argument. Resume (`TrainSpec::resume`) reloads the
+//! newest valid checkpoint, reshards it onto the (possibly different)
+//! current mesh, and restores Adam moments, loss-scaler state, and each
+//! DP group's loader cursor/RNG — making a resumed run bit-identical to
+//! an uninterrupted run on the same mesh (pinned by
+//! `rust/tests/checkpoint_props.rs`).
 //!
 //! Mixed precision (`TrainSpec::precision = Bf16`, CLI `--precision
 //! bf16`): master weights, Adam state, and every accumulation stay f32;
@@ -54,11 +72,12 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::checkpoint::{self, CheckpointSpec, GlobalState, RankSave};
 use crate::comm::{
-    Comm, Network, ProgressEngine, ProgressGuard, ProgressTicket, FABRIC_ABORTED,
+    Comm, CommError, Network, ProgressEngine, ProgressGuard, ProgressTicket,
 };
 use crate::config::ModelConfig;
-use crate::data::ShardedLoader;
+use crate::data::{LoaderState, ShardedLoader};
 use crate::jigsaw::{Ctx, DistMat, Mesh, MeshError};
 use crate::model::dist::DistModel;
 use crate::model::params::{shard_params, GradId, GradSink, PStore};
@@ -102,6 +121,13 @@ pub struct TrainSpec {
     /// with f32 master weights and f32 accumulation. `F32` (default)
     /// keeps training bit-identical to the pre-precision engine.
     pub precision: Precision,
+    /// checkpoint destination + cadence (`--checkpoint-dir`,
+    /// `--checkpoint-every`); `None` disables checkpointing entirely
+    pub checkpoint: Option<CheckpointSpec>,
+    /// start from the newest valid checkpoint under `checkpoint.dir`
+    /// instead of from `seed` init (`--resume`); falls back to a fresh
+    /// start when no valid checkpoint exists yet
+    pub resume: bool,
 }
 
 impl TrainSpec {
@@ -129,6 +155,8 @@ impl TrainSpec {
             val_times: vec![40, 41, 42, 43],
             overlap_dp: true,
             precision: Precision::F32,
+            checkpoint: None,
+            resume: false,
         }
     }
 
@@ -161,24 +189,86 @@ pub struct TrainReport {
     pub comm_bytes: u64,
     /// final parameters, reassembled from MP group 0
     pub final_params: Vec<(String, Tensor)>,
+    /// the checkpoint step this run resumed from (`None` = fresh start)
+    pub resumed_from: Option<usize>,
 }
 
+/// Marker carried (as the anyhow source) by `train`'s rank-failure
+/// error, naming the first rank whose failure was *not* a typed abort
+/// casualty. [`train_elastic`] downcasts to it to decide recovery.
+#[derive(Clone, Copy, Debug)]
+pub struct RankFailure {
+    pub dp: usize,
+    pub mp: usize,
+}
+
+impl std::fmt::Display for RankFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank (dp {}, mp {}) failed", self.dp, self.mp)
+    }
+}
+
+impl std::error::Error for RankFailure {}
+
 /// Run distributed training. `backend` is shared by all rank threads.
+/// With `spec.resume`, reloads the newest valid checkpoint under
+/// `spec.checkpoint.dir` (resharding onto `spec.mesh` if it was saved
+/// on a different mesh) and continues from its step; a missing or
+/// empty checkpoint dir falls back to a fresh start.
 pub fn train(
     cfg: &ModelConfig,
     spec: &TrainSpec,
     backend: Arc<dyn Backend>,
 ) -> Result<TrainReport> {
+    let state = if spec.resume {
+        let ck = spec
+            .checkpoint
+            .as_ref()
+            .ok_or_else(|| anyhow!("resume requested without a checkpoint dir"))?;
+        match checkpoint::latest(&ck.dir)? {
+            Some(meta) => Some(checkpoint::load_state(cfg, &meta)?),
+            None => None,
+        }
+    } else {
+        None
+    };
+    train_from_state(cfg, spec, backend, state)
+}
+
+/// [`train`] from an explicit (possibly reloaded) global state. The
+/// state is mesh-free — this is where resharding happens: parameters
+/// and Adam moments are sharded onto `spec.mesh` regardless of the mesh
+/// they were saved on.
+pub fn train_from_state(
+    cfg: &ModelConfig,
+    spec: &TrainSpec,
+    backend: Arc<dyn Backend>,
+    state: Option<GlobalState>,
+) -> Result<TrainReport> {
     let mesh = spec.mesh;
     mesh.validate_config(cfg)
         .with_context(|| format!("mesh {mesh} does not fit model '{}'", cfg.name))?;
+    if let Some(st) = &state {
+        if st.meta.precision != spec.precision {
+            bail!(
+                "checkpoint at step {} was saved with precision {}, refusing to resume at {}",
+                st.meta.step,
+                st.meta.precision,
+                spec.precision
+            );
+        }
+    }
     let mp = mesh.n();
     let world = mp * spec.dp;
     // one fabric for jigsaw traffic per MP group + one global for DP
     let mp_nets: Vec<Network> = (0..spec.dp).map(|_| Network::new(mp)).collect();
     let dp_net = Network::new(world);
 
-    let global_params = init_global_params(cfg, spec.seed);
+    let global_params = match &state {
+        Some(st) => st.params.clone(),
+        None => init_global_params(cfg, spec.seed),
+    };
+    let resumed_from = state.as_ref().map(|st| st.meta.step);
 
     let mut handles = Vec::new();
     for g in 0..spec.dp {
@@ -189,6 +279,26 @@ pub fn train(
             let mut mp_comm = mp_nets[g].endpoint(r);
             let mut dp_comm = dp_net.endpoint(g * mp + r);
             let params = shard_params(&cfg, &mesh, r, &global_params)?;
+            let init = match &state {
+                Some(st) => {
+                    // reshard the assembled Adam moments onto this mesh;
+                    // moment stores carry no device-cache identity
+                    let mut m = shard_params(&cfg, &mesh, r, &st.m)?;
+                    let mut v = shard_params(&cfg, &mesh, r, &st.v)?;
+                    for dm in m.mats.values_mut().chain(v.mats.values_mut()) {
+                        dm.cache = None;
+                    }
+                    RankInit {
+                        start_step: st.meta.step,
+                        adam: Some((m, v, st.meta.adam_step)),
+                        scaler: Some((st.meta.scaler_scale, st.meta.scaler_good_steps)),
+                        // a DP group beyond the saved dp degree starts a
+                        // fresh loader stream (its seed is new anyway)
+                        loader: st.loaders.get(g).cloned(),
+                    }
+                }
+                None => RankInit { start_step: 0, adam: None, scaler: None, loader: None },
+            };
             let mp_net = mp_nets[g].clone();
             let dp_net = dp_net.clone();
             handles.push(std::thread::spawn(move || -> Result<RankOutput> {
@@ -198,47 +308,46 @@ pub fn train(
                 let out =
                     std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                         rank_main(
-                            cfg, spec, g, r, params, backend, &mut mp_comm,
+                            cfg, spec, g, r, params, init, backend, &mut mp_comm,
                             &mut dp_comm,
                         )
                     }))
-                    .unwrap_or_else(|p| {
-                        Err(anyhow!("rank thread panicked: {}", panic_message(&p)))
-                    });
+                    .unwrap_or_else(|p| Err(rank_panic_error(&p)));
                 if out.is_err() {
-                    mp_net.abort();
-                    dp_net.abort();
+                    // record this rank as the abort origin (first writer
+                    // wins, so a secondary casualty can't displace the
+                    // true failer on an already-aborted fabric)
+                    mp_net.abort_from(r);
+                    dp_net.abort_from(g * mp + r);
                 }
                 out
             }));
         }
     }
     let mut outs: Vec<RankOutput> = Vec::new();
-    let mut failures: Vec<(usize, usize, String)> = Vec::new();
+    let mut failures: Vec<(usize, usize, anyhow::Error)> = Vec::new();
     for (i, h) in handles.into_iter().enumerate() {
         let (g, r) = (i / mp, i % mp);
         match h.join() {
             Ok(Ok(out)) => outs.push(out),
-            Ok(Err(e)) => failures.push((g, r, format!("{e:#}"))),
+            Ok(Err(e)) => failures.push((g, r, e)),
             // unreachable in practice (the closure catches), but a panic
             // between catch_unwind and return must not poison the report
-            Err(p) => failures.push((g, r, panic_message(&p))),
+            Err(p) => failures.push((g, r, rank_panic_error(&p))),
         }
     }
     if !failures.is_empty() {
-        // secondary casualties died on the abort we raised; report the
-        // rank that actually failed
-        let primary = failures
+        // secondary casualties unwound with a typed CommError::Aborted;
+        // report the rank that actually failed
+        let n = failures.len();
+        let idx = failures
             .iter()
-            .find(|(_, _, why)| !why.contains(FABRIC_ABORTED))
-            .unwrap_or(&failures[0]);
-        bail!(
-            "rank (dp {}, mp {}) failed: {} ({}/{world} rank threads failed)",
-            primary.0,
-            primary.1,
-            primary.2,
-            failures.len()
-        );
+            .position(|(_, _, e)| e.downcast_ref::<CommError>().is_none())
+            .unwrap_or(0);
+        let (pg, pr, pe) = failures.swap_remove(idx);
+        return Err(anyhow::Error::new(RankFailure { dp: pg, mp: pr }).context(format!(
+            "rank (dp {pg}, mp {pr}) failed: {pe:#} ({n}/{world} rank threads failed)"
+        )));
     }
     let comm_bytes: u64 =
         mp_nets.iter().map(|n| n.total_bytes()).sum::<u64>() + dp_net.total_bytes();
@@ -254,7 +363,116 @@ pub fn train(
         final_val_rmse: r0.final_val_rmse.clone(),
         comm_bytes,
         final_params,
+        resumed_from,
     })
+}
+
+/// Typed conversion of a rank thread's panic payload: a fabric-abort
+/// unwind keeps its [`CommError`] identity (so the join loop can
+/// classify it), anything else becomes an opaque panic report.
+fn rank_panic_error(p: &(dyn std::any::Any + Send)) -> anyhow::Error {
+    match CommError::from_panic(p) {
+        Some(ce) => anyhow::Error::new(ce),
+        None => anyhow!("rank thread panicked: {}", panic_message(p)),
+    }
+}
+
+/// One recovery round taken by [`train_elastic`].
+#[derive(Clone, Debug)]
+pub struct RecoveryEvent {
+    /// the failure that triggered this round, rendered
+    pub failure: String,
+    pub from_mesh: Mesh,
+    pub from_dp: usize,
+    pub to_mesh: Mesh,
+    pub to_dp: usize,
+    /// checkpoint step resumed from (`None` = no checkpoint existed
+    /// yet; the shrunken world restarted from step 0)
+    pub resumed_step: Option<usize>,
+}
+
+/// [`train`] result plus the recovery rounds it took to get there.
+#[derive(Debug)]
+pub struct ElasticReport {
+    pub report: TrainReport,
+    pub recoveries: Vec<RecoveryEvent>,
+}
+
+/// Elastic training: run [`train`], and on a typed rank failure shrink
+/// the world and resume from the newest valid checkpoint instead of
+/// giving up. The shrink policy drops a data-parallel replica first
+/// (cheapest — no resharding of the surviving groups' layout), and only
+/// when `dp == 1` shrinks the jigsaw mesh itself via
+/// [`Mesh::shrink_for`]. Non-failure errors (bad spec, corrupt
+/// checkpoint) and failures past `max_recoveries` propagate unchanged.
+///
+/// Fabric teardown is structural: `train` joins every rank thread
+/// before returning its error, and both `Network`s drop with it, so
+/// each retry starts on fresh fabrics.
+pub fn train_elastic(
+    cfg: &ModelConfig,
+    spec: &TrainSpec,
+    backend: Arc<dyn Backend>,
+    max_recoveries: usize,
+) -> Result<ElasticReport> {
+    let mut spec = spec.clone();
+    let mut recoveries: Vec<RecoveryEvent> = Vec::new();
+    loop {
+        match train(cfg, &spec, backend.clone()) {
+            Ok(report) => return Ok(ElasticReport { report, recoveries }),
+            Err(e) => {
+                if e.downcast_ref::<RankFailure>().is_none() {
+                    return Err(e);
+                }
+                let Some(ck) = spec.checkpoint.clone() else {
+                    return Err(e.context(
+                        "rank failed with no checkpointing configured; nothing to resume from",
+                    ));
+                };
+                if recoveries.len() >= max_recoveries {
+                    return Err(e.context(format!(
+                        "rank failed after {} recoveries (limit {max_recoveries})",
+                        recoveries.len()
+                    )));
+                }
+                let (to_mesh, to_dp) = if spec.dp > 1 {
+                    (spec.mesh, spec.dp - 1)
+                } else {
+                    match Mesh::shrink_for(cfg, spec.mesh.n()) {
+                        Ok(m) => (m, 1),
+                        Err(_) => {
+                            return Err(e.context(
+                                "rank failed on the smallest viable mesh; cannot shrink further",
+                            ))
+                        }
+                    }
+                };
+                let resumed_step = checkpoint::latest(&ck.dir)?.map(|m| m.step);
+                recoveries.push(RecoveryEvent {
+                    failure: format!("{e:#}"),
+                    from_mesh: spec.mesh,
+                    from_dp: spec.dp,
+                    to_mesh,
+                    to_dp,
+                    resumed_step,
+                });
+                spec.mesh = to_mesh;
+                spec.dp = to_dp;
+                spec.resume = true;
+            }
+        }
+    }
+}
+
+/// Per-rank restored state handed to `rank_main` (all `None`/zero on a
+/// fresh start).
+struct RankInit {
+    start_step: usize,
+    /// resharded Adam moments + step counter
+    adam: Option<(PStore, PStore, u64)>,
+    /// (scale, good_steps) of the saved loss scaler
+    scaler: Option<(f32, usize)>,
+    loader: Option<LoaderState>,
 }
 
 struct RankOutput {
@@ -271,6 +489,7 @@ fn rank_main(
     dp_idx: usize,
     mp_rank: usize,
     params: PStore,
+    init: RankInit,
     backend: Arc<dyn Backend>,
     mp_comm: &mut crate::comm::Comm,
     dp_comm: &mut crate::comm::Comm,
@@ -286,19 +505,29 @@ fn rank_main(
         spec.seed ^ (0xD1 + dp_idx as u64) << 8, // distinct per DP group
         spec.n_modes,
     )?;
-    let mut adam = Adam::new(&model.params, spec.lr);
+    if let Some(ls) = &init.loader {
+        loader.restore_state(ls);
+    }
+    let mut adam = match init.adam {
+        Some((m, v, astep)) => Adam::from_state(m, v, astep, spec.lr),
+        None => Adam::new(&model.params, spec.lr),
+    };
     adam.encdec_lr_factor = spec.encdec_lr_factor;
     let sched = LrSchedule::paper(spec.lr, spec.n_times.max(1), 100);
 
     let mp_group = mesh.ranks();
     let dp_group = mesh.dp_group(spec.dp, mp_rank);
+    let world_group: Vec<usize> = (0..spec.dp * mesh.n()).collect();
 
     let mut steps = Vec::new();
     let mut val_loss = Vec::new();
     let mut final_val_rmse = Vec::new();
     let mut scaler = GradScaler::new(spec.precision);
+    if let Some((sc, good)) = init.scaler {
+        scaler.restore(sc, good);
+    }
 
-    for step in 0..spec.steps {
+    for step in init.start_step..spec.steps {
         // randomized rollout length, shared across *all* ranks by seed
         let rollout = if spec.max_rollout > 1 {
             let mut r = Rng::seed_from(spec.seed ^ 0x5EED ^ step as u64);
@@ -383,6 +612,34 @@ fn rank_main(
             if dp_idx == 0 && mp_rank == 0 {
                 val_loss.push((step, vl));
                 final_val_rmse = rmse;
+            }
+        }
+
+        // sharded checkpoint: every rank calls save_rank at the same
+        // step (it ends in a world barrier); the cadence is spec-driven,
+        // so ranks can't disagree on whether a step checkpoints
+        if let Some(ck) = &spec.checkpoint {
+            if ck.every > 0 && (step + 1) % ck.every == 0 {
+                let save = RankSave {
+                    mesh: &mesh,
+                    dp: spec.dp,
+                    dp_idx,
+                    mp_rank,
+                    precision: spec.precision,
+                    step: step + 1,
+                    adam_step: adam.step,
+                    lr: spec.lr,
+                    encdec_lr_factor: spec.encdec_lr_factor,
+                    scaler: scaler.state(),
+                    config_name: &cfg.name,
+                    config_hash: cfg.content_hash(),
+                    params: &model.params,
+                    m: &adam.m,
+                    v: &adam.v,
+                    loader: loader.state(),
+                };
+                checkpoint::save_rank(ck, &save, dp_comm, &world_group)
+                    .with_context(|| format!("checkpoint at step {}", step + 1))?;
             }
         }
     }
@@ -479,6 +736,23 @@ impl GradScaler {
     /// [`update`](GradScaler::update) each step.
     pub fn active(&self) -> bool {
         self.enabled
+    }
+
+    /// Resumable state: (current scale, good-step streak). Checkpoint
+    /// manifests persist it so a resumed bf16 run continues the exact
+    /// backoff/growth trajectory.
+    pub fn state(&self) -> (f32, usize) {
+        (self.scale, self.good_steps)
+    }
+
+    /// Restore a captured [`state`](GradScaler::state). A no-op when
+    /// inert (f32 mode pins scale 1.0 regardless of what a — possibly
+    /// bf16-saved — checkpoint recorded).
+    pub fn restore(&mut self, scale: f32, good_steps: usize) {
+        if self.enabled {
+            self.scale = scale.clamp(self.min_scale, self.max_scale);
+            self.good_steps = good_steps;
+        }
     }
 
     /// Fold in one step's (group-agreed) overflow verdict. Returns
@@ -854,6 +1128,8 @@ fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
         (*s).to_string()
     } else if let Some(s) = p.downcast_ref::<String>() {
         s.clone()
+    } else if let Some(ce) = CommError::from_panic(p) {
+        ce.to_string()
     } else {
         "opaque panic payload".to_string()
     }
@@ -1178,6 +1454,97 @@ mod tests {
         assert!(!f.active());
         assert!(f.update(false));
         assert_eq!(f.scale(), 1.0);
+    }
+
+    #[test]
+    fn failure_error_carries_the_rank_failure_marker() {
+        let backend = Arc::new(FailingBackend {
+            inner: NativeBackend,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            fail_at: 9,
+        });
+        let spec = TrainSpec::quick(2, 2, 4).unwrap();
+        let err = train(&cfg(), &spec, backend).unwrap_err();
+        let rf = err.downcast_ref::<RankFailure>().expect("RankFailure marker");
+        assert!(rf.dp < 2 && rf.mp < 2, "{rf}");
+    }
+
+    #[test]
+    fn bf16_rank_failure_is_contained_and_cleanup_is_complete() {
+        // the PR-4/5 containment tests run f32 only; bf16 adds loss
+        // scaling and u16 wire payloads to the abort-unwind path. Pin
+        // that a bf16 peer death still produces the typed, primary-named
+        // error — and that the same process immediately trains bf16
+        // cleanly afterwards (nothing the unwind recycled was corrupted).
+        let backend = Arc::new(FailingBackend {
+            inner: NativeBackend,
+            calls: std::sync::atomic::AtomicUsize::new(0),
+            fail_at: 9,
+        });
+        let mut spec = TrainSpec::quick(2, 2, 4).unwrap();
+        spec.precision = Precision::Bf16;
+        let err = train(&cfg(), &spec, backend).unwrap_err();
+        assert!(err.downcast_ref::<RankFailure>().is_some(), "{err:#}");
+        let msg = err.to_string();
+        assert!(msg.contains("injected backend fault"), "{msg}");
+        assert!(
+            !msg.contains(crate::comm::FABRIC_ABORTED),
+            "primary failure, not an abort casualty: {msg}"
+        );
+        let mut clean = TrainSpec::quick(2, 2, 4).unwrap();
+        clean.precision = Precision::Bf16;
+        let report = train(&cfg(), &clean, Arc::new(NativeBackend)).unwrap();
+        assert_eq!(report.steps.len(), 4);
+        assert!(report.steps.iter().all(|s| s.loss.is_finite()));
+    }
+
+    #[test]
+    fn elastic_recovery_survives_injected_rank_failure() {
+        let dir = std::env::temp_dir()
+            .join(format!("jigsaw-elastic-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let c = cfg();
+
+        // calibrate: total matmul calls of a clean 6-step run on the 2x2
+        // mesh (deterministic — per-step work is uniform, no validation)
+        let probe = Arc::new(crate::benchkit::FlakyBackend::new(usize::MAX));
+        let spec = TrainSpec::quick(4, 1, 6).unwrap();
+        train(&c, &spec, probe.clone()).unwrap();
+        let total = probe.calls();
+
+        // fail ~3/4 through: after the step-4 checkpoint, before the end
+        let backend = Arc::new(crate::benchkit::FlakyBackend::new(total * 3 / 4));
+        let mut spec = TrainSpec::quick(4, 1, 6).unwrap();
+        spec.checkpoint =
+            Some(CheckpointSpec { dir: dir.clone(), every: 2, keep_last: 2 });
+        let out = train_elastic(&c, &spec, backend, 3).unwrap();
+
+        assert_eq!(out.recoveries.len(), 1, "{:?}", out.recoveries);
+        let ev = &out.recoveries[0];
+        assert!(ev.failure.contains("injected rank fault"), "{}", ev.failure);
+        assert_eq!(ev.from_mesh.n(), 4);
+        assert!(ev.to_mesh.n() < 4, "shrunk from {} to {}", ev.from_mesh, ev.to_mesh);
+        assert_eq!(ev.resumed_step, Some(4), "resumed from the step-4 checkpoint");
+        assert_eq!(out.report.resumed_from, Some(4));
+        assert_eq!(out.report.steps.last().unwrap().step, 5, "ran to completion");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn elastic_propagates_non_rank_failures_unchanged() {
+        // a spec error is not a rank death: no retry loop, same message
+        let spec = TrainSpec::with_mesh(Mesh::flat(5).unwrap(), 1, 2);
+        let err = train_elastic(&cfg(), &spec, Arc::new(NativeBackend), 3)
+            .unwrap_err();
+        assert!(err.to_string().contains("mesh 1x5"), "{err}");
+    }
+
+    #[test]
+    fn resume_without_checkpoint_dir_is_a_clean_error() {
+        let mut spec = TrainSpec::quick(1, 1, 2).unwrap();
+        spec.resume = true;
+        let err = train(&cfg(), &spec, Arc::new(NativeBackend)).unwrap_err();
+        assert!(err.to_string().contains("without a checkpoint dir"), "{err}");
     }
 
     #[test]

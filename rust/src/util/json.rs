@@ -90,7 +90,23 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                // Exact round-trip: every finite f64 serializes to a
+                // decimal that parses back to the identical bits (Rust's
+                // `{}` Display emits shortest-round-trip digits). The
+                // three cases Display alone gets wrong for a JSON
+                // consumer: -0.0 would hit the integer path and lose its
+                // sign, and NaN/±inf would print invalid JSON tokens —
+                // checkpoint manifests carry loss scales and LRs that
+                // must reload bit-identically.
+                if n.is_nan() {
+                    out.push_str("NaN");
+                } else if *n == f64::INFINITY {
+                    out.push_str("Infinity");
+                } else if *n == f64::NEG_INFINITY {
+                    out.push_str("-Infinity");
+                } else if *n == 0.0 && n.is_sign_negative() {
+                    out.push_str("-0.0");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -174,6 +190,10 @@ impl<'a> Parser<'a> {
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
             Some(b'n') => self.lit("null", Json::Null),
+            // non-finite tokens (our own serializer's extension — plain
+            // JSON has no spelling for them)
+            Some(b'N') => self.lit("NaN", Json::Num(f64::NAN)),
+            Some(b'I') => self.lit("Infinity", Json::Num(f64::INFINITY)),
             Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
             _ => Err(format!("unexpected byte at {}", self.i)),
         }
@@ -192,6 +212,9 @@ impl<'a> Parser<'a> {
         let start = self.i;
         if self.peek() == Some(b'-') {
             self.i += 1;
+            if self.peek() == Some(b'I') {
+                return self.lit("Infinity", Json::Num(f64::NEG_INFINITY));
+            }
         }
         while let Some(c) = self.peek() {
             if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
@@ -337,6 +360,66 @@ mod tests {
         let src = r#"{"a":[1,2.5,"x"],"b":{"c":true}}"#;
         let v = Json::parse(src).unwrap();
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn f64_roundtrip_is_bit_exact() {
+        // every finite f64 must survive serialize -> parse with identical
+        // bits: loss scales, LRs, and bench wall-clocks ride this path
+        let vals: [f64; 14] = [
+            0.0,
+            -0.0,
+            0.1,
+            1.0 / 3.0,
+            1e-3f32 as f64,     // an f32-origin LR widened to f64
+            16384.0,            // a power-of-two loss scale
+            2.5e-323,           // subnormal
+            f64::MIN_POSITIVE,
+            f64::MAX,
+            -f64::MAX,
+            9e15,               // just past the integer fast path
+            9007199254740993.0, // 2^53 + 1 (rounds to 2^53; still exact)
+            1.5e300,
+            -7.123456789012345e-9,
+        ];
+        for v in vals {
+            let s = Json::Num(v).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(
+                back.to_bits(),
+                v.to_bits(),
+                "{v:?} -> {s:?} -> {back:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_zero_keeps_its_sign() {
+        let s = Json::Num(-0.0).to_string();
+        assert_eq!(s, "-0.0");
+        let back = Json::parse(&s).unwrap().as_f64().unwrap();
+        assert!(back == 0.0 && back.is_sign_negative());
+    }
+
+    #[test]
+    fn non_finite_tokens_roundtrip() {
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "Infinity");
+        assert_eq!(Json::Num(f64::NEG_INFINITY).to_string(), "-Infinity");
+        assert_eq!(Json::Num(f64::NAN).to_string(), "NaN");
+        assert_eq!(
+            Json::parse("Infinity").unwrap().as_f64(),
+            Some(f64::INFINITY)
+        );
+        assert_eq!(
+            Json::parse("-Infinity").unwrap().as_f64(),
+            Some(f64::NEG_INFINITY)
+        );
+        assert!(Json::parse("NaN").unwrap().as_f64().unwrap().is_nan());
+        // inside containers too
+        let v = Json::parse(r#"{"a":[NaN,-Infinity]}"#).unwrap();
+        let a = v.get("a").unwrap().as_arr().unwrap();
+        assert!(a[0].as_f64().unwrap().is_nan());
+        assert_eq!(a[1].as_f64(), Some(f64::NEG_INFINITY));
     }
 
     #[test]

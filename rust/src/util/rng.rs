@@ -26,6 +26,18 @@ impl Rng {
         Rng { s: [next(), next(), next(), next()] }
     }
 
+    /// Raw generator state — the checkpoint subsystem persists it so a
+    /// resumed run continues the exact stream (same draws, same order)
+    /// instead of restarting from the seed.
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator mid-stream from a captured [`state`](Rng::state).
+    pub fn from_state(s: [u64; 4]) -> Self {
+        Rng { s }
+    }
+
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -88,6 +100,18 @@ mod tests {
         let mut a = Rng::seed_from(1);
         let mut b = Rng::seed_from(2);
         assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn state_roundtrip_continues_the_stream() {
+        let mut a = Rng::seed_from(9);
+        for _ in 0..17 {
+            a.next_u64();
+        }
+        let mut b = Rng::from_state(a.state());
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
     }
 
     #[test]

@@ -1,0 +1,346 @@
+//! Checkpoint + elastic-reshard oracles (artifact-free, native backend):
+//!
+//!   * **checkpoint fidelity** — the assembled parameters of a saved
+//!     checkpoint are bit-identical to the saving run's in-memory
+//!     final parameters;
+//!   * **reshard identity** — sharding the assembled state onto any
+//!     viable target mesh and reassembling reproduces the globals bit
+//!     for bit (the restore planner is a pure owner-map remapping);
+//!   * **same-mesh resume** — save at step k, resume to k+m: losses and
+//!     final weights bit-identical to an uninterrupted k+m run on the
+//!     same mesh (f32 and bf16 — determinism holds at both precisions);
+//!   * **cross-mesh resume** — save on mesh A, resume on mesh B: a
+//!     doubly-interrupted resume on B is bit-identical to a singly
+//!     interrupted one, i.e. once resharded onto B, the trajectory is
+//!     exactly B's (cross-mesh *trajectories* differ in fp rounding —
+//!     mesh_props pins that tolerance — so the oracle compares runs
+//!     that share the resharded starting point);
+//!   * **crash safety** — a torn shard write or missing manifest never
+//!     yields a corrupt "latest": `latest()` falls back to the newest
+//!     checkpoint whose digests verify;
+//!   * **pruning** — keep-last-N retains exactly N step directories.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use jigsaw::checkpoint::{self, CheckpointSpec};
+use jigsaw::config::ModelConfig;
+use jigsaw::jigsaw::Mesh;
+use jigsaw::model::params::{assemble_params, shard_params};
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::tensor::{Precision, Tensor};
+use jigsaw::trainer::{train, TrainSpec};
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "ckpt-test".into(),
+        lat: 8,
+        lon: 16,
+        channels: 6,
+        channels_padded: 8,
+        patch: 2,
+        d_emb: 32,
+        d_tok: 48,
+        d_ch: 32,
+        blocks: 2,
+        tokens: 32,
+        patch_dim: 32,
+        param_count: 12904,
+        flops_forward: 0,
+        channel_weights: vec![1.0; 6],
+    }
+}
+
+fn tmp_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("jigsaw-ckpt-{}-{name}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn spec(mesh: Mesh, dp: usize, steps: usize, prec: Precision) -> TrainSpec {
+    let mut s = TrainSpec::with_mesh(mesh, dp, steps);
+    s.seed = 7;
+    s.precision = prec;
+    s
+}
+
+fn assert_params_bitwise(
+    a: &[(String, Tensor)],
+    b: &[(String, Tensor)],
+    what: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{what}: param list length");
+    for ((na, ta), (nb, tb)) in a.iter().zip(b) {
+        assert_eq!(na, nb, "{what}: param order");
+        assert_eq!(ta.shape, tb.shape, "{what}: {na} shape");
+        for (i, (va, vb)) in ta.data.iter().zip(&tb.data).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{what}: {na}[{i}] {va} != {vb}"
+            );
+        }
+    }
+}
+
+/// Train `k` steps with a checkpoint at step `k` in `dir`, on `mesh_a`.
+fn save_run(
+    c: &ModelConfig,
+    mesh_a: Mesh,
+    dp: usize,
+    k: usize,
+    prec: Precision,
+    dir: &PathBuf,
+) -> jigsaw::trainer::TrainReport {
+    let mut s = spec(mesh_a, dp, k, prec);
+    s.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: k, keep_last: 3 });
+    train(c, &s, Arc::new(NativeBackend)).unwrap()
+}
+
+#[test]
+fn checkpoint_params_match_in_memory_finals_bitwise() {
+    let c = cfg();
+    for (mesh, dp) in [
+        (Mesh::unit(), 1usize),
+        (Mesh::new(1, 2).unwrap(), 2),
+        (Mesh::new(2, 2).unwrap(), 1),
+    ] {
+        let dir = tmp_dir(&format!("fidelity-{mesh}-dp{dp}"));
+        let report = save_run(&c, mesh, dp, 3, Precision::F32, &dir);
+        let meta = checkpoint::latest(&dir).unwrap().expect("checkpoint written");
+        assert_eq!(meta.step, 3);
+        assert_eq!(meta.dp, dp);
+        let st = checkpoint::load_state(&c, &meta).unwrap();
+        assert_params_bitwise(&st.params, &report.final_params, &format!("{mesh} dp{dp}"));
+        assert_eq!(st.loaders.len(), dp);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn reshard_roundtrip_is_identity_across_meshes() {
+    // layout-level oracle: assemble(shard(globals, mesh_b)) == globals,
+    // for globals that came out of a real mesh_a checkpoint
+    let c = cfg();
+    let dir = tmp_dir("reshard-id");
+    save_run(&c, Mesh::new(2, 2).unwrap(), 1, 2, Precision::F32, &dir);
+    let meta = checkpoint::latest(&dir).unwrap().unwrap();
+    let st = checkpoint::load_state(&c, &meta).unwrap();
+    for mesh_b in [
+        Mesh::unit(),
+        Mesh::new(1, 2).unwrap(),
+        Mesh::new(2, 2).unwrap(),
+        Mesh::new(2, 4).unwrap(),
+    ] {
+        let stores: Vec<_> = (0..mesh_b.n())
+            .map(|r| shard_params(&c, &mesh_b, r, &st.params).unwrap())
+            .collect();
+        let back = assemble_params(&c, &stores.iter().collect::<Vec<_>>());
+        assert_params_bitwise(&back, &st.params, &format!("reshard via {mesh_b}"));
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn same_mesh_resume_is_bit_identical_to_uninterrupted() {
+    let c = cfg();
+    let cases = [
+        (Mesh::unit(), 1usize, Precision::F32),
+        (Mesh::new(1, 2).unwrap(), 1, Precision::F32),
+        (Mesh::new(2, 2).unwrap(), 2, Precision::F32),
+        (Mesh::new(1, 2).unwrap(), 1, Precision::Bf16),
+    ];
+    for (mesh, dp, prec) in cases {
+        let (k, m) = (3usize, 3usize);
+        let dir = tmp_dir(&format!("resume-{mesh}-dp{dp}-{prec}"));
+        // interrupted: k steps + checkpoint, then resume to k+m
+        save_run(&c, mesh, dp, k, prec, &dir);
+        let mut s2 = spec(mesh, dp, k + m, prec);
+        s2.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: k, keep_last: 3 });
+        s2.resume = true;
+        let resumed = train(&c, &s2, Arc::new(NativeBackend)).unwrap();
+        assert_eq!(resumed.resumed_from, Some(k));
+        // uninterrupted reference (checkpointing on, so the collective
+        // schedule matches; it only adds barriers, never arithmetic)
+        let dir_u = tmp_dir(&format!("resume-u-{mesh}-dp{dp}-{prec}"));
+        let mut su = spec(mesh, dp, k + m, prec);
+        su.checkpoint =
+            Some(CheckpointSpec { dir: dir_u.clone(), every: k, keep_last: 3 });
+        let full = train(&c, &su, Arc::new(NativeBackend)).unwrap();
+
+        assert_params_bitwise(
+            &resumed.final_params,
+            &full.final_params,
+            &format!("{mesh} dp{dp} {prec}"),
+        );
+        // the resumed run's step records are the tail of the full run's
+        assert_eq!(resumed.steps.len(), m);
+        for (sr, sf) in resumed.steps.iter().zip(full.steps.iter().skip(k)) {
+            assert_eq!(sr.step, sf.step);
+            assert_eq!(
+                sr.loss.to_bits(),
+                sf.loss.to_bits(),
+                "{mesh} dp{dp} {prec} step {} loss {} vs {}",
+                sr.step,
+                sr.loss,
+                sf.loss
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir_u);
+    }
+}
+
+#[test]
+fn cross_mesh_resume_matches_target_mesh_trajectory() {
+    // save on mesh A; resume on mesh B. Oracle: a second interruption on
+    // B (resume, checkpoint again, resume again) lands bit-identically
+    // on the single-resume run — i.e. after the reshard the trajectory
+    // is purely B's own.
+    let c = cfg();
+    let cases = [
+        // (mesh_a, dp_a, mesh_b, dp_b, precision)
+        (Mesh::new(2, 2).unwrap(), 1usize, Mesh::unit(), 1usize, Precision::F32),
+        (Mesh::new(2, 2).unwrap(), 1, Mesh::new(1, 2).unwrap(), 1, Precision::F32),
+        (Mesh::unit(), 1, Mesh::new(2, 4).unwrap(), 1, Precision::F32),
+        (Mesh::new(1, 2).unwrap(), 2, Mesh::new(2, 2).unwrap(), 1, Precision::F32),
+        (Mesh::new(2, 2).unwrap(), 1, Mesh::new(1, 2).unwrap(), 1, Precision::Bf16),
+    ];
+    for (mesh_a, dp_a, mesh_b, dp_b, prec) in cases {
+        let (k, j, m) = (2usize, 2usize, 2usize);
+        let label = format!("{mesh_a}dp{dp_a} -> {mesh_b}dp{dp_b} {prec}");
+        let dir1 = tmp_dir(&format!("xmesh1-{label}"));
+        save_run(&c, mesh_a, dp_a, k, prec, &dir1);
+
+        // single interruption: resume on B straight to k+j+m
+        let dir_single = tmp_dir(&format!("xmesh-single-{label}"));
+        copy_tree(&dir1, &dir_single);
+        let mut s_single = spec(mesh_b, dp_b, k + j + m, prec);
+        s_single.checkpoint =
+            Some(CheckpointSpec { dir: dir_single.clone(), every: k + j, keep_last: 3 });
+        s_single.resume = true;
+        let single = train(&c, &s_single, Arc::new(NativeBackend)).unwrap();
+        assert_eq!(single.resumed_from, Some(k), "{label}");
+
+        // double interruption: resume on B to k+j (checkpointing at
+        // k+j), then resume again on B to k+j+m
+        let dir_double = tmp_dir(&format!("xmesh-double-{label}"));
+        copy_tree(&dir1, &dir_double);
+        let mut s_d1 = spec(mesh_b, dp_b, k + j, prec);
+        s_d1.checkpoint =
+            Some(CheckpointSpec { dir: dir_double.clone(), every: k + j, keep_last: 3 });
+        s_d1.resume = true;
+        let d1 = train(&c, &s_d1, Arc::new(NativeBackend)).unwrap();
+        assert_eq!(d1.resumed_from, Some(k), "{label}");
+        let mut s_d2 = spec(mesh_b, dp_b, k + j + m, prec);
+        s_d2.checkpoint =
+            Some(CheckpointSpec { dir: dir_double.clone(), every: k + j, keep_last: 3 });
+        s_d2.resume = true;
+        let d2 = train(&c, &s_d2, Arc::new(NativeBackend)).unwrap();
+        assert_eq!(d2.resumed_from, Some(k + j), "{label}");
+
+        assert_params_bitwise(&d2.final_params, &single.final_params, &label);
+        // the double run's final leg matches the single run's tail
+        for (sr, sf) in d2.steps.iter().zip(single.steps.iter().skip(j)) {
+            assert_eq!(sr.step, sf.step, "{label}");
+            assert_eq!(sr.loss.to_bits(), sf.loss.to_bits(), "{label} step {}", sr.step);
+        }
+        for d in [&dir1, &dir_single, &dir_double] {
+            let _ = std::fs::remove_dir_all(d);
+        }
+    }
+}
+
+/// Recursive copy (std-only; test fixture helper).
+fn copy_tree(src: &PathBuf, dst: &PathBuf) {
+    std::fs::create_dir_all(dst).unwrap();
+    for e in std::fs::read_dir(src).unwrap() {
+        let e = e.unwrap();
+        let to = dst.join(e.file_name());
+        if e.file_type().unwrap().is_dir() {
+            copy_tree(&e.path(), &to);
+        } else {
+            std::fs::copy(e.path(), &to).unwrap();
+        }
+    }
+}
+
+#[test]
+fn corrupt_or_torn_checkpoints_fall_back_to_older_valid_ones() {
+    let c = cfg();
+    let dir = tmp_dir("fallback");
+    // checkpoints at steps 2 and 4
+    let mut s = spec(Mesh::new(1, 2).unwrap(), 1, 4, Precision::F32);
+    s.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 2, keep_last: 3 });
+    train(&c, &s, Arc::new(NativeBackend)).unwrap();
+    assert_eq!(checkpoint::latest(&dir).unwrap().unwrap().step, 4);
+
+    // flip one byte inside step-4's shard: digest mismatch -> fall back
+    let shard4 = dir.join("step-00000004").join("shard-mp0.bin");
+    let mut bytes = std::fs::read(&shard4).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x01;
+    std::fs::write(&shard4, &bytes).unwrap();
+    let meta = checkpoint::latest(&dir).unwrap().expect("older checkpoint survives");
+    assert_eq!(meta.step, 2, "torn step-4 shard must not be 'latest'");
+
+    // a manifest-less directory (the kill-mid-write shape: files
+    // present, rename never happened) is skipped entirely
+    let half = dir.join("step-00000006");
+    std::fs::create_dir_all(&half).unwrap();
+    std::fs::write(half.join("shard-mp0.bin"), b"partial garbage").unwrap();
+    std::fs::write(half.join("manifest.json.tmp"), b"{\"step\":6").unwrap();
+    let meta = checkpoint::latest(&dir).unwrap().unwrap();
+    assert_eq!(meta.step, 2);
+
+    // the fallback checkpoint actually loads and resumes
+    let mut s2 = spec(Mesh::new(1, 2).unwrap(), 1, 5, Precision::F32);
+    s2.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 10, keep_last: 3 });
+    s2.resume = true;
+    let r = train(&c, &s2, Arc::new(NativeBackend)).unwrap();
+    assert_eq!(r.resumed_from, Some(2));
+    assert_eq!(r.steps.first().unwrap().step, 2);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn keep_last_prunes_old_step_directories() {
+    let c = cfg();
+    let dir = tmp_dir("prune");
+    let mut s = spec(Mesh::unit(), 1, 5, Precision::F32);
+    s.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 1, keep_last: 2 });
+    train(&c, &s, Arc::new(NativeBackend)).unwrap();
+    let mut kept: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.starts_with("step-"))
+        .collect();
+    kept.sort();
+    assert_eq!(kept, vec!["step-00000004", "step-00000005"], "{kept:?}");
+    assert_eq!(checkpoint::latest(&dir).unwrap().unwrap().step, 5);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mismatched_config_or_precision_is_refused() {
+    let c = cfg();
+    let dir = tmp_dir("refuse");
+    save_run(&c, Mesh::unit(), 1, 2, Precision::F32, &dir);
+    let meta = checkpoint::latest(&dir).unwrap().unwrap();
+
+    // different architecture -> load_state refuses
+    let mut other = cfg();
+    other.d_emb = 64;
+    other.d_ch = 64;
+    let err = checkpoint::load_state(&other, &meta).unwrap_err();
+    assert!(err.to_string().contains("refusing"), "{err}");
+
+    // different precision -> train refuses the resume
+    let mut s = spec(Mesh::unit(), 1, 4, Precision::Bf16);
+    s.checkpoint = Some(CheckpointSpec { dir: dir.clone(), every: 10, keep_last: 3 });
+    s.resume = true;
+    let err = train(&c, &s, Arc::new(NativeBackend)).unwrap_err();
+    assert!(err.to_string().contains("precision"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
