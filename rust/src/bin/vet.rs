@@ -1,0 +1,107 @@
+//! `vet` — run the repo's static lint registry from the command line.
+//!
+//! ```text
+//! vet [--json PATH] [--list] [--self-test DIR] [PATHS...]
+//! ```
+//!
+//! With no `PATHS`, lints `rust/src`. Exit codes: 0 clean (or
+//! self-test pass), 1 findings (or self-test failure), 2 usage / I/O
+//! error. `--json` additionally writes the machine-readable report
+//! (CI uploads it as an artifact); `--self-test` checks the seeded-bad
+//! fixture corpus instead of linting.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use jigsaw::vet;
+
+fn main() -> ExitCode {
+    let mut json_path: Option<PathBuf> = None;
+    let mut self_test_dir: Option<PathBuf> = None;
+    let mut paths: Vec<PathBuf> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_path = Some(PathBuf::from(p)),
+                None => return usage("--json needs a path"),
+            },
+            "--self-test" => match args.next() {
+                Some(p) => self_test_dir = Some(PathBuf::from(p)),
+                None => return usage("--self-test needs a directory"),
+            },
+            "--list" => {
+                for r in vet::RULES {
+                    println!("{:24} {}", r.name, r.summary);
+                }
+                return ExitCode::SUCCESS;
+            }
+            "--help" | "-h" => return usage(""),
+            a if a.starts_with('-') => return usage(&format!("unknown flag `{a}`")),
+            p => paths.push(PathBuf::from(p)),
+        }
+    }
+
+    if let Some(dir) = self_test_dir {
+        return match vet::self_test(&dir) {
+            Ok(results) if !results.is_empty() => {
+                let mut ok = true;
+                for r in &results {
+                    let mark = if r.ok { "ok  " } else { "FAIL" };
+                    println!("{mark} {} ({}): {}", r.file, r.expected_rule, r.detail);
+                    ok &= r.ok;
+                }
+                if ok {
+                    println!("vet self-test: {} fixture(s) pass", results.len());
+                    ExitCode::SUCCESS
+                } else {
+                    ExitCode::FAILURE
+                }
+            }
+            Ok(_) => {
+                eprintln!("vet self-test: no fixtures found in {}", dir.display());
+                ExitCode::from(2)
+            }
+            Err(e) => {
+                eprintln!("vet self-test: {e}");
+                ExitCode::from(2)
+            }
+        };
+    }
+
+    if paths.is_empty() {
+        paths.push(PathBuf::from("rust/src"));
+    }
+    match vet::analyze_paths(&paths) {
+        Ok((files, findings)) => {
+            print!("{}", vet::report_human(files, &findings));
+            if let Some(p) = json_path {
+                if let Err(e) = std::fs::write(&p, vet::report_json(files, &findings)) {
+                    eprintln!("vet: writing {}: {e}", p.display());
+                    return ExitCode::from(2);
+                }
+            }
+            if findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("vet: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn usage(err: &str) -> ExitCode {
+    if !err.is_empty() {
+        eprintln!("vet: {err}");
+    }
+    eprintln!("usage: vet [--json PATH] [--list] [--self-test DIR] [PATHS...]");
+    if err.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(2)
+    }
+}

@@ -121,12 +121,22 @@ impl<'a> Reader<'a> {
         Ok(s)
     }
 
+    /// `take(N)` as a fixed-size array (the length check already
+    /// happened in `take`, so this conversion is infallible by
+    /// construction — spelled without `unwrap` so a future length bug
+    /// surfaces as a typed error, not a rank panic).
+    fn arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        let mut a = [0u8; N];
+        a.copy_from_slice(self.take(N)?);
+        Ok(a)
+    }
+
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_le_bytes(self.arr::<4>()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_le_bytes(self.arr::<8>()?))
     }
 
     fn str(&mut self) -> Result<String> {
@@ -140,7 +150,7 @@ impl<'a> Reader<'a> {
         let raw = self.take(n * 4)?;
         Ok(raw
             .chunks_exact(4)
-            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect())
     }
 }

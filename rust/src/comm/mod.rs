@@ -120,6 +120,12 @@ pub enum CommError {
     /// rank that originated the abort when the aborter recorded it via
     /// [`Network::abort_from`]; `None` for an anonymous abort.
     Aborted { rank: Option<usize> },
+    /// The wait-graph deadlock detector proved that a set of blocked
+    /// waits can never be satisfied (every member is parked on an empty
+    /// queue whose source is itself a member). `desc` names the full
+    /// knot — each rank and the (src, tag) keys it is waiting on — so a
+    /// would-be CI timeout reads as a diagnosis instead.
+    Deadlock { desc: String },
 }
 
 impl std::fmt::Display for CommError {
@@ -129,6 +135,7 @@ impl std::fmt::Display for CommError {
                 write!(f, "{FABRIC_ABORTED} (origin rank {r})")
             }
             CommError::Aborted { rank: None } => write!(f, "{FABRIC_ABORTED}"),
+            CommError::Deadlock { desc } => write!(f, "comm: deadlock detected — {desc}"),
         }
     }
 }
@@ -143,13 +150,7 @@ impl CommError {
     }
 }
 
-/// Poison-tolerant lock: a rank thread that panics while holding a comm
-/// lock must not turn every peer's diagnosis into an opaque
-/// `PoisonError` — the fabric's queue state is a plain map of messages
-/// and stays valid across an unwind.
-fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
-    m.lock().unwrap_or_else(PoisonError::into_inner)
-}
+use crate::util::plock;
 
 /// What a fabric message carries: an f32 tensor or a bf16 tensor. The
 /// payload's element kind decides the wire bytes charged to the link —
@@ -262,7 +263,73 @@ struct Shared {
     /// first writer wins, so casualties that re-abort after unwinding
     /// never overwrite the true failer
     abort_rank: AtomicUsize,
+    /// wait-graph deadlock detector enabled? One relaxed load per
+    /// blocking wait when off (see [`Network::set_deadlock_detect`]).
+    detect: AtomicBool,
+    /// rank -> the keys its blocking wait is currently parked on. Every
+    /// access happens while `queues` is held (lock order: queues, then
+    /// waiters), so a checker can never observe "message consumed but
+    /// waiter still registered" or vice versa.
+    waiters: Mutex<HashMap<usize, Waiting>>,
+    /// knot description recorded by the first detector trip; every
+    /// sleeper woken by its `notify_all` re-raises it
+    deadlock: Mutex<Option<String>>,
+    deadlocked: AtomicBool,
     n: usize,
+}
+
+/// One registered blocking wait (see `Shared::waiters`).
+struct Waiting {
+    keys: Vec<(usize, u64)>,
+    /// waits that run a kernel-driver hook can consume and send traffic
+    /// while "blocked", so the knot check must treat them as able to
+    /// make progress on their own (conservative: a knot hiding behind a
+    /// hooked waiter goes undetected rather than ever false-firing)
+    hooked: bool,
+}
+
+/// Removes the rank's `waiters` entry on every exit from a blocking
+/// wait — normal returns (while the queues lock is still held, keeping
+/// the registry coherent with message consumption) and unwinds alike.
+struct WaiterGuard<'a> {
+    net: Option<&'a Shared>,
+    rank: usize,
+}
+
+impl Drop for WaiterGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(net) = self.net {
+            plock(&net.waiters).remove(&self.rank);
+        }
+    }
+}
+
+/// Process-wide override for the deadlock detector's default state:
+/// 0 = none (env / build profile decides), 1 = force off, 2 = force on.
+/// Tests use [`set_deadlock_detect_default`] to pin either way
+/// regardless of profile.
+static DETECT_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin (or release, with `None`) the default detector state for
+/// networks created after this call. Per-network
+/// [`Network::set_deadlock_detect`] still wins on individual fabrics.
+pub fn set_deadlock_detect_default(v: Option<bool>) {
+    DETECT_OVERRIDE.store(match v { None => 0, Some(false) => 1, Some(true) => 2 }, Ordering::SeqCst);
+}
+
+/// Default detector state for a fresh [`Network`]: process override,
+/// else `JIGSAW_DEADLOCK_DETECT` (`0`/`off`/`false` disable, anything
+/// else enables), else on in debug builds (= `cargo test`) and off in
+/// release.
+fn deadlock_detect_default() -> bool {
+    match DETECT_OVERRIDE.load(Ordering::SeqCst) {
+        1 => false,
+        2 => true,
+        _ => match std::env::var("JIGSAW_DEADLOCK_DETECT") {
+            Ok(v) => !matches!(v.as_str(), "0" | "off" | "false" | ""),
+            Err(_) => cfg!(debug_assertions),
+        },
+    }
 }
 
 /// The in-process "fabric" connecting `n` ranks.
@@ -282,6 +349,10 @@ impl Network {
                 fabric: Mutex::new(None),
                 aborted: AtomicBool::new(false),
                 abort_rank: AtomicUsize::new(usize::MAX),
+                detect: AtomicBool::new(deadlock_detect_default()),
+                waiters: Mutex::new(HashMap::new()),
+                deadlock: Mutex::new(None),
+                deadlocked: AtomicBool::new(false),
                 n,
             }),
         }
@@ -352,6 +423,35 @@ impl Network {
     /// Whether [`abort`](Network::abort) has been called.
     pub fn is_aborted(&self) -> bool {
         self.inner.aborted.load(Ordering::SeqCst)
+    }
+
+    /// Enable/disable the wait-graph deadlock detector on this fabric.
+    /// When on, every blocking wait registers the (src, tag) keys it
+    /// parks on; before sleeping, the waiter runs a greatest-fixpoint
+    /// "knot" check over the who-waits-on-whom graph and a provable
+    /// cycle panics immediately with [`CommError::Deadlock`] naming
+    /// every member — instead of hanging the run until a CI timeout.
+    /// When off, the cost is one relaxed atomic load per blocking wait.
+    ///
+    /// Soundness rests on the SPMD usage this crate holds everywhere: a
+    /// rank's traffic originates from its own (single) thread, so a
+    /// registered waiter with no queued message on any key, all of
+    /// whose sources are themselves knot members, can never be woken.
+    /// Hook-running waits (an installed [`ProgressEngine`] can consume
+    /// and send while "blocked") are conservatively treated as live.
+    pub fn set_deadlock_detect(&self, on: bool) {
+        self.inner.detect.store(on, Ordering::Relaxed);
+    }
+
+    /// Whether the wait-graph deadlock detector is currently on.
+    pub fn deadlock_detect_enabled(&self) -> bool {
+        self.inner.detect.load(Ordering::Relaxed)
+    }
+
+    /// The knot description recorded by a detector trip, if one fired
+    /// on this fabric.
+    pub fn deadlock_info(&self) -> Option<String> {
+        plock(&self.inner.deadlock).clone()
     }
 
     /// The rank recorded as the abort's origin, if any.
@@ -514,7 +614,22 @@ impl Comm {
         // set when the hook already ran since the last probe: the next
         // pass may sleep instead of ticking again
         let mut just_ticked = false;
+        let detect = self.net.detect.load(Ordering::Relaxed);
         let mut q = plock(&self.net.queues);
+        if detect {
+            // register under the queues lock so the registry is always
+            // coherent with the queue contents a checker snapshots
+            plock(&self.net.waiters).insert(
+                self.rank,
+                Waiting {
+                    keys: keys.to_vec(),
+                    hooked: crate::tensor::ops::driver_hook_installed(),
+                },
+            );
+        }
+        // declared after `q`, so on normal returns it drops first —
+        // i.e. while the queues lock is still held
+        let _unreg = WaiterGuard { net: detect.then_some(&*self.net), rank: self.rank };
         loop {
             if self.net.aborted.load(Ordering::SeqCst) {
                 let origin = {
@@ -523,6 +638,15 @@ impl Comm {
                 };
                 drop(q);
                 std::panic::panic_any(CommError::Aborted { rank: origin });
+            }
+            if detect && self.net.deadlocked.load(Ordering::SeqCst) {
+                // another waiter proved the knot; re-raise it here so
+                // every member unwinds instead of sleeping forever
+                let desc = plock(&self.net.deadlock)
+                    .clone()
+                    .unwrap_or_else(|| "wait-graph knot".to_string());
+                drop(q);
+                std::panic::panic_any(CommError::Deadlock { desc });
             }
             let now = Instant::now();
             let mut next_ready: Option<Duration> = None;
@@ -568,16 +692,82 @@ impl Comm {
                     just_ticked = !progressed;
                     continue;
                 }
+                if detect {
+                    q = self.check_deadlock(q);
+                }
                 let d = next_ready.map_or(PROGRESS_TICK, |d| d.min(PROGRESS_TICK));
                 q = self.cv_wait_timeout(q, d);
                 just_ticked = false;
             } else {
+                if detect {
+                    q = self.check_deadlock(q);
+                }
                 q = match next_ready {
                     Some(d) => self.cv_wait_timeout(q, d),
                     None => self.cv_wait(q),
                 };
             }
         }
+    }
+
+    /// The wait-graph knot check, run before a registered waiter
+    /// sleeps. Over the snapshot the held queues lock pins, compute the
+    /// greatest fixpoint of "cannot possibly be woken": start from
+    /// every registered non-hooked waiter and repeatedly remove any
+    /// rank that has a queued message on one of its keys (deliverable
+    /// or merely delayed — a `FabricSpec` send enqueues immediately, so
+    /// in-flight traffic counts as progress) or a key whose source is
+    /// not itself stuck. A nonempty fixpoint is a true deadlock: every
+    /// member waits only on empty queues fed exclusively by other
+    /// members, and (per the SPMD single-thread-per-rank contract) no
+    /// one else can ever fill them. Panics with
+    /// [`CommError::Deadlock`] naming the whole knot after waking every
+    /// peer; returns the guard unchanged otherwise.
+    fn check_deadlock<'a>(
+        &self,
+        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
+    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
+        let desc = {
+            let waiters = plock(&self.net.waiters);
+            let mut stuck: Vec<usize> = waiters
+                .iter()
+                .filter(|(_, w)| !w.hooked)
+                .map(|(&r, _)| r)
+                .collect();
+            loop {
+                let before = stuck.len();
+                let cur: std::collections::HashSet<usize> = stuck.iter().copied().collect();
+                stuck.retain(|&r| {
+                    waiters[&r].keys.iter().all(|&(src, tag)| {
+                        cur.contains(&src) && q.get(&(src, r, tag)).map_or(true, |l| l.is_empty())
+                    })
+                });
+                if stuck.len() == before {
+                    break;
+                }
+            }
+            if stuck.is_empty() {
+                return q;
+            }
+            stuck.sort_unstable();
+            let parts: Vec<String> = stuck
+                .iter()
+                .map(|&r| {
+                    let keys: Vec<String> = waiters[&r]
+                        .keys
+                        .iter()
+                        .map(|&(s, t)| format!("src {s} tag {t:#x}"))
+                        .collect();
+                    format!("rank {r} waiting on [{}]", keys.join(", "))
+                })
+                .collect();
+            format!("wait-graph knot: {}", parts.join("; "))
+        };
+        *plock(&self.net.deadlock) = Some(desc.clone());
+        self.net.deadlocked.store(true, Ordering::SeqCst);
+        self.net.cv.notify_all();
+        drop(q);
+        std::panic::panic_any(CommError::Deadlock { desc });
     }
 
     /// Poison-tolerant condvar wait (see [`plock`]).
@@ -1786,6 +1976,68 @@ mod tests {
         assert_eq!(ce, CommError::Aborted { rank: Some(3) });
         assert!(ce.to_string().contains("origin rank 3"), "{ce}");
         assert_eq!(net.abort_origin(), Some(3));
+    }
+
+    #[test]
+    fn deadlock_detector_breaks_three_rank_cycle() {
+        // 0 waits on 1, 1 waits on 2, 2 waits on 0 — every member must
+        // unwind with the same knot description instead of sleeping
+        let net = Network::new(3);
+        net.set_deadlock_detect(true);
+        assert!(net.deadlock_detect_enabled());
+        let handles: Vec<_> = (0..3)
+            .map(|r| {
+                let ep = net.endpoint(r);
+                thread::spawn(move || {
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        ep.recv((r + 1) % 3, 40 + r as u64)
+                    }))
+                })
+            })
+            .collect();
+        for h in handles {
+            let err = h.join().unwrap().unwrap_err();
+            match CommError::from_panic(&*err).expect("typed CommError payload") {
+                CommError::Deadlock { desc } => {
+                    for r in 0..3 {
+                        assert!(desc.contains(&format!("rank {r}")), "{desc}");
+                    }
+                }
+                other => panic!("expected Deadlock, got {other:?}"),
+            }
+        }
+        assert!(net.deadlock_info().is_some());
+    }
+
+    #[test]
+    fn deadlock_detector_spares_waiter_on_running_rank() {
+        // rank 1 blocks on a key whose source is alive outside the
+        // registry — the knot check must see the chain anchored on a
+        // runnable rank and never trip
+        let net = Network::new(2);
+        net.set_deadlock_detect(true);
+        let b = net.endpoint(1);
+        let h = thread::spawn(move || b.recv(0, 6));
+        thread::sleep(Duration::from_millis(20));
+        net.endpoint(0).send(1, 6, Tensor::scalar(4.0));
+        assert_eq!(h.join().expect("no detector trip").data, vec![4.0]);
+        assert!(net.deadlock_info().is_none());
+    }
+
+    #[test]
+    fn deadlock_detect_default_override_and_per_net_setter() {
+        set_deadlock_detect_default(Some(false));
+        let off = Network::new(2);
+        assert!(!off.deadlock_detect_enabled());
+        set_deadlock_detect_default(Some(true));
+        let on = Network::new(2);
+        assert!(on.deadlock_detect_enabled());
+        set_deadlock_detect_default(None);
+        // the per-network setter wins over whatever the default said
+        on.set_deadlock_detect(false);
+        assert!(!on.deadlock_detect_enabled());
+        off.set_deadlock_detect(true);
+        assert!(off.deadlock_detect_enabled());
     }
 
     #[test]

@@ -101,6 +101,26 @@
 //! bf16 gradients finite; `BENCH_precision.json` pins the byte halving
 //! and the bf16-vs-f32 loss tolerance the way `mesh_props` pins 1e-4.
 //!
+//! Correctness of the concurrency substrate is enforced by tooling,
+//! not convention ([`vet`] + `docs/static-analysis.md`): the `vet`
+//! binary lints every file under `rust/src` against a registry of
+//! rules distilled from this repo's own shipped-and-fixed bugs
+//! (poisoned-lock unwraps, condvar waits without a re-check loop, tag
+//! bit-twiddling outside `next_coll_tag`, clock reads in kernel loops,
+//! unpaired `pool::take`s, bare unwraps on fallible std calls), with
+//! `// vet: allow(<rule>)` pragmas as the audited escape hatch and a
+//! seeded-bad fixture corpus (`rust/xtask/fixtures/`) proving in CI
+//! that every rule still fires. At runtime, [`comm`] carries a
+//! wait-graph deadlock detector: every blocking fabric wait registers
+//! the (rank, keys) it parks on, and before any waiter sleeps it runs
+//! a greatest-fixpoint "knot" check over the who-waits-on-whom graph —
+//! a true cycle (every member waiting on a queue-empty key from
+//! another member) panics *immediately* with the full cycle named
+//! (ranks + tags) as a typed [`comm::CommError::Deadlock`], instead of
+//! hanging a CI job until timeout. It is on by default in debug/test
+//! builds (`JIGSAW_DEADLOCK_DETECT` overrides either way) and a single
+//! relaxed atomic load when off.
+//!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind
 //! the `pjrt` cargo feature; without it an API-identical engine serves
@@ -124,5 +144,6 @@ pub mod runtime;
 pub mod tensor;
 pub mod trainer;
 pub mod util;
+pub mod vet;
 
 pub use cli::cli_main;

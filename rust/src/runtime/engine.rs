@@ -102,9 +102,7 @@ impl Engine {
     }
 
     fn send(&self, req: Req) {
-        self.tx
-            .lock()
-            .expect("engine tx poisoned")
+        crate::util::plock(&self.tx)
             .send(req)
             .expect("engine thread gone");
     }

@@ -338,11 +338,15 @@ pub fn train_from_state(
     }
     if !failures.is_empty() {
         // secondary casualties unwound with a typed CommError::Aborted;
-        // report the rank that actually failed
+        // report the rank that actually failed. Other CommError kinds
+        // (e.g. a detector-proven Deadlock) are primary findings, not
+        // casualties.
         let n = failures.len();
         let idx = failures
             .iter()
-            .position(|(_, _, e)| e.downcast_ref::<CommError>().is_none())
+            .position(|(_, _, e)| {
+                !matches!(e.downcast_ref::<CommError>(), Some(CommError::Aborted { .. }))
+            })
             .unwrap_or(0);
         let (pg, pr, pe) = failures.swap_remove(idx);
         return Err(anyhow::Error::new(RankFailure { dp: pg, mp: pr }).context(format!(

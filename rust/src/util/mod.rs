@@ -1,7 +1,21 @@
 //! Dependency-free utilities: JSON, deterministic RNG, property testing,
-//! and small table/CSV writers for the bench harness.
+//! small table/CSV writers for the bench harness, and the shared
+//! poison-tolerant lock helper.
 
 pub mod json;
 pub mod prop;
 pub mod rng;
 pub mod table;
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Poison-tolerant lock: a thread that panics while holding one of our
+/// locks must not turn every peer's diagnosis into an opaque
+/// `PoisonError` — the protected state (message queues, engine request
+/// channels, ...) is plain data that stays valid across an unwind. This
+/// is the only sanctioned way to take a `Mutex` in this crate; the
+/// `raw-lock` vet rule flags `.lock().unwrap()`/`.expect(..)` anywhere
+/// else.
+pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

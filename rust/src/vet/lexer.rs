@@ -1,0 +1,502 @@
+//! Token-level Rust lexer for the `vet` rule engine.
+//!
+//! The rules this repo enforces (see [`super::rules`]) are all visible at
+//! the token level — a `.lock().unwrap()` chain, a shift by the tag
+//! field's bit offset, a `Condvar::wait` outside a loop — so `vet` does
+//! not need (and, per the no-new-dependencies policy, cannot vendor) a
+//! full parser like `syn`. This lexer produces the three token classes
+//! the rules consume (identifiers, numeric literals, single-char
+//! punctuation), drops comments / strings / char literals / lifetimes so
+//! rule text inside a doc comment or a diagnostic string can never
+//! trigger a finding, and collects `// vet: allow(<rule>, ...)`
+//! suppression pragmas by line.
+//!
+//! On top of the token stream, [`analyze_scopes`] runs a single
+//! brace-matching pass that labels every token with its enclosing
+//! function (name + return-type tokens), whether it sits inside a
+//! `loop`/`while`/`for` body, and whether it is test code (`#[test]`
+//! functions and `#[cfg(test)]` modules) — the only structure the rules
+//! need.
+
+use std::collections::HashMap;
+
+/// Token classes the rules care about. Everything else (comments,
+/// string/char literals, lifetimes) is dropped during lexing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Num,
+    Punct,
+}
+
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// Lex result: tokens plus the suppression pragmas found in comments,
+/// keyed by the line the pragma comment sits on.
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    /// line -> rule names listed in a `// vet: allow(...)` pragma
+    pub allows: HashMap<u32, Vec<String>>,
+}
+
+/// Lex `src` into rule-relevant tokens. Never fails: unterminated
+/// constructs simply run to end of input (vet lints source that `rustc`
+/// already accepts, so error recovery is not a goal).
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut allows: HashMap<u32, Vec<String>> = HashMap::new();
+    let mut i = 0usize;
+    let mut line: u32 = 1;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b'\n' => {
+                line += 1;
+                i += 1;
+            }
+            c if c.is_ascii_whitespace() => i += 1,
+            b'/' if b.get(i + 1) == Some(&b'/') => {
+                let start = i;
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+                scan_pragma(&src[start..i], line, &mut allows);
+            }
+            b'/' if b.get(i + 1) == Some(&b'*') => {
+                // block comment, nesting supported
+                let mut depth = 1usize;
+                i += 2;
+                while i < b.len() && depth > 0 {
+                    if b[i] == b'\n' {
+                        line += 1;
+                        i += 1;
+                    } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                        depth += 1;
+                        i += 2;
+                    } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+            }
+            b'"' => i = skip_string(b, i, &mut line),
+            b'r' | b'b'
+                if is_raw_string_start(b, i) =>
+            {
+                i = skip_raw_string(b, i, &mut line)
+            }
+            b'\'' => {
+                // lifetime ('a) vs char literal ('x', '\n', '\u{..}')
+                if is_lifetime(b, i) {
+                    i += 1;
+                    while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                        i += 1;
+                    }
+                } else {
+                    i += 1;
+                    while i < b.len() && b[i] != b'\'' {
+                        if b[i] == b'\\' {
+                            i += 1;
+                        }
+                        if i < b.len() {
+                            if b[i] == b'\n' {
+                                line += 1;
+                            }
+                            i += 1;
+                        }
+                    }
+                    i += 1; // closing quote
+                }
+            }
+            c if c.is_ascii_digit() => {
+                let start = i;
+                // numeric literal: digits, hex/bin/oct prefixes, `_`,
+                // type suffixes, float dots handled as separate puncts
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(Tok { kind: TokKind::Num, text: src[start..i].to_string(), line });
+            }
+            c if c.is_ascii_alphabetic() || c == b'_' => {
+                let start = i;
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+                toks.push(Tok { kind: TokKind::Ident, text: src[start..i].to_string(), line });
+            }
+            _ => {
+                toks.push(Tok { kind: TokKind::Punct, text: (c as char).to_string(), line });
+                i += 1;
+            }
+        }
+    }
+    Lexed { toks, allows }
+}
+
+/// `r"..."`, `r#"..."#`, `br"..."` — raw (byte) string openers. Plain
+/// `b"..."` byte strings are handled by the `"` arm after the `b` lexes
+/// as part of an identifier only when not followed by a quote, so catch
+/// them here too.
+fn is_raw_string_start(b: &[u8], i: usize) -> bool {
+    let rest = &b[i..];
+    rest.starts_with(b"r\"")
+        || rest.starts_with(b"r#")
+        || rest.starts_with(b"br\"")
+        || rest.starts_with(b"br#")
+        || rest.starts_with(b"b\"")
+}
+
+fn skip_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    i += 1; // opening quote
+    while i < b.len() && b[i] != b'"' {
+        if b[i] == b'\\' {
+            i += 1;
+        }
+        if i < b.len() {
+            if b[i] == b'\n' {
+                *line += 1;
+            }
+            i += 1;
+        }
+    }
+    i + 1
+}
+
+fn skip_raw_string(b: &[u8], mut i: usize, line: &mut u32) -> usize {
+    if b[i] == b'b' {
+        i += 1;
+    }
+    if b[i] == b'"' {
+        // plain byte string: escape-aware
+        return skip_string(b, i, line);
+    }
+    i += 1; // the `r`
+    let mut hashes = 0usize;
+    while i < b.len() && b[i] == b'#' {
+        hashes += 1;
+        i += 1;
+    }
+    i += 1; // opening quote
+    loop {
+        if i >= b.len() {
+            return i;
+        }
+        if b[i] == b'\n' {
+            *line += 1;
+        }
+        if b[i] == b'"' {
+            let mut ok = true;
+            for k in 0..hashes {
+                if b.get(i + 1 + k) != Some(&b'#') {
+                    ok = false;
+                    break;
+                }
+            }
+            if ok {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+}
+
+/// `'a` is a lifetime (quote + ident not closed by another quote),
+/// `'a'` is a char literal.
+fn is_lifetime(b: &[u8], i: usize) -> bool {
+    match b.get(i + 1) {
+        Some(c) if c.is_ascii_alphabetic() || *c == b'_' => b.get(i + 2) != Some(&b'\''),
+        _ => false,
+    }
+}
+
+/// Recognize `// vet: allow(rule-a, rule-b)` in a line comment.
+fn scan_pragma(comment: &str, line: u32, allows: &mut HashMap<u32, Vec<String>>) {
+    let Some(at) = comment.find("vet:") else { return };
+    let rest = comment[at + 4..].trim_start();
+    let Some(rest) = rest.strip_prefix("allow(") else { return };
+    let Some(close) = rest.find(')') else { return };
+    let rules: Vec<String> = rest[..close]
+        .split(',')
+        .map(|r| r.trim().to_string())
+        .filter(|r| !r.is_empty())
+        .collect();
+    if !rules.is_empty() {
+        allows.entry(line).or_default().extend(rules);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scope analysis
+// ---------------------------------------------------------------------------
+
+/// One function item found during scope analysis.
+#[derive(Clone, Debug)]
+pub struct FnInfo {
+    pub name: String,
+    /// tokens of the return type (`-> Vec<f32>` records `Vec`, `<`,
+    /// `f32`, `>`), empty for `()` returns
+    pub ret: Vec<String>,
+    /// token index of the body's `{`
+    pub body_start: usize,
+    /// token index of the body's matching `}` (= toks.len() when
+    /// unterminated)
+    pub body_end: usize,
+}
+
+/// Per-token context the rules consume.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Ctx {
+    /// innermost enclosing fn (index into `Scopes::fns`)
+    pub fn_id: Option<usize>,
+    /// inside a `loop` / `while` / `for` body within the enclosing fn
+    pub in_loop: bool,
+    /// inside a `#[test]` fn or `#[cfg(test)]` module
+    pub in_test: bool,
+}
+
+pub struct Scopes {
+    pub fns: Vec<FnInfo>,
+    /// parallel to the token stream
+    pub ctx: Vec<Ctx>,
+}
+
+enum ScopeKind {
+    Fn(usize),
+    Loop,
+    TestMod,
+    Other,
+}
+
+/// Label every token with its enclosing fn / loop / test context via one
+/// brace-matching pass. Heuristic by design: expression blocks and
+/// struct literals land in `Other` scopes, which is exactly as much
+/// structure as the rules need.
+pub fn analyze_scopes(toks: &[Tok]) -> Scopes {
+    let mut fns: Vec<FnInfo> = Vec::new();
+    let mut ctx = vec![Ctx::default(); toks.len()];
+    let mut stack: Vec<ScopeKind> = Vec::new();
+    // set when an attribute containing `test` was seen and no item
+    // consumed it yet
+    let mut attr_test = false;
+    // pending item headers: set at the keyword, consumed at its `{`
+    let mut pending: Option<ScopeKind> = None;
+    // while a fn header is pending: its index, and whether we are past
+    // the `->` (collecting return-type tokens)
+    let mut pending_fn: Option<(usize, bool)> = None;
+    let mut i = 0usize;
+    while i < toks.len() {
+        let t = &toks[i];
+        // current context for this token
+        let mut c = Ctx::default();
+        for s in stack.iter().rev() {
+            match s {
+                ScopeKind::Fn(id) => {
+                    if c.fn_id.is_none() {
+                        c.fn_id = Some(*id);
+                        if fns[*id].name.starts_with("__test__") {
+                            c.in_test = true;
+                        }
+                    }
+                }
+                ScopeKind::Loop => {
+                    if c.fn_id.is_none() {
+                        c.in_loop = true;
+                    }
+                }
+                ScopeKind::TestMod => c.in_test = true,
+                ScopeKind::Other => {}
+            }
+        }
+        ctx[i] = c;
+
+        match (t.kind, t.text.as_str()) {
+            (TokKind::Punct, "#") => {
+                // attribute: scan to the matching `]`, look for `test`
+                let mut j = i + 1;
+                if toks.get(j).map_or(false, |t| t.is("!")) {
+                    j += 1; // inner attribute `#![...]`
+                }
+                if toks.get(j).map_or(false, |t| t.is("[")) {
+                    let mut depth = 0usize;
+                    let mut has_test = false;
+                    while j < toks.len() {
+                        if toks[j].is("[") {
+                            depth += 1;
+                        } else if toks[j].is("]") {
+                            depth -= 1;
+                            if depth == 0 {
+                                break;
+                            }
+                        } else if toks[j].is_ident("test") {
+                            has_test = true;
+                        }
+                        j += 1;
+                    }
+                    if has_test {
+                        attr_test = true;
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            }
+            (TokKind::Ident, "fn") => {
+                let name = toks
+                    .get(i + 1)
+                    .filter(|t| t.kind == TokKind::Ident)
+                    .map(|t| t.text.clone())
+                    .unwrap_or_default();
+                // test fns are tracked through a name prefix so the
+                // context pass above needs no second lookup table
+                let stored = if attr_test { format!("__test__{name}") } else { name };
+                attr_test = false;
+                fns.push(FnInfo {
+                    name: stored,
+                    ret: Vec::new(),
+                    body_start: toks.len(),
+                    body_end: toks.len(),
+                });
+                pending_fn = Some((fns.len() - 1, false));
+                pending = Some(ScopeKind::Fn(fns.len() - 1));
+            }
+            (TokKind::Ident, "mod") => {
+                pending = Some(if attr_test { ScopeKind::TestMod } else { ScopeKind::Other });
+                attr_test = false;
+            }
+            (TokKind::Ident, "loop") | (TokKind::Ident, "while") | (TokKind::Ident, "for")
+                if pending.is_none() =>
+            {
+                pending = Some(ScopeKind::Loop);
+            }
+            (TokKind::Ident, "impl") | (TokKind::Ident, "trait") if pending.is_none() => {
+                // `impl Trait for Type` — keep the `for` from opening a
+                // phantom loop scope
+                pending = Some(ScopeKind::Other);
+            }
+            (TokKind::Punct, "-") => {
+                if let Some((id, _)) = pending_fn {
+                    if toks.get(i + 1).map_or(false, |t| t.is(">")) {
+                        pending_fn = Some((id, true));
+                        i += 2;
+                        continue;
+                    }
+                }
+            }
+            (TokKind::Punct, ";") => {
+                // `fn name(...);` — trait method declaration, no body
+                if pending_fn.is_some() {
+                    pending_fn = None;
+                    pending = None;
+                }
+            }
+            (TokKind::Punct, "{") => {
+                if let Some((id, _)) = pending_fn.take() {
+                    fns[id].body_start = i;
+                }
+                stack.push(pending.take().unwrap_or(ScopeKind::Other));
+            }
+            (TokKind::Punct, "}") => {
+                if let Some(kind) = stack.pop() {
+                    if let ScopeKind::Fn(id) = kind {
+                        fns[id].body_end = i;
+                    }
+                }
+            }
+            _ => {
+                if let Some((id, in_ret)) = pending_fn {
+                    if in_ret {
+                        fns[id].ret.push(t.text.clone());
+                    }
+                }
+            }
+        }
+        i += 1;
+    }
+    // strip the test marker back off the stored names
+    for f in fns.iter_mut() {
+        if let Some(stripped) = f.name.strip_prefix("__test__") {
+            f.name = stripped.to_string();
+        }
+    }
+    Scopes { fns, ctx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_lifetimes_are_dropped() {
+        let lx = lex(r##"
+            // comment with .lock().unwrap() text
+            /* block /* nested */ .unwrap() */
+            fn f<'a>(s: &'a str) -> u32 {
+                let _c = 'x';
+                let _s = "quoted .unwrap()";
+                let _r = r#"raw .lock()"#;
+                42
+            }
+        "##);
+        assert!(!lx.toks.iter().any(|t| t.is_ident("unwrap")));
+        assert!(!lx.toks.iter().any(|t| t.is_ident("lock")));
+        assert!(lx.toks.iter().any(|t| t.is_ident("quoted")) == false);
+        assert!(lx.toks.iter().any(|t| t.kind == TokKind::Num && t.is("42")));
+    }
+
+    #[test]
+    fn pragmas_collect_by_line() {
+        let lx = lex("let a = 1;\n// vet: allow(raw-lock, lib-unwrap)\nlet b = 2;\n");
+        assert_eq!(
+            lx.allows.get(&2),
+            Some(&vec!["raw-lock".to_string(), "lib-unwrap".to_string()])
+        );
+    }
+
+    #[test]
+    fn scopes_track_fn_loop_and_test() {
+        let lx = lex(
+            "fn outer() -> Vec<f32> { for i in 0..3 { mark1(); } mark2() }\n\
+             #[cfg(test)] mod t { fn inner() { mark3(); } }",
+        );
+        let sc = analyze_scopes(&lx.toks);
+        assert_eq!(sc.fns.len(), 2);
+        assert_eq!(sc.fns[0].name, "outer");
+        assert_eq!(sc.fns[0].ret, vec!["Vec", "<", "f32", ">"]);
+        let at = |name: &str| {
+            lx.toks.iter().position(|t| t.is_ident(name)).unwrap()
+        };
+        assert!(sc.ctx[at("mark1")].in_loop);
+        assert!(!sc.ctx[at("mark1")].in_test);
+        assert!(!sc.ctx[at("mark2")].in_loop);
+        assert!(sc.ctx[at("mark3")].in_test);
+        assert_eq!(sc.fns[1].name, "inner");
+    }
+
+    #[test]
+    fn impl_for_is_not_a_loop() {
+        let lx = lex("impl Trait for Thing { fn m(&self) { mark(); } }");
+        let sc = analyze_scopes(&lx.toks);
+        let at = lx.toks.iter().position(|t| t.is_ident("mark")).unwrap();
+        assert!(!sc.ctx[at].in_loop);
+        assert_eq!(sc.fns[0].name, "m");
+    }
+}

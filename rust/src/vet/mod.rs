@@ -1,0 +1,229 @@
+//! # `vet` — the repo-specific static lint pass
+//!
+//! Every rule encodes an invariant this codebase has actually broken
+//! (missed condvar wakeups, tag wraparound, pool leaks on abort,
+//! poisoned-lock panics — see `docs/static-analysis.md` for the full
+//! catalogue and the historical bug behind each rule). The binary
+//! (`cargo run --bin vet`) walks `rust/src`, runs the registry over
+//! every `.rs` file, and exits nonzero on any finding; CI runs it on
+//! every push plus a fixtures self-test that proves each rule still
+//! fires on a seeded-bad file.
+//!
+//! The analysis is a hand-rolled token/scope pass ([`lexer`]), not a
+//! `syn` AST walk: the container policy forbids new dependencies, and
+//! every invariant here is token-visible. The trade-off is documented
+//! per rule — heuristics are tuned to the idioms this repo uses, and
+//! `// vet: allow(<rule>)` pragmas exist for the escape hatch.
+
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{analyze_source, Finding, RuleInfo, RULES};
+
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Recursively collect `.rs` files under each path (files pass
+/// through), sorted for deterministic reports.
+pub fn collect_rs_files(paths: &[PathBuf]) -> io::Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    for p in paths {
+        walk(p, &mut out)?;
+    }
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn walk(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let meta = fs::metadata(p)?;
+    if meta.is_file() {
+        if p.extension().map_or(false, |e| e == "rs") {
+            out.push(p.to_path_buf());
+        }
+        return Ok(());
+    }
+    let mut entries: Vec<PathBuf> = fs::read_dir(p)?
+        .collect::<io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
+    for e in entries {
+        walk(&e, out)?;
+    }
+    Ok(())
+}
+
+/// Run the registry over every `.rs` file under `paths`. Returns
+/// `(files_scanned, findings)`.
+pub fn analyze_paths(paths: &[PathBuf]) -> io::Result<(usize, Vec<Finding>)> {
+    let files = collect_rs_files(paths)?;
+    let mut findings = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        let name = f.to_string_lossy().replace('\\', "/");
+        findings.extend(analyze_source(&name, &src));
+    }
+    Ok((files.len(), findings))
+}
+
+/// Machine-readable report (schema `version` guards CI consumers
+/// against silent drift).
+pub fn report_json(files: usize, findings: &[Finding]) -> String {
+    let mut s = String::new();
+    s.push_str(&format!("{{\"version\":1,\"files\":{files},\"findings\":["));
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"file\":{},\"line\":{},\"rule\":{},\"message\":{}}}",
+            json_str(&f.file),
+            f.line,
+            json_str(f.rule),
+            json_str(&f.message)
+        ));
+    }
+    s.push_str("]}");
+    s
+}
+
+fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Human diagnostics, one line per finding.
+pub fn report_human(files: usize, findings: &[Finding]) -> String {
+    let mut s = String::new();
+    for f in findings {
+        s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
+    }
+    if findings.is_empty() {
+        s.push_str(&format!("vet: {files} files clean\n"));
+    } else {
+        s.push_str(&format!("vet: {} finding(s) in {files} files\n", findings.len()));
+    }
+    s
+}
+
+/// Outcome of checking one fixture file.
+pub struct FixtureResult {
+    pub file: String,
+    pub expected_rule: String,
+    pub ok: bool,
+    pub detail: String,
+}
+
+/// Self-test over the seeded-bad fixture corpus: each
+/// `<rule_name_with_underscores>.rs` must produce at least one finding
+/// and *only* findings of its rule; `allow_pragmas.rs` must produce
+/// zero findings (it is full of violations, each suppressed). This is
+/// what keeps the rules from silently rotting into no-ops.
+pub fn self_test(dir: &Path) -> io::Result<Vec<FixtureResult>> {
+    let files = collect_rs_files(&[dir.to_path_buf()])?;
+    let mut out = Vec::new();
+    for f in &files {
+        let stem = f.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default();
+        let expected = stem.replace('_', "-");
+        let src = fs::read_to_string(f)?;
+        let findings = analyze_source(&f.to_string_lossy(), &src);
+        let (ok, detail) = if expected == "allow-pragmas" {
+            if findings.is_empty() {
+                (true, "all violations suppressed by pragmas".to_string())
+            } else {
+                (false, format!("expected 0 findings, got {:?}", rule_names(&findings)))
+            }
+        } else if findings.is_empty() {
+            (false, format!("expected >=1 `{expected}` finding, got none"))
+        } else if findings.iter().all(|x| x.rule == expected) {
+            (true, format!("{} `{expected}` finding(s)", findings.len()))
+        } else {
+            (false, format!("expected only `{expected}`, got {:?}", rule_names(&findings)))
+        };
+        out.push(FixtureResult { file: f.to_string_lossy().to_string(), expected_rule: expected, ok, detail });
+    }
+    Ok(out)
+}
+
+fn rule_names(f: &[Finding]) -> Vec<&'static str> {
+    f.iter().map(|x| x.rule).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_report_escapes_and_structures() {
+        let f = vec![Finding {
+            file: "a\"b.rs".into(),
+            line: 7,
+            rule: "raw-lock",
+            message: "x\ny".into(),
+        }];
+        let j = report_json(3, &f);
+        assert_eq!(
+            j,
+            "{\"version\":1,\"files\":3,\"findings\":[{\"file\":\"a\\\"b.rs\",\"line\":7,\"rule\":\"raw-lock\",\"message\":\"x\\ny\"}]}"
+        );
+    }
+
+    #[test]
+    fn registry_names_are_kebab_and_unique() {
+        let mut names: Vec<&str> = RULES.iter().map(|r| r.name).collect();
+        assert!(names.iter().all(|n| n.chars().all(|c| c.is_ascii_lowercase() || c == '-')));
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), RULES.len());
+    }
+
+    /// The in-repo fixture corpus must pass the self-test — the same
+    /// invariant CI enforces, kept runnable offline.
+    #[test]
+    fn fixtures_self_test_passes() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/xtask/fixtures");
+        let results = self_test(&dir).expect("fixtures dir readable");
+        assert!(!results.is_empty(), "no fixtures found at {}", dir.display());
+        let expected: Vec<String> = {
+            let mut v: Vec<String> = RULES.iter().map(|r| r.name.to_string()).collect();
+            v.push("allow-pragmas".to_string());
+            v.sort();
+            v
+        };
+        let mut got: Vec<String> = results.iter().map(|r| r.expected_rule.clone()).collect();
+        got.sort();
+        assert_eq!(got, expected, "one fixture per rule plus allow_pragmas");
+        for r in &results {
+            assert!(r.ok, "{}: {}", r.file, r.detail);
+        }
+    }
+
+    /// vet must be clean on its own source tree — zero findings, zero
+    /// suppressions outside fixtures (mirrors the CI gate).
+    #[test]
+    fn own_tree_is_clean() {
+        let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+        let (files, findings) = analyze_paths(&[src]).expect("rust/src readable");
+        assert!(files > 10, "suspiciously few files scanned: {files}");
+        assert!(
+            findings.is_empty(),
+            "vet findings in tree:\n{}",
+            report_human(files, &findings)
+        );
+    }
+}

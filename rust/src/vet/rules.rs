@@ -1,0 +1,657 @@
+//! The `vet` rule registry.
+//!
+//! Every rule here encodes an invariant this repo broke once and then
+//! fixed (see `docs/static-analysis.md` for the bug behind each one).
+//! Rules operate on the token stream + scope labels from
+//! [`super::lexer`]; all are per-file.
+
+use super::lexer::{analyze_scopes, lex, Lexed, Scopes, Tok, TokKind};
+
+/// One diagnostic produced by a rule.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Finding {
+    pub file: String,
+    pub line: u32,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+/// Registry entry: rule name + one-line description (drives `--list`
+/// and keeps docs honest).
+pub struct RuleInfo {
+    pub name: &'static str,
+    pub summary: &'static str,
+}
+
+pub const RULES: &[RuleInfo] = &[
+    RuleInfo {
+        name: "raw-lock",
+        summary: "`.lock().unwrap()/.expect()` outside `plock` — poisoned-lock panic on abort paths",
+    },
+    RuleInfo {
+        name: "condvar-no-repredicate",
+        summary: "Condvar wait not re-checked in a loop (or a tail-position wrapper) — missed-wakeup class",
+    },
+    RuleInfo {
+        name: "raw-tag-literal",
+        summary: "collective tag bit-twiddling outside `next_coll_tag` — tag-wraparound class",
+    },
+    RuleInfo {
+        name: "hot-loop-clock",
+        summary: "`Instant::now` inside kernel/band-driver loops — clock syscalls on the compute hot path",
+    },
+    RuleInfo {
+        name: "pool-unpaired",
+        summary: "`pool::take*` with no `put*`/ownership escape in the same fn — abort-path buffer leak",
+    },
+    RuleInfo {
+        name: "lib-unwrap",
+        summary: "`.unwrap()/.expect()` on fallible std calls in library code — should be typed errors",
+    },
+];
+
+/// Shift amounts / masks that define the collective tag layout
+/// (`[63]=COLLECTIVE_BIT [62]=REPLY_BIT [61:44]=group hash [43:0]=seq`).
+/// Only `next_coll_tag` and top-level consts may spell these out.
+const TAG_SHIFTS: &[u64] = &[44, 62, 63];
+const TAG_MASKS: &[&str] = &["3ffff", "fffffffffff"];
+
+/// Fallible-by-contract std calls whose `Err` must become a typed error
+/// in library code. Lock and condvar families are deliberately absent
+/// (owned by `raw-lock` / `condvar-no-repredicate`), as is
+/// `JoinHandle::join` (its `Err` is a propagated panic; re-raising is
+/// the contract).
+const RESULT_SET: &[&str] = &[
+    "parse", "try_into", "try_from", "from_utf8", "from_str", "read_to_string", "write_all",
+    "read_exact", "flush", "sync_all", "set_len", "seek", "create_dir_all", "remove_file",
+    "remove_dir_all", "rename", "read_dir", "metadata", "canonicalize", "open", "create", "var",
+    "try_borrow", "try_borrow_mut", "recv_timeout",
+];
+
+/// Identifiers whose lowercase form marks a condvar-ish receiver.
+fn condvar_receiver(name: &str) -> bool {
+    let l = name.to_ascii_lowercase();
+    matches!(l.as_str(), "cv" | "cvar" | "cond") || l.contains("condvar")
+}
+
+/// Run every rule over one file's source. `file` is used verbatim in
+/// findings and for the `hot-loop-clock` path scope.
+pub fn analyze_source(file: &str, src: &str) -> Vec<Finding> {
+    let lexed = lex(src);
+    let scopes = analyze_scopes(&lexed.toks);
+    let mut out = Vec::new();
+    rule_raw_lock(file, &lexed, &scopes, &mut out);
+    rule_condvar(file, &lexed, &scopes, &mut out);
+    rule_raw_tag(file, &lexed, &scopes, &mut out);
+    rule_hot_loop_clock(file, &lexed, &scopes, &mut out);
+    rule_pool_unpaired(file, &lexed, &scopes, &mut out);
+    rule_lib_unwrap(file, &lexed, &scopes, &mut out);
+    // suppression pragmas: a finding at line L is suppressed by a
+    // pragma on L (trailing) or L-1 (preceding line)
+    out.retain(|f| {
+        for l in [f.line, f.line.saturating_sub(1)] {
+            if let Some(rules) = lexed.allows.get(&l) {
+                if rules.iter().any(|r| r == f.rule || r == "all") {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+    out.sort_by_key(|f| (f.line, f.rule));
+    out
+}
+
+fn push(out: &mut Vec<Finding>, file: &str, line: u32, rule: &'static str, message: String) {
+    out.push(Finding { file: file.to_string(), line, rule, message });
+}
+
+// ---------------------------------------------------------------------------
+// raw-lock
+// ---------------------------------------------------------------------------
+
+/// `.lock().unwrap()` / `.try_lock().unwrap()` / `.expect(..)` anywhere
+/// (tests included — a poisoned lock in a test harness hides the real
+/// panic too). The only sanctioned spelling lives inside `plock`.
+fn rule_raw_lock(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if t[i].is(".")
+            && t.get(i + 1).map_or(false, |x| x.is_ident("lock") || x.is_ident("try_lock"))
+            && t.get(i + 2).map_or(false, |x| x.is("("))
+            && t.get(i + 3).map_or(false, |x| x.is(")"))
+            && t.get(i + 4).map_or(false, |x| x.is("."))
+            && t.get(i + 5).map_or(false, |x| x.is_ident("unwrap") || x.is_ident("expect"))
+            && t.get(i + 6).map_or(false, |x| x.is("("))
+        {
+            let in_plock = sc.ctx[i].fn_id.map_or(false, |f| sc.fns[f].name == "plock");
+            if !in_plock {
+                push(
+                    out,
+                    file,
+                    t[i + 1].line,
+                    "raw-lock",
+                    format!(
+                        "`.{}().{}(..)` — use `crate::util::plock` (poison-tolerant) instead",
+                        t[i + 1].text,
+                        t[i + 5].text
+                    ),
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// condvar-no-repredicate
+// ---------------------------------------------------------------------------
+
+/// A `Condvar::wait`/`wait_timeout` must be re-checked under the lock:
+/// either the call sits lexically inside a loop, or it is the tail
+/// expression of a small wrapper fn — in which case every *call* to
+/// that wrapper must itself sit in a loop (or be a further tail
+/// wrapper). `wait_while` re-checks by construction and is exempt.
+fn rule_condvar(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    // pass A: direct waits — classify as in-loop (ok), tail-of-fn
+    // (records a wrapper), or violation
+    let mut wrappers: Vec<String> = Vec::new();
+    for i in 0..t.len() {
+        if !(t[i].is(".")
+            && t.get(i + 1).map_or(false, |x| x.is_ident("wait") || x.is_ident("wait_timeout"))
+            && t.get(i + 2).map_or(false, |x| x.is("(")))
+        {
+            continue;
+        }
+        // receiver: nearest ident before the `.` chain start
+        let Some(recv) = receiver_ident(t, i) else { continue };
+        if !condvar_receiver(&recv) {
+            continue;
+        }
+        let ctx = sc.ctx[i];
+        if ctx.in_loop {
+            continue;
+        }
+        if let Some(fid) = ctx.fn_id {
+            if is_tail_of_fn(t, i, sc.fns[fid].body_end) {
+                wrappers.push(sc.fns[fid].name.clone());
+                continue;
+            }
+        }
+        push(
+            out,
+            file,
+            t[i + 1].line,
+            "condvar-no-repredicate",
+            format!(
+                "condvar `.{}(..)` outside a re-check loop — spurious/missed wakeups lose the predicate",
+                t[i + 1].text
+            ),
+        );
+    }
+    // pass B: calls to tail wrappers must themselves be looped or tail
+    for i in 0..t.len() {
+        if t[i].kind != TokKind::Ident || !wrappers.iter().any(|w| t[i].is(&w[..])) {
+            continue;
+        }
+        if !t.get(i + 1).map_or(false, |x| x.is("(")) {
+            continue;
+        }
+        // skip the wrapper's own definition (`fn cv_wait(...)`)
+        if i > 0 && t[i - 1].is_ident("fn") {
+            continue;
+        }
+        let ctx = sc.ctx[i];
+        if ctx.in_loop {
+            continue;
+        }
+        if let Some(fid) = ctx.fn_id {
+            if is_tail_of_fn(t, i, sc.fns[fid].body_end) {
+                continue; // wrapper-of-wrapper: its callers get checked too
+            }
+        }
+        push(
+            out,
+            file,
+            t[i].line,
+            "condvar-no-repredicate",
+            format!("call to condvar-wait wrapper `{}` outside a re-check loop", t[i].text),
+        );
+    }
+}
+
+/// Tail position: no `;` between the call and the enclosing fn's
+/// closing brace — i.e. the wait's value is the fn's return value and
+/// the caller owns the re-check.
+fn is_tail_of_fn(t: &[Tok], i: usize, body_end: usize) -> bool {
+    let end = body_end.min(t.len());
+    !t[i..end].iter().any(|x| x.is(";"))
+}
+
+/// Nearest identifier before the `.` at index `dot` — the receiver of
+/// a short method chain (`self.net.cv.wait(..)` resolves to `cv`).
+fn receiver_ident(t: &[Tok], dot: usize) -> Option<String> {
+    let prev = t.get(dot.checked_sub(1)?)?;
+    if prev.kind == TokKind::Ident {
+        return Some(prev.text.clone());
+    }
+    // `cv).wait(..)` / `cv()).wait(..)`: scan back over one balanced
+    // paren group then take the ident
+    if prev.is(")") {
+        let open = match_back(t, dot - 1, "(", ")")?;
+        let before = t.get(open.checked_sub(1)?)?;
+        if before.kind == TokKind::Ident {
+            return Some(before.text.clone());
+        }
+    }
+    None
+}
+
+/// Index of the opener matching the closer at `close`, scanning back.
+fn match_back(t: &[Tok], close: usize, open_s: &str, close_s: &str) -> Option<usize> {
+    let mut depth = 0i64;
+    let mut j = close;
+    loop {
+        if t[j].is(close_s) {
+            depth += 1;
+        } else if t[j].is(open_s) {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+        j = j.checked_sub(1)?;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// raw-tag-literal
+// ---------------------------------------------------------------------------
+
+/// The 44/62/63-bit shifts and the group-hash / sequence masks that
+/// define the collective tag word may only be written inside
+/// `next_coll_tag` or in top-level const items. Anywhere else is tag
+/// bit-twiddling waiting to drift from the layout (the PR-5 32-bit
+/// wraparound started exactly this way). Test code is exempt (tests
+/// craft raw tags on purpose).
+fn rule_raw_tag(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        let ctx = sc.ctx[i];
+        if ctx.in_test {
+            continue;
+        }
+        let allowed =
+            ctx.fn_id.map_or(true, |f| sc.fns[f].name == "next_coll_tag");
+        if allowed {
+            continue;
+        }
+        // `<< 44|62|63`
+        if t[i].is("<")
+            && t.get(i + 1).map_or(false, |x| x.is("<"))
+            && t.get(i + 2).map_or(false, |x| x.kind == TokKind::Num)
+        {
+            if let Some(v) = num_value(&t[i + 2].text) {
+                if TAG_SHIFTS.contains(&v) {
+                    push(
+                        out,
+                        file,
+                        t[i + 2].line,
+                        "raw-tag-literal",
+                        format!(
+                            "shift by tag-layout offset {v} outside `next_coll_tag` — use the tag helpers/consts"
+                        ),
+                    );
+                }
+            }
+        }
+        // group-hash / sequence mask literals
+        if t[i].kind == TokKind::Num {
+            if let Some(hex) = hex_norm(&t[i].text) {
+                if TAG_MASKS.contains(&hex.as_str()) {
+                    push(
+                        out,
+                        file,
+                        t[i].line,
+                        "raw-tag-literal",
+                        format!(
+                            "tag-layout mask `{}` outside `next_coll_tag` — use the tag helpers/consts",
+                            t[i].text
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Parse a numeric literal to a value (decimal or 0x/0b/0o), ignoring
+/// `_` separators and type suffixes.
+fn num_value(text: &str) -> Option<u64> {
+    let s: String = text.chars().filter(|c| *c != '_').collect::<String>().to_ascii_lowercase();
+    let (digits, radix) = if let Some(h) = s.strip_prefix("0x") {
+        (h, 16)
+    } else if let Some(b) = s.strip_prefix("0b") {
+        (b, 2)
+    } else if let Some(o) = s.strip_prefix("0o") {
+        (o, 8)
+    } else {
+        (s.as_str(), 10)
+    };
+    let digits = digits.trim_end_matches(|c: char| c.is_ascii_alphabetic() && !(radix == 16 && c.is_ascii_hexdigit()));
+    // strip usize/u64-style suffixes that survive the trim (e.g. "3u64"
+    // trims to "3"; hex "ffu8" needs the explicit split below)
+    let digits = split_suffix(digits, radix);
+    u64::from_str_radix(digits, radix).ok()
+}
+
+/// Normalized hex form of a literal if it is hex (`0xFFF_FFFF_FFFF` ->
+/// `"fffffffffff"`).
+fn hex_norm(text: &str) -> Option<String> {
+    let s: String = text.chars().filter(|c| *c != '_').collect::<String>().to_ascii_lowercase();
+    let h = s.strip_prefix("0x")?;
+    let h = split_suffix(h, 16);
+    if h.is_empty() {
+        return None;
+    }
+    Some(h.to_string())
+}
+
+/// Strip a trailing integer type suffix (`u8|u16|u32|u64|usize|i..`).
+/// For hex this has to be explicit because `f`/`e` etc. are digits.
+fn split_suffix(digits: &str, radix: u32) -> &str {
+    for suf in ["u8", "u16", "u32", "u64", "u128", "usize", "i8", "i16", "i32", "i64", "i128", "isize"] {
+        if let Some(d) = digits.strip_suffix(suf) {
+            // only treat as suffix when something is left and, for
+            // non-hex, the remainder is all digits
+            if !d.is_empty() && (radix == 16 || d.chars().all(|c| c.is_ascii_digit())) {
+                return d;
+            }
+        }
+    }
+    digits
+}
+
+// ---------------------------------------------------------------------------
+// hot-loop-clock
+// ---------------------------------------------------------------------------
+
+/// `Instant::now()` inside a loop in kernel/band-driver code: a clock
+/// syscall per register tile or row band serializes the compute hot
+/// path. Scope: files under `tensor/`, or fns whose name says they are
+/// kernel/band/tile/matmul drivers. Timing at loop *boundaries* is
+/// fine and common.
+fn rule_hot_loop_clock(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    let hot_file = file.replace('\\', "/").contains("/tensor/");
+    for i in 0..t.len() {
+        if !(t[i].is_ident("Instant")
+            && t.get(i + 1).map_or(false, |x| x.is(":"))
+            && t.get(i + 2).map_or(false, |x| x.is(":"))
+            && t.get(i + 3).map_or(false, |x| x.is_ident("now")))
+        {
+            continue;
+        }
+        let ctx = sc.ctx[i];
+        if ctx.in_test || !ctx.in_loop {
+            continue;
+        }
+        let hot_fn = ctx.fn_id.map_or(false, |f| {
+            let n = sc.fns[f].name.to_ascii_lowercase();
+            ["kernel", "band", "tile", "matmul"].iter().any(|k| n.contains(k))
+        });
+        if hot_file || hot_fn {
+            push(
+                out,
+                file,
+                t[i].line,
+                "hot-loop-clock",
+                "`Instant::now()` inside a kernel/band loop — hoist timing out of the tile loop"
+                    .to_string(),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// pool-unpaired
+// ---------------------------------------------------------------------------
+
+/// Identifiers that return a taken pool buffer to circulation: the pool
+/// itself (`put*`, `recycle`) or the fabric (a `send*` transfers
+/// ownership to the receiver, which recycles on its own unwind path).
+const POOL_RETURN: &[&str] = &["put", "put_u16", "recycle", "send", "send_bf16", "send_payload"];
+
+/// Return types that mean the taken buffer (or a wrapper owning it)
+/// escapes to the caller, which then owns the pairing obligation.
+const POOL_ESCAPE_RET: &[&str] = &["Vec", "Tensor", "Bf16Tensor", "Self"];
+
+/// A fn that calls `pool::take`/`take_u16` must either return the
+/// buffer to circulation in the same fn (put/recycle/send) or hand
+/// ownership out through its return type. Anything else leaks the
+/// buffer on every early return and unwind (the PR-5 abort-leak class).
+fn rule_pool_unpaired(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if !(t[i].is_ident("pool")
+            && t.get(i + 1).map_or(false, |x| x.is(":"))
+            && t.get(i + 2).map_or(false, |x| x.is(":"))
+            && t.get(i + 3).map_or(false, |x| x.is_ident("take") || x.is_ident("take_u16"))
+            && t.get(i + 4).map_or(false, |x| x.is("(")))
+        {
+            continue;
+        }
+        let ctx = sc.ctx[i];
+        if ctx.in_test {
+            continue;
+        }
+        let Some(fid) = ctx.fn_id else { continue };
+        let f = &sc.fns[fid];
+        let escapes = f.ret.iter().any(|r| POOL_ESCAPE_RET.contains(&r.as_str()));
+        if escapes {
+            continue;
+        }
+        let body = &t[f.body_start.min(t.len())..f.body_end.min(t.len())];
+        let paired = body
+            .iter()
+            .any(|x| x.kind == TokKind::Ident && POOL_RETURN.contains(&x.text.as_str()));
+        if !paired {
+            push(
+                out,
+                file,
+                t[i + 3].line,
+                "pool-unpaired",
+                format!(
+                    "`pool::{}` in `{}` with no put/recycle/send and no ownership-escaping return — leaks on unwind",
+                    t[i + 3].text, f.name
+                ),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lib-unwrap
+// ---------------------------------------------------------------------------
+
+/// `.unwrap()`/`.expect(..)` directly on a call to a known-fallible std
+/// API, in non-test code. These must surface as typed errors — a panic
+/// here tears down a rank and reads as a training bug instead of an
+/// I/O/parse condition.
+fn rule_lib_unwrap(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    for i in 0..t.len() {
+        if !(t[i].is(".")
+            && t.get(i + 1).map_or(false, |x| x.is_ident("unwrap") || x.is_ident("expect"))
+            && t.get(i + 2).map_or(false, |x| x.is("(")))
+        {
+            continue;
+        }
+        if sc.ctx[i].in_test {
+            continue;
+        }
+        // receiver must be `ident(...)` — find the call's `(` and the
+        // name before it (skipping a turbofish)
+        let Some(close) = i.checked_sub(1) else { continue };
+        if !t[close].is(")") {
+            continue;
+        }
+        let Some(open) = match_back(t, close, "(", ")") else { continue };
+        let Some(mut j) = open.checked_sub(1) else { continue };
+        if t[j].is(">") {
+            // turbofish `parse::<u64>()` — skip back over `< .. >`
+            let Some(lt) = match_back(t, j, "<", ">") else { continue };
+            // expect `::` before the `<`
+            if lt < 2 || !t[lt - 1].is(":") || !t[lt - 2].is(":") {
+                continue;
+            }
+            let Some(k) = (lt - 2).checked_sub(1) else { continue };
+            j = k;
+        }
+        if t[j].kind != TokKind::Ident || !RESULT_SET.contains(&t[j].text.as_str()) {
+            continue;
+        }
+        push(
+            out,
+            file,
+            t[i + 1].line,
+            "lib-unwrap",
+            format!(
+                "`{}(..).{}(..)` in library code — propagate a typed error instead",
+                t[j].text,
+                t[i + 1].text
+            ),
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(src: &str) -> Vec<Finding> {
+        analyze_source("rust/src/some/mod.rs", src)
+    }
+
+    fn rules_of(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn raw_lock_flags_outside_plock_only() {
+        let f = run("fn plock(m: &M) -> G { m.lock().unwrap_or_else(PoisonError::into_inner) }\n\
+                     fn good(m: &M) { let _g = plock(m); }\n\
+                     fn bad(m: &M) { let _g = m.lock().unwrap(); }\n\
+                     fn bad2(m: &M) { let _g = m.try_lock().expect(\"x\"); }");
+        assert_eq!(rules_of(&f), vec!["raw-lock", "raw-lock"]);
+        assert_eq!(f[0].line, 3);
+    }
+
+    #[test]
+    fn raw_lock_applies_in_tests_too() {
+        let f = run("#[cfg(test)] mod t { fn h(m: &M) { m.lock().unwrap(); } }");
+        assert_eq!(rules_of(&f), vec!["raw-lock"]);
+    }
+
+    #[test]
+    fn condvar_in_loop_ok_tail_wrapper_ok_bare_flagged() {
+        let f = run(
+            "fn looped(cv: &C, mut g: G) { while !*g { g = cv.wait(g).unwrap_or_else(e); } }\n\
+             fn cv_wait(cv: &C, g: G) -> G { cv.wait(g).unwrap_or_else(e) }\n\
+             fn caller(cv: &C, mut g: G) { loop { g = cv_wait(cv, g); } }\n\
+             fn bare(cv: &C, g: G) { let _g = cv.wait(g).unwrap_or_else(e); let _x = 1; }",
+        );
+        assert_eq!(rules_of(&f), vec!["condvar-no-repredicate"]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn condvar_wrapper_called_outside_loop_flagged() {
+        let f = run(
+            "fn cv_wait(cv: &C, g: G) -> G { cv.wait(g).unwrap_or_else(e) }\n\
+             fn caller(cv: &C, g: G) { let _g = cv_wait(cv, g); done(); }",
+        );
+        assert_eq!(rules_of(&f), vec!["condvar-no-repredicate"]);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn wait_while_and_non_condvar_receivers_exempt() {
+        let f = run(
+            "fn a(cv: &C, g: G) { let _g = cv.wait_while(g, |s| !*s); done(); }\n\
+             fn b(rx: &R) { let _v = handle.wait(); done(); }",
+        );
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn raw_tag_shift_and_mask_flagged_outside_helper() {
+        let f = run(
+            "fn elsewhere(gh: u64, seq: u64) -> u64 { (1u64 << 63) | ((gh & 0x3_FFFF) << 44) | (seq & 0xFFF_FFFF_FFFF) }",
+        );
+        assert_eq!(rules_of(&f), vec!["raw-tag-literal"; 4]);
+    }
+
+    #[test]
+    fn raw_tag_allowed_in_helper_consts_and_tests() {
+        let f = run(
+            "const COLLECTIVE_BIT: u64 = 1 << 63;\n\
+             fn next_coll_tag(gh: u64, s: u64) -> u64 { ((gh & 0x3_FFFF) << 44) | s }\n\
+             #[cfg(test)] mod t { fn mk() -> u64 { 1u64 << 62 } }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn hot_loop_clock_scoped_to_kernel_fns_and_tensor_files() {
+        let f = run(
+            "fn kernel_band(n: usize) { for _ in 0..n { let t = Instant::now(); work(t); } }\n\
+             fn orchestrate(n: usize) { for _ in 0..n { let t = Instant::now(); work(t); } }\n\
+             fn kernel_edge() { let t0 = Instant::now(); for _ in 0..9 { work(); } }",
+        );
+        assert_eq!(rules_of(&f), vec!["hot-loop-clock"]);
+        assert_eq!(f[0].line, 1);
+        let tensor = analyze_source(
+            "rust/src/tensor/ops.rs",
+            "fn anything(n: usize) { while n > 0 { let _ = Instant::now(); } }",
+        );
+        assert_eq!(rules_of(&tensor), vec!["hot-loop-clock"]);
+    }
+
+    #[test]
+    fn pool_pairing_and_escapes() {
+        let f = run(
+            "fn leak(n: usize) { let b = pool::take(n); fill(&b); }\n\
+             fn paired(n: usize) { let b = pool::take(n); pool::put(b); }\n\
+             fn shipped(n: usize) { let b = pool::take(n); ep.send(1, tag, b); }\n\
+             fn escapes(n: usize) -> Vec<f32> { pool::take(n) }",
+        );
+        assert_eq!(rules_of(&f), vec!["pool-unpaired"]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn lib_unwrap_on_result_set_only() {
+        let f = run(
+            "fn a(s: &str) -> u32 { s.parse().unwrap() }\n\
+             fn b(s: &str) -> u32 { s.parse::<u32>().expect(\"num\") }\n\
+             fn c(v: Vec<u8>) -> [u8; 4] { v.try_into().unwrap() }\n\
+             fn d(h: std::thread::JoinHandle<()>) { h.join().unwrap(); }\n\
+             fn e(o: Option<u32>) -> u32 { o.unwrap() }",
+        );
+        assert_eq!(rules_of(&f), vec!["lib-unwrap"; 3]);
+        assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn pragma_suppresses_same_line_and_next_line() {
+        let f = run(
+            "// vet: allow(lib-unwrap)\n\
+             fn a(s: &str) -> u32 { s.parse().unwrap() }\n\
+             fn b(m: &M) { m.lock().unwrap(); } // vet: allow(raw-lock)\n\
+             fn c(s: &str) -> u32 { s.parse().unwrap() }",
+        );
+        assert_eq!(rules_of(&f), vec!["lib-unwrap"]);
+        assert_eq!(f[0].line, 4);
+    }
+}

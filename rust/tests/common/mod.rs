@@ -22,7 +22,7 @@ static ENGINES: OnceLock<Mutex<HashMap<String, Arc<Engine>>>> = OnceLock::new();
 
 pub fn engine(preset: &str) -> Arc<Engine> {
     let map = ENGINES.get_or_init(|| Mutex::new(HashMap::new()));
-    let mut m = map.lock().unwrap();
+    let mut m = jigsaw::util::plock(map);
     m.entry(preset.to_string())
         .or_insert_with(|| {
             let manifest = Manifest::load(&artifacts(), preset).expect("manifest");

@@ -1,0 +1,178 @@
+//! Wait-graph deadlock detector properties:
+//!
+//!   * a forced two-rank recv/recv cycle on mismatched tags panics
+//!     *immediately* with a typed [`CommError::Deadlock`] naming both
+//!     ranks and both tags — instead of hanging until a CI timeout;
+//!   * a legitimate blocking wait under `FabricSpec` delivery delay
+//!     does NOT trip the detector (an in-flight message counts as
+//!     progress even before its simulated delivery time);
+//!   * the detector-disabled path is bit-identical to detector-enabled
+//!     on an existing `mesh_props`-style distributed case (the checker
+//!     only reads state — it must never perturb results).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use jigsaw::comm::{set_deadlock_detect_default, CommError, FabricSpec, Network};
+use jigsaw::jigsaw::Mesh;
+use jigsaw::model::init_global_params;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::tensor::Tensor;
+use jigsaw::trainer::oracle::run_dist_loss_and_grad;
+use jigsaw::util::rng::Rng;
+
+/// Abort the fabric if the test has not finished within `secs` — the
+/// hang-breaker that turns a detector regression into a clean failure
+/// (peers unwind with `Aborted`, which the asserts below reject)
+/// instead of a wedged test binary.
+fn watchdog(net: &Network, done: &Arc<AtomicBool>, secs: u64) -> thread::JoinHandle<()> {
+    let net = net.clone();
+    let done = done.clone();
+    thread::spawn(move || {
+        for _ in 0..secs * 20 {
+            if done.load(Ordering::SeqCst) {
+                return;
+            }
+            thread::sleep(Duration::from_millis(50));
+        }
+        net.abort();
+    })
+}
+
+#[test]
+fn forced_two_rank_cycle_panics_naming_both_ranks_and_tags() {
+    let net = Network::new(2);
+    net.set_deadlock_detect(true);
+    let done = Arc::new(AtomicBool::new(false));
+    let _dog = watchdog(&net, &done, 30);
+
+    // rank 0 waits on (src 1, tag 0xb); rank 1 waits on (src 0, tag
+    // 0x16); nobody ever sends — a textbook recv/recv tag mismatch
+    let mut handles = Vec::new();
+    for (rank, src, tag) in [(0usize, 1usize, 0xbu64), (1, 0, 0x16)] {
+        let ep = net.endpoint(rank);
+        handles.push(thread::spawn(move || {
+            let _ = ep.recv(src, tag);
+        }));
+    }
+    let payloads: Vec<CommError> = handles
+        .into_iter()
+        .map(|h| {
+            let p = h.join().expect_err("rank must panic, not return");
+            CommError::from_panic(&*p).expect("typed CommError payload")
+        })
+        .collect();
+    done.store(true, Ordering::SeqCst);
+
+    for (i, ce) in payloads.iter().enumerate() {
+        match ce {
+            CommError::Deadlock { desc } => {
+                // the knot names every member and its waited keys
+                assert!(desc.contains("rank 0"), "rank {i}: missing rank 0 in {desc:?}");
+                assert!(desc.contains("rank 1"), "rank {i}: missing rank 1 in {desc:?}");
+                assert!(desc.contains("src 1 tag 0xb"), "rank {i}: missing r0's key in {desc:?}");
+                assert!(desc.contains("src 0 tag 0x16"), "rank {i}: missing r1's key in {desc:?}");
+            }
+            other => panic!("rank {i}: expected Deadlock, got {other:?} (watchdog fired?)"),
+        }
+    }
+    // the fabric records the knot for post-mortems
+    let info = net.deadlock_info().expect("deadlock recorded on the network");
+    assert!(info.contains("rank 0") && info.contains("rank 1"));
+    // and Display carries the diagnosis end to end
+    let shown = payloads[0].to_string();
+    assert!(shown.contains("deadlock") && shown.contains("rank 1"), "{shown}");
+}
+
+#[test]
+fn in_flight_delayed_message_does_not_trip_detector() {
+    let net = Network::new(2);
+    net.set_deadlock_detect(true);
+    net.set_fabric(
+        FabricSpec {
+            latency: Duration::from_millis(50),
+            jitter: Duration::ZERO,
+            bytes_per_sec: 1e12,
+        },
+        0xD1CE,
+    );
+    let done = Arc::new(AtomicBool::new(false));
+    let _dog = watchdog(&net, &done, 30);
+
+    // receiver parks first (registers with an empty queue), then the
+    // send lands in-flight: for ~50ms the queue is non-empty but not
+    // deliverable, and the detector must treat that as progress
+    let ep1 = net.endpoint(1);
+    let recv = thread::spawn(move || ep1.recv(0, 7));
+    thread::sleep(Duration::from_millis(10));
+    let ep0 = net.endpoint(0);
+    ep0.send(1, 7, Tensor::new(vec![2], vec![3.0, 4.0]));
+    let got = recv.join().expect("delayed delivery must complete, not panic");
+    done.store(true, Ordering::SeqCst);
+    assert_eq!(got.data, vec![3.0, 4.0]);
+    assert!(net.deadlock_info().is_none(), "detector tripped on live traffic");
+}
+
+/// RAII reset so a failing assert can't leak a pinned process-wide
+/// detector default into other tests in this binary.
+struct DefaultReset;
+impl Drop for DefaultReset {
+    fn drop(&mut self) {
+        set_deadlock_detect_default(None);
+    }
+}
+
+#[test]
+fn detector_disabled_path_is_bit_identical_on_mesh_case() {
+    let _reset = DefaultReset;
+    let cfg = jigsaw::config::ModelConfig {
+        name: "deadlock-props".into(),
+        lat: 8,
+        lon: 16,
+        channels: 6,
+        channels_padded: 8,
+        patch: 2,
+        d_emb: 32,
+        d_tok: 48,
+        d_ch: 32,
+        blocks: 2,
+        tokens: 32,
+        patch_dim: 32,
+        param_count: 12904,
+        flops_forward: 0,
+        channel_weights: vec![1.0; 6],
+    };
+    let global = init_global_params(&cfg, 21);
+    let mk = |seed: u64| {
+        let mut rng = Rng::seed_from(seed);
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
+    };
+    let (x, y) = (mk(31), mk(32));
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mesh = Mesh::new(2, 2).unwrap();
+
+    let mut runs = Vec::new();
+    for on in [false, true] {
+        set_deadlock_detect_default(Some(on));
+        let (loss, grads) =
+            run_dist_loss_and_grad(&cfg, &mesh, &global, &x, &y, backend.clone(), 1).unwrap();
+        runs.push((loss, grads));
+    }
+    set_deadlock_detect_default(None);
+
+    let (loss_off, grads_off) = &runs[0];
+    let (loss_on, grads_on) = &runs[1];
+    assert_eq!(loss_off.to_bits(), loss_on.to_bits(), "loss differs with detector on");
+    assert_eq!(grads_off.len(), grads_on.len());
+    for ((n, a), (_, b)) in grads_off.iter().zip(grads_on.iter()) {
+        assert_eq!(a.shape, b.shape, "grad '{n}' shape");
+        for (va, vb) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "grad '{n}' bits differ with detector on");
+        }
+    }
+}

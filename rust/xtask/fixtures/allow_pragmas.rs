@@ -1,0 +1,42 @@
+//! vet fixture: every violation below is suppressed by a
+//! `// vet: allow(<rule>)` pragma, so this file must produce ZERO
+//! findings — it pins the pragma syntax (same line and preceding line)
+//! and the multi-rule list form. Not valid repo code — never compiled,
+//! only linted.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+fn preceding_line(c: &Mutex<u64>) {
+    // vet: allow(raw-lock)
+    let _g = c.lock().unwrap();
+}
+
+fn trailing(raw: &str) -> usize {
+    raw.parse().unwrap() // vet: allow(lib-unwrap)
+}
+
+fn multi(gh: u64, seq: u64) -> u64 {
+    // vet: allow(raw-tag-literal, hot-loop-clock)
+    let tag = (1u64 << 63) | ((gh & 0x3_FFFF) << 44) | seq;
+    let mut acc = tag;
+    for _ in 0..4 {
+        // vet: allow(hot-loop-clock)
+        let _t = kernel_probe();
+        acc ^= acc << 1;
+    }
+    acc
+}
+
+fn kernel_tile_step(n: usize) -> f64 {
+    let mut s = 0.0;
+    for _ in 0..n {
+        let t0 = Instant::now(); // vet: allow(hot-loop-clock)
+        s += t0.elapsed().as_secs_f64();
+    }
+    s
+}
+
+fn kernel_probe() -> u64 {
+    7
+}

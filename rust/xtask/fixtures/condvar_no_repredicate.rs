@@ -1,0 +1,27 @@
+//! vet fixture: must trigger `condvar-no-repredicate` (and only it).
+//!
+//! The PR-5 missed-wakeup class: a condvar wait whose predicate is not
+//! re-checked in a loop loses the wakeup that fires while the waiter is
+//! off the condvar (or a spurious wake returns with the predicate still
+//! false). Not valid repo code — never compiled, only linted.
+
+use std::sync::{Condvar, Mutex, MutexGuard};
+
+fn wait_once<'a>(cv: &Condvar, g: MutexGuard<'a, bool>) {
+    // single un-looped wait: predicate can be false on return
+    let _g = cv.wait(g).unwrap_or_else(|e| e.into_inner());
+    proceed();
+}
+
+fn tail_wrapper<'a>(cv: &Condvar, g: MutexGuard<'a, bool>) -> MutexGuard<'a, bool> {
+    // tail-position wrapper: legal by itself, but its caller below
+    // never re-checks in a loop
+    cv.wait(g).unwrap_or_else(|e| e.into_inner())
+}
+
+fn caller<'a>(cv: &Condvar, g: MutexGuard<'a, bool>) {
+    let _g = tail_wrapper(cv, g);
+    proceed();
+}
+
+fn proceed() {}

@@ -1,0 +1,20 @@
+//! vet fixture: must trigger `hot-loop-clock` (and only it).
+//!
+//! A clock read per register tile serializes the kernel hot path on a
+//! syscall; timing belongs at band/driver boundaries. Not valid repo
+//! code — never compiled, only linted.
+
+use std::time::Instant;
+
+fn kernel_block_timed(rows: usize, cols: usize) -> f64 {
+    let mut spent = 0.0;
+    for r in 0..rows {
+        // per-tile clock read — this is the violation
+        let t0 = Instant::now();
+        compute_row(r, cols);
+        spent += t0.elapsed().as_secs_f64();
+    }
+    spent
+}
+
+fn compute_row(_r: usize, _cols: usize) {}

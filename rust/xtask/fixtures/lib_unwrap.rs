@@ -1,0 +1,18 @@
+//! vet fixture: must trigger `lib-unwrap` (and only it).
+//!
+//! A bare unwrap on a fallible std call in library code turns an I/O or
+//! parse condition into a rank panic that reads as a training bug; the
+//! repo's contract is typed errors. Not valid repo code — never
+//! compiled, only linted.
+
+fn parse_env_threads(raw: &str) -> usize {
+    raw.parse().unwrap()
+}
+
+fn parse_mesh_axis(raw: &str) -> u32 {
+    raw.trim().parse::<u32>().expect("mesh axis")
+}
+
+fn read_manifest(path: &str) -> String {
+    std::fs::read_to_string(path).unwrap()
+}

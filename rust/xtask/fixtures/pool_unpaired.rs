@@ -1,0 +1,16 @@
+//! vet fixture: must trigger `pool-unpaired` (and only it).
+//!
+//! The PR-5 abort-leak class: a `pool::take` with no `put`/`recycle`/
+//! `send` in the same fn and no ownership-escaping return leaks the
+//! buffer on every early return and unwind path. Not valid repo code —
+//! never compiled, only linted.
+
+fn scratch_sum(n: usize, xs: &[f32]) -> f32 {
+    let buf = crate::tensor::pool::take(n);
+    let mut acc = 0.0f32;
+    for (i, x) in xs.iter().enumerate() {
+        acc += x * buf[i % n];
+    }
+    // buf is dropped here without returning to the pool
+    acc
+}

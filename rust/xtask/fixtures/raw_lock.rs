@@ -1,0 +1,17 @@
+//! vet fixture: must trigger `raw-lock` (and only `raw-lock`).
+//!
+//! This is the PR-7 bug class: a raw `.lock().unwrap()` turns the
+//! *second* panic on an abort path into an opaque `PoisonError` that
+//! buries the original failure. Not valid repo code — never compiled,
+//! only linted by the self-test.
+
+use std::sync::Mutex;
+
+fn counter_bump(c: &Mutex<u64>) {
+    let mut g = c.lock().unwrap();
+    *g += 1;
+}
+
+fn counter_read(c: &Mutex<u64>) -> u64 {
+    *c.try_lock().expect("counter busy")
+}

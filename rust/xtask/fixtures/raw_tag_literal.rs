@@ -1,0 +1,15 @@
+//! vet fixture: must trigger `raw-tag-literal` (and only it).
+//!
+//! The PR-5 tag-wraparound class: collective tags pack
+//! `[63]=COLLECTIVE_BIT [62]=REPLY_BIT [61:44]=group hash [43:0]=seq`,
+//! and every hand-rolled re-derivation of those offsets/masks outside
+//! `next_coll_tag` is a chance for the layouts to drift apart. Not
+//! valid repo code — never compiled, only linted.
+
+fn handroll_tag(group_hash: u64, seq: u64) -> u64 {
+    (1u64 << 63) | ((group_hash & 0x3_FFFF) << 44) | (seq & 0xFFF_FFFF_FFFF)
+}
+
+fn handroll_reply(tag: u64) -> u64 {
+    tag | (1u64 << 62)
+}
