@@ -33,16 +33,11 @@ fn flag<T: std::str::FromStr>(flags: &HashMap<String, String>, k: &str, d: T) ->
 }
 
 fn main() -> anyhow::Result<()> {
-    let mut flags = HashMap::new();
+    // the binary's flag grammar verbatim — `--k v`, `--k=v`, and bare
+    // `--k` all work here too, instead of the drifted subset this
+    // example used to hand-roll
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let mut it = args.iter();
-    while let Some(a) = it.next() {
-        if let Some(k) = a.strip_prefix("--") {
-            if let Some(v) = it.next() {
-                flags.insert(k.to_string(), v.clone());
-            }
-        }
-    }
+    let (_pos, flags) = jigsaw::cli::parse_flags(&args);
     let zoo: usize = flag(&flags, "zoo", 0usize);
     let (cfg, backend): (ModelConfig, Arc<dyn Backend>) = if zoo > 0 {
         anyhow::ensure!((1..=9).contains(&zoo), "--zoo takes a Table-1 id (1-9)");

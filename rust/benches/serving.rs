@@ -1,0 +1,194 @@
+//! Serving bench: queries/sec and tail latency of the forecast serving
+//! engine versus trajectory-cache size, under injected fabric latency.
+//!
+//! Three measurements:
+//!
+//!   * **recompute** — the no-cache baseline: every regional query rolls
+//!     its initial condition forward to the requested lead from scratch
+//!     on the raw [`RolloutEngine`];
+//!   * **cache sweep** — the same seeded query stream through a
+//!     [`ServeEngine`] at several `--cache-states` capacities: one warm
+//!     pass, then a measured pass reporting qps / p50 / p99 / hit rate;
+//!   * **gate** — cached regional queries must be >10x faster than the
+//!     recompute baseline at the largest cache size (the entire point of
+//!     keying assembled states by `(init, lead)` and answering windows
+//!     as O(1) views).
+//!
+//! Writes BENCH_serving.json.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use jigsaw::benchkit::{banner, synth_config, TrafficGen};
+use jigsaw::comm::FabricSpec;
+use jigsaw::jigsaw::Mesh;
+use jigsaw::model::init_global_params;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::serve::{RegionQuery, RolloutEngine, ServeEngine};
+use jigsaw::tensor::{Precision, Tensor};
+use jigsaw::util::json::Json;
+use jigsaw::util::table::{fmt, Table};
+
+const SEED: u64 = 0xCAFE;
+const FABRIC_LATENCY_US: u64 = 200;
+const N_INITS: usize = 2;
+const MAX_LEAD: usize = 6;
+const N_QUERIES: usize = 40;
+const CACHE_SIZES: [usize; 3] = [2, 8, 32];
+
+fn inits(cfg: &jigsaw::config::ModelConfig) -> Vec<(u64, Tensor)> {
+    let mut rng = jigsaw::util::rng::Rng::seed_from(SEED ^ 0x5EED_1D);
+    (0..N_INITS as u64)
+        .map(|id| {
+            let mut d = vec![0.0f32; cfg.lat * cfg.lon * cfg.channels_padded];
+            rng.fill_normal(&mut d, 1.0);
+            (id, Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d))
+        })
+        .collect()
+}
+
+fn engine(
+    cfg: &jigsaw::config::ModelConfig,
+    mesh: &Mesh,
+    global: &[(String, Tensor)],
+) -> RolloutEngine {
+    let e = RolloutEngine::new(
+        cfg,
+        mesh,
+        global,
+        Arc::new(NativeBackend),
+        Precision::F32,
+        1,
+    )
+    .expect("rollout engine");
+    e.set_fabric(
+        FabricSpec::from_us(FABRIC_LATENCY_US, FABRIC_LATENCY_US / 4, 1.0),
+        SEED,
+    );
+    e
+}
+
+fn queries(cfg: &jigsaw::config::ModelConfig) -> Vec<RegionQuery> {
+    let mut gen =
+        TrafficGen::new(SEED, N_INITS as u64, MAX_LEAD, cfg.lat, cfg.lon);
+    (0..N_QUERIES).map(|_| gen.next_query()).collect()
+}
+
+fn percentile(sorted_us: &[f64], p: usize) -> f64 {
+    sorted_us[(sorted_us.len() * p / 100).min(sorted_us.len() - 1)]
+}
+
+fn main() {
+    banner("serving", "forecast serving qps/p99 vs trajectory-cache size");
+    let cfg = synth_config("serving-bench", 64, 48, 2);
+    let mesh = Mesh::new(1, 2).unwrap();
+    let global = init_global_params(&cfg, SEED);
+    let qs = queries(&cfg);
+
+    let mut record: BTreeMap<String, Json> = BTreeMap::new();
+    record.insert("config".into(), Json::Str(cfg.name.clone()));
+    record.insert("mesh".into(), Json::Str(mesh.to_string()));
+    record.insert("fabric_latency_us".into(), Json::Num(FABRIC_LATENCY_US as f64));
+    record.insert("queries".into(), Json::Num(N_QUERIES as f64));
+    record.insert("max_lead".into(), Json::Num(MAX_LEAD as f64));
+
+    // --- recompute baseline: every query rolls from its init ---
+    let mut eng = engine(&cfg, &mesh, &global);
+    let init_states = inits(&cfg);
+    let mut lat_us = Vec::with_capacity(qs.len());
+    for q in &qs {
+        let t0 = Instant::now();
+        let mut state = init_states[q.init_id as usize].1.clone();
+        for _ in 0..q.lead {
+            state = eng.step(&state).expect("rollout step");
+        }
+        let (lat0, lon0) = (q.lat.0, q.lon.0);
+        std::hint::black_box(
+            state.data[(lat0 * cfg.lon + lon0) * cfg.channels_padded],
+        );
+        lat_us.push(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    drop(eng);
+    let recompute_mean = lat_us.iter().sum::<f64>() / lat_us.len() as f64;
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut t = Table::new(&[
+        "cache", "queries/s", "p50 (us)", "p99 (us)", "hit rate", "evict",
+    ]);
+    t.row(&[
+        "recompute".into(),
+        fmt(1e6 / recompute_mean),
+        fmt(percentile(&lat_us, 50)),
+        fmt(percentile(&lat_us, 99)),
+        "-".into(),
+        "-".into(),
+    ]);
+    record.insert("recompute_mean_us".into(), Json::Num(recompute_mean));
+
+    // --- cache sweep: warm pass, then a measured pass over the same
+    //     stream (lead-0 queries excluded from the latency stats so the
+    //     gate measures cached *rollout* states, not init passthrough) ---
+    let mut sweep = Vec::new();
+    let mut largest_cached_mean = f64::INFINITY;
+    for cache_states in CACHE_SIZES {
+        let mut srv =
+            ServeEngine::new(engine(&cfg, &mesh, &global), cache_states, MAX_LEAD, true);
+        for (id, s) in inits(&cfg) {
+            srv.add_init(id, s).expect("init");
+        }
+        for q in &qs {
+            std::hint::black_box(srv.answer(*q).expect("warm query").view().at(0, 0));
+        }
+        srv.counters().reset();
+        let mut lat_us = Vec::new();
+        let t0 = Instant::now();
+        for q in &qs {
+            let qt = Instant::now();
+            std::hint::black_box(srv.answer(*q).expect("query").view().at(0, 0));
+            if q.lead > 0 {
+                lat_us.push(qt.elapsed().as_secs_f64() * 1e6);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = srv.stats();
+        lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = lat_us.iter().sum::<f64>() / lat_us.len() as f64;
+        let qps = qs.len() as f64 / wall;
+        t.row(&[
+            format!("{cache_states}"),
+            fmt(qps),
+            fmt(percentile(&lat_us, 50)),
+            fmt(percentile(&lat_us, 99)),
+            fmt(stats.hit_rate()),
+            fmt(stats.evictions as f64),
+        ]);
+        let mut row: BTreeMap<String, Json> = BTreeMap::new();
+        row.insert("cache_states".into(), Json::Num(cache_states as f64));
+        row.insert("qps".into(), Json::Num(qps));
+        row.insert("p50_us".into(), Json::Num(percentile(&lat_us, 50)));
+        row.insert("p99_us".into(), Json::Num(percentile(&lat_us, 99)));
+        row.insert("mean_us".into(), Json::Num(mean));
+        row.insert("hit_rate".into(), Json::Num(stats.hit_rate()));
+        row.insert("evictions".into(), Json::Num(stats.evictions as f64));
+        row.insert("prefetches".into(), Json::Num(stats.prefetches as f64));
+        sweep.push(Json::Obj(row));
+        largest_cached_mean = mean;
+    }
+    record.insert("sweep".into(), Json::Arr(sweep));
+
+    // --- gate: cached queries must beat recompute by >10x at the
+    //     largest cache (every state the stream touches fits) ---
+    let speedup = recompute_mean / largest_cached_mean;
+    record.insert("speedup_at_largest_cache".into(), Json::Num(speedup));
+    println!("{}", t.render());
+    println!(
+        "cached mean {largest_cached_mean:.1} us vs recompute mean {recompute_mean:.1} us -> {speedup:.1}x"
+    );
+    assert!(
+        speedup > 10.0,
+        "cached regional queries must be >10x the recompute baseline, got {speedup:.1}x"
+    );
+
+    std::fs::write("BENCH_serving.json", Json::Obj(record).to_string() + "\n").unwrap();
+    println!("BENCH_serving.json written");
+}

@@ -99,9 +99,73 @@ impl Backend for FlakyBackend {
     }
 }
 
+/// Seeded synthetic forecast-query traffic for `jigsaw serve` and the
+/// serving bench: regional windows of random initial conditions at
+/// skewed lead times (short leads dominate — users mostly ask about the
+/// near future — which is what makes a small trajectory cache earn its
+/// keep).
+pub struct TrafficGen {
+    rng: crate::util::rng::Rng,
+    n_inits: u64,
+    max_lead: usize,
+    lat: usize,
+    lon: usize,
+}
+
+impl TrafficGen {
+    pub fn new(seed: u64, n_inits: u64, max_lead: usize, lat: usize, lon: usize) -> Self {
+        assert!(n_inits >= 1, "traffic needs at least one init");
+        assert!(lat >= 1 && lon >= 1, "traffic needs a non-empty grid");
+        TrafficGen {
+            rng: crate::util::rng::Rng::seed_from(seed ^ 0x7AFF_1C00),
+            n_inits,
+            max_lead,
+            lat,
+            lon,
+        }
+    }
+
+    /// Next query. Lead is the min of two uniform draws over
+    /// `[0, max_lead]` (triangular, short-skewed); the window is an
+    /// arbitrary non-empty `[lat0, lat1) x [lon0, lon1)` box.
+    pub fn next_query(&mut self) -> crate::serve::RegionQuery {
+        let a = self.rng.below(self.max_lead + 1);
+        let b = self.rng.below(self.max_lead + 1);
+        let init_id = self.rng.below(self.n_inits as usize) as u64;
+        let lat0 = self.rng.below(self.lat);
+        let lat1 = lat0 + 1 + self.rng.below(self.lat - lat0);
+        let lon0 = self.rng.below(self.lon);
+        let lon1 = lon0 + 1 + self.rng.below(self.lon - lon0);
+        crate::serve::RegionQuery {
+            init_id,
+            lead: a.min(b),
+            lat: (lat0, lat1),
+            lon: (lon0, lon1),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn traffic_gen_is_seeded_and_in_bounds() {
+        let mut g = TrafficGen::new(7, 3, 8, 16, 32);
+        let mut h = TrafficGen::new(7, 3, 8, 16, 32);
+        let mut leads = [0usize; 9];
+        for _ in 0..500 {
+            let q = g.next_query();
+            assert_eq!(q, h.next_query(), "same seed, same stream");
+            assert!(q.init_id < 3);
+            assert!(q.lead <= 8);
+            assert!(q.lat.0 < q.lat.1 && q.lat.1 <= 16);
+            assert!(q.lon.0 < q.lon.1 && q.lon.1 <= 32);
+            leads[q.lead] += 1;
+        }
+        // min-of-two-uniforms skews short
+        assert!(leads[0] > leads[8], "short leads must dominate: {leads:?}");
+    }
 
     #[test]
     fn synth_config_consistent() {

@@ -423,6 +423,33 @@ pub fn load_state(cfg: &ModelConfig, meta: &CheckpointMeta) -> Result<GlobalStat
     Ok(GlobalState { meta: meta.clone(), params, m, v, loaders })
 }
 
+/// Load and assemble *weights only* from a verified checkpoint — the
+/// serving path. Adam moments, the loss-scaler state, and loader cursors
+/// are decoded shard-by-shard but never assembled or returned: an
+/// inference deployment holds exactly one copy of the parameters and no
+/// optimizer state. Same config-hash gate as [`load_state`].
+pub fn load_params(
+    cfg: &ModelConfig,
+    meta: &CheckpointMeta,
+) -> Result<Vec<(String, Tensor)>> {
+    if meta.config_hash != cfg.content_hash() {
+        bail!(
+            "checkpoint was saved for config {:?} (hash {}), refusing to serve config {:?} (hash {})",
+            meta.config_name,
+            hex64(meta.config_hash),
+            cfg.name,
+            hex64(cfg.content_hash()),
+        );
+    }
+    let mut pstores = Vec::new();
+    for (f, _) in &meta.shards {
+        let bytes = fs::read(meta.dir.join(f)).with_context(|| format!("shard {f}"))?;
+        let (p, _m, _v) = codec::decode_shard(&bytes).with_context(|| format!("shard {f}"))?;
+        pstores.push(p);
+    }
+    Ok(assemble_params(cfg, &pstores.iter().collect::<Vec<_>>()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

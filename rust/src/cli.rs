@@ -19,7 +19,12 @@ use crate::checkpoint::CheckpointSpec;
 use crate::trainer::{train, train_elastic, TrainSpec};
 use crate::util::table::{fmt, Table};
 
-fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+/// Split an argv tail into positionals and `--key value` / `--key=value`
+/// flags; a `--flag` followed by another flag (or nothing) parses as the
+/// bare boolean `"true"`. Public so the examples share one grammar with
+/// the binary instead of re-implementing a subset (the old train_e2e
+/// copy lacked `=` and bare-flag forms and drifted).
+pub fn parse_flags(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     let mut pos = Vec::new();
     let mut flags = HashMap::new();
     let mut it = args.iter().peekable();
@@ -61,6 +66,32 @@ pub fn mesh_flag(flags: &HashMap<String, String>, default_way: usize) -> Result<
     Ok(mesh)
 }
 
+/// `--precision f32|bf16` for the engine commands (train, serve).
+/// Junk values are a typed error — train's old `flag(..)` form silently
+/// fell back to f32, which is exactly the kind of per-command drift
+/// these shared helpers exist to kill.
+pub fn precision_flag(
+    flags: &HashMap<String, String>,
+) -> Result<crate::tensor::Precision> {
+    match flags.get("precision") {
+        None => Ok(crate::tensor::Precision::F32),
+        Some(s) => s.parse().map_err(|e: String| anyhow!("--precision: {e}")),
+    }
+}
+
+/// `--precision fp32|tf32|bf16` for the perfmodel commands (simulate,
+/// roofline), defaulting to tf32 (the paper's cluster math mode). Junk
+/// values error instead of silently simulating tf32.
+pub fn sim_precision_flag(flags: &HashMap<String, String>) -> Result<Precision> {
+    match flags.get("precision").map(|s| s.as_str()) {
+        None => Ok(Precision::Tf32),
+        Some("fp32") => Ok(Precision::Fp32),
+        Some("tf32") => Ok(Precision::Tf32),
+        Some("bf16") => Ok(Precision::Bf16),
+        Some(other) => bail!("--precision: unknown precision '{other}' (fp32|tf32|bf16)"),
+    }
+}
+
 /// Build the compute backend: PJRT when artifacts exist, native otherwise
 /// (or on `--backend native`).
 pub fn make_backend(preset: &str, kind: &str) -> Result<Arc<dyn Backend>> {
@@ -93,6 +124,7 @@ pub fn cli_main(args: &[String]) -> Result<()> {
     let (pos, flags) = parse_flags(&args[1..]);
     match cmd.as_str() {
         "train" => cmd_train(&pos, &flags),
+        "serve" => cmd_serve(&flags),
         "validate" => cmd_validate(&pos, &flags),
         "simulate" => cmd_simulate(&flags),
         "roofline" => cmd_roofline(&flags),
@@ -122,6 +154,14 @@ fn print_usage() {
                       mesh on rank failure, --max-recoveries 3)]\n\
                      [--resume: continue from the newest valid checkpoint,\n\
                       resharding onto the current mesh if it differs]\n\
+           serve     --preset tiny --mesh 1x2 --precision f32|bf16\n\
+                     [--checkpoint-dir d: weights from the newest valid\n\
+                      checkpoint (params only; Adam state never loads)]\n\
+                     [--cache-states 8: trajectory-cache LRU capacity]\n\
+                     [--qps 0: paced query arrival, 0 = open loop]\n\
+                     [--queries 64 --inits 2 --max-lead 8 --seed 0]\n\
+                     [--fabric-latency-us N: inject simulated link delay]\n\
+                     [--no-prefetch: disable next-step rollout overlap]\n\
            validate  --preset tiny --mesh 1x2  check mesh numerics vs the AOT oracle\n\
            simulate  --model 7 --mesh 2x2 --dp 8 --precision tf32|bf16 [--no-dataload]\n\
            roofline  [--precision fp32]      print the Fig-7 series\n\
@@ -147,7 +187,7 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     spec.n_times = flag(flags, "ntimes", 32usize);
     spec.val_every = flag(flags, "val-every", 0usize);
     spec.seed = flag(flags, "seed", 0u64);
-    spec.precision = flag(flags, "precision", crate::tensor::Precision::F32);
+    spec.precision = precision_flag(flags)?;
     if let Some(dir) = flags.get("checkpoint-dir") {
         let mut ck = CheckpointSpec::new(dir);
         ck.every = flag(flags, "checkpoint-every", ck.every);
@@ -201,20 +241,112 @@ fn cmd_train(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let preset: String = flag(flags, "preset", "tiny".to_string());
+    let cfg = ModelConfig::load(&artifacts_dir(), &preset)?;
+    let backend = make_backend(&preset, &flag(flags, "backend", "auto".to_string()))?;
+    let mesh = mesh_flag(flags, 1)?;
+    let precision = precision_flag(flags)?;
+    let cache_states = flag(flags, "cache-states", 8usize);
+    let qps = flag(flags, "qps", 0.0f64);
+    let n_queries = flag(flags, "queries", 64usize);
+    let max_lead = flag(flags, "max-lead", 8usize);
+    let n_inits = flag(flags, "inits", 2usize);
+    let seed = flag(flags, "seed", 0u64);
+    let rollout = flag(flags, "rollout", 1usize);
+
+    let global = match flags.get("checkpoint-dir") {
+        Some(dir) => {
+            let meta = crate::checkpoint::latest(std::path::Path::new(dir))?
+                .ok_or_else(|| anyhow!("no valid checkpoint under {dir}"))?;
+            println!("weights: checkpoint step {} under {dir}", meta.step);
+            crate::checkpoint::load_params(&cfg, &meta)?
+        }
+        None => {
+            println!("weights: fresh init (no --checkpoint-dir)");
+            crate::model::init_global_params(&cfg, seed)
+        }
+    };
+
+    let engine = crate::serve::RolloutEngine::new(
+        &cfg, &mesh, &global, backend, precision, rollout,
+    )?;
+    if flags.contains_key("fabric-latency-us") {
+        let us = flag(flags, "fabric-latency-us", 50u64);
+        engine.set_fabric(crate::comm::FabricSpec::from_us(us, us / 4, 10.0), seed);
+    }
+    let prefetch = !flags.contains_key("no-prefetch");
+    let mut srv =
+        crate::serve::ServeEngine::new(engine, cache_states, max_lead, prefetch);
+
+    let mut rng = crate::util::rng::Rng::seed_from(seed ^ 0x5EED_1D);
+    for id in 0..n_inits as u64 {
+        let mut d = vec![0.0f32; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        srv.add_init(
+            id,
+            crate::tensor::Tensor::new(
+                vec![cfg.lat, cfg.lon, cfg.channels_padded],
+                d,
+            ),
+        )?;
+    }
+
+    println!(
+        "serving {} mesh={} precision={} cache={} max_lead={} prefetch={} queries={}",
+        cfg.name, mesh, precision, cache_states, max_lead, prefetch, n_queries
+    );
+    let mut traffic = crate::benchkit::TrafficGen::new(
+        seed,
+        n_inits as u64,
+        max_lead,
+        cfg.lat,
+        cfg.lon,
+    );
+    let t0 = std::time::Instant::now();
+    let mut lat_us: Vec<f64> = Vec::with_capacity(n_queries);
+    let mut checksum = 0.0f64;
+    for i in 0..n_queries {
+        if qps > 0.0 {
+            let due = t0 + std::time::Duration::from_secs_f64(i as f64 / qps);
+            let now = std::time::Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let q = traffic.next_query();
+        let qt = std::time::Instant::now();
+        let ans = srv.answer(q)?;
+        checksum += ans.view().at(0, 0) as f64;
+        lat_us.push(qt.elapsed().as_secs_f64() * 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let pct = |p: usize| lat_us[(lat_us.len() * p / 100).min(lat_us.len() - 1)];
+    let s = srv.stats();
+    println!(
+        "  {:.1} queries/s  p50 {:.0} us  p99 {:.0} us  (checksum {checksum:.3})",
+        n_queries as f64 / wall,
+        pct(50),
+        pct(99),
+    );
+    println!(
+        "  cache: {} hits  {} misses  {} evictions  {} prefetches  hit rate {:.0}%",
+        s.hits,
+        s.misses,
+        s.evictions,
+        s.prefetches,
+        100.0 * s.hit_rate()
+    );
+    Ok(())
+}
+
 fn cmd_validate(_pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let preset: String = flag(flags, "preset", "tiny".to_string());
     let mesh = mesh_flag(flags, 2)?;
     let report = crate::trainer::oracle::validate_against_oracle(&preset, &mesh)?;
     println!("{report}");
     Ok(())
-}
-
-fn parse_precision(flags: &HashMap<String, String>) -> Precision {
-    match flags.get("precision").map(|s| s.as_str()) {
-        Some("fp32") => Precision::Fp32,
-        Some("bf16") => Precision::Bf16,
-        _ => Precision::Tf32,
-    }
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
@@ -227,7 +359,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
         model: ZooModel::by_id(id),
         mesh: mesh_flag(flags, 1)?,
         dp: flag(flags, "dp", 1usize),
-        precision: parse_precision(flags),
+        precision: sim_precision_flag(flags)?,
         dataload: !flags.contains_key("no-dataload"),
     };
     let t = simulate_step(&cluster, &w);
@@ -250,7 +382,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_roofline(flags: &HashMap<String, String>) -> Result<()> {
     let cluster = ClusterSpec::horeka();
-    let precision = parse_precision(flags);
+    let precision = sim_precision_flag(flags)?;
     let mut t = Table::new(&[
         "TFLOPs/fwd", "1x1", "1x2", "2x2", "2x4", "4x4", "unit",
     ]);
@@ -371,6 +503,33 @@ mod tests {
         ])
         .unwrap();
         cli_main(&["energy-report".to_string()]).unwrap();
+    }
+
+    #[test]
+    fn junk_precision_is_a_clean_cli_error() {
+        // simulate used to silently fall back to tf32 on junk; now both
+        // precision grammars reject it through the shared helpers
+        let err = cli_main(&[
+            "simulate".to_string(),
+            "--precision".into(),
+            "f64".into(),
+        ])
+        .unwrap_err();
+        assert!(err.to_string().contains("f64"), "{err}");
+        let mut flags = HashMap::new();
+        flags.insert("precision".to_string(), "wat".to_string());
+        assert!(precision_flag(&flags).unwrap_err().to_string().contains("wat"));
+        assert!(sim_precision_flag(&flags)
+            .unwrap_err()
+            .to_string()
+            .contains("wat"));
+        // tf32 is now an accepted spelling of the simulate default
+        flags.insert("precision".to_string(), "tf32".to_string());
+        assert_eq!(sim_precision_flag(&flags).unwrap(), Precision::Tf32);
+        // bare `--precision` (no value) parses as "true" -> clean error,
+        // the bare-flag form train gained in the checkpoint PR
+        flags.insert("precision".to_string(), "true".to_string());
+        assert!(precision_flag(&flags).is_err());
     }
 
     #[test]

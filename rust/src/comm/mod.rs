@@ -238,6 +238,19 @@ pub struct FabricSpec {
     pub bytes_per_sec: f64,
 }
 
+impl FabricSpec {
+    /// Convenience constructor in the units benchmarks and the CLI use:
+    /// microseconds of base latency and jitter, gigabytes per second of
+    /// link bandwidth.
+    pub fn from_us(latency_us: u64, jitter_us: u64, gbps: f64) -> Self {
+        FabricSpec {
+            latency: Duration::from_micros(latency_us),
+            jitter: Duration::from_micros(jitter_us),
+            bytes_per_sec: gbps * 1e9,
+        }
+    }
+}
+
 struct FabricState {
     spec: FabricSpec,
     /// when each rank's egress link frees up

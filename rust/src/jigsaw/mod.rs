@@ -272,6 +272,22 @@ impl<'a> Ctx<'a> {
     ) -> Self {
         Ctx { mesh, rank, comm, backend, seq: 0, precision: Precision::F32 }
     }
+
+    /// Forward-only execution context (the serving path). Identical to
+    /// [`Ctx::new`] plus an explicit fabric/storage precision; named
+    /// separately because an infer ctx is paired with a sync-group-free
+    /// parameter store (`model::params::shard_params_infer`) — no
+    /// gradient collectives can ever be issued through it, so the only
+    /// traffic is `dist_matmul`'s block exchange.
+    pub fn infer(
+        mesh: Mesh,
+        rank: usize,
+        comm: &'a mut Comm,
+        backend: &'a dyn Backend,
+        precision: Precision,
+    ) -> Self {
+        Ctx { mesh, rank, comm, backend, seq: 0, precision }
+    }
 }
 
 /// A term of the block matmul: Y[yi,yj] += x_block op w_block.

@@ -121,6 +121,28 @@
 //! builds (`JIGSAW_DEADLOCK_DETECT` overrides either way) and a single
 //! relaxed atomic load when off.
 //!
+//! Training is no longer the only consumer of the forward graph.
+//! [`model::dist`] factors the WeatherMixer forward into a single
+//! shared core with a `Retention` policy: the training path retains
+//! the `FwdCache` for backward, while [`model::InferModel`] runs the
+//! same core forward-only — no cache, no gradient registry, sync-
+//! group-free parameter shards, every per-layer activation recycled
+//! into the buffer pool as the next layer consumes it. The two paths
+//! are pinned bit-identical (`tests/infer_props.rs`), so a served
+//! forecast is byte-for-byte the forecast the trainer would score.
+//! On top sits the serving engine ([`serve`]): per-rank worker
+//! threads roll sharded-weight autoregressive forecasts (weights come
+//! from checkpoint shards via `checkpoint::load_params` — never Adam
+//! state), assembled global states land in a `(init_id, lead_step)`-
+//! keyed LRU [`serve::TrajectoryCache`] with hit/miss/eviction
+//! counters in [`metrics::ServeCounters`], and regional queries at
+//! arbitrary lead times are answered as O(1) strided `TensorView`
+//! windows of cached states. Serving issues no gradient collectives,
+//! so the fabric capacity the trainer spends on `ProgressEngine` idle
+//! polls funds next-step prefetch instead: the workers advance
+//! `(init, lead+1)` while the serving thread drains queries
+//! (`jigsaw serve`, `BENCH_serving.json`, `docs/serving.md`).
+//!
 //! Python never runs on the training path: the rust binary loads
 //! `artifacts/**/*.hlo.txt` through the PJRT C API (`xla` crate, behind
 //! the `pjrt` cargo feature; without it an API-identical engine serves
@@ -141,6 +163,7 @@ pub mod model;
 pub mod optim;
 pub mod perfmodel;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod trainer;
 pub mod util;

@@ -74,6 +74,75 @@ impl RunLog {
     }
 }
 
+/// Live counters for the forecast serving engine: trajectory-cache hits
+/// and misses, LRU evictions, and prefetched rollout steps. All atomic —
+/// the serving thread and the bench harness read them concurrently with
+/// the engine bumping them. Relaxed ordering: these are monotonically
+/// increasing statistics, never synchronization.
+#[derive(Debug, Default)]
+pub struct ServeCounters {
+    hits: std::sync::atomic::AtomicU64,
+    misses: std::sync::atomic::AtomicU64,
+    evictions: std::sync::atomic::AtomicU64,
+    prefetches: std::sync::atomic::AtomicU64,
+}
+
+/// Point-in-time copy of [`ServeCounters`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub prefetches: u64,
+}
+
+impl ServeStats {
+    /// Fraction of cache lookups answered without a rollout step.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits as f64 / total as f64
+    }
+}
+
+impl ServeCounters {
+    const ORD: std::sync::atomic::Ordering = std::sync::atomic::Ordering::Relaxed;
+
+    pub fn hit(&self) {
+        self.hits.fetch_add(1, Self::ORD);
+    }
+
+    pub fn miss(&self) {
+        self.misses.fetch_add(1, Self::ORD);
+    }
+
+    pub fn eviction(&self) {
+        self.evictions.fetch_add(1, Self::ORD);
+    }
+
+    pub fn prefetch(&self) {
+        self.prefetches.fetch_add(1, Self::ORD);
+    }
+
+    pub fn snapshot(&self) -> ServeStats {
+        ServeStats {
+            hits: self.hits.load(Self::ORD),
+            misses: self.misses.load(Self::ORD),
+            evictions: self.evictions.load(Self::ORD),
+            prefetches: self.prefetches.load(Self::ORD),
+        }
+    }
+
+    pub fn reset(&self) {
+        self.hits.store(0, Self::ORD);
+        self.misses.store(0, Self::ORD);
+        self.evictions.store(0, Self::ORD);
+        self.prefetches.store(0, Self::ORD);
+    }
+}
+
 /// Simple persistence baseline: forecast = current state (the standard
 /// weather-model sanity baseline for Fig-5-style comparisons).
 pub fn persistence_forecast(x: &Tensor) -> Tensor {
@@ -127,6 +196,23 @@ mod tests {
         let b = Tensor::new(vec![2], vec![4.0, 2.0]);
         let c = climatology_forecast(&[a, b]);
         assert_eq!(c.data, vec![2.0, 2.0]);
+    }
+
+    #[test]
+    fn serve_counters_snapshot_and_hit_rate() {
+        let c = ServeCounters::default();
+        assert_eq!(c.snapshot().hit_rate(), 0.0);
+        c.hit();
+        c.hit();
+        c.hit();
+        c.miss();
+        c.eviction();
+        c.prefetch();
+        let s = c.snapshot();
+        assert_eq!((s.hits, s.misses, s.evictions, s.prefetches), (3, 1, 1, 1));
+        assert!((s.hit_rate() - 0.75).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.snapshot().hits, 0);
     }
 
     #[test]

@@ -34,6 +34,20 @@ use crate::tensor::{ops, Precision, Tensor};
 /// Saved layer-norm statistics per local block.
 type LnSavedMap = BTreeMap<(usize, usize), ops::LnSaved>;
 
+/// What the shared forward core does with per-layer intermediates.
+///
+/// `Train` keeps every activation in a [`FwdCache`] for the backward
+/// pass; `Infer` recycles each layer's tensors into the thread-local
+/// buffer pool the moment the next layer no longer needs them, so a
+/// steady-state forward-only step allocates nothing matmul-sized. The
+/// *arithmetic* is identical either way — `infer_props` pins the two
+/// modes bit-identical — retention is the only difference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Retention {
+    Train,
+    Infer,
+}
+
 /// Forward cache of one mixer block.
 pub struct MixCache {
     z_in: DistMat,
@@ -295,14 +309,38 @@ impl DistModel {
         Ok((z3, cache))
     }
 
-    /// Full forward from this rank's sample shard. `rollout` repeats the
-    /// processor with a single encode/decode.
-    pub fn forward(
+    /// Gated blend, in place: `out = g*x + (1-g)*out` per channel, where
+    /// `out` arrives holding the decoded delta. The single blend
+    /// implementation both forward modes share.
+    fn blend_pred_assign(&self, pred: &mut Tensor, x_local: &Tensor) {
+        let (lat_l, lon_l, c_l) = self.local_dims();
+        let gate = &self.params.vecs["blend_g"];
+        for li in 0..lat_l {
+            for lj in 0..lon_l {
+                for c in 0..c_l {
+                    let idx = (li * lon_l + lj) * c_l + c;
+                    let g = ops::sigmoid(gate.local.data[c]);
+                    pred.data[idx] =
+                        g * x_local.data[idx] + (1.0 - g) * pred.data[idx];
+                }
+            }
+        }
+    }
+
+    /// The one forward implementation. Both consumers go through here:
+    /// the training path ([`forward`](DistModel::forward), and through
+    /// it `loss_and_grad`) with [`Retention::Train`], and the
+    /// forward-only inference path ([`forward_infer`](DistModel::forward_infer),
+    /// wrapped by `model::InferModel`) with [`Retention::Infer`]. The
+    /// arithmetic — and therefore the prediction bits — does not depend
+    /// on `retain`; only what happens to intermediates does.
+    fn forward_core(
         &self,
         ctx: &mut Ctx,
         x_local: &Tensor,
         rollout: usize,
-    ) -> Result<(Tensor, FwdCache)> {
+        retain: Retention,
+    ) -> Result<(Tensor, Option<FwdCache>)> {
         let cfg = &self.cfg;
         ensure!(
             ctx.mesh == self.mesh,
@@ -316,6 +354,7 @@ impl DistModel {
             "sample shard shape {:?}, want [{lat_l},{lon_l},{c_l}]",
             x_local.shape
         );
+        let keep = retain == Retention::Train;
         let p = &self.params;
         let l = self.planner();
 
@@ -337,17 +376,33 @@ impl DistModel {
         self.add_vec_cols_assign(&mut z0, &p.vecs["enc_b"]);
         self.store_act(ctx, &mut z0);
 
-        // processor (rollout repeats)
-        let mut z = z0.clone();
-        let mut iters = Vec::with_capacity(rollout);
+        // processor (rollout repeats). Training clones z0 (the backward
+        // needs it); inference moves it — the first mixer block's cache
+        // recycles it.
+        let (mut z, z0) = if keep {
+            (z0.clone(), Some(z0))
+        } else {
+            recycle_dist(std::mem::replace(
+                &mut patches,
+                DistMat::empty(0, 0, self.act_grid()),
+            ));
+            (z0, None)
+        };
+        let mut iters = Vec::with_capacity(if keep { rollout } else { 0 });
         for _ in 0..rollout {
-            let mut caches = Vec::with_capacity(cfg.blocks);
+            let mut caches = Vec::with_capacity(if keep { cfg.blocks } else { 0 });
             for i in 0..cfg.blocks {
                 let (znext, c) = self.mixer_block_fwd(ctx, i, z)?;
                 z = znext;
-                caches.push(c);
+                if keep {
+                    caches.push(c);
+                } else {
+                    recycle_mix(c);
+                }
             }
-            iters.push(caches);
+            if keep {
+                iters.push(caches);
+            }
         }
         let z_final = z;
 
@@ -365,36 +420,56 @@ impl DistModel {
             .blocks
             .values()
             .next()
-            .expect("rank owns an output block")
-            .clone();
-        let delta_local = unpatchify(&y_local, lat_l, lon_l, c_l, cfg.patch);
+            .expect("rank owns an output block");
+        let delta_local = unpatchify(y_local, lat_l, lon_l, c_l, cfg.patch);
 
         // blend: out = g*x + (1-g)*delta, per channel
-        let gate = &p.vecs["blend_g"];
         let mut pred = delta_local.clone();
-        for li in 0..lat_l {
-            for lj in 0..lon_l {
-                for c in 0..c_l {
-                    let idx = (li * lon_l + lj) * c_l + c;
-                    let g = ops::sigmoid(gate.local.data[c]);
-                    pred.data[idx] =
-                        g * x_local.data[idx] + (1.0 - g) * delta_local.data[idx];
-                }
-            }
-        }
+        self.blend_pred_assign(&mut pred, x_local);
 
+        if !keep {
+            recycle_dist(z_final);
+            recycle_dist(y_patches);
+            delta_local.recycle();
+            return Ok((pred, None));
+        }
         Ok((
             pred,
-            FwdCache {
+            Some(FwdCache {
                 patches,
-                z0,
+                z0: z0.expect("train retention keeps z0"),
                 iters,
                 z_final,
                 y_patches,
                 delta_local,
                 x_local: x_local.clone(),
-            },
+            }),
         ))
+    }
+
+    /// Full forward from this rank's sample shard, retaining the
+    /// activation cache for backward. `rollout` repeats the processor
+    /// with a single encode/decode.
+    pub fn forward(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        rollout: usize,
+    ) -> Result<(Tensor, FwdCache)> {
+        let (pred, cache) = self.forward_core(ctx, x_local, rollout, Retention::Train)?;
+        Ok((pred, cache.expect("train retention returns a cache")))
+    }
+
+    /// Forward-only pass: same core, no cache, per-layer activations
+    /// recycled into the buffer pool. The serving path.
+    pub fn forward_infer(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        rollout: usize,
+    ) -> Result<Tensor> {
+        let (pred, _) = self.forward_core(ctx, x_local, rollout, Retention::Infer)?;
+        Ok(pred)
     }
 
     /// Latitude/variable-weighted MSE over the local shard (not yet
@@ -686,6 +761,23 @@ impl DistModel {
         }
 
         Ok((loss, grads))
+    }
+}
+
+/// Return every local block buffer of a consumed [`DistMat`] to the
+/// thread-local pool (inference retention).
+fn recycle_dist(m: DistMat) {
+    for (_, b) in m.blocks {
+        b.recycle();
+    }
+}
+
+/// Recycle a whole mixer-block cache: every activation `DistMat`. The
+/// `LnSaved` statistics are plain vectors and simply drop.
+fn recycle_mix(c: MixCache) {
+    let MixCache { z_in, u, ln1: _, h1_pre, h1, z2, v, ln2: _, h2_pre, h2 } = c;
+    for m in [z_in, u, h1_pre, h1, z2, v, h2_pre, h2] {
+        recycle_dist(m);
     }
 }
 

@@ -1,0 +1,73 @@
+//! Forward-only model wrapper: the inference consumer of the shared
+//! forward core.
+//!
+//! [`InferModel`] is what the serving engine instantiates per mesh rank.
+//! It is a [`DistModel`] built on a sync-group-free parameter store
+//! ([`shard_params_infer`]) and restricted to the
+//! [`Retention::Infer`](crate::model::dist::Retention) forward path:
+//! no `FwdCache` is ever materialized, no gradient registry exists, and
+//! every per-layer activation is recycled into the thread-local buffer
+//! pool as soon as the next layer has consumed it — a steady-state
+//! rollout step performs no matmul-sized allocations. Predictions are
+//! pinned bit-identical to the training path's forward
+//! (`tests/infer_props.rs`): there is exactly one forward
+//! implementation, `DistModel::forward_core`, and this type merely
+//! selects its retention policy.
+
+use anyhow::Result;
+
+use super::dist::DistModel;
+use super::params::shard_params_infer;
+use crate::config::ModelConfig;
+use crate::jigsaw::{Ctx, Mesh, MeshError};
+use crate::tensor::Tensor;
+
+/// One rank's forward-only WeatherMixer instance.
+pub struct InferModel {
+    model: DistModel,
+}
+
+impl InferModel {
+    /// Shard `global` weights for `rank` on `mesh` (sync-group-free) and
+    /// wrap them. Weights typically come from a checkpoint via
+    /// `checkpoint::load_params` — never Adam or scaler state.
+    pub fn new(
+        cfg: ModelConfig,
+        mesh: &Mesh,
+        rank: usize,
+        global: &[(String, Tensor)],
+    ) -> Result<Self, MeshError> {
+        let params = shard_params_infer(&cfg, mesh, rank, global)?;
+        Ok(InferModel { model: DistModel::new(cfg, mesh, rank, params) })
+    }
+
+    /// One forward-only step from this rank's sample shard. `rollout`
+    /// repeats the processor exactly as the training forward does.
+    pub fn predict(
+        &self,
+        ctx: &mut Ctx,
+        x_local: &Tensor,
+        rollout: usize,
+    ) -> Result<Tensor> {
+        self.model.forward_infer(ctx, x_local, rollout)
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.model.cfg
+    }
+
+    /// local (lat, lon, channel) extents — see [`DistModel::local_dims`]
+    pub fn local_dims(&self) -> (usize, usize, usize) {
+        self.model.local_dims()
+    }
+
+    /// global latitude offset of this rank's shard
+    pub fn lat_offset(&self) -> usize {
+        self.model.lat_offset()
+    }
+
+    /// global channel offset of this rank's shard
+    pub fn ch_offset(&self) -> usize {
+        self.model.ch_offset()
+    }
+}

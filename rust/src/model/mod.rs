@@ -7,7 +7,10 @@
 //! programs are bit-comparable oracles for the distributed engine.
 
 pub mod dist;
+pub mod infer;
 pub mod params;
+
+pub use infer::InferModel;
 
 use crate::config::ModelConfig;
 use crate::tensor::Tensor;

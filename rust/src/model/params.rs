@@ -383,6 +383,25 @@ pub fn shard_params(
     Ok(store)
 }
 
+/// [`shard_params`] for the forward-only path: identical weight slicing,
+/// but every vector's gradient sync group collapses to `{rank}` — the
+/// inference store carries no grad registry, so no replicated-gradient
+/// collective can ever be issued from it (and
+/// [`PStore::sync_replicated_grads`] is a guaranteed no-op). Forward
+/// math never reads sync groups, so predictions are unaffected.
+pub fn shard_params_infer(
+    cfg: &ModelConfig,
+    mesh: &Mesh,
+    rank: usize,
+    global: &[(String, Tensor)],
+) -> Result<PStore, MeshError> {
+    let mut store = shard_params(cfg, mesh, rank, global)?;
+    for v in store.vecs.values_mut() {
+        v.sync_group = vec![rank];
+    }
+    Ok(store)
+}
+
 fn fnv1a(s: &str) -> u64 {
     let mut h: u64 = 0xcbf29ce484222325;
     for b in s.as_bytes() {

@@ -1,0 +1,691 @@
+//! Forecast serving: autoregressive rollouts over sharded weights, a
+//! trajectory cache, and a regional query layer on top.
+//!
+//! Training and serving share exactly one forward implementation
+//! (`DistModel::forward_core`); this module owns everything *around* it
+//! that an inference deployment needs and a trainer does not:
+//!
+//! * [`RolloutEngine`] — one persistent worker thread per mesh rank,
+//!   each holding an [`InferModel`] (weights only: no Adam moments, no
+//!   scaler, sync-group-free vec shards) and a fabric endpoint. A step
+//!   scatters the global [lat, lon, C] state into rank shards, runs the
+//!   forward-only pass on every rank, and reassembles the predicted
+//!   next state. `begin_step`/`finish_step` split the dispatch from the
+//!   collect so a step can overlap with query answering.
+//! * [`TrajectoryCache`] — assembled global states keyed
+//!   `(init_id, lead_step)` with LRU eviction and hit/miss/eviction
+//!   counters in [`metrics::ServeCounters`].
+//! * [`ServeEngine`] — the request layer: answers
+//!   [`RegionQuery`]s (a lat/lon window at an arbitrary lead time) as
+//!   O(1) [`TensorView`] windows into cached states, rolling forward
+//!   from the nearest cached ancestor on a miss and prefetching the
+//!   next lead step while queries drain.
+//!
+//! Serving issues no gradient collectives — the comm capacity the
+//! training loop spends on `ProgressEngine` idle polls is what funds
+//! the prefetch here: worker threads advance `(init, lead+1)` through
+//! the fabric while the serving thread answers cached queries.
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::comm::{FabricSpec, Network, FABRIC_ABORTED};
+use crate::config::ModelConfig;
+use crate::jigsaw::{Ctx, Mesh};
+use crate::metrics::{ServeCounters, ServeStats};
+use crate::model::InferModel;
+use crate::runtime::Backend;
+use crate::tensor::{Precision, Tensor, TensorView};
+use crate::trainer::oracle::sample_shard;
+
+/// One rank's shard extent within the global [lat, lon, C] state.
+#[derive(Clone, Copy, Debug)]
+struct ShardSpec {
+    lat0: usize,
+    lat_l: usize,
+    ch0: usize,
+    ch_l: usize,
+}
+
+enum RankCmd {
+    /// Run one forward-only step on this rank's local shard.
+    Step(Tensor),
+    Stop,
+}
+
+struct Worker {
+    cmds: mpsc::Sender<RankCmd>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// Mesh-parallel autoregressive rollout engine: sharded forward-only
+/// steps with global scatter/gather at the state boundary.
+pub struct RolloutEngine {
+    cfg: ModelConfig,
+    mesh: Mesh,
+    net: Network,
+    workers: Vec<Worker>,
+    results: mpsc::Receiver<(usize, Result<Tensor, String>)>,
+    shards: Vec<ShardSpec>,
+    rollout: usize,
+    in_flight: bool,
+}
+
+impl RolloutEngine {
+    /// Shard `global` weights across `mesh` and spawn one worker thread
+    /// per rank. `rollout` is the processor repeat count baked into the
+    /// model's forward (a training hyperparameter, not the lead time).
+    pub fn new(
+        cfg: &ModelConfig,
+        mesh: &Mesh,
+        global: &[(String, Tensor)],
+        backend: Arc<dyn Backend>,
+        precision: Precision,
+        rollout: usize,
+    ) -> Result<Self> {
+        let mesh = *mesh;
+        let net = Network::new(mesh.n());
+        let (tx, results) = mpsc::channel();
+        let mut workers = Vec::with_capacity(mesh.n());
+        let mut shards = Vec::with_capacity(mesh.n());
+        for r in 0..mesh.n() {
+            let model = InferModel::new(cfg.clone(), &mesh, r, global)
+                .map_err(|e| anyhow!("serve: rank {r}: {e}"))?;
+            let (lat_l, _lon, ch_l) = model.local_dims();
+            shards.push(ShardSpec {
+                lat0: model.lat_offset(),
+                lat_l,
+                ch0: model.ch_offset(),
+                ch_l,
+            });
+            let (cmd_tx, cmd_rx) = mpsc::channel::<RankCmd>();
+            let mut comm = net.endpoint(r);
+            let abort_net = net.clone();
+            let backend = backend.clone();
+            let tx = tx.clone();
+            let handle = std::thread::spawn(move || {
+                while let Ok(cmd) = cmd_rx.recv() {
+                    let xl = match cmd {
+                        RankCmd::Step(xl) => xl,
+                        RankCmd::Stop => break,
+                    };
+                    let run = catch_unwind(AssertUnwindSafe(|| {
+                        let mut ctx = Ctx::infer(
+                            mesh,
+                            r,
+                            &mut comm,
+                            backend.as_ref(),
+                            precision,
+                        );
+                        model.predict(&mut ctx, &xl, rollout)
+                    }));
+                    let out = match run {
+                        Ok(Ok(pred)) => Ok(pred),
+                        Ok(Err(e)) => {
+                            abort_net.abort_from(r);
+                            Err(format!("rank {r}: {e}"))
+                        }
+                        Err(p) => {
+                            let msg = p
+                                .downcast_ref::<&str>()
+                                .map(|s| s.to_string())
+                                .or_else(|| p.downcast_ref::<String>().cloned())
+                                .unwrap_or_else(|| "panic".into());
+                            if !msg.contains(FABRIC_ABORTED) {
+                                abort_net.abort_from(r);
+                            }
+                            Err(format!("rank {r}: {msg}"))
+                        }
+                    };
+                    if tx.send((r, out)).is_err() {
+                        break;
+                    }
+                }
+            });
+            workers.push(Worker { cmds: cmd_tx, handle: Some(handle) });
+        }
+        Ok(RolloutEngine {
+            cfg: cfg.clone(),
+            mesh,
+            net,
+            workers,
+            results,
+            shards,
+            rollout,
+            in_flight: false,
+        })
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn mesh(&self) -> Mesh {
+        self.mesh
+    }
+
+    pub fn rollout(&self) -> usize {
+        self.rollout
+    }
+
+    /// Inject simulated fabric timing into the engine's network (seeded,
+    /// so delivery reorderings reproduce across runs).
+    pub fn set_fabric(&self, spec: FabricSpec, seed: u64) {
+        self.net.set_fabric(spec, seed);
+    }
+
+    /// Total bytes the rollout fabric has carried so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.net.total_bytes()
+    }
+
+    /// Dispatch one step: scatter `state` ([lat, lon, C] global) into
+    /// rank shards and hand every worker its piece. Returns immediately;
+    /// the forward passes run on the worker threads until
+    /// [`finish_step`](Self::finish_step) collects them.
+    pub fn begin_step(&mut self, state: &Tensor) -> Result<()> {
+        assert!(!self.in_flight, "serve: begin_step while a step is in flight");
+        ensure!(
+            state.shape
+                == vec![self.cfg.lat, self.cfg.lon, self.cfg.channels_padded],
+            "serve: state shape {:?}, expected [{}, {}, {}]",
+            state.shape,
+            self.cfg.lat,
+            self.cfg.lon,
+            self.cfg.channels_padded,
+        );
+        for (r, s) in self.shards.iter().enumerate() {
+            let xl = sample_shard(
+                state,
+                (s.lat0, s.lat0 + s.lat_l),
+                (s.ch0, s.ch0 + s.ch_l),
+            );
+            self.workers[r]
+                .cmds
+                .send(RankCmd::Step(xl))
+                .map_err(|_| anyhow!("serve: rank {r} worker is gone"))?;
+        }
+        self.in_flight = true;
+        Ok(())
+    }
+
+    /// Collect the in-flight step and reassemble the global next state.
+    pub fn finish_step(&mut self) -> Result<Tensor> {
+        assert!(self.in_flight, "serve: finish_step without begin_step");
+        self.in_flight = false;
+        let mut locals: Vec<Option<Tensor>> = (0..self.mesh.n()).map(|_| None).collect();
+        let mut errs: Vec<String> = Vec::new();
+        for _ in 0..self.mesh.n() {
+            let (r, out) = self
+                .results
+                .recv()
+                .map_err(|_| anyhow!("serve: all workers are gone"))?;
+            match out {
+                Ok(t) => locals[r] = Some(t),
+                Err(e) => errs.push(e),
+            }
+        }
+        if !errs.is_empty() {
+            // a failing rank aborts the fabric and every peer's blocking
+            // receive panics with FABRIC_ABORTED — report the root cause,
+            // not the cascade
+            let root = errs
+                .iter()
+                .find(|e| !e.contains(FABRIC_ABORTED))
+                .unwrap_or(&errs[0])
+                .clone();
+            bail!("serve: step failed: {root}");
+        }
+        let mut next = Tensor::zeros(&[
+            self.cfg.lat,
+            self.cfg.lon,
+            self.cfg.channels_padded,
+        ]);
+        for (r, s) in self.shards.iter().enumerate() {
+            let local = locals[r].take().expect("every rank reported");
+            scatter_shard(&mut next, &local, s);
+        }
+        Ok(next)
+    }
+
+    /// One full rollout step: dispatch, wait, reassemble.
+    pub fn step(&mut self, state: &Tensor) -> Result<Tensor> {
+        self.begin_step(state)?;
+        self.finish_step()
+    }
+}
+
+impl Drop for RolloutEngine {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmds.send(RankCmd::Stop);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Inverse of `sample_shard`: write a rank's [lat_l, lon, ch_l] local
+/// prediction into its window of the global [lat, lon, C] state.
+fn scatter_shard(global: &mut Tensor, local: &Tensor, s: &ShardSpec) {
+    let (lon, c) = (global.shape[1], global.shape[2]);
+    assert_eq!(local.shape, vec![s.lat_l, lon, s.ch_l]);
+    for li in 0..s.lat_l {
+        for lj in 0..lon {
+            for ci in 0..s.ch_l {
+                global.data[((s.lat0 + li) * lon + lj) * c + s.ch0 + ci] =
+                    local.data[(li * lon + lj) * s.ch_l + ci];
+            }
+        }
+    }
+}
+
+struct CacheEntry {
+    state: Arc<Tensor>,
+    last_used: u64,
+}
+
+/// LRU cache of assembled global forecast states keyed
+/// `(init_id, lead_step)`. Lookups and evictions bump the shared
+/// [`ServeCounters`]; recency ticks are a monotonic counter, so
+/// eviction order is deterministic (ticks never tie).
+pub struct TrajectoryCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<(u64, usize), CacheEntry>,
+    counters: Arc<ServeCounters>,
+}
+
+impl TrajectoryCache {
+    pub fn new(cap: usize, counters: Arc<ServeCounters>) -> Self {
+        assert!(cap >= 1, "trajectory cache needs capacity >= 1");
+        TrajectoryCache { cap, tick: 0, map: HashMap::new(), counters }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Counting lookup: a user-facing query probing for this state.
+    pub fn get(&mut self, key: &(u64, usize)) -> Option<Arc<Tensor>> {
+        self.tick += 1;
+        let tick = self.tick;
+        match self.map.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                self.counters.hit();
+                Some(e.state.clone())
+            }
+            None => {
+                self.counters.miss();
+                None
+            }
+        }
+    }
+
+    /// Non-counting recency bump: internal reuse of a cached ancestor
+    /// while rebuilding a missed lead step. Keeps the ancestor warm
+    /// without polluting the hit/miss statistics.
+    pub fn touch(&mut self, key: &(u64, usize)) -> Option<Arc<Tensor>> {
+        self.tick += 1;
+        let tick = self.tick;
+        let e = self.map.get_mut(key)?;
+        e.last_used = tick;
+        Some(e.state.clone())
+    }
+
+    /// Non-counting, non-bumping probe.
+    pub fn contains(&self, key: &(u64, usize)) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Insert (or refresh) a state, evicting the least-recently-used
+    /// entry when at capacity.
+    pub fn insert(&mut self, key: (u64, usize), state: Arc<Tensor>) {
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(e) = self.map.get_mut(&key) {
+            e.state = state;
+            e.last_used = tick;
+            return;
+        }
+        if self.map.len() >= self.cap {
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| *k)
+                .expect("cache at capacity is non-empty");
+            self.map.remove(&victim);
+            self.counters.eviction();
+        }
+        self.map.insert(key, CacheEntry { state, last_used: tick });
+    }
+}
+
+/// A regional forecast request: the `[lat.0, lat.1) x [lon.0, lon.1)`
+/// window of initial condition `init_id` at lead step `lead` (all
+/// channels).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RegionQuery {
+    pub init_id: u64,
+    pub lead: usize,
+    pub lat: (usize, usize),
+    pub lon: (usize, usize),
+}
+
+/// A served regional forecast: a shared handle on the cached global
+/// state plus the window coordinates. [`view`](Self::view) is the O(1)
+/// answer — a strided window into the state, no copy.
+pub struct RegionAnswer {
+    state: Arc<Tensor>,
+    lat: (usize, usize),
+    lon: (usize, usize),
+    lon_full: usize,
+    channels: usize,
+}
+
+impl RegionAnswer {
+    /// The regional window as a strided 2-D view: `lat_span` rows of
+    /// `lon_span * C` contiguous floats each, row stride `lon * C`.
+    pub fn view(&self) -> TensorView<'_> {
+        let c = self.channels;
+        let off = (self.lat.0 * self.lon_full + self.lon.0) * c;
+        TensorView::new(
+            &self.state.data[off..],
+            self.lat.1 - self.lat.0,
+            (self.lon.1 - self.lon.0) * c,
+            self.lon_full * c,
+        )
+    }
+
+    /// The full global state this answer windows into.
+    pub fn state(&self) -> &Arc<Tensor> {
+        &self.state
+    }
+}
+
+/// The request layer: initial conditions, the trajectory cache, and the
+/// rollout engine behind it, with next-step prefetch overlap.
+pub struct ServeEngine {
+    engine: RolloutEngine,
+    cache: TrajectoryCache,
+    inits: HashMap<u64, Arc<Tensor>>,
+    counters: Arc<ServeCounters>,
+    max_lead: usize,
+    prefetch: bool,
+    /// a rollout step currently running on the workers for this key
+    pending: Option<(u64, usize)>,
+}
+
+impl ServeEngine {
+    pub fn new(
+        engine: RolloutEngine,
+        cache_states: usize,
+        max_lead: usize,
+        prefetch: bool,
+    ) -> Self {
+        let counters = Arc::new(ServeCounters::default());
+        let cache = TrajectoryCache::new(cache_states, counters.clone());
+        ServeEngine {
+            engine,
+            cache,
+            inits: HashMap::new(),
+            counters,
+            max_lead,
+            prefetch,
+            pending: None,
+        }
+    }
+
+    /// Register an initial condition (lead 0). Inits live outside the
+    /// LRU cache — they are the roots every rebuild walks back to.
+    pub fn add_init(&mut self, id: u64, state: Tensor) -> Result<()> {
+        let want =
+            vec![self.engine.cfg.lat, self.engine.cfg.lon, self.engine.cfg.channels_padded];
+        ensure!(
+            state.shape == want,
+            "serve: init {id} shape {:?}, expected {want:?}",
+            state.shape,
+        );
+        self.inits.insert(id, Arc::new(state));
+        Ok(())
+    }
+
+    pub fn cfg(&self) -> &ModelConfig {
+        &self.engine.cfg
+    }
+
+    pub fn counters(&self) -> Arc<ServeCounters> {
+        self.counters.clone()
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.counters.snapshot()
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// The full global state of `init` at `lead`, from cache when
+    /// possible, else rolled forward from the nearest cached ancestor
+    /// (caching every intermediate step on the way).
+    pub fn state(&mut self, init: u64, lead: usize) -> Result<Arc<Tensor>> {
+        ensure!(
+            lead <= self.max_lead,
+            "serve: lead {lead} beyond max lead {}",
+            self.max_lead
+        );
+        let init_state = self
+            .inits
+            .get(&init)
+            .cloned()
+            .ok_or_else(|| anyhow!("serve: unknown init {init}"))?;
+        if lead == 0 {
+            self.maybe_prefetch(init, 0, &init_state)?;
+            return Ok(init_state);
+        }
+        // land any in-flight prefetch first so this lookup can see it
+        self.drain_pending()?;
+        if let Some(s) = self.cache.get(&(init, lead)) {
+            self.maybe_prefetch(init, lead, &s)?;
+            return Ok(s);
+        }
+        // miss: find the deepest cached ancestor and roll forward
+        let mut base_lead = 0;
+        let mut base = init_state;
+        for l in (1..lead).rev() {
+            if let Some(s) = self.cache.touch(&(init, l)) {
+                base_lead = l;
+                base = s;
+                break;
+            }
+        }
+        for l in base_lead + 1..=lead {
+            let next = Arc::new(self.engine.step(&base)?);
+            self.cache.insert((init, l), next.clone());
+            base = next;
+        }
+        self.maybe_prefetch(init, lead, &base)?;
+        Ok(base)
+    }
+
+    /// Answer one regional query as an O(1) window of the cached state.
+    pub fn answer(&mut self, q: RegionQuery) -> Result<RegionAnswer> {
+        let (glat, glon, gch) = (
+            self.engine.cfg.lat,
+            self.engine.cfg.lon,
+            self.engine.cfg.channels_padded,
+        );
+        ensure!(
+            q.lat.0 < q.lat.1 && q.lat.1 <= glat,
+            "serve: latitude window {:?} out of [0, {glat}]",
+            q.lat,
+        );
+        ensure!(
+            q.lon.0 < q.lon.1 && q.lon.1 <= glon,
+            "serve: longitude window {:?} out of [0, {glon}]",
+            q.lon,
+        );
+        let state = self.state(q.init_id, q.lead)?;
+        Ok(RegionAnswer {
+            state,
+            lat: q.lat,
+            lon: q.lon,
+            lon_full: glon,
+            channels: gch,
+        })
+    }
+
+    /// Answer a batch of queries. Within the batch, queries execute
+    /// grouped by initial condition and ascending lead so rollout work
+    /// builds forward monotonically instead of thrashing the cache;
+    /// answers come back in request order.
+    pub fn answer_batch(&mut self, queries: &[RegionQuery]) -> Result<Vec<RegionAnswer>> {
+        let mut order: Vec<usize> = (0..queries.len()).collect();
+        order.sort_by_key(|&i| (queries[i].init_id, queries[i].lead, i));
+        let mut out: Vec<Option<RegionAnswer>> =
+            (0..queries.len()).map(|_| None).collect();
+        for i in order {
+            out[i] = Some(self.answer(queries[i])?);
+        }
+        Ok(out.into_iter().map(|a| a.expect("every query answered")).collect())
+    }
+
+    /// Collect an in-flight prefetch step into the cache.
+    fn drain_pending(&mut self) -> Result<()> {
+        if let Some((i, l)) = self.pending.take() {
+            let state = Arc::new(self.engine.finish_step()?);
+            self.cache.insert((i, l), state);
+        }
+        Ok(())
+    }
+
+    /// Start computing `(init, lead + 1)` on the worker threads while
+    /// the serving thread goes back to draining queries — the serving
+    /// analogue of the training fabric's idle-poll overlap.
+    fn maybe_prefetch(
+        &mut self,
+        init: u64,
+        lead: usize,
+        served: &Arc<Tensor>,
+    ) -> Result<()> {
+        if !self.prefetch || self.pending.is_some() {
+            return Ok(());
+        }
+        let next = lead + 1;
+        if next > self.max_lead || self.cache.contains(&(init, next)) {
+            return Ok(());
+        }
+        self.engine.begin_step(served)?;
+        self.pending = Some((init, next));
+        self.counters.prefetch();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn state(v: f32) -> Arc<Tensor> {
+        Arc::new(Tensor::new(vec![1], vec![v]))
+    }
+
+    #[test]
+    fn cache_hits_misses_and_counters() {
+        let counters = Arc::new(ServeCounters::default());
+        let mut c = TrajectoryCache::new(2, counters.clone());
+        assert!(c.get(&(1, 1)).is_none());
+        c.insert((1, 1), state(1.0));
+        assert_eq!(c.get(&(1, 1)).unwrap().data[0], 1.0);
+        let s = counters.snapshot();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let counters = Arc::new(ServeCounters::default());
+        let mut c = TrajectoryCache::new(2, counters.clone());
+        c.insert((0, 1), state(1.0));
+        c.insert((0, 2), state(2.0));
+        // touch (0,1) so (0,2) becomes the LRU victim
+        assert!(c.get(&(0, 1)).is_some());
+        c.insert((0, 3), state(3.0));
+        assert!(c.contains(&(0, 1)));
+        assert!(!c.contains(&(0, 2)));
+        assert!(c.contains(&(0, 3)));
+        assert_eq!(counters.snapshot().evictions, 1);
+    }
+
+    #[test]
+    fn cache_reinsert_refreshes_without_evicting() {
+        let counters = Arc::new(ServeCounters::default());
+        let mut c = TrajectoryCache::new(2, counters.clone());
+        c.insert((0, 1), state(1.0));
+        c.insert((0, 2), state(2.0));
+        c.insert((0, 1), state(9.0));
+        assert_eq!(c.len(), 2);
+        assert_eq!(counters.snapshot().evictions, 0);
+        assert_eq!(c.touch(&(0, 1)).unwrap().data[0], 9.0);
+        // (0,2) is now LRU
+        c.insert((0, 3), state(3.0));
+        assert!(!c.contains(&(0, 2)));
+    }
+
+    #[test]
+    fn touch_and_contains_do_not_count() {
+        let counters = Arc::new(ServeCounters::default());
+        let mut c = TrajectoryCache::new(2, counters.clone());
+        c.insert((0, 1), state(1.0));
+        assert!(c.contains(&(0, 1)));
+        assert!(c.touch(&(0, 1)).is_some());
+        assert!(c.touch(&(0, 9)).is_none());
+        let s = counters.snapshot();
+        assert_eq!((s.hits, s.misses), (0, 0));
+    }
+
+    #[test]
+    fn region_answer_view_windows_the_state() {
+        // 2x4 grid, 3 channels, value = 100*lat + 10*lon + ch
+        let (lat, lon, c) = (2usize, 4usize, 3usize);
+        let mut data = vec![0.0f32; lat * lon * c];
+        for i in 0..lat {
+            for j in 0..lon {
+                for k in 0..c {
+                    data[(i * lon + j) * c + k] =
+                        (100 * i + 10 * j + k) as f32;
+                }
+            }
+        }
+        let ans = RegionAnswer {
+            state: Arc::new(Tensor::new(vec![lat, lon, c], data)),
+            lat: (1, 2),
+            lon: (2, 4),
+            lon_full: lon,
+            channels: c,
+        };
+        let v = ans.view();
+        assert_eq!(v.dims(), (1, 2 * c));
+        assert_eq!(v.at(0, 0), 120.0); // lat 1, lon 2, ch 0
+        assert_eq!(v.at(0, 3), 130.0); // lat 1, lon 3, ch 0
+        assert_eq!(v.at(0, 5), 132.0); // lat 1, lon 3, ch 2
+    }
+}

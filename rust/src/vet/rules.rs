@@ -48,6 +48,10 @@ pub const RULES: &[RuleInfo] = &[
         name: "lib-unwrap",
         summary: "`.unwrap()/.expect()` on fallible std calls in library code — should be typed errors",
     },
+    RuleInfo {
+        name: "wire-bytes-drift",
+        summary: "elem-width byte math on `numel()` / shadow `Payload` outside comm — fabric-accounting drift",
+    },
 ];
 
 /// Shift amounts / masks that define the collective tag layout
@@ -86,6 +90,7 @@ pub fn analyze_source(file: &str, src: &str) -> Vec<Finding> {
     rule_hot_loop_clock(file, &lexed, &scopes, &mut out);
     rule_pool_unpaired(file, &lexed, &scopes, &mut out);
     rule_lib_unwrap(file, &lexed, &scopes, &mut out);
+    rule_wire_bytes_drift(file, &lexed, &scopes, &mut out);
     // suppression pragmas: a finding at line L is suppressed by a
     // pragma on L (trailing) or L-1 (preceding line)
     out.retain(|f| {
@@ -525,6 +530,81 @@ fn rule_lib_unwrap(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) 
     }
 }
 
+// ---------------------------------------------------------------------------
+// wire-bytes-drift
+// ---------------------------------------------------------------------------
+
+/// Element byte widths whose product with `numel()` reads as a wire /
+/// storage size derivation (f32=4, bf16=2, f64/u64=8, u8=1).
+const ELEM_WIDTHS: &[u64] = &[1, 2, 4, 8];
+
+/// The fabric charges every link through `Payload::wire_bytes`, and the
+/// perfmodel prices the same traffic via the precision's
+/// wire-bytes-per-elem. Two spellings let those accountings drift: a
+/// hand-rolled `numel() * <elem width>` (either operand order) outside
+/// the sanctioned helpers, and a shadow `enum Payload` outside `comm`
+/// whose variants the byte helpers never learn about. Test code is
+/// exempt — tests size buffers by hand on purpose.
+fn rule_wire_bytes_drift(file: &str, lx: &Lexed, sc: &Scopes, out: &mut Vec<Finding>) {
+    let t = &lx.toks;
+    let in_comm = file.replace('\\', "/").contains("/comm/");
+    let width = |text: &str| num_value(text).map_or(false, |v| ELEM_WIDTHS.contains(&v));
+    for i in 0..t.len() {
+        if sc.ctx[i].in_test {
+            continue;
+        }
+        if t[i].is_ident("enum")
+            && t.get(i + 1).map_or(false, |x| x.is_ident("Payload"))
+            && !in_comm
+        {
+            push(
+                out,
+                file,
+                t[i + 1].line,
+                "wire-bytes-drift",
+                "shadow `enum Payload` outside `comm` — its variants escape the wire-byte accounting"
+                    .to_string(),
+            );
+        }
+        if !(t[i].is_ident("numel")
+            && t.get(i + 1).map_or(false, |x| x.is("("))
+            && t.get(i + 2).map_or(false, |x| x.is(")")))
+        {
+            continue;
+        }
+        let sanctioned = sc.ctx[i].fn_id.map_or(false, |f| {
+            matches!(sc.fns[f].name.as_str(), "wire_bytes" | "wire_bytes_per_elem")
+        });
+        if sanctioned {
+            continue;
+        }
+        // forward form: `numel() * <width>`
+        let fwd = t.get(i + 3).map_or(false, |x| x.is("*"))
+            && t.get(i + 4).map_or(false, |x| x.kind == TokKind::Num && width(&x.text));
+        // reverse form: `<width> * recv.chain.numel()` — walk back over
+        // the `.`-separated receiver chain to the token before it
+        let rev = {
+            let mut j = i;
+            while j >= 2 && t[j - 1].is(".") && t[j - 2].kind == TokKind::Ident {
+                j -= 2;
+            }
+            j >= 2
+                && t[j - 1].is("*")
+                && t[j - 2].kind == TokKind::Num
+                && width(&t[j - 2].text)
+        };
+        if fwd || rev {
+            push(
+                out,
+                file,
+                t[i].line,
+                "wire-bytes-drift",
+                "elem-width byte math on `numel()` outside `wire_bytes` — route sizing through the wire-byte helpers".to_string(),
+            );
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -641,6 +721,40 @@ mod tests {
         );
         assert_eq!(rules_of(&f), vec!["lib-unwrap"; 3]);
         assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn wire_bytes_drift_flags_raw_byte_math_both_orders() {
+        let f = run(
+            "fn wire_bytes(t: &T) -> u64 { (t.numel() * 4) as u64 }\n\
+             fn charge(t: &T) -> u64 { (t.numel() * 2) as u64 }\n\
+             fn budget(p: &P) -> u64 { (4 * p.inner.numel()) as u64 }\n\
+             fn fine(t: &T) -> usize { t.numel() * stride }\n\
+             fn fine2(t: &T) -> usize { t.numel() * 3 }",
+        );
+        assert_eq!(rules_of(&f), vec!["wire-bytes-drift"; 2]);
+        assert_eq!(f.iter().map(|x| x.line).collect::<Vec<_>>(), vec![2, 3]);
+    }
+
+    #[test]
+    fn wire_bytes_drift_flags_shadow_payload_enum_outside_comm() {
+        let f = run("enum Payload { F32(A), Bf16(B) }");
+        assert_eq!(rules_of(&f), vec!["wire-bytes-drift"]);
+        let comm = analyze_source(
+            "rust/src/comm/mod.rs",
+            "enum Payload { F32(A), Bf16(B) }\n\
+             impl Payload { fn wire_bytes(&self) -> u64 { (self.numel() * 4) as u64 } }",
+        );
+        assert!(comm.is_empty(), "{comm:?}");
+    }
+
+    #[test]
+    fn wire_bytes_drift_exempts_tests_and_comparisons() {
+        let f = run(
+            "#[cfg(test)] mod t { fn sz(t: &T) -> u64 { (t.numel() * 4) as u64 } }\n\
+             fn guard(t: &T, n: usize) -> bool { t.numel() < n * 4 }",
+        );
+        assert!(f.is_empty(), "{f:?}");
     }
 
     #[test]

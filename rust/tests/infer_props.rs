@@ -1,0 +1,332 @@
+//! Inference-path properties: the forward split and the serving engine.
+//!
+//!   * **one forward implementation** — `InferModel::predict` (forward-
+//!     only retention, pooled activations recycled per layer) must be
+//!     bit-identical to the training path's `DistModel::forward`
+//!     prediction on every mesh shape, in f32; bf16 stays within the
+//!     established 1e-4 fabric tolerance (it is in fact bit-identical
+//!     too — same core, same quantization points — but the pin matches
+//!     the precision contract the rest of the suite uses);
+//!   * **trajectory cache** — repeated queries return the same cached
+//!     state (no recompute), and regional answers are exact windows of
+//!     the cached global state;
+//!   * **steady-state allocation** — once the cache is warm, answering
+//!     cached regional queries performs zero pool takes: an O(1) view
+//!     of an assembled state, not a tensor op.
+//!
+//! Engine-running tests serialize on a file-local mutex: the buffer
+//! pool's hit/miss counters are process-global, and the allocation
+//! assertion needs a quiet pool.
+
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+use jigsaw::comm::Network;
+use jigsaw::config::ModelConfig;
+use jigsaw::jigsaw::{Ctx, Mesh};
+use jigsaw::model::dist::DistModel;
+use jigsaw::model::params::shard_params;
+use jigsaw::model::{init_global_params, InferModel};
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::serve::{RegionQuery, RolloutEngine, ServeEngine};
+use jigsaw::tensor::{pool, Precision, Tensor};
+use jigsaw::trainer::oracle::sample_shard;
+use jigsaw::util::rng::Rng;
+
+/// Serializes every test that spins rank threads (shared process-global
+/// pool statistics). A poisoned lock (a failed sibling test) must not
+/// cascade.
+static ENGINE_GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> std::sync::MutexGuard<'static, ()> {
+    ENGINE_GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn cfg() -> ModelConfig {
+    ModelConfig {
+        name: "infer-props".into(),
+        lat: 8,
+        lon: 16,
+        channels: 6,
+        channels_padded: 8,
+        patch: 2,
+        d_emb: 32,
+        d_tok: 48,
+        d_ch: 32,
+        blocks: 2,
+        tokens: 32,
+        patch_dim: 32,
+        param_count: 12904,
+        flops_forward: 0,
+        channel_weights: vec![1.0; 6],
+    }
+}
+
+fn mk_sample(cfg: &ModelConfig, seed: u64) -> Tensor {
+    let mut rng = Rng::seed_from(seed);
+    let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+    rng.fill_normal(&mut d, 1.0);
+    Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
+}
+
+/// Per-rank predictions through the TRAINING forward (cache retained,
+/// then dropped).
+fn run_train_forward(
+    cfg: &ModelConfig,
+    mesh: Mesh,
+    global: &[(String, Tensor)],
+    x: &Tensor,
+    rollout: usize,
+    precision: Precision,
+) -> Vec<Tensor> {
+    let net = Network::new(mesh.n());
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mut handles = Vec::new();
+    for r in 0..mesh.n() {
+        let cfg = cfg.clone();
+        let params = shard_params(&cfg, &mesh, r, global).unwrap();
+        let mut comm = net.endpoint(r);
+        let backend = backend.clone();
+        let x = x.clone();
+        handles.push(thread::spawn(move || {
+            let model = DistModel::new(cfg, &mesh, r, params);
+            let (la, _, lc) = model.local_dims();
+            let (lat0, ch0) = (model.lat_offset(), model.ch_offset());
+            let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
+            let mut ctx = Ctx::new(mesh, r, &mut comm, backend.as_ref());
+            ctx.precision = precision;
+            let (pred, _cache) = model.forward(&mut ctx, &xl, rollout).unwrap();
+            pred
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Per-rank predictions through the INFERENCE forward (no cache, pooled
+/// activations recycled per layer).
+fn run_infer_forward(
+    cfg: &ModelConfig,
+    mesh: Mesh,
+    global: &[(String, Tensor)],
+    x: &Tensor,
+    rollout: usize,
+    precision: Precision,
+) -> Vec<Tensor> {
+    let net = Network::new(mesh.n());
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mut handles = Vec::new();
+    for r in 0..mesh.n() {
+        let cfg = cfg.clone();
+        let global = global.to_vec();
+        let mut comm = net.endpoint(r);
+        let backend = backend.clone();
+        let x = x.clone();
+        handles.push(thread::spawn(move || {
+            let model = InferModel::new(cfg, &mesh, r, &global).unwrap();
+            let (la, _, lc) = model.local_dims();
+            let (lat0, ch0) = (model.lat_offset(), model.ch_offset());
+            let xl = sample_shard(&x, (lat0, lat0 + la), (ch0, ch0 + lc));
+            let mut ctx =
+                Ctx::infer(mesh, r, &mut comm, backend.as_ref(), precision);
+            model.predict(&mut ctx, &xl, rollout).unwrap()
+        }));
+    }
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn infer_is_bit_identical_to_train_forward_on_every_mesh() {
+    let _g = gate();
+    let cfg = cfg();
+    let global = init_global_params(&cfg, 0xA11CE);
+    let x = mk_sample(&cfg, 7);
+    for (t, c) in [(1usize, 1usize), (1, 2), (2, 2), (2, 4)] {
+        let mesh = Mesh::new(t, c).unwrap();
+        for rollout in [1usize, 2] {
+            let train =
+                run_train_forward(&cfg, mesh, &global, &x, rollout, Precision::F32);
+            let infer =
+                run_infer_forward(&cfg, mesh, &global, &x, rollout, Precision::F32);
+            for (r, (a, b)) in train.iter().zip(&infer).enumerate() {
+                assert_eq!(a.shape, b.shape, "{mesh} rank {r} rollout {rollout}");
+                for (i, (va, vb)) in a.data.iter().zip(&b.data).enumerate() {
+                    assert_eq!(
+                        va.to_bits(),
+                        vb.to_bits(),
+                        "{mesh} rank {r} rollout {rollout} elem {i}: {va} vs {vb}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn infer_matches_train_forward_in_bf16() {
+    let _g = gate();
+    let cfg = cfg();
+    let global = init_global_params(&cfg, 0xB16);
+    let x = mk_sample(&cfg, 9);
+    let mesh = Mesh::new(1, 2).unwrap();
+    let train = run_train_forward(&cfg, mesh, &global, &x, 1, Precision::Bf16);
+    let infer = run_infer_forward(&cfg, mesh, &global, &x, 1, Precision::Bf16);
+    for (r, (a, b)) in train.iter().zip(&infer).enumerate() {
+        let err = a.max_abs_diff(b);
+        assert!(err <= 1e-4, "bf16 rank {r} err {err}");
+    }
+}
+
+fn serve_engine(cfg: &ModelConfig, mesh: Mesh, prefetch: bool, cache: usize) -> ServeEngine {
+    let global = init_global_params(cfg, 0xD00F);
+    let engine = RolloutEngine::new(
+        cfg,
+        &mesh,
+        &global,
+        Arc::new(NativeBackend),
+        Precision::F32,
+        1,
+    )
+    .unwrap();
+    let mut srv = ServeEngine::new(engine, cache, 6, prefetch);
+    srv.add_init(0, mk_sample(cfg, 42)).unwrap();
+    srv.add_init(1, mk_sample(cfg, 43)).unwrap();
+    srv
+}
+
+#[test]
+fn repeated_queries_share_the_cached_state() {
+    let _g = gate();
+    let cfg = cfg();
+    let mut srv = serve_engine(&cfg, Mesh::new(1, 2).unwrap(), false, 16);
+    let a = srv.state(0, 3).unwrap();
+    let hits_before = srv.stats().hits;
+    let b = srv.state(0, 3).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "hit must return the same cached state");
+    assert_eq!(srv.stats().hits, hits_before + 1);
+    // intermediate steps were cached on the way to lead 3
+    assert!(srv.cache_len() >= 3);
+    // a shorter lead on the same trajectory is now also a hit
+    let c = srv.state(0, 2).unwrap();
+    assert!(!Arc::ptr_eq(&a, &c));
+}
+
+#[test]
+fn regional_answer_is_an_exact_window_of_the_global_state() {
+    let _g = gate();
+    let cfg = cfg();
+    let mut srv = serve_engine(&cfg, Mesh::new(2, 2).unwrap(), false, 16);
+    let q = RegionQuery { init_id: 1, lead: 2, lat: (2, 7), lon: (3, 11) };
+    let ans = srv.answer(q).unwrap();
+    let state = srv.state(1, 2).unwrap();
+    assert!(Arc::ptr_eq(ans.state(), &state));
+    let v = ans.view();
+    assert_eq!(v.dims(), (5, 8 * cfg.channels_padded));
+    for li in 0..5 {
+        for lj in 0..8 {
+            for ch in 0..cfg.channels_padded {
+                let want = state.data
+                    [((li + 2) * cfg.lon + lj + 3) * cfg.channels_padded + ch];
+                let got = v.at(li, lj * cfg.channels_padded + ch);
+                assert_eq!(got.to_bits(), want.to_bits(), "({li},{lj},{ch})");
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_rollout_matches_manual_infer_rollout() {
+    // the engine's scatter/gather roundtrip: a served lead-2 state must
+    // bit-match feeding predict's assembled output back in by hand on
+    // the same mesh
+    let _g = gate();
+    let cfg = cfg();
+    let mesh = Mesh::new(1, 2).unwrap();
+    let global = init_global_params(&cfg, 0xD00F);
+    let x0 = mk_sample(&cfg, 42); // == init 0 of serve_engine
+    let step1: Vec<Tensor> =
+        run_infer_forward(&cfg, mesh, &global, &x0, 1, Precision::F32);
+    // reassemble rank locals into the global state by shard offsets
+    let mut s1 = Tensor::zeros(&[cfg.lat, cfg.lon, cfg.channels_padded]);
+    for (r, local) in step1.iter().enumerate() {
+        let (la, lc) = (local.shape[0], local.shape[2]);
+        let (lat0, ch0) = (r / 2 * la, r % 2 * lc); // 1x2: ranks split channels
+        for li in 0..la {
+            for lj in 0..cfg.lon {
+                for ci in 0..lc {
+                    s1.data[((lat0 + li) * cfg.lon + lj) * cfg.channels_padded
+                        + ch0
+                        + ci] = local.data[(li * cfg.lon + lj) * lc + ci];
+                }
+            }
+        }
+    }
+    let step2 = run_infer_forward(&cfg, mesh, &global, &s1, 1, Precision::F32);
+    let mut srv = serve_engine(&cfg, mesh, false, 16);
+    let served = srv.state(0, 2).unwrap();
+    for (r, local) in step2.iter().enumerate() {
+        let (la, lc) = (local.shape[0], local.shape[2]);
+        let (lat0, ch0) = (r / 2 * la, r % 2 * lc);
+        for li in 0..la {
+            for lj in 0..cfg.lon {
+                for ci in 0..lc {
+                    let want = local.data[(li * cfg.lon + lj) * lc + ci];
+                    let got = served.data
+                        [((lat0 + li) * cfg.lon + lj) * cfg.channels_padded + ch0 + ci];
+                    assert_eq!(got.to_bits(), want.to_bits(), "rank {r} ({li},{lj},{ci})");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cached_queries_do_zero_pool_takes() {
+    let _g = gate();
+    let cfg = cfg();
+    let mut srv = serve_engine(&cfg, Mesh::new(1, 2).unwrap(), false, 16);
+    // warm: every state the queries below will touch
+    for lead in 0..=4 {
+        srv.state(0, lead).unwrap();
+        srv.state(1, lead).unwrap();
+    }
+    let (h0, m0) = pool::stats();
+    let mut checksum = 0.0f32;
+    for lead in 0..=4 {
+        for (lat0, lon0) in [(0usize, 0usize), (2, 3), (4, 8)] {
+            let ans = srv
+                .answer(RegionQuery {
+                    init_id: (lead % 2) as u64,
+                    lead,
+                    lat: (lat0, lat0 + 3),
+                    lon: (lon0, lon0 + 4),
+                })
+                .unwrap();
+            checksum += ans.view().at(0, 0);
+        }
+    }
+    let (h1, m1) = pool::stats();
+    assert_eq!(
+        (h1 - h0) + (m1 - m0),
+        0,
+        "steady-state cached queries must not take pool buffers (checksum {checksum})"
+    );
+}
+
+#[test]
+fn prefetch_fills_the_next_lead_step() {
+    let _g = gate();
+    let cfg = cfg();
+    let mut srv = serve_engine(&cfg, Mesh::new(1, 2).unwrap(), true, 16);
+    srv.state(0, 1).unwrap(); // kicks off a prefetch of (0, 2)
+    assert_eq!(srv.stats().prefetches, 1);
+    let misses_before = srv.stats().misses;
+    srv.state(0, 2).unwrap(); // drained prefetch answers this
+    // the lookup itself records hit-or-miss before/after the drain lands
+    // the state; what matters is no extra prefetch was wasted and the
+    // state is now cached
+    assert!(srv.stats().misses <= misses_before + 1);
+    let hits_before = srv.stats().hits;
+    srv.state(0, 2).unwrap();
+    assert_eq!(srv.stats().hits, hits_before + 1, "prefetched state is cached");
+}

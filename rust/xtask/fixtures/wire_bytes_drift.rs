@@ -1,0 +1,30 @@
+//! vet fixture: must trigger `wire-bytes-drift` (and only it).
+//!
+//! The fabric charges every link through `Payload::wire_bytes`, and the
+//! perfmodel prices the same traffic from the precision's
+//! wire-bytes-per-elem. Every hand-rolled `numel() * <elem width>`
+//! outside those helpers — and every shadow `Payload` enum outside
+//! `comm` — is a chance for the two byte accountings to drift apart
+//! when a new payload kind lands. Not valid repo code — never
+//! compiled, only linted.
+
+enum Payload {
+    F32(Arc<Tensor>),
+    Bf16(Arc<Bf16Tensor>),
+}
+
+fn charged_bytes(p: &Payload) -> u64 {
+    match p {
+        Payload::F32(t) => (t.numel() * 4) as u64,
+        Payload::Bf16(t) => (t.numel() * 2) as u64,
+    }
+}
+
+fn link_budget(t: &Tensor) -> u64 {
+    (4 * t.numel()) as u64
+}
+
+fn wire_bytes(t: &Tensor) -> u64 {
+    // the sanctioned spelling — this one must NOT fire
+    (t.numel() * 4) as u64
+}
