@@ -1,14 +1,21 @@
 //! `vet` — run the repo's static lint registry from the command line.
 //!
 //! ```text
-//! vet [--json PATH] [--list] [--self-test DIR] [PATHS...]
+//! vet [--json PATH] [--sarif PATH] [--format human|json|sarif]
+//!     [--changed [BASE]] [--list] [--self-test DIR] [PATHS...]
 //! ```
 //!
-//! With no `PATHS`, lints `rust/src`. Exit codes: 0 clean (or
-//! self-test pass), 1 findings (or self-test failure), 2 usage / I/O
-//! error. `--json` additionally writes the machine-readable report
-//! (CI uploads it as an artifact); `--self-test` checks the seeded-bad
-//! fixture corpus instead of linting.
+//! With no `PATHS`, lints `rust/src`. `--changed` lints only the `.rs`
+//! files that `git diff --name-only BASE` reports (default base
+//! `HEAD`), while still building the cross-file lock-order call graph
+//! over all of `rust/src` so an inversion whose other half lives in an
+//! unchanged file is caught. Exit codes: 0 clean (or self-test pass),
+//! 1 findings (or self-test failure), 2 usage error or unreadable
+//! files — an unreadable file mid-walk is reported by path and the
+//! remaining files still get linted before the run fails. `--json` /
+//! `--sarif` additionally write the machine-readable reports (CI
+//! uploads the SARIF as code-scanning annotations); `--self-test`
+//! checks the seeded-bad fixture corpus instead of linting.
 
 use std::path::PathBuf;
 use std::process::ExitCode;
@@ -17,15 +24,37 @@ use jigsaw::vet;
 
 fn main() -> ExitCode {
     let mut json_path: Option<PathBuf> = None;
+    let mut sarif_path: Option<PathBuf> = None;
+    let mut format = "human".to_string();
+    let mut changed_base: Option<String> = None;
     let mut self_test_dir: Option<PathBuf> = None;
     let mut paths: Vec<PathBuf> = Vec::new();
-    let mut args = std::env::args().skip(1);
+    let mut args = std::env::args().skip(1).peekable();
     while let Some(a) = args.next() {
         match a.as_str() {
             "--json" => match args.next() {
                 Some(p) => json_path = Some(PathBuf::from(p)),
                 None => return usage("--json needs a path"),
             },
+            "--sarif" => match args.next() {
+                Some(p) => sarif_path = Some(PathBuf::from(p)),
+                None => return usage("--sarif needs a path"),
+            },
+            "--format" => match args.next() {
+                Some(f) if matches!(f.as_str(), "human" | "json" | "sarif") => format = f,
+                Some(f) => return usage(&format!("unknown format `{f}`")),
+                None => return usage("--format needs human|json|sarif"),
+            },
+            "--changed" => {
+                // optional BASE operand: consume the next arg unless it
+                // looks like another flag
+                changed_base = Some(match args.peek() {
+                    Some(n) if !n.starts_with('-') => {
+                        args.next().unwrap_or_else(|| "HEAD".to_string())
+                    }
+                    _ => "HEAD".to_string(),
+                });
+            }
             "--self-test" => match args.next() {
                 Some(p) => self_test_dir = Some(PathBuf::from(p)),
                 None => return usage("--self-test needs a directory"),
@@ -69,19 +98,58 @@ fn main() -> ExitCode {
         };
     }
 
-    if paths.is_empty() {
-        paths.push(PathBuf::from("rust/src"));
-    }
-    match vet::analyze_paths(&paths) {
-        Ok((files, findings)) => {
-            print!("{}", vet::report_human(files, &findings));
+    let res = if let Some(base) = changed_base {
+        if !paths.is_empty() {
+            return usage("--changed takes a git base, not explicit PATHS");
+        }
+        let changed = match changed_rs_files(&base) {
+            Ok(c) => c,
+            Err(e) => {
+                eprintln!("vet: --changed: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        if changed.is_empty() {
+            println!("vet: no changed .rs files vs {base}");
+            return ExitCode::SUCCESS;
+        }
+        let graph = match vet::collect_rs_files(&[PathBuf::from("rust/src")]) {
+            Ok(g) => g,
+            Err(e) => {
+                eprintln!("vet: {e}");
+                return ExitCode::from(2);
+            }
+        };
+        vet::analyze_file_set(&changed, &graph)
+    } else {
+        if paths.is_empty() {
+            paths.push(PathBuf::from("rust/src"));
+        }
+        vet::analyze_paths(&paths)
+    };
+
+    match res {
+        Ok(res) => {
+            match format.as_str() {
+                "json" => println!("{}", vet::report_json(&res)),
+                "sarif" => println!("{}", vet::report_sarif(&res.findings)),
+                _ => print!("{}", vet::report_human(&res)),
+            }
             if let Some(p) = json_path {
-                if let Err(e) = std::fs::write(&p, vet::report_json(files, &findings)) {
+                if let Err(e) = std::fs::write(&p, vet::report_json(&res)) {
                     eprintln!("vet: writing {}: {e}", p.display());
                     return ExitCode::from(2);
                 }
             }
-            if findings.is_empty() {
+            if let Some(p) = sarif_path {
+                if let Err(e) = std::fs::write(&p, vet::report_sarif(&res.findings)) {
+                    eprintln!("vet: writing {}: {e}", p.display());
+                    return ExitCode::from(2);
+                }
+            }
+            if !res.errors.is_empty() {
+                ExitCode::from(2)
+            } else if res.findings.is_empty() {
                 ExitCode::SUCCESS
             } else {
                 ExitCode::FAILURE
@@ -94,11 +162,49 @@ fn main() -> ExitCode {
     }
 }
 
+/// `.rs` files changed vs `base`, per `git diff --name-only` (plus
+/// untracked files via `git ls-files --others`), filtered to paths that
+/// still exist — deletions lint nothing.
+fn changed_rs_files(base: &str) -> Result<Vec<PathBuf>, String> {
+    let mut names = git_lines(&["diff", "--name-only", base, "--"])?;
+    names.extend(git_lines(&["ls-files", "--others", "--exclude-standard"])?);
+    let mut out: Vec<PathBuf> = names
+        .into_iter()
+        .map(PathBuf::from)
+        .filter(|p| p.extension().map_or(false, |e| e == "rs") && p.is_file())
+        .collect();
+    out.sort();
+    out.dedup();
+    Ok(out)
+}
+
+fn git_lines(args: &[&str]) -> Result<Vec<String>, String> {
+    let out = std::process::Command::new("git")
+        .args(args)
+        .output()
+        .map_err(|e| format!("running git: {e}"))?;
+    if !out.status.success() {
+        return Err(format!(
+            "git {} failed: {}",
+            args.join(" "),
+            String::from_utf8_lossy(&out.stderr).trim()
+        ));
+    }
+    Ok(String::from_utf8_lossy(&out.stdout)
+        .lines()
+        .map(str::to_string)
+        .filter(|l| !l.is_empty())
+        .collect())
+}
+
 fn usage(err: &str) -> ExitCode {
     if !err.is_empty() {
         eprintln!("vet: {err}");
     }
-    eprintln!("usage: vet [--json PATH] [--list] [--self-test DIR] [PATHS...]");
+    eprintln!(
+        "usage: vet [--json PATH] [--sarif PATH] [--format human|json|sarif] \
+         [--changed [BASE]] [--list] [--self-test DIR] [PATHS...]"
+    );
     if err.is_empty() {
         ExitCode::SUCCESS
     } else {

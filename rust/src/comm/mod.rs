@@ -90,7 +90,7 @@ use std::cell::RefCell;
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
 use std::time::{Duration, Instant};
 
 use crate::tensor::{Bf16Tensor, Precision, Tensor};
@@ -150,7 +150,15 @@ impl CommError {
     }
 }
 
-use crate::util::plock;
+use crate::util::{plock, plock_named};
+
+/// Queues-lock guard type: every acquisition of `Shared::queues` goes
+/// through [`plock_named`] so the runtime lock-order witness
+/// ([`crate::util::lockdep`]) sees it, and the condvar re-acquisition
+/// helpers thread the same guard type through
+/// [`PlockGuard::map`](crate::util::PlockGuard::map) — the lock class
+/// stays held across a wait, which is what the thread observably does.
+type QueueGuard<'a> = crate::util::PlockGuard<'a, HashMap<Key, VecDeque<Msg>>>;
 
 /// What a fabric message carries: an f32 tensor or a bf16 tensor. The
 /// payload's element kind decides the wire bytes charged to the link —
@@ -312,7 +320,7 @@ struct WaiterGuard<'a> {
 impl Drop for WaiterGuard<'_> {
     fn drop(&mut self) {
         if let Some(net) = self.net {
-            plock(&net.waiters).remove(&self.rank);
+            plock_named(&net.waiters, "comm.waiters").remove(&self.rank);
         }
     }
 }
@@ -385,7 +393,7 @@ impl Network {
     /// delivery times. `seed` drives the per-message jitter draw.
     pub fn set_fabric(&self, spec: FabricSpec, seed: u64) {
         let now = Instant::now();
-        *plock(&self.inner.fabric) = Some(FabricState {
+        *plock_named(&self.inner.fabric, "comm.fabric") = Some(FabricState {
             spec,
             egress_free: vec![now; self.inner.n],
             ingress_free: vec![now; self.inner.n],
@@ -395,7 +403,7 @@ impl Network {
 
     /// Remove the delay injector (messages deliver instantly again).
     pub fn clear_fabric(&self) {
-        *plock(&self.inner.fabric) = None;
+        *plock_named(&self.inner.fabric, "comm.fabric") = None;
     }
 
     /// Abort the fabric: every rank currently (or subsequently) blocked
@@ -428,7 +436,7 @@ impl Network {
         }
         // take the queue lock so the flag flip and the wake-up are
         // ordered against sleeping receivers
-        let _q = plock(&self.inner.queues);
+        let _q = plock_named(&self.inner.queues, "comm.queues");
         self.inner.aborted.store(true, Ordering::SeqCst);
         self.inner.cv.notify_all();
     }
@@ -464,7 +472,7 @@ impl Network {
     /// The knot description recorded by a detector trip, if one fired
     /// on this fabric.
     pub fn deadlock_info(&self) -> Option<String> {
-        plock(&self.inner.deadlock).clone()
+        plock_named(&self.inner.deadlock, "comm.deadlock").clone()
     }
 
     /// The rank recorded as the abort's origin, if any.
@@ -475,12 +483,12 @@ impl Network {
 
     /// Total bytes sent over every link.
     pub fn total_bytes(&self) -> u64 {
-        plock(&self.inner.bytes).iter().sum()
+        plock_named(&self.inner.bytes, "comm.bytes").iter().sum()
     }
 
     /// Bytes sent src -> dst.
     pub fn link_bytes(&self, src: usize, dst: usize) -> u64 {
-        plock(&self.inner.bytes)[src * self.inner.n + dst]
+        plock_named(&self.inner.bytes, "comm.bytes")[src * self.inner.n + dst]
     }
 
     /// Deepest backlog any (src, dst, tag) queue reached — how far sends
@@ -490,7 +498,7 @@ impl Network {
     }
 
     pub fn reset_bytes(&self) {
-        for b in plock(&self.inner.bytes).iter_mut() {
+        for b in plock_named(&self.inner.bytes, "comm.bytes").iter_mut() {
             *b = 0;
         }
         self.inner.max_depth.store(0, Ordering::Relaxed);
@@ -550,12 +558,12 @@ impl Comm {
         assert!(dst != self.rank, "self-send rank {dst}");
         let bytes = p.wire_bytes();
         {
-            let mut b = plock(&self.net.bytes);
+            let mut b = plock_named(&self.net.bytes, "comm.bytes");
             b[self.rank * self.net.n + dst] += bytes;
         }
         // simulated delivery time, when the injector is installed
         let ready_at = {
-            let mut fab = plock(&self.net.fabric);
+            let mut fab = plock_named(&self.net.fabric, "comm.fabric");
             fab.as_mut().map(|f| {
                 let now = Instant::now();
                 let start = now.max(f.egress_free[self.rank]).max(f.ingress_free[dst]);
@@ -571,7 +579,7 @@ impl Comm {
                 busy + f.spec.latency + f.spec.jitter.mul_f64(frac)
             })
         };
-        let mut q = plock(&self.net.queues);
+        let mut q = plock_named(&self.net.queues, "comm.queues");
         let list = q.entry((self.rank, dst, tag)).or_default();
         list.push_back(Msg { p, ready_at });
         self.net
@@ -628,11 +636,11 @@ impl Comm {
         // pass may sleep instead of ticking again
         let mut just_ticked = false;
         let detect = self.net.detect.load(Ordering::Relaxed);
-        let mut q = plock(&self.net.queues);
+        let mut q = plock_named(&self.net.queues, "comm.queues");
         if detect {
             // register under the queues lock so the registry is always
             // coherent with the queue contents a checker snapshots
-            plock(&self.net.waiters).insert(
+            plock_named(&self.net.waiters, "comm.waiters").insert(
                 self.rank,
                 Waiting {
                     keys: keys.to_vec(),
@@ -655,7 +663,7 @@ impl Comm {
             if detect && self.net.deadlocked.load(Ordering::SeqCst) {
                 // another waiter proved the knot; re-raise it here so
                 // every member unwinds instead of sleeping forever
-                let desc = plock(&self.net.deadlock)
+                let desc = plock_named(&self.net.deadlock, "comm.deadlock")
                     .clone()
                     .unwrap_or_else(|| "wait-graph knot".to_string());
                 drop(q);
@@ -686,7 +694,7 @@ impl Comm {
                 if !just_ticked {
                     drop(q);
                     let progressed = crate::tensor::ops::driver_tick();
-                    q = plock(&self.net.queues);
+                    q = plock_named(&self.net.queues, "comm.queues");
                     if progressed && !take {
                         // the hook may have CONSUMED a message for one of
                         // `keys` (a drain waits on exactly the keys the
@@ -736,12 +744,9 @@ impl Comm {
     /// one else can ever fill them. Panics with
     /// [`CommError::Deadlock`] naming the whole knot after waking every
     /// peer; returns the guard unchanged otherwise.
-    fn check_deadlock<'a>(
-        &self,
-        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
-    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
+    fn check_deadlock<'a>(&self, q: QueueGuard<'a>) -> QueueGuard<'a> {
         let desc = {
-            let waiters = plock(&self.net.waiters);
+            let waiters = plock_named(&self.net.waiters, "comm.waiters");
             let mut stuck: Vec<usize> = waiters
                 .iter()
                 .filter(|(_, w)| !w.hooked)
@@ -776,32 +781,23 @@ impl Comm {
                 .collect();
             format!("wait-graph knot: {}", parts.join("; "))
         };
-        *plock(&self.net.deadlock) = Some(desc.clone());
+        *plock_named(&self.net.deadlock, "comm.deadlock") = Some(desc.clone());
         self.net.deadlocked.store(true, Ordering::SeqCst);
         self.net.cv.notify_all();
         drop(q);
         std::panic::panic_any(CommError::Deadlock { desc });
     }
 
-    /// Poison-tolerant condvar wait (see [`plock`]).
-    fn cv_wait<'a>(
-        &self,
-        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
-    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
-        self.net.cv.wait(q).unwrap_or_else(PoisonError::into_inner)
+    /// Poison-tolerant condvar wait (see [`plock`]). The lockdep class
+    /// rides through `PlockGuard::map` — a condvar wait re-acquires
+    /// before returning, so the class genuinely stays held.
+    fn cv_wait<'a>(&self, q: QueueGuard<'a>) -> QueueGuard<'a> {
+        q.map(|g| self.net.cv.wait(g).unwrap_or_else(PoisonError::into_inner))
     }
 
     /// Poison-tolerant condvar timed wait (see [`plock`]).
-    fn cv_wait_timeout<'a>(
-        &self,
-        q: MutexGuard<'a, HashMap<Key, VecDeque<Msg>>>,
-        d: Duration,
-    ) -> MutexGuard<'a, HashMap<Key, VecDeque<Msg>>> {
-        self.net
-            .cv
-            .wait_timeout(q, d)
-            .unwrap_or_else(PoisonError::into_inner)
-            .0
+    fn cv_wait_timeout<'a>(&self, q: QueueGuard<'a>, d: Duration) -> QueueGuard<'a> {
+        q.map(|g| self.net.cv.wait_timeout(g, d).unwrap_or_else(PoisonError::into_inner).0)
     }
 
     /// Non-blocking payload receive (irecv + test): `None` until the
@@ -809,7 +805,7 @@ impl Comm {
     /// per key.
     pub fn try_recv_payload(&self, src: usize, tag: u64) -> Option<Payload> {
         let key = (src, self.rank, tag);
-        let mut q = plock(&self.net.queues);
+        let mut q = plock_named(&self.net.queues, "comm.queues");
         let now = Instant::now();
         if let Some(list) = q.get_mut(&key) {
             if list.front().map_or(false, |m| m.deliverable(now)) {
@@ -850,7 +846,7 @@ impl Comm {
     /// deliverable message wins. One lock acquisition for the whole set —
     /// the ready-queue scheduler's per-term probe.
     pub fn try_recv_any_payload(&self, keys: &[(usize, u64)]) -> Option<(usize, Payload)> {
-        let mut q = plock(&self.net.queues);
+        let mut q = plock_named(&self.net.queues, "comm.queues");
         let now = Instant::now();
         for (i, &(src, tag)) in keys.iter().enumerate() {
             let key = (src, self.rank, tag);

@@ -102,7 +102,7 @@ impl Engine {
     }
 
     fn send(&self, req: Req) {
-        crate::util::plock(&self.tx)
+        crate::util::plock_named(&self.tx, "runtime.tx")
             .send(req)
             .expect("engine thread gone");
     }

@@ -1,0 +1,325 @@
+//! Runtime lock-order witness ("lockdep"), the dynamic half of the
+//! `lock-order` gate (the static half is `vet::callgraph`).
+//!
+//! Every [`crate::util::plock_named`] site registers its `Mutex` under a
+//! stable *class* name (`"comm.queues"`, `"runtime.tx"`, ...). A
+//! thread-local stack records the classes the current thread holds, and
+//! a global held-before graph accumulates one edge per observed
+//! `(held, acquired)` class pair — each edge remembering the acquisition
+//! chain that first produced it. The first acquisition that would close
+//! a cycle panics *immediately*, naming both lock classes and both
+//! chains (the acquisition being attempted and the recorded one it
+//! contradicts), instead of deadlocking two ranks at whatever later
+//! interleaving actually exhibits the inversion.
+//!
+//! The check runs *before* blocking on the mutex, so a true inversion is
+//! diagnosed even on the schedule where it would have hung. Classes are
+//! per-name, not per-instance: two fabrics share the `"comm.queues"`
+//! class, which is deliberately conservative — an order that is only
+//! safe because the instances differ still deserves a hierarchy
+//! conversation.
+//!
+//! Enablement mirrors the comm wait-graph detector: on by default in
+//! debug builds (so `cargo test` soaks the whole suite), off in release;
+//! `JIGSAW_LOCKDEP=1/0` overrides either way, and tests pin the process
+//! default via [`set_lockdep_default`]. When off, the cost is one
+//! relaxed atomic load per `plock_named`.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{OnceLock, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Interned id of a lock class (a stable site name like `"comm.queues"`).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct ClassId(u16);
+
+#[derive(Default)]
+struct Graph {
+    /// class id -> name (the id is the index)
+    names: Vec<&'static str>,
+    ids: HashMap<&'static str, u16>,
+    /// (held, acquired) -> the acquisition chain that first observed it
+    edges: HashMap<(u16, u16), String>,
+}
+
+impl Graph {
+    /// Depth-first search for a held-before path `from ⇒* to`.
+    fn path(&self, from: u16, to: u16) -> Option<Vec<u16>> {
+        let mut stack = vec![vec![from]];
+        let mut seen = vec![false; self.names.len()];
+        while let Some(p) = stack.pop() {
+            let last = *p.last().unwrap_or(&from);
+            if last == to {
+                return Some(p);
+            }
+            if seen[last as usize] {
+                continue;
+            }
+            seen[last as usize] = true;
+            for &(a, b) in self.edges.keys() {
+                if a == last && !seen[b as usize] {
+                    let mut next = p.clone();
+                    next.push(b);
+                    stack.push(next);
+                }
+            }
+        }
+        None
+    }
+
+    fn name(&self, id: u16) -> &'static str {
+        self.names[id as usize]
+    }
+}
+
+static GRAPH: OnceLock<RwLock<Graph>> = OnceLock::new();
+
+fn read_graph() -> RwLockReadGuard<'static, Graph> {
+    GRAPH
+        .get_or_init(|| RwLock::new(Graph::default()))
+        .read()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+fn write_graph() -> RwLockWriteGuard<'static, Graph> {
+    GRAPH
+        .get_or_init(|| RwLock::new(Graph::default()))
+        .write()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+thread_local! {
+    /// Classes this thread currently holds, oldest first. A recursive
+    /// same-class acquisition panics before the push, so duplicates
+    /// never land.
+    static HELD: RefCell<Vec<u16>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Process-wide override for the witness default: 0 = none (env / build
+/// profile decides), 1 = force off, 2 = force on. Same shape as the
+/// deadlock detector's `DETECT_OVERRIDE`.
+static LOCKDEP_OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Pin (or release, with `None`) the process default for the lockdep
+/// witness — the test-suite analogue of
+/// `comm::set_deadlock_detect_default`. Takes effect on the next
+/// `plock_named`; classes a thread already holds stay held.
+pub fn set_lockdep_default(v: Option<bool>) {
+    LOCKDEP_OVERRIDE.store(
+        match v {
+            None => 0,
+            Some(false) => 1,
+            Some(true) => 2,
+        },
+        Ordering::SeqCst,
+    );
+}
+
+/// Whether the witness is active: process override, else
+/// `JIGSAW_LOCKDEP` (`0`/`off`/`false` disable, anything else enables),
+/// else on in debug builds (= `cargo test`) and off in release.
+pub fn enabled() -> bool {
+    match LOCKDEP_OVERRIDE.load(Ordering::Relaxed) {
+        1 => false,
+        2 => true,
+        _ => match std::env::var("JIGSAW_LOCKDEP") {
+            Ok(v) => !matches!(v.as_str(), "0" | "off" | "false" | ""),
+            Err(_) => cfg!(debug_assertions),
+        },
+    }
+}
+
+fn intern(name: &'static str) -> u16 {
+    {
+        let g = read_graph();
+        if let Some(&id) = g.ids.get(name) {
+            return id;
+        }
+    }
+    let mut g = write_graph();
+    if let Some(&id) = g.ids.get(name) {
+        return id;
+    }
+    assert!(g.names.len() < usize::from(u16::MAX), "lockdep: class table full");
+    let id = g.names.len() as u16;
+    g.names.push(name);
+    g.ids.insert(name, id);
+    id
+}
+
+fn chain_text(g: &Graph, held: &[u16], new: u16) -> String {
+    let held_names: Vec<String> =
+        held.iter().map(|&h| format!("`{}`", g.name(h))).collect();
+    format!(
+        "acquiring `{}` while holding [{}] (thread '{}')",
+        g.name(new),
+        held_names.join(" -> "),
+        std::thread::current().name().unwrap_or("?"),
+    )
+}
+
+/// Register an acquisition of class `name` by this thread, checking the
+/// global held-before graph first. Called by `plock_named` *before*
+/// blocking on the mutex, so an ordering cycle panics instead of ever
+/// deadlocking. Returns the class id to hand back to [`release`].
+///
+/// Panics on (a) a recursive same-class acquisition, or (b) an edge that
+/// closes a cycle in the held-before graph — naming both classes, this
+/// thread's acquisition chain, and the previously recorded chain it
+/// contradicts.
+pub fn acquire(name: &'static str) -> ClassId {
+    let new = intern(name);
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        if held.contains(&new) {
+            let msg = {
+                let g = read_graph();
+                format!(
+                    "lockdep: recursive acquisition of lock class `{name}`: {}",
+                    chain_text(&g, &held, new)
+                )
+            };
+            panic!("{msg}");
+        }
+        check_and_record(&held, new, name);
+        held.push(new);
+    });
+    ClassId(new)
+}
+
+/// Record held-before edges for acquiring `new` with `held` on the
+/// stack; panic if any edge closes a cycle.
+fn check_and_record(held: &[u16], new: u16, name: &'static str) {
+    if held.is_empty() {
+        return;
+    }
+    {
+        // fast path: every (held, new) pair already observed and vetted
+        let g = read_graph();
+        if held.iter().all(|&h| g.edges.contains_key(&(h, new))) {
+            return;
+        }
+    }
+    let mut g = write_graph();
+    for &h in held {
+        if g.edges.contains_key(&(h, new)) {
+            continue;
+        }
+        if let Some(path) = g.path(new, h) {
+            // inserting h -> new would close `new ⇒* h -> new`
+            let current = chain_text(&g, held, new);
+            let prior: Vec<String> = path
+                .windows(2)
+                .map(|w| {
+                    let witness = g
+                        .edges
+                        .get(&(w[0], w[1]))
+                        .map(String::as_str)
+                        .unwrap_or("?");
+                    format!(
+                        "  `{}` held before `{}`: first seen {}",
+                        g.name(w[0]),
+                        g.name(w[1]),
+                        witness
+                    )
+                })
+                .collect();
+            panic!(
+                "lockdep: lock-order cycle between `{}` and `{}`: {current}, \
+                 but the held-before graph already orders them the other \
+                 way:\n{}",
+                g.name(h),
+                name,
+                prior.join("\n"),
+            );
+        }
+        let witness = chain_text(&g, held, new);
+        g.edges.insert((h, new), witness);
+    }
+}
+
+/// Pop `class` from this thread's held stack (last occurrence). Safe
+/// during unwinds and thread teardown (`try_with`); tolerant of a class
+/// that is not on the stack (enablement flipped while held).
+pub fn release(class: ClassId) {
+    let _ = HELD.try_with(|h| {
+        let mut held = h.borrow_mut();
+        if let Some(pos) = held.iter().rposition(|&c| c == class.0) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// Named snapshot of the held-before edges observed so far (tests use
+/// this to assert the witness actually watched a run).
+pub fn observed_edges() -> Vec<(String, String)> {
+    let g = read_graph();
+    let mut v: Vec<(String, String)> = g
+        .edges
+        .keys()
+        .map(|&(a, b)| (g.name(a).to_string(), g.name(b).to_string()))
+        .collect();
+    v.sort();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn panic_text(e: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = e.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = e.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            String::new()
+        }
+    }
+
+    #[test]
+    fn forward_order_records_edges_and_replays_silently() {
+        for _ in 0..2 {
+            let a = acquire("ut.fwd.outer");
+            let b = acquire("ut.fwd.inner");
+            release(b);
+            release(a);
+        }
+        assert!(observed_edges()
+            .contains(&("ut.fwd.outer".to_string(), "ut.fwd.inner".to_string())));
+    }
+
+    #[test]
+    fn cycle_panics_naming_both_classes_and_chains() {
+        let a = acquire("ut.cycle.alpha");
+        let b = acquire("ut.cycle.beta");
+        release(b);
+        release(a);
+        let b2 = acquire("ut.cycle.beta");
+        let err = std::panic::catch_unwind(|| acquire("ut.cycle.alpha"))
+            .expect_err("inverted order must panic");
+        release(b2);
+        let msg = panic_text(&*err);
+        assert!(msg.contains("ut.cycle.alpha"), "missing class: {msg}");
+        assert!(msg.contains("ut.cycle.beta"), "missing class: {msg}");
+        assert!(msg.contains("while holding"), "missing current chain: {msg}");
+        assert!(msg.contains("first seen"), "missing prior chain: {msg}");
+    }
+
+    #[test]
+    fn recursive_acquisition_panics() {
+        let a = acquire("ut.rec.same");
+        let err = std::panic::catch_unwind(|| acquire("ut.rec.same"))
+            .expect_err("recursive acquisition must panic");
+        release(a);
+        assert!(panic_text(&*err).contains("recursive acquisition"));
+    }
+
+    #[test]
+    fn release_tolerates_unheld_class() {
+        let a = acquire("ut.rel.only");
+        release(a);
+        release(a); // second pop is a no-op, not a panic
+    }
+}

@@ -1,12 +1,14 @@
 //! Dependency-free utilities: JSON, deterministic RNG, property testing,
-//! small table/CSV writers for the bench harness, and the shared
-//! poison-tolerant lock helper.
+//! small table/CSV writers for the bench harness, the shared
+//! poison-tolerant lock helper, and the runtime lock-order witness.
 
 pub mod json;
+pub mod lockdep;
 pub mod prop;
 pub mod rng;
 pub mod table;
 
+use std::ops::{Deref, DerefMut};
 use std::sync::{Mutex, MutexGuard, PoisonError};
 
 /// Poison-tolerant lock: a thread that panics while holding one of our
@@ -18,4 +20,89 @@ use std::sync::{Mutex, MutexGuard, PoisonError};
 /// else.
 pub fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
     m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// A [`plock`] guard whose acquisition is registered with the runtime
+/// lock-order witness ([`lockdep`]) under a stable class name. Derefs
+/// like a `MutexGuard`; dropping releases the mutex first and then pops
+/// the class from the thread's held stack, so a woken peer never
+/// observes the class still "held" here.
+pub struct PlockGuard<'a, T> {
+    g: Option<MutexGuard<'a, T>>,
+    class: Option<lockdep::ClassId>,
+}
+
+impl<'a, T> PlockGuard<'a, T> {
+    /// Hand the inner `MutexGuard` to `f` — e.g. a `Condvar` wait that
+    /// consumes and returns it — while the lockdep class stays held.
+    /// The thread never observably runs without the lock across a wait
+    /// (the condvar re-acquires before returning), so keeping the class
+    /// on the stack is what keeps the held-before graph truthful.
+    pub fn map<F>(mut self, f: F) -> Self
+    where
+        F: FnOnce(MutexGuard<'a, T>) -> MutexGuard<'a, T>,
+    {
+        self.g = self.g.take().map(f);
+        self
+    }
+}
+
+impl<T> Deref for PlockGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        self.g.as_ref().expect("plock guard taken")
+    }
+}
+
+impl<T> DerefMut for PlockGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.g.as_mut().expect("plock guard taken")
+    }
+}
+
+impl<T> Drop for PlockGuard<'_, T> {
+    fn drop(&mut self) {
+        // release the OS lock before popping the class: if `f` in `map`
+        // panicked the guard is already gone and only the class remains
+        self.g = None;
+        if let Some(c) = self.class {
+            lockdep::release(c);
+        }
+    }
+}
+
+/// [`plock`] with a stable lock-class name for the runtime lock-order
+/// witness: the long-lived locks (comm fabric, runtime engine) acquire
+/// through this so every debug/test run soaks under [`lockdep`]. When
+/// the witness is off this is `plock` plus one relaxed atomic load.
+pub fn plock_named<'a, T>(m: &'a Mutex<T>, name: &'static str) -> PlockGuard<'a, T> {
+    let class = if lockdep::enabled() {
+        Some(lockdep::acquire(name))
+    } else {
+        None
+    };
+    PlockGuard { g: Some(plock(m)), class }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plock_named_derefs_and_releases() {
+        let m = Mutex::new(7u32);
+        {
+            let mut g = plock_named(&m, "ut.util.m");
+            *g += 1;
+        }
+        assert_eq!(*plock(&m), 8);
+    }
+
+    #[test]
+    fn plock_guard_map_keeps_the_lock() {
+        let m = Mutex::new(1u32);
+        let g = plock_named(&m, "ut.util.map");
+        let g = g.map(|inner| inner);
+        assert_eq!(*g, 1);
+    }
 }

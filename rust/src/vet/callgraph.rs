@@ -1,0 +1,628 @@
+//! Cross-file lock-order analysis: the `lock-order` rule.
+//!
+//! The per-file rules in [`super::rules`] cannot see a two-lock
+//! inversion split across two functions — `f` takes `waiters` and calls
+//! `g`, `g` (another file) takes `queues`. This pass can: it builds a
+//! per-function summary over the whole file set of (a) which named lock
+//! classes the function acquires through `plock`/`plock_named` and (b)
+//! which crate-local functions it calls, recording the guard classes
+//! plausibly live at each site (a guard counts as live once bound with
+//! `let` and until it is `drop`ped, its scope closes, or — for an
+//! unbound temporary — its statement ends). A fixpoint propagates
+//! "may-acquire" sets through the call graph, and every `(held,
+//! acquired)` edge is checked against the declared hierarchy in
+//! `rust/src/vet/lock_order.toml`; a back-edge is reported with the full
+//! provenance chain that produces it.
+//!
+//! Honest limits, in the same spirit as the rest of `vet`: the walk is
+//! linear, not path-sensitive — a conditional `drop(q)` kills the guard
+//! for the remainder of the function (an under-approximation: it can
+//! miss an order, never invent one), and callees are resolved by bare
+//! name across the crate, with ubiquitous std/trait method names
+//! excluded so `.clone()`/`.next()` chains don't smear summaries
+//! together. The runtime lockdep witness (`util::lockdep`) covers the
+//! orders this pass conservatively misses.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+use super::lexer::{analyze_scopes, lex, Tok, TokKind};
+use super::rules::Finding;
+
+/// The declared hierarchy shipped with the crate.
+pub const DEFAULT_HIERARCHY: &str = include_str!("lock_order.toml");
+
+/// A parsed lock hierarchy: per-domain ordered class lists.
+#[derive(Debug)]
+pub struct Hierarchy {
+    /// class -> (domain index, rank within the domain)
+    rank: HashMap<String, (usize, usize)>,
+    /// domain name + its ordered classes, for diagnostics
+    domains: Vec<(String, Vec<String>)>,
+}
+
+impl Hierarchy {
+    /// Parse the `domain = "a < b < c"` format of `lock_order.toml`.
+    /// Hand-rolled on purpose: the no-new-dependencies policy rules out
+    /// a TOML crate, and the format needs exactly one line shape.
+    pub fn parse(src: &str) -> Result<Hierarchy, String> {
+        let mut rank = HashMap::new();
+        let mut domains: Vec<(String, Vec<String>)> = Vec::new();
+        for (idx, raw) in src.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let Some((key, val)) = line.split_once('=') else {
+                return Err(format!(
+                    "lock hierarchy line {}: expected `domain = \"a < b\"`, got `{line}`",
+                    idx + 1
+                ));
+            };
+            let domain = key.trim().to_string();
+            let classes: Vec<String> = val
+                .trim()
+                .trim_matches('"')
+                .split('<')
+                .map(|c| c.trim().to_string())
+                .filter(|c| !c.is_empty())
+                .collect();
+            if domain.is_empty() || classes.is_empty() {
+                return Err(format!("lock hierarchy line {}: empty domain or class list", idx + 1));
+            }
+            for (i, c) in classes.iter().enumerate() {
+                if rank.insert(c.clone(), (domains.len(), i)).is_some() {
+                    return Err(format!(
+                        "lock hierarchy line {}: class `{c}` declared in two domains",
+                        idx + 1
+                    ));
+                }
+            }
+            domains.push((domain, classes));
+        }
+        Ok(Hierarchy { rank, domains })
+    }
+
+    fn order_of(&self, class: &str) -> Option<(usize, usize)> {
+        self.rank.get(class).copied()
+    }
+
+    fn domain_decl(&self, dom: usize) -> String {
+        let (name, classes) = &self.domains[dom];
+        format!("{name}: {}", classes.join(" < "))
+    }
+}
+
+/// Callee names never resolved to crate functions: ubiquitous std/trait
+/// method names that would smear unrelated summaries together (every
+/// `.clone()` under a guard would otherwise merge with any crate fn
+/// named `clone`), plus the atomics' `load`/`store`, which comm calls
+/// under its guards and which collide with `config::load`.
+const CALLEE_DENYLIST: &[&str] = &[
+    "drop", "clone", "fmt", "eq", "ne", "cmp", "partial_cmp", "hash", "default", "next", "from",
+    "into", "try_from", "try_into", "deref", "deref_mut", "index", "index_mut", "new", "as_ref",
+    "as_mut", "to_string", "to_owned", "borrow", "borrow_mut", "load", "store",
+];
+
+/// Keywords that can precede a `(` without being a call.
+const KEYWORDS: &[&str] = &[
+    "if", "else", "while", "for", "loop", "match", "return", "break", "continue", "in", "as",
+    "let", "fn", "impl", "struct", "enum", "mod", "use", "pub", "const", "static", "move", "ref",
+    "mut", "where", "unsafe", "dyn", "self", "Self", "super", "crate", "true", "false", "type",
+    "trait", "await", "async",
+];
+
+/// One lock acquisition observed in a function body.
+struct Acq {
+    class: String,
+    file: String,
+    line: u32,
+    /// guard classes live at this point (deduped, acquisition order)
+    held: Vec<String>,
+}
+
+/// One call to a (possibly) crate-local function.
+struct Call {
+    callee: String,
+    file: String,
+    line: u32,
+    held: Vec<String>,
+}
+
+#[derive(Default)]
+struct FnSummary {
+    acqs: Vec<Acq>,
+    calls: Vec<Call>,
+}
+
+/// A let-bound or temporary guard being tracked through the walk.
+struct LiveGuard {
+    /// `None` for an unbound temporary (dies at its statement's `;`)
+    name: Option<String>,
+    class: String,
+    depth: i32,
+}
+
+fn held_classes(guards: &[LiveGuard]) -> Vec<String> {
+    let mut out: Vec<String> = Vec::new();
+    for g in guards {
+        if !out.contains(&g.class) {
+            out.push(g.class.clone());
+        }
+    }
+    out
+}
+
+/// Extract the lock class from a `plock(...)`/`plock_named(...)` arg
+/// list starting at the `(` at `open`: the last identifier of the first
+/// argument's field path (`&self.inner.queues` -> `queues`). Returns the
+/// class and the token index just past the closing `)`.
+fn parse_plock_class(t: &[Tok], open: usize) -> (Option<String>, usize) {
+    let mut depth = 0i32;
+    let mut class: Option<String> = None;
+    let mut i = open;
+    while i < t.len() {
+        let tok = &t[i];
+        match tok.text.as_str() {
+            "(" | "[" => depth += 1,
+            ")" | "]" => {
+                depth -= 1;
+                if depth == 0 {
+                    return (class.map(|c| c.to_ascii_lowercase()), i + 1);
+                }
+            }
+            "," if depth == 1 => {
+                // only the first argument names the mutex
+                while i < t.len() {
+                    match t[i].text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return (class.map(|c| c.to_ascii_lowercase()), i + 1);
+                            }
+                        }
+                        _ => {}
+                    }
+                    i += 1;
+                }
+            }
+            _ => {
+                if tok.kind == TokKind::Ident && depth == 1 {
+                    class = Some(tok.text.clone());
+                }
+            }
+        }
+        i += 1;
+    }
+    (class.map(|c| c.to_ascii_lowercase()), i)
+}
+
+/// Is the `plock` at token `i` bound to a name (`let q = plock(...)` /
+/// `q = plock(...)`)? Skips a `crate::util::` path prefix first.
+fn binding_name(t: &[Tok], i: usize) -> Option<String> {
+    let mut j = i;
+    // step back over `ident ::`* path segments
+    while j >= 2 && t[j - 1].is(":") && t[j - 2].is(":") {
+        j -= 2;
+        if j >= 1 && t[j - 1].kind == TokKind::Ident {
+            j -= 1;
+        }
+    }
+    if j < 2 || !t[j - 1].is("=") {
+        return None;
+    }
+    // `==`, `=>`, `+=` etc. are not plain assignment
+    if t[j - 2].is("=") || t[j - 2].is("<") || t[j - 2].is(">") || t[j - 2].is("+")
+        || t[j - 2].is("-") || t[j - 2].is("*") || t[j - 2].is("/") || t[j - 2].is("!")
+    {
+        return None;
+    }
+    let name = &t[j - 2];
+    if name.kind == TokKind::Ident && !name.is("_") && !KEYWORDS.contains(&name.text.as_str()) {
+        Some(name.text.clone())
+    } else {
+        None
+    }
+}
+
+/// Walk one function body, collecting acquisitions and calls with the
+/// guard set live at each site.
+fn scan_fn(
+    t: &[Tok],
+    in_test: &[bool],
+    fn_name: &str,
+    body_start: usize,
+    body_end: usize,
+    file: &str,
+    sum: &mut FnSummary,
+) {
+    let mut guards: Vec<LiveGuard> = Vec::new();
+    let mut depth = 0i32;
+    let mut i = body_start + 1;
+    while i < body_end.min(t.len()) {
+        let tok = &t[i];
+        match tok.text.as_str() {
+            "{" => depth += 1,
+            "}" => {
+                depth -= 1;
+                guards.retain(|g| g.depth <= depth);
+            }
+            ";" => {
+                let d = depth;
+                guards.retain(|g| !(g.name.is_none() && g.depth == d));
+            }
+            _ => {}
+        }
+        // `drop(name)` kills the named guard for the rest of the walk
+        // (linear, not path-sensitive: a conditional drop over-kills,
+        // which can only hide an order, never invent one)
+        if tok.is_ident("drop")
+            && t.get(i + 1).map_or(false, |x| x.is("("))
+            && t.get(i + 2).map_or(false, |x| x.kind == TokKind::Ident)
+            && t.get(i + 3).map_or(false, |x| x.is(")"))
+        {
+            let victim = t[i + 2].text.clone();
+            guards.retain(|g| g.name.as_deref() != Some(victim.as_str()));
+            i += 4;
+            continue;
+        }
+        let is_plock = tok.is_ident("plock") || tok.is_ident("plock_named");
+        if tok.kind == TokKind::Ident
+            && t.get(i + 1).map_or(false, |x| x.is("("))
+            && !(i > 0 && t[i - 1].is_ident("fn"))
+            && !in_test.get(i).copied().unwrap_or(false)
+        {
+            if is_plock {
+                let (class, after) = parse_plock_class(t, i + 1);
+                if let Some(class) = class {
+                    sum.acqs.push(Acq {
+                        class: class.clone(),
+                        file: file.to_string(),
+                        line: tok.line,
+                        held: held_classes(&guards),
+                    });
+                    guards.push(LiveGuard {
+                        name: binding_name(t, i),
+                        class,
+                        depth,
+                    });
+                }
+                i = after;
+                continue;
+            }
+            let name = tok.text.as_str();
+            let starts_lower = name
+                .chars()
+                .next()
+                .map_or(false, |c| c.is_ascii_lowercase() || c == '_');
+            if starts_lower
+                && !KEYWORDS.contains(&name)
+                && !CALLEE_DENYLIST.contains(&name)
+                // skip self-recursion: `Engine::send` calling `.send()`
+                // on its channel would otherwise read as itself
+                && name != fn_name
+            {
+                sum.calls.push(Call {
+                    callee: name.to_string(),
+                    file: file.to_string(),
+                    line: tok.line,
+                    held: held_classes(&guards),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// A lock-order edge: `to` may be acquired while `from` is held.
+struct Edge {
+    from: String,
+    to: String,
+    file: String,
+    line: u32,
+    why: String,
+}
+
+/// Run the cross-file lock-order analysis over `(file, source)` pairs
+/// against `hier`. Findings are anchored at the edge's acquisition or
+/// call site and honor the usual `// vet: allow(lock-order)` pragmas.
+pub fn analyze_lock_order(files: &[(String, String)], hier: &Hierarchy) -> Vec<Finding> {
+    // --- per-function summaries, merged by bare name across files ---
+    let mut sums: BTreeMap<String, FnSummary> = BTreeMap::new();
+    let mut allows: HashMap<String, HashMap<u32, Vec<String>>> = HashMap::new();
+    for (file, src) in files {
+        let lexed = lex(src);
+        let scopes = analyze_scopes(&lexed.toks);
+        let in_test: Vec<bool> = scopes.ctx.iter().map(|c| c.in_test).collect();
+        for f in &scopes.fns {
+            if f.body_start >= lexed.toks.len() {
+                continue; // bodyless trait declaration
+            }
+            let sum = sums.entry(f.name.clone()).or_default();
+            scan_fn(&lexed.toks, &in_test, &f.name, f.body_start, f.body_end, file, sum);
+        }
+        allows.insert(file.clone(), lexed.allows);
+    }
+
+    // --- fixpoint: may-acquire sets, with first-seen provenance ---
+    // fn -> class -> how it gets there (chain text)
+    let mut may: BTreeMap<String, BTreeMap<String, String>> = BTreeMap::new();
+    for (name, sum) in &sums {
+        let entry = may.entry(name.clone()).or_default();
+        for a in &sum.acqs {
+            entry.entry(a.class.clone()).or_insert_with(|| {
+                format!("`{name}` acquires `{}` ({}:{})", a.class, a.file, a.line)
+            });
+        }
+    }
+    loop {
+        let mut changed = false;
+        for (name, sum) in &sums {
+            for c in &sum.calls {
+                let Some(callee_may) = may.get(&c.callee) else { continue };
+                let additions: Vec<(String, String)> = callee_may
+                    .iter()
+                    .filter(|(class, _)| {
+                        !may.get(name).map_or(false, |m| m.contains_key(*class))
+                    })
+                    .map(|(class, chain)| {
+                        (
+                            class.clone(),
+                            format!("`{name}` calls `{}` ({}:{}) -> {chain}", c.callee, c.file, c.line),
+                        )
+                    })
+                    .collect();
+                if !additions.is_empty() {
+                    let entry = may.entry(name.clone()).or_default();
+                    for (class, chain) in additions {
+                        entry.entry(class).or_insert(chain);
+                        changed = true;
+                    }
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // --- held-before edges: direct + through calls ---
+    let mut edges: Vec<Edge> = Vec::new();
+    for (name, sum) in &sums {
+        for a in &sum.acqs {
+            for h in &a.held {
+                edges.push(Edge {
+                    from: h.clone(),
+                    to: a.class.clone(),
+                    file: a.file.clone(),
+                    line: a.line,
+                    why: format!(
+                        "`{name}` acquires `{}` while holding `{h}` ({}:{})",
+                        a.class, a.file, a.line
+                    ),
+                });
+            }
+        }
+        for c in &sum.calls {
+            if c.held.is_empty() {
+                continue;
+            }
+            let Some(callee_may) = may.get(&c.callee) else { continue };
+            for (class, chain) in callee_may {
+                for h in &c.held {
+                    edges.push(Edge {
+                        from: h.clone(),
+                        to: class.clone(),
+                        file: c.file.clone(),
+                        line: c.line,
+                        why: format!(
+                            "`{name}` calls `{}` while holding `{h}` ({}:{}) -> {chain}",
+                            c.callee, c.file, c.line
+                        ),
+                    });
+                }
+            }
+        }
+    }
+
+    // --- check edges against the hierarchy ---
+    let mut seen: HashSet<(String, String, String, u32)> = HashSet::new();
+    let mut out: Vec<Finding> = Vec::new();
+    for e in edges {
+        let (Some((dom_f, rank_f)), Some((dom_t, rank_t))) =
+            (hier.order_of(&e.from), hier.order_of(&e.to))
+        else {
+            continue; // classes outside the hierarchy are unconstrained
+        };
+        if dom_f != dom_t || rank_t > rank_f {
+            continue; // cross-domain or forward edge: fine
+        }
+        if !seen.insert((e.from.clone(), e.to.clone(), e.file.clone(), e.line)) {
+            continue;
+        }
+        let shape = if rank_t == rank_f { "re-acquires" } else { "inverts" };
+        out.push(Finding {
+            file: e.file,
+            line: e.line,
+            rule: "lock-order",
+            message: format!(
+                "acquiring `{}` while `{}` may be held {shape} the declared hierarchy ({}); {}",
+                e.to,
+                e.from,
+                hier.domain_decl(dom_f),
+                e.why
+            ),
+        });
+    }
+
+    // --- pragma suppression, per anchoring file ---
+    out.retain(|f| {
+        let Some(file_allows) = allows.get(&f.file) else { return true };
+        for l in [f.line, f.line.saturating_sub(1)] {
+            if let Some(rules) = file_allows.get(&l) {
+                if rules.iter().any(|r| r == f.rule || r == "all") {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+    out.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hier() -> Hierarchy {
+        Hierarchy::parse(DEFAULT_HIERARCHY).expect("shipped hierarchy parses")
+    }
+
+    fn run(files: &[(&str, &str)]) -> Vec<Finding> {
+        let owned: Vec<(String, String)> =
+            files.iter().map(|(f, s)| (f.to_string(), s.to_string())).collect();
+        analyze_lock_order(&owned, &hier())
+    }
+
+    #[test]
+    fn shipped_hierarchy_parses_and_orders_comm() {
+        let h = hier();
+        let q = h.order_of("queues").expect("queues declared");
+        let w = h.order_of("waiters").expect("waiters declared");
+        assert_eq!(q.0, w.0, "same domain");
+        assert!(q.1 < w.1, "queues before waiters");
+        assert!(h.order_of("nonexistent").is_none());
+    }
+
+    #[test]
+    fn duplicate_class_across_domains_is_rejected() {
+        let err = Hierarchy::parse("a = \"x < y\"\nb = \"y < z\"\n")
+            .expect_err("duplicate class must be rejected");
+        assert!(err.contains("`y`"), "{err}");
+    }
+
+    #[test]
+    fn malformed_hierarchy_lines_are_rejected() {
+        assert!(Hierarchy::parse("comm queues waiters\n").is_err());
+        assert!(Hierarchy::parse("comm = \"\"\n").is_err());
+    }
+
+    #[test]
+    fn direct_inversion_in_one_fn_fires() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let w = plock(&net.waiters); let _q = plock(&net.queues); drop(w); }",
+        )]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "lock-order");
+        assert!(f[0].message.contains("`queues`"), "{}", f[0].message);
+        assert!(f[0].message.contains("`waiters`"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn cross_file_inversion_fires_with_chain() {
+        let f = run(&[
+            ("a.rs", "fn outer(net: &Net) { let w = plock(&net.waiters); refill(net); drop(w); }"),
+            ("b.rs", "fn refill(net: &Net) { let _q = plock(&net.queues); }"),
+        ]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].file, "a.rs");
+        assert!(f[0].message.contains("`outer` calls `refill`"), "{}", f[0].message);
+        assert!(f[0].message.contains("`refill` acquires `queues`"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn conforming_order_is_clean() {
+        let f = run(&[
+            ("a.rs", "fn outer(net: &Net) { let q = plock(&net.queues); register(net); drop(q); }"),
+            ("b.rs", "fn register(net: &Net) { plock(&net.waiters).insert(1); }"),
+        ]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn dropped_guard_no_longer_holds() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let w = plock(&net.waiters); drop(w); let _q = plock(&net.queues); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn scope_close_releases_guard() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { { let _w = plock(&net.waiters); } let _q = plock(&net.queues); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn temporary_guard_dies_at_statement_end() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { plock(&net.waiters).remove(1); let _q = plock(&net.queues); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn underscore_binding_is_a_temporary() {
+        // `let _ = plock(..)` drops the guard immediately — Rust `_`
+        // semantics — so nothing nests under it
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let _ = plock(&net.waiters); let _q = plock(&net.queues); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn plock_named_classes_come_from_the_mutex_path() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let w = plock_named(&net.waiters, \"comm.waiters\"); \
+             let _q = plock_named(&net.queues, \"comm.queues\"); drop(w); }",
+        )]);
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+
+    #[test]
+    fn same_class_reacquire_is_reported() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let q = plock(&net.queues); let _q2 = plock(&net.queues); drop(q); }",
+        )]);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert!(f[0].message.contains("re-acquires"), "{}", f[0].message);
+    }
+
+    #[test]
+    fn unknown_classes_are_unconstrained() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(s: &S) { let a = plock(&s.mystery); let _b = plock(&s.other); drop(a); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn pragma_suppresses_lock_order() {
+        let f = run(&[(
+            "a.rs",
+            "fn f(net: &Net) { let w = plock(&net.waiters);\n// vet: allow(lock-order)\nlet _q = plock(&net.queues); drop(w); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn test_code_is_exempt() {
+        let f = run(&[(
+            "a.rs",
+            "#[test] fn forced(net: &Net) { let w = plock(&net.waiters); let _q = plock(&net.queues); drop(w); }",
+        )]);
+        assert!(f.is_empty(), "{f:?}");
+    }
+}

@@ -9,17 +9,26 @@
 //! every push plus a fixtures self-test that proves each rule still
 //! fires on a seeded-bad file.
 //!
+//! Two analysis tiers: the per-file token/scope rules in [`rules`], and
+//! the cross-file `lock-order` pass in [`callgraph`], which builds a
+//! call graph over the whole file set and checks every "class B
+//! acquired while class A held" edge — direct or through any call chain
+//! — against the hierarchy declared in `rust/src/vet/lock_order.toml`.
+//!
 //! The analysis is a hand-rolled token/scope pass ([`lexer`]), not a
 //! `syn` AST walk: the container policy forbids new dependencies, and
 //! every invariant here is token-visible. The trade-off is documented
 //! per rule — heuristics are tuned to the idioms this repo uses, and
 //! `// vet: allow(<rule>)` pragmas exist for the escape hatch.
 
+pub mod callgraph;
 pub mod lexer;
 pub mod rules;
 
+pub use callgraph::{analyze_lock_order, Hierarchy, DEFAULT_HIERARCHY};
 pub use rules::{analyze_source, Finding, RuleInfo, RULES};
 
+use std::collections::BTreeMap;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
@@ -56,25 +65,67 @@ fn walk(p: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
     Ok(())
 }
 
-/// Run the registry over every `.rs` file under `paths`. Returns
-/// `(files_scanned, findings)`.
-pub fn analyze_paths(paths: &[PathBuf]) -> io::Result<(usize, Vec<Finding>)> {
+/// Result of one lint run. Per-file read failures (missing file,
+/// non-UTF-8 bytes) land in `errors` instead of aborting the walk: the
+/// remaining files still get linted and the binary fails at the end.
+pub struct ScanResult {
+    /// files the run attempted to lint (readable or not)
+    pub files: usize,
+    pub findings: Vec<Finding>,
+    pub errors: Vec<(PathBuf, String)>,
+}
+
+/// Run the registry plus the cross-file lock-order pass over every
+/// `.rs` file under `paths`.
+pub fn analyze_paths(paths: &[PathBuf]) -> io::Result<ScanResult> {
     let files = collect_rs_files(paths)?;
-    let mut findings = Vec::new();
-    for f in &files {
-        let src = fs::read_to_string(f)?;
-        let name = f.to_string_lossy().replace('\\', "/");
-        findings.extend(analyze_source(&name, &src));
+    analyze_file_set(&files, &files)
+}
+
+/// Lint `lint_files` with the per-file rules and build the lock-order
+/// call graph over `graph_files`. The graph set is kept separate so
+/// `--changed` can lint only the changed files while still resolving
+/// call chains whose other half lives in an unchanged file.
+pub fn analyze_file_set(
+    lint_files: &[PathBuf],
+    graph_files: &[PathBuf],
+) -> io::Result<ScanResult> {
+    let hier = Hierarchy::parse(DEFAULT_HIERARCHY)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let mut union: Vec<PathBuf> =
+        lint_files.iter().chain(graph_files.iter()).cloned().collect();
+    union.sort();
+    union.dedup();
+    let mut errors: Vec<(PathBuf, String)> = Vec::new();
+    let mut read: BTreeMap<PathBuf, (String, String)> = BTreeMap::new();
+    for f in &union {
+        match fs::read_to_string(f) {
+            Ok(src) => {
+                let name = f.to_string_lossy().replace('\\', "/");
+                read.insert(f.clone(), (name, src));
+            }
+            Err(e) => errors.push((f.clone(), e.to_string())),
+        }
     }
-    Ok((files.len(), findings))
+    let mut findings = Vec::new();
+    for f in lint_files {
+        if let Some((name, src)) = read.get(f) {
+            findings.extend(analyze_source(name, src));
+        }
+    }
+    let graph_set: Vec<(String, String)> =
+        graph_files.iter().filter_map(|f| read.get(f).cloned()).collect();
+    findings.extend(analyze_lock_order(&graph_set, &hier));
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    Ok(ScanResult { files: lint_files.len(), findings, errors })
 }
 
 /// Machine-readable report (schema `version` guards CI consumers
-/// against silent drift).
-pub fn report_json(files: usize, findings: &[Finding]) -> String {
+/// against silent drift). `errors` lists files the run could not read.
+pub fn report_json(res: &ScanResult) -> String {
     let mut s = String::new();
-    s.push_str(&format!("{{\"version\":1,\"files\":{files},\"findings\":["));
-    for (i, f) in findings.iter().enumerate() {
+    s.push_str(&format!("{{\"version\":1,\"files\":{},\"findings\":[", res.files));
+    for (i, f) in res.findings.iter().enumerate() {
         if i > 0 {
             s.push(',');
         }
@@ -86,7 +137,63 @@ pub fn report_json(files: usize, findings: &[Finding]) -> String {
             json_str(&f.message)
         ));
     }
+    s.push_str("],\"errors\":[");
+    for (i, (path, err)) in res.errors.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"file\":{},\"error\":{}}}",
+            json_str(&path.to_string_lossy().replace('\\', "/")),
+            json_str(err)
+        ));
+    }
     s.push_str("]}");
+    s
+}
+
+/// SARIF 2.1.0 report for GitHub code-scanning upload: tool driver with
+/// the rule registry as metadata, one `result` per finding anchored at
+/// its file + line. Minimal by design, but schema-valid — the CI `vet`
+/// job uploads this so findings render as inline annotations.
+pub fn report_sarif(findings: &[Finding]) -> String {
+    let mut s = String::new();
+    s.push_str(concat!(
+        "{\"$schema\":\"https://raw.githubusercontent.com/oasis-tcs/",
+        "sarif-spec/master/Schemata/sarif-schema-2.1.0.json\",",
+        "\"version\":\"2.1.0\",\"runs\":[{\"tool\":{\"driver\":",
+        "{\"name\":\"jigsaw-vet\",\"rules\":["
+    ));
+    for (i, r) in RULES.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"id\":{},\"shortDescription\":{{\"text\":{}}}}}",
+            json_str(r.name),
+            json_str(r.summary)
+        ));
+    }
+    s.push_str("]}},\"results\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        let rule_index = RULES
+            .iter()
+            .position(|r| r.name == f.rule)
+            .map_or(String::new(), |p| format!("\"ruleIndex\":{p},"));
+        s.push_str(&format!(
+            "{{\"ruleId\":{},{rule_index}\"level\":\"error\",\"message\":{{\"text\":{}}},\
+             \"locations\":[{{\"physicalLocation\":{{\"artifactLocation\":{{\"uri\":{}}},\
+             \"region\":{{\"startLine\":{}}}}}}}]}}",
+            json_str(f.rule),
+            json_str(&f.message),
+            json_str(&f.file),
+            f.line.max(1)
+        ));
+    }
+    s.push_str("]}]}");
     s
 }
 
@@ -107,21 +214,30 @@ fn json_str(s: &str) -> String {
     out
 }
 
-/// Human diagnostics, one line per finding.
-pub fn report_human(files: usize, findings: &[Finding]) -> String {
+/// Human diagnostics, one line per finding, then one per read error.
+pub fn report_human(res: &ScanResult) -> String {
     let mut s = String::new();
-    for f in findings {
+    for f in &res.findings {
         s.push_str(&format!("{}:{}: [{}] {}\n", f.file, f.line, f.rule, f.message));
     }
-    if findings.is_empty() {
-        s.push_str(&format!("vet: {files} files clean\n"));
+    for (path, err) in &res.errors {
+        s.push_str(&format!("vet: cannot read {}: {err}\n", path.display()));
+    }
+    if res.findings.is_empty() && res.errors.is_empty() {
+        s.push_str(&format!("vet: {} files clean\n", res.files));
     } else {
-        s.push_str(&format!("vet: {} finding(s) in {files} files\n", findings.len()));
+        s.push_str(&format!(
+            "vet: {} finding(s), {} unreadable file(s) in {} files\n",
+            res.findings.len(),
+            res.errors.len(),
+            res.files
+        ));
     }
     s
 }
 
-/// Outcome of checking one fixture file.
+/// Outcome of checking one fixture unit (a file, or a directory of
+/// files exercising the cross-file lock-order pass).
 pub struct FixtureResult {
     pub file: String,
     pub expected_rule: String,
@@ -129,22 +245,53 @@ pub struct FixtureResult {
     pub detail: String,
 }
 
-/// Self-test over the seeded-bad fixture corpus: each
+/// Self-test over the seeded-bad fixture corpus. Each
 /// `<rule_name_with_underscores>.rs` must produce at least one finding
-/// and *only* findings of its rule; `allow_pragmas.rs` must produce
-/// zero findings (it is full of violations, each suppressed). This is
-/// what keeps the rules from silently rotting into no-ops.
+/// and *only* findings of its rule; a fixture *directory* is analyzed
+/// as one cross-file unit (this is how `lock_order/` seeds an inversion
+/// split across two functions in two files). Units named
+/// `allow_pragmas` or ending in `_ok` must produce zero findings. This
+/// is what keeps the rules from silently rotting into no-ops.
 pub fn self_test(dir: &Path) -> io::Result<Vec<FixtureResult>> {
-    let files = collect_rs_files(&[dir.to_path_buf()])?;
+    let hier = Hierarchy::parse(DEFAULT_HIERARCHY)
+        .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)?
+        .collect::<io::Result<Vec<_>>>()?
+        .into_iter()
+        .map(|e| e.path())
+        .collect();
+    entries.sort();
     let mut out = Vec::new();
-    for f in &files {
-        let stem = f.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default();
+    for e in entries {
+        let stem =
+            e.file_stem().map(|s| s.to_string_lossy().to_string()).unwrap_or_default();
         let expected = stem.replace('_', "-");
-        let src = fs::read_to_string(f)?;
-        let findings = analyze_source(&f.to_string_lossy(), &src);
-        let (ok, detail) = if expected == "allow-pragmas" {
+        let meta = fs::metadata(&e)?;
+        let findings = if meta.is_dir() {
+            let files = collect_rs_files(&[e.clone()])?;
+            let mut set: Vec<(String, String)> = Vec::new();
+            let mut acc = Vec::new();
+            for f in &files {
+                let src = fs::read_to_string(f)?;
+                let name = f.to_string_lossy().replace('\\', "/");
+                acc.extend(analyze_source(&name, &src));
+                set.push((name, src));
+            }
+            acc.extend(analyze_lock_order(&set, &hier));
+            acc
+        } else if e.extension().map_or(false, |x| x == "rs") {
+            let src = fs::read_to_string(&e)?;
+            let name = e.to_string_lossy().replace('\\', "/");
+            let mut acc = analyze_source(&name, &src);
+            acc.extend(analyze_lock_order(&[(name, src)], &hier));
+            acc
+        } else {
+            continue;
+        };
+        let expects_zero = expected == "allow-pragmas" || expected.ends_with("-ok");
+        let (ok, detail) = if expects_zero {
             if findings.is_empty() {
-                (true, "all violations suppressed by pragmas".to_string())
+                (true, "clean, as the fixture requires".to_string())
             } else {
                 (false, format!("expected 0 findings, got {:?}", rule_names(&findings)))
             }
@@ -155,7 +302,12 @@ pub fn self_test(dir: &Path) -> io::Result<Vec<FixtureResult>> {
         } else {
             (false, format!("expected only `{expected}`, got {:?}", rule_names(&findings)))
         };
-        out.push(FixtureResult { file: f.to_string_lossy().to_string(), expected_rule: expected, ok, detail });
+        out.push(FixtureResult {
+            file: e.to_string_lossy().to_string(),
+            expected_rule: expected,
+            ok,
+            detail,
+        });
     }
     Ok(out)
 }
@@ -170,17 +322,41 @@ mod tests {
 
     #[test]
     fn json_report_escapes_and_structures() {
-        let f = vec![Finding {
-            file: "a\"b.rs".into(),
-            line: 7,
-            rule: "raw-lock",
-            message: "x\ny".into(),
-        }];
-        let j = report_json(3, &f);
+        let res = ScanResult {
+            files: 3,
+            findings: vec![Finding {
+                file: "a\"b.rs".into(),
+                line: 7,
+                rule: "raw-lock",
+                message: "x\ny".into(),
+            }],
+            errors: vec![(PathBuf::from("bad.rs"), "boom".into())],
+        };
+        let j = report_json(&res);
         assert_eq!(
             j,
-            "{\"version\":1,\"files\":3,\"findings\":[{\"file\":\"a\\\"b.rs\",\"line\":7,\"rule\":\"raw-lock\",\"message\":\"x\\ny\"}]}"
+            "{\"version\":1,\"files\":3,\"findings\":[{\"file\":\"a\\\"b.rs\",\"line\":7,\"rule\":\"raw-lock\",\"message\":\"x\\ny\"}],\"errors\":[{\"file\":\"bad.rs\",\"error\":\"boom\"}]}"
         );
+    }
+
+    #[test]
+    fn sarif_report_names_tool_rules_and_locations() {
+        let f = vec![Finding {
+            file: "rust/src/x.rs".into(),
+            line: 3,
+            rule: "lock-order",
+            message: "inverted".into(),
+        }];
+        let s = report_sarif(&f);
+        assert!(s.contains("\"version\":\"2.1.0\""), "{s}");
+        assert!(s.contains("\"name\":\"jigsaw-vet\""), "{s}");
+        assert!(s.contains("\"ruleId\":\"lock-order\""), "{s}");
+        assert!(s.contains("\"uri\":\"rust/src/x.rs\""), "{s}");
+        assert!(s.contains("\"startLine\":3"), "{s}");
+        // every registry rule ships as driver metadata
+        for r in RULES {
+            assert!(s.contains(&format!("\"id\":\"{}\"", r.name)), "missing {}", r.name);
+        }
     }
 
     #[test]
@@ -202,28 +378,50 @@ mod tests {
         let expected: Vec<String> = {
             let mut v: Vec<String> = RULES.iter().map(|r| r.name.to_string()).collect();
             v.push("allow-pragmas".to_string());
+            v.push("lock-order-ok".to_string());
             v.sort();
             v
         };
         let mut got: Vec<String> = results.iter().map(|r| r.expected_rule.clone()).collect();
         got.sort();
-        assert_eq!(got, expected, "one fixture per rule plus allow_pragmas");
+        assert_eq!(got, expected, "one fixture unit per rule plus the clean corpora");
         for r in &results {
             assert!(r.ok, "{}: {}", r.file, r.detail);
         }
     }
 
     /// vet must be clean on its own source tree — zero findings, zero
-    /// suppressions outside fixtures (mirrors the CI gate).
+    /// suppressions outside fixtures (mirrors the CI gate). This gates
+    /// the cross-file `lock-order` pass too.
     #[test]
     fn own_tree_is_clean() {
         let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
-        let (files, findings) = analyze_paths(&[src]).expect("rust/src readable");
-        assert!(files > 10, "suspiciously few files scanned: {files}");
-        assert!(
-            findings.is_empty(),
-            "vet findings in tree:\n{}",
-            report_human(files, &findings)
-        );
+        let res = analyze_paths(&[src]).expect("rust/src readable");
+        assert!(res.files > 10, "suspiciously few files scanned: {}", res.files);
+        assert!(res.errors.is_empty(), "unreadable files under rust/src: {:?}", res.errors);
+        assert!(res.findings.is_empty(), "vet findings in tree:\n{}", report_human(&res));
+    }
+
+    /// The small fix this PR ships: an unreadable (here: non-UTF-8) file
+    /// is reported by path and the remaining files still get linted,
+    /// instead of the whole run aborting with a bare I/O error.
+    #[test]
+    fn unreadable_file_is_reported_and_linting_continues() {
+        let dir = std::env::temp_dir()
+            .join(format!("vet-badutf8-{}", std::process::id()));
+        fs::create_dir_all(&dir).expect("temp fixture dir");
+        fs::write(dir.join("bad.rs"), [0xFFu8, 0xFE, b'f', b'n']).expect("write bad");
+        fs::write(dir.join("ok.rs"), "fn f(m: &M) -> u32 { m.lock().unwrap(); 1 }\n")
+            .expect("write ok");
+        let res = analyze_paths(&[dir.clone()]).expect("walk succeeds");
+        fs::remove_dir_all(&dir).ok();
+        assert_eq!(res.files, 2, "both files attempted");
+        assert_eq!(res.errors.len(), 1, "{:?}", res.errors);
+        assert!(res.errors[0].0.ends_with("bad.rs"), "{:?}", res.errors);
+        assert_eq!(res.findings.len(), 1, "{:?}", res.findings);
+        assert_eq!(res.findings[0].rule, "raw-lock");
+        let human = report_human(&res);
+        assert!(human.contains("cannot read"), "{human}");
+        assert!(human.contains("bad.rs"), "{human}");
     }
 }

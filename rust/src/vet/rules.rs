@@ -52,6 +52,14 @@ pub const RULES: &[RuleInfo] = &[
         name: "wire-bytes-drift",
         summary: "elem-width byte math on `numel()` / shadow `Payload` outside comm — fabric-accounting drift",
     },
+    // Cross-file: not run by `analyze_source` — the callgraph pass in
+    // `vet::callgraph` needs the whole file set, so `analyze_paths`
+    // wires it in. Registered here so `--list`, pragma suppression, and
+    // SARIF rule metadata all see it.
+    RuleInfo {
+        name: "lock-order",
+        summary: "lock acquired against the declared hierarchy, directly or via a call chain — deadlock-by-inversion class",
+    },
 ];
 
 /// Shift amounts / masks that define the collective tag layout

@@ -1,0 +1,208 @@
+//! Runtime lock-order witness (lockdep) properties:
+//!
+//!   * a forced two-lock inversion panics on the *first* ordering
+//!     cycle, naming both lock classes and both acquisition chains —
+//!     before the schedule that would actually deadlock;
+//!   * a full 2x2 mesh training step under `JIGSAW_LOCKDEP`-style
+//!     enablement is finding-free and bit-identical to the
+//!     witness-off run (the witness only observes), and the witness
+//!     provably watched it (the `comm.queues -> comm.waiters` edge is
+//!     in the held-before graph afterwards);
+//!   * the serving stack's worker threads ([`RolloutEngine`] rank
+//!     threads under a [`ServeEngine`]) answer a seeded query stream
+//!     clean under the witness, bit-identical to the witness-off run.
+//!
+//! The lockdep default is process-wide, so every test here serializes
+//! on one gate and resets the default via RAII — a failing assert must
+//! not leak a pinned default into its siblings.
+
+use std::sync::{Arc, Mutex};
+
+use jigsaw::benchkit::{synth_config, TrafficGen};
+use jigsaw::comm::{set_deadlock_detect_default, FabricSpec};
+use jigsaw::jigsaw::Mesh;
+use jigsaw::model::init_global_params;
+use jigsaw::runtime::native::NativeBackend;
+use jigsaw::runtime::Backend;
+use jigsaw::serve::{RegionQuery, RolloutEngine, ServeEngine};
+use jigsaw::tensor::{Precision, Tensor};
+use jigsaw::trainer::oracle::run_dist_loss_and_grad;
+use jigsaw::util::rng::Rng;
+use jigsaw::util::{lockdep, plock, plock_named};
+
+/// Serializes the tests in this binary: each pins the process-wide
+/// lockdep default, and cargo runs tests on parallel threads.
+static GATE: Mutex<()> = Mutex::new(());
+
+/// RAII reset so a failing assert can't leak a pinned lockdep (or
+/// deadlock-detector) default into other tests in this binary.
+struct DefaultReset;
+impl Drop for DefaultReset {
+    fn drop(&mut self) {
+        lockdep::set_lockdep_default(None);
+        set_deadlock_detect_default(None);
+    }
+}
+
+fn panic_text(e: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        String::new()
+    }
+}
+
+#[test]
+fn forced_inversion_panics_naming_both_classes_and_chains() {
+    let _g = plock(&GATE);
+    let _reset = DefaultReset;
+    lockdep::set_lockdep_default(Some(true));
+
+    let ma = Mutex::new(0u32);
+    let mb = Mutex::new(0u32);
+    {
+        // teach the graph alpha -> beta
+        let a = plock_named(&ma, "lockdep-props.alpha");
+        let _b = plock_named(&mb, "lockdep-props.beta");
+        drop(a);
+    }
+    // now invert: beta held, alpha requested — must panic on the
+    // acquisition, before ever blocking on the mutex
+    let b = plock_named(&mb, "lockdep-props.beta");
+    let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        let _a = plock_named(&ma, "lockdep-props.alpha");
+    }))
+    .expect_err("inverted acquisition order must panic");
+    drop(b);
+
+    let msg = panic_text(&*err);
+    assert!(msg.contains("lockdep"), "not a lockdep panic: {msg}");
+    assert!(msg.contains("lockdep-props.alpha"), "missing class alpha: {msg}");
+    assert!(msg.contains("lockdep-props.beta"), "missing class beta: {msg}");
+    assert!(msg.contains("while holding"), "missing current chain: {msg}");
+    assert!(msg.contains("first seen"), "missing recorded chain: {msg}");
+}
+
+#[test]
+fn mesh_training_under_lockdep_is_finding_free_and_bit_identical() {
+    let _g = plock(&GATE);
+    let _reset = DefaultReset;
+    // the deadlock detector stays on for BOTH runs so the only variable
+    // is the witness — and so the waiter registry (the queues->waiters
+    // nesting) is actually exercised
+    set_deadlock_detect_default(Some(true));
+
+    let cfg = jigsaw::config::ModelConfig {
+        name: "lockdep-props".into(),
+        lat: 8,
+        lon: 16,
+        channels: 6,
+        channels_padded: 8,
+        patch: 2,
+        d_emb: 32,
+        d_tok: 48,
+        d_ch: 32,
+        blocks: 2,
+        tokens: 32,
+        patch_dim: 32,
+        param_count: 12904,
+        flops_forward: 0,
+        channel_weights: vec![1.0; 6],
+    };
+    let global = init_global_params(&cfg, 21);
+    let mk = |seed: u64| {
+        let mut rng = Rng::seed_from(seed);
+        let mut d = vec![0.0; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d)
+    };
+    let (x, y) = (mk(31), mk(32));
+    let backend: Arc<dyn Backend> = Arc::new(NativeBackend);
+    let mesh = Mesh::new(2, 2).unwrap();
+
+    let mut runs = Vec::new();
+    for on in [false, true] {
+        lockdep::set_lockdep_default(Some(on));
+        // finding-free: any ordering cycle would panic a rank thread
+        // and surface here as an Err / propagated panic
+        let (loss, grads) =
+            run_dist_loss_and_grad(&cfg, &mesh, &global, &x, &y, backend.clone(), 1).unwrap();
+        runs.push((loss, grads));
+    }
+
+    // the witness provably watched the run: registering a waiter nests
+    // the waiters lock under the queues lock
+    let edges = lockdep::observed_edges();
+    assert!(
+        edges.contains(&("comm.queues".to_string(), "comm.waiters".to_string())),
+        "witness never saw the queues->waiters nesting: {edges:?}"
+    );
+
+    let (loss_off, grads_off) = &runs[0];
+    let (loss_on, grads_on) = &runs[1];
+    assert_eq!(loss_off.to_bits(), loss_on.to_bits(), "loss differs with lockdep on");
+    assert_eq!(grads_off.len(), grads_on.len());
+    for ((n, a), (_, b)) in grads_off.iter().zip(grads_on.iter()) {
+        assert_eq!(a.shape, b.shape, "grad '{n}' shape");
+        for (va, vb) in a.data.iter().zip(b.data.iter()) {
+            assert_eq!(va.to_bits(), vb.to_bits(), "grad '{n}' bits differ with lockdep on");
+        }
+    }
+}
+
+/// One pass of the seeded query stream through a fresh serving stack;
+/// returns every answered window flattened to bit patterns.
+fn serve_pass(seed: u64, n_queries: usize) -> Vec<u32> {
+    let cfg = synth_config("lockdep-serve", 64, 48, 2);
+    let mesh = Mesh::new(1, 2).unwrap();
+    let global = init_global_params(&cfg, seed);
+    let engine = RolloutEngine::new(
+        &cfg,
+        &mesh,
+        &global,
+        Arc::new(NativeBackend),
+        Precision::F32,
+        1,
+    )
+    .expect("rollout engine");
+    engine.set_fabric(FabricSpec::from_us(100, 25, 1.0), seed);
+    let mut srv = ServeEngine::new(engine, 8, 4, false);
+
+    let mut rng = Rng::seed_from(seed ^ 0x5EED_1D);
+    for id in 0..2u64 {
+        let mut d = vec![0.0f32; cfg.lat * cfg.lon * cfg.channels_padded];
+        rng.fill_normal(&mut d, 1.0);
+        srv.add_init(id, Tensor::new(vec![cfg.lat, cfg.lon, cfg.channels_padded], d))
+            .expect("add init");
+    }
+
+    let mut gen = TrafficGen::new(seed, 2, 4, cfg.lat, cfg.lon);
+    let mut bits = Vec::new();
+    for _ in 0..n_queries {
+        let q: RegionQuery = gen.next_query();
+        let ans = srv.answer(q).expect("serve worker answered clean");
+        let v = ans.view();
+        for i in 0..v.nrows() {
+            for j in 0..v.ncols() {
+                bits.push(v.at(i, j).to_bits());
+            }
+        }
+    }
+    bits
+}
+
+#[test]
+fn serve_workers_run_clean_under_lockdep() {
+    let _g = plock(&GATE);
+    let _reset = DefaultReset;
+
+    lockdep::set_lockdep_default(Some(false));
+    let off = serve_pass(0xCAFE, 12);
+    lockdep::set_lockdep_default(Some(true));
+    let on = serve_pass(0xCAFE, 12);
+
+    assert!(!off.is_empty());
+    assert_eq!(off, on, "served bits differ with lockdep on");
+}

@@ -44,3 +44,10 @@ fn quoted_bytes(t: &Tensor) -> u64 {
 fn kernel_probe() -> u64 {
     7
 }
+
+fn inverted_but_vetted(net: &Net) {
+    let w = plock(&net.waiters);
+    // vet: allow(lock-order)
+    let _q = plock(&net.queues);
+    drop(w);
+}

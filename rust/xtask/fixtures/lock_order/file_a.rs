@@ -1,0 +1,12 @@
+//! vet fixture (cross-file unit with `file_b.rs`): `lock_waiters_then_call`
+//! acquires `waiters` and, with the guard still live, calls `refill` —
+//! which lives in the *other* file and acquires `queues`. The declared
+//! comm hierarchy orders `queues < waiters`, so the call chain inverts
+//! it and the `lock-order` rule must fire, naming the chain. Not valid
+//! repo code — never compiled, only linted.
+
+fn lock_waiters_then_call(net: &Net) {
+    let w = plock(&net.waiters);
+    refill(net);
+    drop(w);
+}

@@ -1,0 +1,7 @@
+//! vet fixture: the second half of the cross-file inversion — `refill`
+//! acquires `queues`, which `file_a.rs` calls while holding `waiters`.
+//! Clean in isolation; the violation only exists on the call graph.
+
+fn refill(net: &Net) {
+    let _q = plock(&net.queues);
+}

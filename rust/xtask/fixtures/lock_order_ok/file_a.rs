@@ -1,0 +1,11 @@
+//! vet fixture (cross-file unit with `file_b.rs`): the same two-file
+//! shape as `lock_order/`, but conforming — `queues` is acquired first
+//! and the callee takes `waiters`, matching the declared
+//! `queues < waiters` order. Must produce ZERO findings: it pins that
+//! the callgraph pass doesn't false-fire on forward nesting.
+
+fn lock_queues_then_call(net: &Net) {
+    let q = plock(&net.queues);
+    register(net);
+    drop(q);
+}

@@ -1,0 +1,6 @@
+//! vet fixture: the callee half of the conforming cross-file unit —
+//! takes `waiters` under a caller-held `queues`, the declared order.
+
+fn register(net: &Net) {
+    plock(&net.waiters).insert(1);
+}
